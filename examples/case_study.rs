@@ -1,0 +1,73 @@
+//! Appendix I reproduction: generation case study. Fine-tune the tiny
+//! byte-level LM on the embedded real-text corpus under FP32 / DirectQ /
+//! AQ-SGD, then greedy-decode continuations of the same prompts and
+//! print them side by side (paper Tables 6/7: AQ-SGD's continuations
+//! match FP32's; DirectQ drifts).
+//!
+//!     cargo run --release --example case_study [-- --epochs N]
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{Cli, TrainConfig};
+use aq_sgd::coordinator::generate::{detokenize_bytes, GenerateCfg};
+use aq_sgd::coordinator::Trainer;
+use aq_sgd::data::lm;
+use aq_sgd::exp;
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    let epochs = cli.usize("epochs", 10)?;
+    let prompts = ["It is a truth universally ", "My dear Mr. Bennet, ", "A single man of large "];
+
+    let mut generations: Vec<(String, Vec<String>)> = Vec::new();
+    for (label, c) in exp::method_grid(4, 8) {
+        let mut cfg = TrainConfig::defaults("tiny");
+        cfg.compression = c;
+        cfg.dataset = "embedded".to_string();
+        cfg.epochs = epochs;
+        cfg.n_micro = 3;
+        cfg.n_examples = 96;
+        cfg.lr = 2e-3;
+        cfg.warmup_steps = 10;
+        println!("== fine-tuning {label} on the embedded corpus ==");
+        let man = aq_sgd::runtime::Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+        let data = exp::make_dataset(&cfg, &man)?;
+        let (train, _) = data.split_eval(0.1);
+        let mut trainer = Trainer::new(cfg)?;
+        let stats = trainer.train(&train, None)?;
+        println!("   final loss {:.4}", stats.final_train_loss);
+
+        let mut outs = Vec::new();
+        for p in &prompts {
+            let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+            let gen = trainer.generate(&toks, &GenerateCfg { max_new_tokens: 24, ..Default::default() })?;
+            outs.push(detokenize_bytes(&gen));
+        }
+        generations.push((label, outs));
+    }
+
+    println!("\n== Appendix-I-style case study (greedy continuations) ==");
+    for (pi, p) in prompts.iter().enumerate() {
+        println!("\nPrompt: {p:?}");
+        for (label, outs) in &generations {
+            println!("  {:<18} -> {:?}", label, outs[pi]);
+        }
+    }
+    // the paper's observation: AQ-SGD's continuation matches FP32's
+    // character-for-character far more often than DirectQ's does
+    let fp32 = &generations[0].1;
+    let agree = |other: &Vec<String>| {
+        other
+            .iter()
+            .zip(fp32)
+            .map(|(a, b)| a.chars().zip(b.chars()).take_while(|(x, y)| x == y).count())
+            .sum::<usize>()
+    };
+    println!(
+        "\nprefix agreement with FP32: DirectQ {} chars, AQ-SGD {} chars",
+        agree(&generations[1].1),
+        agree(&generations[2].1)
+    );
+    Ok(())
+}

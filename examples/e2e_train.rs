@@ -1,0 +1,78 @@
+//! End-to-end system validation (EXPERIMENTS.md §E2E): train the `small`
+//! transformer (~1.6M params, 4 pipeline stages) for a few hundred steps
+//! on the Markov corpus with AQ-SGD fw3/bw6 over a simulated 500 Mbps
+//! network; log the loss curve, throughput and communication volume.
+//!
+//!     make artifacts && cargo run --release --example e2e_train
+//!
+//! Flags: --model small|e2e  --steps N  --compression SPEC  --bandwidth B
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
+use aq_sgd::coordinator::Trainer;
+use aq_sgd::exp;
+use aq_sgd::runtime::Manifest;
+use aq_sgd::util::fmt;
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    let model = cli.str("model", "small");
+    let mut cfg = TrainConfig::defaults(&model);
+    cfg.compression = Compression::parse(&cli.str("compression", "aqsgd:fw3bw6"))?;
+    cfg.total_steps = cli.usize("steps", 300)?;
+    cfg.epochs = usize::MAX / 2; // bounded by total_steps
+    cfg.n_micro = cli.usize("n-micro", 4)?;
+    cfg.n_examples = cli.usize("examples", 256)?;
+    cfg.lr = cli.f64("lr", 1e-3)?;
+    cfg.warmup_steps = cli.usize("warmup", 30)?;
+    cfg.bandwidth_bps = parse_bandwidth(&cli.str("bandwidth", "500mbps"))?;
+    cfg.dataset = cli.str("dataset", "markov");
+
+    let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+    println!(
+        "e2e: model={} params={} stages={} boundary={:?} compression={}",
+        man.name(),
+        man.total_params()?,
+        man.n_stages()?,
+        man.boundary()?,
+        cfg.compression.label()
+    );
+    let data = exp::make_dataset(&cfg, &man)?;
+    let (train, eval) = data.split_eval(0.1);
+    let mut trainer = Trainer::new(cfg)?;
+    trainer.set_eval_every(25);
+
+    let t0 = std::time::Instant::now();
+    let stats = trainer.train(&train, Some(&eval))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== loss curve (every 10 steps) ==");
+    for row in trainer.recorder.rows.iter().step_by(10) {
+        println!(
+            "step {:>4}  epoch {:>3}  loss {:.4}  ema {:.4}  comm {:>10}  sim_t {:>8}",
+            row.step,
+            row.epoch,
+            row.loss,
+            row.loss_ema,
+            fmt::bytes(row.comm_bytes),
+            fmt::duration_s(row.sim_time_s)
+        );
+    }
+    let seqs = stats.steps * trainer.cfg.n_micro * trainer.man.micro_batch()?;
+    println!("\n== summary ==");
+    println!("steps            {}", stats.steps);
+    println!("final train loss {:.4}", stats.final_train_loss);
+    println!("final eval loss  {:.4}", stats.final_eval_loss);
+    println!("wire traffic     {}", fmt::bytes(stats.comm_bytes));
+    println!("buffer storage   {}", fmt::bytes(stats.buffer_bytes));
+    println!("sim time         {} ({:.2} seq/s on the simulated net)",
+        fmt::duration_s(stats.sim_time_s), seqs as f64 / stats.sim_time_s);
+    println!("wall time        {} ({:.2} seq/s on this host)",
+        fmt::duration_s(wall), seqs as f64 / wall);
+
+    trainer.recorder.save_csv("results/e2e_train.csv")?;
+    println!("trace -> results/e2e_train.csv");
+    Ok(())
+}

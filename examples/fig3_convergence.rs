@@ -1,0 +1,87 @@
+//! Figure 3 (and 6/7/8) reproduction: convergence (loss vs steps) of
+//! FP32 / DirectQ / AQ-SGD on the four benchmark stand-ins:
+//!   QNLI-like, CoLA-like (classification, fw2 bw4)
+//!   WikiText2-like (markov), arXiv-like (markov, different seed)
+//!     (language modeling, fw3 bw6)
+//!
+//! Flags:
+//!   --seeds N        repeat with N seeds, report mean±std (Figure 6)
+//!   --half           FP16 wire baseline alongside (Figure 8)
+//!   --from-scratch   rescale-init + longer run (Figure 7 flavour)
+//!   --epochs N
+//!
+//!     cargo run --release --example fig3_convergence
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{Cli, TrainConfig};
+use aq_sgd::exp;
+use aq_sgd::metrics::Table;
+use aq_sgd::util::stats;
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    let epochs = cli.usize("epochs", 8)?;
+    let seeds = cli.usize("seeds", 1)?;
+    let half = cli.bool("half");
+    let from_scratch = cli.bool("from-scratch");
+
+    // (panel, model, dataset, fw, bw)
+    let panels: [(&str, &str, &str, u8, u8); 4] = [
+        ("QNLI-like", "tiny_cls", "qnli", 2, 4),
+        ("CoLA-like", "tiny_cls", "cola", 2, 4),
+        ("WikiText2-like", "tiny", "markov", 3, 6),
+        ("arXiv-like", "tiny", "arxiv", 3, 6),
+    ];
+
+    let mut all_runs = Vec::new();
+    let mut table = Table::new(&["panel", "method", "final loss", "±std", "diverged"]);
+    for (panel, model, dataset, fw, bw) in panels {
+        let mut methods = exp::method_grid(fw, bw);
+        if half {
+            methods.insert(1, ("FP16".into(), Compression::Fp16));
+        }
+        for (label, c) in methods {
+            let mut finals = Vec::new();
+            let mut diverged = false;
+            for seed in 0..seeds {
+                let mut cfg = TrainConfig::defaults(model);
+                cfg.dataset = dataset.to_string();
+                cfg.compression = c;
+                cfg.epochs = if from_scratch { epochs * 2 } else { epochs };
+                cfg.n_micro = 3;
+                cfg.n_examples = 96;
+                cfg.lr = if model == "tiny_cls" { 1e-3 } else { 2e-3 };
+                cfg.warmup_steps = if from_scratch { 20 } else { 10 };
+                cfg.seed = seed as u64;
+                let full = format!("{panel} {label} s{seed}");
+                println!("== {full} ==");
+                let run = exp::run_variant(cfg, &full)?;
+                diverged |= run.diverged;
+                finals.push(run.stats.final_train_loss);
+                all_runs.push(run);
+            }
+            table.row(vec![
+                panel.to_string(),
+                label.clone(),
+                format!("{:.4}", stats::mean(&finals)),
+                format!("{:.4}", stats::stddev(&finals)),
+                if diverged { "x".into() } else { "".into() },
+            ]);
+        }
+    }
+    println!("\nFigure 3 — final losses (paper: AQ-SGD ~= FP32, DirectQ worse/diverges):");
+    print!("{}", table.render());
+    let out = if from_scratch {
+        "results/fig7_from_scratch.csv"
+    } else if half {
+        "results/fig8_fp16.csv"
+    } else if seeds > 1 {
+        "results/fig6_convergence_std.csv"
+    } else {
+        "results/fig3_convergence.csv"
+    };
+    exp::save_traces(out, &all_runs)?;
+    Ok(())
+}

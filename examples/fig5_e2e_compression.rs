@@ -1,0 +1,96 @@
+//! Figure 5 reproduction: AQ-SGD combined with error-compensated gradient
+//! compression ("QuantizedAdam") for end-to-end communication compression
+//! — pipeline activations fw3/bw6 + data-parallel model gradients at 4
+//! bits.
+//!
+//!  (a,b) convergence of FP32 / DirectQ+GC / AQ-SGD+GC
+//!  (c)   throughput with activation-only / gradient-only / both
+//!        compression, in the paper's 4x8 (DP x pipeline) regime.
+//!
+//!     cargo run --release --example fig5_e2e_compression
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{Cli, TrainConfig};
+use aq_sgd::exp::{self, PaperRegime};
+use aq_sgd::metrics::Table;
+use aq_sgd::pipeline::{PipelineSim, SimConfig};
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    let epochs = cli.usize("epochs", 8)?;
+
+    // ---- (a,b) convergence with DP=2 + 4-bit gradient compression ----
+    let mut runs = Vec::new();
+    let mut t = Table::new(&["method", "final loss", "diverged"]);
+    for (label, c, dp_bits) in [
+        ("FP32 (no compression)".to_string(), Compression::Fp32, None),
+        ("DirectQ fw3 bw6 + grad4".to_string(),
+         Compression::DirectQ { fw_bits: 3, bw_bits: 6 }, Some(4u8)),
+        ("AQ-SGD fw3 bw6 + grad4".to_string(),
+         Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, Some(4u8)),
+    ] {
+        let mut cfg = TrainConfig::defaults("tiny");
+        cfg.compression = c;
+        cfg.dp_degree = 2;
+        cfg.dp_grad_bits = dp_bits;
+        cfg.epochs = epochs;
+        cfg.n_micro = 2;
+        cfg.n_examples = 96;
+        cfg.lr = 2e-3;
+        cfg.warmup_steps = 10;
+        println!("== {label} ==");
+        let run = exp::run_variant(cfg, &label)?;
+        t.row(vec![
+            label.clone(),
+            format!("{:.4}", run.stats.final_train_loss),
+            if run.diverged { "x".into() } else { "".into() },
+        ]);
+        runs.push(run);
+    }
+    println!("\nFigure 5(a,b) — convergence with end-to-end compression:");
+    print!("{}", t.render());
+    exp::save_traces("results/fig5_convergence.csv", &runs)?;
+
+    // ---- (c) throughput ablation in the paper regime (DP 4 x PP 8) ----
+    let regime = PaperRegime::default();
+    let dp_degree = 4;
+    let grad_frac_4bit = 4.0 / 32.0;
+    let mut tc = Table::new(&["configuration", "step time (s)", "throughput vs FP32"]);
+    let mut base_tp = 0.0;
+    for (label, act, grad4) in [
+        ("no compression", Compression::Fp32, false),
+        ("activation compression only", Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, false),
+        ("gradient compression only", Compression::Fp32, true),
+        ("activation + gradient (end-to-end)", Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, true),
+    ] {
+        let (fw, bw) = regime.msg_bytes(&act, false);
+        let cfg = SimConfig::uniform(
+            regime.n_stages,
+            regime.n_micro,
+            regime.fwd_s,
+            regime.bwd_s,
+            fw,
+            bw,
+            100e6,
+        );
+        let pipe_t = PipelineSim::run(&cfg).step_time_s;
+        // per-machine gradient shard: params / n_stages
+        let grad_bytes = regime.param_bytes / regime.n_stages as u64;
+        let grad_bytes = if grad4 { (grad_bytes as f64 * grad_frac_4bit) as u64 } else { grad_bytes };
+        let ar_t = PipelineSim::allreduce_time(grad_bytes, dp_degree, 100e6, 1e-3);
+        let step = pipe_t + ar_t;
+        let tp = (regime.n_micro * regime.micro_batch * dp_degree) as f64 / step;
+        if base_tp == 0.0 {
+            base_tp = tp;
+        }
+        tc.row(vec![label.to_string(), format!("{step:.2}"), format!("{:.1}x", tp / base_tp)]);
+    }
+    println!("\nFigure 5(c) — throughput at 100 Mbps, DP 4 x PP 8:");
+    print!("{}", tc.render());
+    println!("(paper: end-to-end compression reaches ~8.5x the no-compression throughput;");
+    println!(" disabling either compression loses most of the gain.)");
+    std::fs::write("results/fig5_throughput.csv", tc.to_csv())?;
+    Ok(())
+}

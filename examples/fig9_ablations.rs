@@ -1,0 +1,108 @@
+//! Figure 9 reproduction: the robustness ablations.
+//!   (a,b) number of pipeline stages K        (tiny K=2 vs small K=4)
+//!   (c,d) bits in communication              (fw2bw4 / fw3bw6 / fw4bw8)
+//!   (e,f) bits for the stored previous messages m ("mz": 2/4/8/f32)
+//!   (g,h) model size                         (tiny vs small)
+//!
+//!     cargo run --release --example fig9_ablations [-- --epochs N]
+//!
+//! Note: panels (a,b) in the paper vary K at fixed model; our K is baked
+//! per artifact config (K=2 tiny, K=4 small/e2e), so the K ablation rides
+//! the model-size axis — each table says which is which.
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{Cli, TrainConfig};
+use aq_sgd::exp;
+use aq_sgd::metrics::Table;
+
+fn base(model: &str, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults(model);
+    cfg.epochs = epochs;
+    cfg.n_micro = 2;
+    cfg.n_examples = 64;
+    cfg.lr = 2e-3;
+    cfg.warmup_steps = 8;
+    cfg
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    let epochs = cli.usize("epochs", 6)?;
+    let with_small = cli.bool("with-small"); // small (K=4) runs are ~20x slower
+    let mut all = Vec::new();
+
+    // ---- (c,d) bits in communication ----
+    let mut t_bits = Table::new(&["bits", "DirectQ loss", "AQ-SGD loss"]);
+    for (fw, bw) in [(2u8, 4u8), (3, 6), (4, 8)] {
+        let mut row = vec![format!("fw{fw} bw{bw}")];
+        for mk in [
+            Compression::DirectQ { fw_bits: fw, bw_bits: bw },
+            Compression::AqSgd { fw_bits: fw, bw_bits: bw },
+        ] {
+            let mut cfg = base("tiny", epochs);
+            cfg.compression = mk;
+            let label = format!("bits {} {}", mk.label(), fw);
+            println!("== {label} ==");
+            let run = exp::run_variant(cfg, &label)?;
+            row.push(format!("{:.4}", run.stats.final_train_loss));
+            all.push(run);
+        }
+        t_bits.row(row);
+    }
+    println!("\nFigure 9(c,d) — bits in communication (K=2 tiny):");
+    print!("{}", t_bits.render());
+
+    // ---- (e,f) bits for previous messages ----
+    let mut t_m = Table::new(&["m precision", "AQ-SGD fw2 bw4 loss"]);
+    for m_bits in [Some(2u8), Some(4), Some(8), None] {
+        let mut cfg = base("tiny", epochs);
+        cfg.compression = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
+        cfg.m_bits = m_bits;
+        let label = match m_bits {
+            Some(b) => format!("m{b}"),
+            None => "m f32".to_string(),
+        };
+        println!("== {label} ==");
+        let run = exp::run_variant(cfg, &label)?;
+        t_m.row(vec![label, format!("{:.4}", run.stats.final_train_loss)]);
+        all.push(run);
+    }
+    println!("\nFigure 9(e,f) — message-buffer precision (paper: m8 ~ f32, m2 degrades slightly):");
+    print!("{}", t_m.render());
+
+    // ---- (a,b)+(g,h) stages / model size ----
+    if with_small {
+        let mut t_k = Table::new(&["model (K)", "FP32", "AQ-SGD fw2 bw4", "DirectQ fw2 bw4"]);
+        for model in ["tiny", "small"] {
+            let mut row = vec![format!(
+                "{model} (K={})",
+                if model == "tiny" { 2 } else { 4 }
+            )];
+            for mk in [
+                Compression::Fp32,
+                Compression::AqSgd { fw_bits: 2, bw_bits: 4 },
+                Compression::DirectQ { fw_bits: 2, bw_bits: 4 },
+            ] {
+                let mut cfg = base(model, epochs.min(4));
+                cfg.compression = mk;
+                cfg.lr = if model == "small" { 1e-3 } else { 2e-3 };
+                let label = format!("K {model} {}", mk.label());
+                println!("== {label} ==");
+                let run = exp::run_variant(cfg, &label)?;
+                row.push(format!("{:.4}", run.stats.final_train_loss));
+                all.push(run);
+            }
+            t_k.row(row);
+        }
+        println!("\nFigure 9(a,b,g,h) — stages & model size (more stages => more");
+        println!("compression rounds => DirectQ degrades more; AQ-SGD holds):");
+        print!("{}", t_k.render());
+    } else {
+        println!("\n(skipping K=4/model-size panels; pass --with-small to include)");
+    }
+
+    exp::save_traces("results/fig9_ablations.csv", &all)?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Table 3 reproduction: per-microbatch computation vs communication
+//! breakdown of AQ-SGD (fw4 bw8) on the GPT2-1.5B regime. The paper
+//! reports 45/135 ms compute and 13..63 / 25..125 ms communication as
+//! bandwidth drops from 500 to 100 Mbps; the communication columns are
+//! pure message-size/bandwidth arithmetic our simulator reproduces
+//! exactly from the packed wire bytes.
+//!
+//!     cargo run --release --example table3_breakdown
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::exp::PaperRegime;
+use aq_sgd::metrics::Table;
+use aq_sgd::pipeline::{PipelineSim, SimConfig};
+use aq_sgd::util::fmt;
+
+fn main() -> Result<()> {
+    let regime = PaperRegime::default();
+    let c = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let (fw_bytes, bw_bytes) = regime.msg_bytes(&c, false);
+
+    println!(
+        "AQ-SGD fw4 bw8 on GPT2-1.5B: fw message {} / bw message {}\n",
+        fmt::bytes(fw_bytes),
+        fmt::bytes(bw_bytes)
+    );
+    let mut t = Table::new(&[
+        "Network",
+        "fwd comp.",
+        "fwd comm.",
+        "bwd comp.",
+        "bwd comm.",
+        "comm hidden?",
+    ]);
+    for mbps in [500.0, 300.0, 200.0, 100.0] {
+        let bw = mbps * 1e6;
+        let cfg = SimConfig::uniform(
+            regime.n_stages,
+            regime.n_micro,
+            regime.fwd_s,
+            regime.bwd_s,
+            fw_bytes,
+            bw_bytes,
+            bw,
+        );
+        let r = PipelineSim::run(&cfg);
+        let hidden = r.fw_msg_tx_s <= regime.fwd_s && r.bw_msg_tx_s <= regime.bwd_s;
+        t.row(vec![
+            format!("{mbps:.0} Mbps"),
+            fmt::duration_s(regime.fwd_s),
+            fmt::duration_s(r.fw_msg_tx_s),
+            fmt::duration_s(regime.bwd_s),
+            fmt::duration_s(r.bw_msg_tx_s),
+            if hidden { "yes (overlapped)".into() } else { "no (comm-bound)".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n(paper Table 3: 45/13, 45/21, 45/31, 45/63 ms fwd and 135/25..125 ms bwd)");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table3_breakdown.csv", t.to_csv())?;
+    Ok(())
+}

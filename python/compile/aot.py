@@ -1,0 +1,184 @@
+"""AOT exporter: lowers every L2 function to HLO *text* + a manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config `<name>` this writes under `artifacts/<name>/`:
+  stage{i}_fwd.hlo.txt / stage{i}_bwd.hlo.txt       (i < K-1)
+  stage{K-1}_loss.hlo.txt / stage{K-1}_lossbwd.hlo.txt
+  stage{i}_init.bin            flat f32 LE initial parameters
+  adamw_p{N}.hlo.txt           AdamW update per distinct param count
+  aq_encode / aq_decode / dq_encode / dq_decode .hlo.txt   (L1 kernels)
+  manifest.txt                 flat `key value` lines (rust-parsed)
+
+Run: python -m compile.aot --out-dir ../artifacts [--configs a,b] [--force]
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+from jax.flatten_util import ravel_pytree
+
+from . import model, optimizer
+from .configs import CONFIGS, DEFAULT_EXPORT, ModelCfg
+from .kernels import quant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_config(cfg: ModelCfg, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def kv(k, v):
+        manifest.append(f"{k} {v}")
+
+    kv("version", 1)
+    for field in ("name", "task", "vocab", "d_model", "n_layers", "n_heads",
+                  "seq", "micro_batch", "n_stages", "n_classes", "attn"):
+        kv(field, getattr(cfg, field))
+    kv("boundary", "x".join(str(d) for d in cfg.boundary_shape))
+
+    # ---- stage artifacts -------------------------------------------------
+    all_params = model.init_all_params(cfg)
+    adamw_sizes = set()
+    for i in range(cfg.n_stages):
+        fns = model.make_stage_fns(cfg, i)
+        n = fns["param_count"]
+        pf_spec = f32(n)
+        x_spec = model.input_spec(cfg, i)
+        b_spec = f32(*cfg.boundary_shape)
+        kv(f"stage{i}.params", n)
+        adamw_sizes.add(n)
+        kv(f"stage{i}.adamw", f"adamw_p{n}.hlo.txt")
+
+        last = i == cfg.n_stages - 1
+        if not last or cfg.n_stages == 1:
+            name = f"stage{i}_fwd.hlo.txt"
+            _write(os.path.join(out_dir, name),
+                   lower(fns["fwd"], pf_spec, x_spec))
+            kv(f"stage{i}.fwd", name)
+        if not last:
+            name = f"stage{i}_bwd.hlo.txt"
+            _write(os.path.join(out_dir, name),
+                   lower(fns["bwd"], pf_spec, x_spec, b_spec))
+            kv(f"stage{i}.bwd", name)
+        else:
+            t_spec = model.target_spec(cfg)
+            name = f"stage{i}_loss.hlo.txt"
+            _write(os.path.join(out_dir, name),
+                   lower(fns["loss"], pf_spec, x_spec, t_spec))
+            kv(f"stage{i}.loss", name)
+            name = f"stage{i}_lossbwd.hlo.txt"
+            _write(os.path.join(out_dir, name),
+                   lower(fns["lossbwd"], pf_spec, x_spec, t_spec))
+            kv(f"stage{i}.lossbwd", name)
+            # inference head (generation case study, paper App. I)
+            name = f"stage{i}_logits.hlo.txt"
+            _write(os.path.join(out_dir, name),
+                   lower(fns["logits"], pf_spec, x_spec))
+            kv(f"stage{i}.logits", name)
+
+        flat, _ = ravel_pytree(all_params[i])
+        init_name = f"stage{i}_init.bin"
+        np.asarray(flat, dtype="<f4").tofile(os.path.join(out_dir, init_name))
+        kv(f"stage{i}.init", init_name)
+
+    # ---- optimizer -------------------------------------------------------
+    for n in sorted(adamw_sizes):
+        name = f"adamw_p{n}.hlo.txt"
+        _write(os.path.join(out_dir, name),
+               lower(optimizer.adamw_fn, f32(n), f32(n), f32(n), f32(n),
+                     f32(), f32()))
+
+    # ---- quantization codecs (L1 Pallas kernels) -------------------------
+    b = f32(*cfg.boundary_shape)
+    s = f32()
+    _write(os.path.join(out_dir, "aq_encode.hlo.txt"),
+           lower(quant.aq_encode, b, b, b, s))
+    kv("quant.aq_encode", "aq_encode.hlo.txt")
+    _write(os.path.join(out_dir, "aq_decode.hlo.txt"),
+           lower(lambda c, sc, m, lv: (quant.aq_decode(c, sc, m, lv),),
+                 b, s, b, s))
+    kv("quant.aq_decode", "aq_decode.hlo.txt")
+    _write(os.path.join(out_dir, "dq_encode.hlo.txt"),
+           lower(quant.directq_encode, b, b, s))
+    kv("quant.dq_encode", "dq_encode.hlo.txt")
+    _write(os.path.join(out_dir, "dq_decode.hlo.txt"),
+           lower(lambda c, sc, lv: (quant.directq_decode(c, sc, lv),),
+                 b, s, s))
+    kv("quant.dq_decode", "dq_decode.hlo.txt")
+
+    _write(os.path.join(out_dir, "manifest.txt"), "\n".join(manifest) + "\n")
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, used for make-style freshness."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_EXPORT))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    fp = source_fingerprint()
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in CONFIGS:
+            print(f"unknown config {name!r}; known: {sorted(CONFIGS)}")
+            sys.exit(1)
+        out = os.path.join(args.out_dir, name)
+        stamp = os.path.join(out, ".fingerprint")
+        if not args.force and os.path.exists(stamp):
+            with open(stamp) as f:
+                if f.read().strip() == fp:
+                    print(f"[{name}] up to date")
+                    continue
+        print(f"[{name}] exporting to {out}")
+        export_config(CONFIGS[name], out)
+        with open(stamp, "w") as f:
+            f.write(fp)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Named model/export configurations.
+
+Each config fully determines the shapes of every AOT artifact (HLO is
+shape-static), the pipeline partitioning (K stages) and the task head.
+The rust coordinator discovers everything through the emitted manifest.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    micro_batch: int
+    n_stages: int
+    task: str = "lm"  # "lm" (next-token) or "cls" (sequence classification)
+    n_classes: int = 2
+    attn: str = "jnp"  # "jnp" (fused jnp attention) or "pallas" (L1 kernel)
+    d_ff_mult: int = 4
+    init_scale: float = 0.02
+    seed: int = 0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_ff_mult * self.d_model
+
+    @property
+    def boundary_shape(self):
+        """Activation shape exchanged between pipeline stages."""
+        return (self.micro_batch, self.seq, self.d_model)
+
+    def stage_layers(self, stage: int):
+        """Contiguous [lo, hi) transformer-block range owned by `stage`.
+
+        Blocks are split as evenly as possible; the embedding joins stage 0
+        and the task head joins the last stage.
+        """
+        assert 0 <= stage < self.n_stages
+        base, rem = divmod(self.n_layers, self.n_stages)
+        lo = stage * base + min(stage, rem)
+        hi = lo + base + (1 if stage < rem else 0)
+        return lo, hi
+
+
+# Registry of exportable configurations. "tiny*" drive tests; "small" drives
+# the quickstart/figure examples; "e2e" drives the end-to-end training run.
+CONFIGS = {}
+
+
+def _reg(cfg: ModelCfg) -> ModelCfg:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+TINY = _reg(ModelCfg("tiny", vocab=256, d_model=32, n_layers=2, n_heads=2,
+                     seq=32, micro_batch=4, n_stages=2))
+TINY_PALLAS = _reg(ModelCfg("tiny_pallas", vocab=256, d_model=32, n_layers=2,
+                            n_heads=2, seq=32, micro_batch=4, n_stages=2,
+                            attn="pallas"))
+TINY_CLS = _reg(ModelCfg("tiny_cls", vocab=256, d_model=32, n_layers=2,
+                         n_heads=2, seq=32, micro_batch=4, n_stages=2,
+                         task="cls", n_classes=2))
+SMALL = _reg(ModelCfg("small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+                      seq=64, micro_batch=8, n_stages=4))
+SMALL_CLS = _reg(ModelCfg("small_cls", vocab=512, d_model=128, n_layers=4,
+                          n_heads=4, seq=64, micro_batch=8, n_stages=4,
+                          task="cls", n_classes=2))
+E2E = _reg(ModelCfg("e2e", vocab=256, d_model=256, n_layers=8, n_heads=8,
+                    seq=128, micro_batch=4, n_stages=4))
+
+DEFAULT_EXPORT = ["tiny", "tiny_pallas", "tiny_cls", "small", "small_cls"]

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#  - quant.py      : AQ-SGD / DirectQ uniform quantization codecs
+#  - attention.py  : fused causal flash attention (forward) + custom_vjp
+#  - ref.py        : pure-jnp oracles (the correctness ground truth)
+from . import attention, quant, ref  # noqa: F401

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: fused causal flash attention (forward).
+
+TPU-flavoured flash attention: the grid is (batch, heads, q-blocks); each
+program streams K/V blocks through an online-softmax accumulator. On real
+TPU hardware the q/k/v tiles live in VMEM and the q@k^T / p@v contractions
+hit the MXU; `interpret=True` here lowers the identical schedule to plain
+HLO so the CPU PJRT client can execute it (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU sizing argument).
+
+Backward: stage gradients are produced by `jax.vjp` over the stage forward
+function, so the attention op must be differentiable. Pallas primitives
+have no general AD rule, so we wrap the kernel in `jax.custom_vjp` whose
+backward pass recomputes attention with the pure-jnp reference (exact, and
+matches the paper's recomputation-style pipeline backward which ships no
+residuals between machines).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float,
+                  causal: bool):
+    # q_ref: [1, 1, block_q, d], k_ref/v_ref: [1, 1, S, d]
+    q = q_ref[0, 0] * sm_scale                      # [bq, d]
+    block_q, d = q.shape
+    seq = k_ref.shape[2]
+    n_kv = seq // block_k
+    qi = pl.program_id(2)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_blk = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                                slice(None)))      # [bk, d]
+        v_blk = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                                slice(None)))
+        s = q @ k_blk.T                             # [bq, bk]
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])             # [bq, bk]
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0, 0] = acc / l_i[:, None]
+
+
+def _flash_attention_fwd(q, k, v, *, causal, block_q, block_k):
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(_flash_kernel, block_k=block_k,
+                               sm_scale=1.0 / (d ** 0.5), causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K):
+    """Fused causal attention. q,k,v: [B, H, S, Dh] (f32)."""
+    return _flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k)
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    o = _flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                             block_k=block_k)
+    return o, (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention(q, k, v, causal=causal),
+                     q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_fwd, _bwd)

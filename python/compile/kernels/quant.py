@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: the AQ-SGD compression hot-spot.
+
+The kernels are element-wise and bandwidth-bound; they are tiled over a 1-D
+grid of BLOCK-element lanes of the flattened tensor (on real TPU hardware a
+(8k, 128) VMEM tile; see DESIGN.md §Hardware-Adaptation). `interpret=True`
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+these artifacts are executed by the rust coordinator on the CPU client.
+
+The per-tensor max-abs `scale` is a reduction and is computed in the
+surrounding L2 jnp code (two passes over the tensor: max-abs + quantize —
+the roofline-optimal schedule for a tensor that does not fit in VMEM).
+
+`levels` (= 2^bits - 1) and `scale` enter the kernels as (1,)-shaped
+operands so a single AOT artifact serves every bit-width at runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 4096
+
+
+def _pad_flat(x):
+    """Flatten to 1-D and zero-pad to a BLOCK multiple. Returns (xp, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n
+
+
+def _scalar_spec():
+    # A (1,)-shaped operand broadcast to every grid step.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _block_spec():
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def _quant_kernel(x_ref, noise_ref, scale_ref, levels_ref, codes_ref):
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    y = (x_ref[...] / scale + 1.0) * 0.5 * levels + noise_ref[...]
+    codes_ref[...] = jnp.clip(jnp.floor(y), 0.0, levels)
+
+
+def quantize(x, scale, noise, levels):
+    """Pallas uniform quantizer. Matches ref.quantize exactly."""
+    xp, n = _pad_flat(x)
+    np_, _ = _pad_flat(noise)
+    grid = (xp.shape[0] // BLOCK,)
+    codes = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[_block_spec(), _block_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, np_, scale.reshape(1), levels.reshape(1))
+    return codes[:n].reshape(x.shape)
+
+
+def _deq_kernel(codes_ref, scale_ref, levels_ref, x_ref):
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    x_ref[...] = (codes_ref[...] / levels * 2.0 - 1.0) * scale
+
+
+def dequantize(codes, scale, levels):
+    cp, n = _pad_flat(codes)
+    grid = (cp.shape[0] // BLOCK,)
+    x = pl.pallas_call(
+        _deq_kernel,
+        grid=grid,
+        in_specs=[_block_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(cp.shape, jnp.float32),
+        interpret=True,
+    )(cp, scale.reshape(1), levels.reshape(1))
+    return x[:n].reshape(codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# AQ-SGD delta codec: fused (quantize delta, dequantize, advance buffer)
+# ---------------------------------------------------------------------------
+
+def _aq_encode_kernel(a_ref, m_ref, noise_ref, scale_ref, levels_ref,
+                      codes_ref, m_new_ref):
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    delta = a_ref[...] - m_ref[...]
+    y = (delta / scale + 1.0) * 0.5 * levels + noise_ref[...]
+    codes = jnp.clip(jnp.floor(y), 0.0, levels)
+    codes_ref[...] = codes
+    m_new_ref[...] = m_ref[...] + (codes / levels * 2.0 - 1.0) * scale
+
+
+def aq_encode(a, m, noise, levels):
+    """Sender-side AQ-SGD boundary op. Returns (codes, scale, m_new)."""
+    delta_scale = ref.quant_scale(a - m)
+    ap, n = _pad_flat(a)
+    mp, _ = _pad_flat(m)
+    np_, _ = _pad_flat(noise)
+    grid = (ap.shape[0] // BLOCK,)
+    codes, m_new = pl.pallas_call(
+        _aq_encode_kernel,
+        grid=grid,
+        in_specs=[_block_spec(), _block_spec(), _block_spec(),
+                  _scalar_spec(), _scalar_spec()],
+        out_specs=[_block_spec(), _block_spec()],
+        out_shape=[jax.ShapeDtypeStruct(ap.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(ap.shape, jnp.float32)],
+        interpret=True,
+    )(ap, mp, np_, delta_scale.reshape(1), levels.reshape(1))
+    return (codes[:n].reshape(a.shape), delta_scale,
+            m_new[:n].reshape(a.shape))
+
+
+def _aq_decode_kernel(codes_ref, m_ref, scale_ref, levels_ref, m_new_ref):
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    m_new_ref[...] = m_ref[...] + (codes_ref[...] / levels * 2.0 - 1.0) * scale
+
+
+def aq_decode(codes, scale, m, levels):
+    """Receiver-side AQ-SGD boundary op: advance the buffer replica."""
+    cp, n = _pad_flat(codes)
+    mp, _ = _pad_flat(m)
+    grid = (cp.shape[0] // BLOCK,)
+    m_new = pl.pallas_call(
+        _aq_decode_kernel,
+        grid=grid,
+        in_specs=[_block_spec(), _block_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(cp.shape, jnp.float32),
+        interpret=True,
+    )(cp, mp, scale.reshape(1), levels.reshape(1))
+    return m_new[:n].reshape(codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# DirectQ baseline (AC-GC / TinyScript style)
+# ---------------------------------------------------------------------------
+
+def directq_encode(a, noise, levels):
+    scale = ref.quant_scale(a)
+    return quantize(a, scale, noise, levels), scale
+
+
+def directq_decode(codes, scale, levels):
+    return dequantize(codes, scale, levels)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suite compares the Pallas
+kernels against, and the reference semantics the rust `codec` module
+mirrors bit-for-bit (same rounding rule, same scale convention).
+
+Quantization scheme (paper §4.1 "Baselines"): a tensor is normalized into
+[-1, 1] by its max-abs `scale`, the range is partitioned uniformly into
+2^b intervals, i.e. codes in {0, ..., 2^b - 1}:
+
+    code = floor((x / scale + 1) / 2 * levels + u),   levels = 2^b - 1
+    deq  = (code / levels * 2 - 1) * scale
+
+`u` is the rounding offset: u = 0.5 reproduces deterministic
+round-to-nearest; u ~ U[0,1) gives unbiased stochastic rounding (the
+variant Theorem 3.1's `E Q(x) = x` assumption needs).
+"""
+
+import jax.numpy as jnp
+
+
+def quant_scale(x, eps=1e-12):
+    """Per-tensor max-abs scale (f32 scalar)."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), eps).astype(jnp.float32)
+
+
+def quantize(x, scale, noise, levels):
+    """Uniform b-bit quantization of `x` given `scale`.
+
+    noise: same shape as x, rounding offsets in [0, 1).
+    levels: f32 scalar = 2^bits - 1.
+    Returns integer codes stored as f32 (PJRT-friendly; exact for b<=23).
+    """
+    y = (x / scale + 1.0) * 0.5 * levels + noise
+    return jnp.clip(jnp.floor(y), 0.0, levels)
+
+
+def dequantize(codes, scale, levels):
+    return (codes / levels * 2.0 - 1.0) * scale
+
+
+def directq_encode(a, noise, levels):
+    """DirectQ (AC-GC/TinyScript style): quantize the activation itself."""
+    scale = quant_scale(a)
+    codes = quantize(a, scale, noise, levels)
+    return codes, scale
+
+
+def directq_decode(codes, scale, levels):
+    return dequantize(codes, scale, levels)
+
+
+def aq_encode(a, m, noise, levels):
+    """AQ-SGD encode: quantize the *change* of the activation vs. the
+    message buffer `m`, and advance the buffer.
+
+    Returns (codes, scale, m_new) with m_new = m + deq(codes, scale).
+    The receiver applies `aq_decode` with the identical (codes, scale) and
+    its own replica of `m`, keeping both buffer replicas bit-identical.
+    """
+    delta = a - m
+    scale = quant_scale(delta)
+    codes = quantize(delta, scale, noise, levels)
+    m_new = m + dequantize(codes, scale, levels)
+    return codes, scale, m_new
+
+
+def aq_decode(codes, scale, m, levels):
+    return m + dequantize(codes, scale, levels)
+
+
+def attention(q, k, v, causal=True):
+    """Reference multi-head causal attention. q,k,v: [B, H, S, Dh]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool))
+        s = jnp.where(mask, s, jnp.finfo(s.dtype).min)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,259 @@
+"""L2: GPT-style decoder-only transformer, partitioned into pipeline stages.
+
+Every stage is a pure function over a *flat* f32 parameter vector (the
+uniform interface the rust coordinator sees), exported AOT as HLO text:
+
+    stage i (i < K-1):
+        fwd : (params_flat, x_in)        -> x_out
+        bwd : (params_flat, x_in, g_out) -> (g_params_flat, g_in)
+    stage 0's bwd drops g_in (its input is token ids);
+    last stage:
+        lossbwd : (params_flat, x_in, targets) -> (loss, g_params_flat, g_in)
+        loss    : (params_flat, x_in, targets) -> loss          (eval only)
+
+Backward is recomputation-style (`jax.vjp` over the stage forward): the
+pipeline ships no residuals between machines, exactly like the paper's
+setting where only activations cross the wire.
+
+Architecture: pre-LN blocks, learned positional embeddings, GELU MLP,
+untied LM head. Attention is either fused-jnp (default; fastest under the
+CPU PJRT backend) or the L1 Pallas flash kernel (cfg.attn == "pallas").
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .configs import ModelCfg
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelCfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    s = cfg.init_scale
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wqkv": jax.random.normal(ks[0], (d, 3 * d), jnp.float32) * s,
+        "bqkv": jnp.zeros((3 * d,), jnp.float32),
+        "wo": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "bo": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": jax.random.normal(ks[2], (d, f), jnp.float32) * s,
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": jax.random.normal(ks[3], (f, d), jnp.float32) * s,
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_embed(cfg: ModelCfg, key):
+    k1, k2 = jax.random.split(key)
+    s = cfg.init_scale
+    return {
+        "tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32) * s,
+        "pos": jax.random.normal(k2, (cfg.seq, cfg.d_model), jnp.float32) * s,
+    }
+
+
+def _init_head(cfg: ModelCfg, key):
+    d = cfg.d_model
+    out = cfg.vocab if cfg.task == "lm" else cfg.n_classes
+    return {
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+        "w": jax.random.normal(key, (d, out), jnp.float32) * cfg.init_scale,
+        "b": jnp.zeros((out,), jnp.float32),
+    }
+
+
+def init_stage_params(cfg: ModelCfg, stage: int, key):
+    """Pytree of parameters owned by `stage`."""
+    lo, hi = cfg.stage_layers(stage)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    p = {}
+    if stage == 0:
+        p["embed"] = _init_embed(cfg, keys[0])
+    p["blocks"] = [_init_block(cfg, keys[1 + l]) for l in range(lo, hi)]
+    if stage == cfg.n_stages - 1:
+        p["head"] = _init_head(cfg, keys[-1])
+    return p
+
+
+def init_all_params(cfg: ModelCfg, seed=None):
+    seed = cfg.seed if seed is None else seed
+    root = jax.random.PRNGKey(seed)
+    keys = jax.random.split(root, cfg.n_stages)
+    return [init_stage_params(cfg, i, keys[i]) for i in range(cfg.n_stages)]
+
+
+def stage_unravel(cfg: ModelCfg, stage: int):
+    """(param_count, unravel_fn) for `stage`'s flat parameter vector."""
+    p = init_stage_params(cfg, stage, jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(p)
+    return flat.shape[0], unravel
+
+
+# ---------------------------------------------------------------------------
+# Forward computation
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelCfg, p, x):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ p["wqkv"] + p["bqkv"]                       # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)      # [b, h, s, dh]
+    k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    if cfg.attn == "pallas":
+        o = attn_kernel.flash_attention(q, k, v, True)
+    else:
+        o = kref.attention(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ p["wo"] + p["bo"]
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _block(cfg: ModelCfg, p, x):
+    x = x + _attention(cfg, p, _layernorm(x, p["ln1_g"], p["ln1_b"]))
+    x = x + _mlp(p, _layernorm(x, p["ln2_g"], p["ln2_b"]))
+    return x
+
+
+def _embed(cfg: ModelCfg, p, tokens):
+    # tokens: i32 [B, S]
+    return p["tok"][tokens] + p["pos"][None, :, :]
+
+
+def stage_apply(cfg: ModelCfg, stage: int, params, x):
+    """Stage forward over the pytree params. `x` is tokens for stage 0,
+    hidden states otherwise. Returns the outgoing hidden states."""
+    if stage == 0:
+        x = _embed(cfg, params["embed"], x)
+    for bp in params["blocks"]:
+        x = _block(cfg, bp, x)
+    return x
+
+
+def head_logits(cfg: ModelCfg, hp, h):
+    h = _layernorm(h, hp["lnf_g"], hp["lnf_b"])
+    if cfg.task == "cls":
+        h = jnp.mean(h, axis=1)                            # [B, D]
+    return h @ hp["w"] + hp["b"]
+
+
+def head_loss(cfg: ModelCfg, hp, h, targets):
+    """Mean cross-entropy. LM: next-token prediction (targets[:, t] is the
+    gold token for position t+1 ... we follow the convention that `targets`
+    is the input sequence itself and shift internally). CLS: targets are
+    labels i32[B]."""
+    logits = head_logits(cfg, hp, h)
+    if cfg.task == "lm":
+        lg = logits[:, :-1, :]                             # predict t+1
+        tg = targets[:, 1:]
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def last_stage_loss(cfg: ModelCfg, params, x, targets):
+    h = stage_apply(cfg, cfg.n_stages - 1, params, x)
+    return head_loss(cfg, params["head"], h, targets)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter stage functions (the AOT export surface)
+# ---------------------------------------------------------------------------
+
+def make_stage_fns(cfg: ModelCfg, stage: int):
+    """Returns a dict of flat-parameter functions for `stage`:
+    {fwd, bwd} for non-last stages, {lossbwd, loss, fwd} for the last."""
+    n, unravel = stage_unravel(cfg, stage)
+    last = stage == cfg.n_stages - 1
+
+    def fwd(pf, x):
+        return (stage_apply(cfg, stage, unravel(pf), x),)
+
+    fns = {"fwd": fwd, "param_count": n}
+
+    if not last:
+        if stage == 0:
+            def bwd(pf, x, g):
+                _, vjp = jax.vjp(lambda pf_: fwd(pf_, x)[0], pf)
+                (gp,) = vjp(g)
+                return (gp,)
+        else:
+            def bwd(pf, x, g):
+                _, vjp = jax.vjp(lambda pf_, x_: fwd(pf_, x_)[0], pf, x)
+                gp, gx = vjp(g)
+                return (gp, gx)
+        fns["bwd"] = bwd
+    else:
+        def loss_fn(pf, x, t):
+            return last_stage_loss(cfg, unravel(pf), x, t)
+
+        def loss(pf, x, t):
+            return (loss_fn(pf, x, t),)
+
+        def logits(pf, x):
+            p = unravel(pf)
+            h = stage_apply(cfg, cfg.n_stages - 1, p, x)
+            return (head_logits(cfg, p["head"], h),)
+
+        fns["logits"] = logits
+
+        if cfg.n_stages == 1:
+            # degenerate single-stage pipeline: x is tokens
+            def lossbwd(pf, x, t):
+                l, vjp = jax.vjp(lambda pf_: loss_fn(pf_, x, t), pf)
+                (gp,) = vjp(jnp.float32(1.0))
+                return (l, gp)
+        else:
+            def lossbwd(pf, x, t):
+                l, vjp = jax.vjp(lambda pf_, x_: loss_fn(pf_, x_, t), pf, x)
+                gp, gx = vjp(jnp.float32(1.0))
+                return (l, gp, gx)
+        fns["loss"] = loss
+        fns["lossbwd"] = lossbwd
+    return fns
+
+
+def full_model_loss(cfg: ModelCfg, all_params, tokens, targets):
+    """Monolithic (non-pipelined) loss — test oracle for stage composition."""
+    x = tokens
+    for i in range(cfg.n_stages):
+        if i < cfg.n_stages - 1:
+            x = stage_apply(cfg, i, all_params[i], x)
+    return last_stage_loss(cfg, all_params[-1], x, targets)
+
+
+def input_spec(cfg: ModelCfg, stage: int):
+    """ShapeDtypeStruct of the stage input."""
+    if stage == 0:
+        return jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq), jnp.int32)
+    return jax.ShapeDtypeStruct(cfg.boundary_shape, jnp.float32)
+
+
+def target_spec(cfg: ModelCfg):
+    if cfg.task == "lm":
+        return jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq), jnp.int32)
+    return jax.ShapeDtypeStruct((cfg.micro_batch,), jnp.int32)

@@ -1,0 +1,35 @@
+"""L2: flat AdamW update, exported per distinct stage parameter count.
+
+Matches the paper's App. C training setup (AdamW, warmup + linear decay —
+the schedule itself lives in the rust coordinator; only the state update
+is compiled). Hyper-parameters beta1/beta2/eps/weight-decay are baked at
+lowering time; step and lr are runtime scalars.
+
+The rust `optim` module also carries a native implementation; a parity
+test pins the two against each other.
+"""
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def adamw_update(p, m, v, g, step, lr):
+    """One AdamW step over flat f32 vectors.
+
+    step: f32 scalar, 1-based step count (for bias correction).
+    Returns (p_new, m_new, v_new).
+    """
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    m_hat = m_new / (1.0 - BETA1 ** step)
+    v_hat = v_new / (1.0 - BETA2 ** step)
+    update = m_hat / (jnp.sqrt(v_hat) + EPS) + WEIGHT_DECAY * p
+    return p - lr * update, m_new, v_new
+
+
+def adamw_fn(p, m, v, g, step, lr):
+    return adamw_update(p, m, v, g, step, lr)

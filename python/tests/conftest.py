@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

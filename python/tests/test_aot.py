@@ -1,0 +1,62 @@
+"""AOT export surface: manifests consistent, artifacts well-formed."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest(name):
+    path = os.path.join(ART, name, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for {name} not built (run `make artifacts`)")
+    out = {}
+    with open(path) as f:
+        for line in f:
+            k, v = line.strip().split(" ", 1)
+            out[k] = v
+    return out
+
+
+@pytest.mark.parametrize("name", ["tiny", "tiny_cls", "small"])
+def test_manifest_consistent(name):
+    m = _manifest(name)
+    cfg = CONFIGS[name]
+    assert int(m["n_stages"]) == cfg.n_stages
+    assert m["boundary"] == "x".join(str(d) for d in cfg.boundary_shape)
+    for i in range(cfg.n_stages):
+        n = int(m[f"stage{i}.params"])
+        want, _ = model.stage_unravel(cfg, i)
+        assert n == want
+        # init bin holds exactly n f32s
+        init = os.path.join(ART, name, m[f"stage{i}.init"])
+        assert os.path.getsize(init) == 4 * n
+        # adamw artifact exists for this size
+        assert os.path.exists(os.path.join(ART, name, m[f"stage{i}.adamw"]))
+
+
+@pytest.mark.parametrize("name", ["tiny"])
+def test_hlo_text_wellformed(name):
+    m = _manifest(name)
+    d = os.path.join(ART, name)
+    hlo_files = [v for k, v in m.items() if v.endswith(".hlo.txt")]
+    assert len(hlo_files) >= 8
+    for f in set(hlo_files):
+        with open(os.path.join(d, f)) as fh:
+            text = fh.read()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text, f
+
+
+def test_init_bins_finite():
+    m = _manifest("tiny")
+    for i in range(int(m["n_stages"])):
+        arr = np.fromfile(os.path.join(ART, "tiny", m[f"stage{i}.init"]),
+                          dtype="<f4")
+        assert np.all(np.isfinite(arr))
+        assert np.abs(arr).max() <= 1.0  # init_scale + unit LN gammas

@@ -1,0 +1,44 @@
+"""AdamW update vs a trusted numpy re-implementation."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile import optimizer
+
+
+def _np_adamw(p, m, v, g, step, lr):
+    b1, b2, eps, wd = (optimizer.BETA1, optimizer.BETA2, optimizer.EPS,
+                       optimizer.WEIGHT_DECAY)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mh = m2 / (1 - b1**step)
+    vh = v2 / (1 - b2**step)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m2, v2
+
+
+@given(n=st.integers(1, 64), step=st.integers(1, 1000),
+       seed=st.integers(0, 2**16))
+def test_adamw_matches_numpy(n, step, seed):
+    rng = np.random.default_rng(seed)
+    p, m, g = (rng.normal(size=n).astype("float32") for _ in range(3))
+    v = np.abs(rng.normal(size=n)).astype("float32")
+    lr = 1e-3
+    got = optimizer.adamw_update(jnp.asarray(p), jnp.asarray(m),
+                                 jnp.asarray(v), jnp.asarray(g),
+                                 jnp.float32(step), jnp.float32(lr))
+    want = _np_adamw(p.astype("float64"), m.astype("float64"),
+                     v.astype("float64"), g.astype("float64"), step, lr)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), b, rtol=2e-4, atol=1e-6)
+
+
+def test_adamw_shrinks_simple_quadratic():
+    p = jnp.asarray(np.ones(8, dtype="float32") * 5.0)
+    m = jnp.zeros(8)
+    v = jnp.zeros(8)
+    for step in range(1, 200):
+        g = p  # grad of p^2/2
+        p, m, v = optimizer.adamw_update(p, m, v, g, jnp.float32(step),
+                                         jnp.float32(0.05))
+    assert float(jnp.max(jnp.abs(p))) < 1.0

@@ -1,0 +1,180 @@
+"""L1 quant kernels vs pure-jnp oracle: the core correctness signal.
+
+Hypothesis sweeps shapes and bit-widths; every property the rust codec
+relies on is pinned here:
+  * codes identical between Pallas kernel and oracle (integer-exact)
+  * sender buffer m_new == receiver buffer m_new (bit-identical replicas)
+  * codes lie in [0, 2^b - 1] (packable into b bits on the wire)
+  * deterministic rounding error <= 1 quantization step
+  * stochastic rounding is (empirically) unbiased and satisfies the
+    Theorem 3.1 contraction E||x - Q(x)|| <= c_Q ||x||, c_Q = sqrt(d)/2^b
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+BITS = st.sampled_from([2, 3, 4, 6, 8])
+SHAPES = st.sampled_from([(7,), (4, 5), (2, 3, 8), (1, 129), (4, 32, 32),
+                          (3, 1, 1), (4096,), (4097,)])
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype("float32") * scale)
+
+
+def _noise(shape, seed=None):
+    if seed is None:
+        return jnp.full(shape, 0.5, jnp.float32)  # deterministic rounding
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(size=shape).astype("float32"))
+
+
+@given(shape=SHAPES, bits=BITS, seed=st.integers(0, 2**16))
+def test_quantize_matches_ref(shape, bits, seed):
+    x = _rand(shape, seed)
+    u = _noise(shape, seed + 1)
+    lv = jnp.float32(2**bits - 1)
+    scale = ref.quant_scale(x)
+    got = quant.quantize(x, scale, u, lv)
+    want = ref.quantize(x, scale, u, lv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == x.shape
+    codes = np.asarray(got)
+    assert codes.min() >= 0 and codes.max() <= 2**bits - 1
+    assert np.all(codes == np.floor(codes))
+
+
+@given(shape=SHAPES, bits=BITS, seed=st.integers(0, 2**16))
+def test_dequantize_matches_ref(shape, bits, seed):
+    x = _rand(shape, seed)
+    lv = jnp.float32(2**bits - 1)
+    scale = ref.quant_scale(x)
+    codes = ref.quantize(x, scale, _noise(shape), lv)
+    got = quant.dequantize(codes, scale, lv)
+    want = ref.dequantize(codes, scale, lv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@given(shape=SHAPES, bits=BITS, seed=st.integers(0, 2**16))
+def test_roundtrip_error_bound(shape, bits, seed):
+    """Deterministic round-to-nearest error is <= half a quantization step
+    (one full step for stochastic)."""
+    x = _rand(shape, seed)
+    lv = jnp.float32(2**bits - 1)
+    scale = ref.quant_scale(x)
+    codes = quant.quantize(x, scale, _noise(shape), lv)
+    xh = quant.dequantize(codes, scale, lv)
+    step = 2.0 * float(scale) / float(lv)
+    assert np.max(np.abs(np.asarray(xh) - np.asarray(x))) <= step * 0.5 + 1e-6
+
+
+@given(shape=SHAPES, bits=BITS, seed=st.integers(0, 2**16))
+def test_aq_encode_decode_replicas(shape, bits, seed):
+    """Sender's advanced buffer must equal receiver's bit-for-bit: the
+    entire AQ-SGD algorithm hinges on both sides holding identical m."""
+    a = _rand(shape, seed)
+    m = _rand(shape, seed + 1)
+    u = _noise(shape, seed + 2)
+    lv = jnp.float32(2**bits - 1)
+    codes, scale, m_sender = quant.aq_encode(a, m, u, lv)
+    m_receiver = quant.aq_decode(codes, scale, m, lv)
+    np.testing.assert_array_equal(np.asarray(m_sender), np.asarray(m_receiver))
+    # codes agree with oracle
+    c_ref, s_ref, _ = ref.aq_encode(a, m, u, lv)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c_ref))
+    assert float(scale) == float(s_ref)
+
+
+@given(bits=BITS, seed=st.integers(0, 2**16))
+def test_aq_error_contracts(bits, seed):
+    """After an AQ step the buffer is closer to the activation than the
+    quantization step bound allows: ||a - m_new|| <= step/2 * sqrt(d)."""
+    shape = (64, 32)
+    a = _rand(shape, seed)
+    m = _rand(shape, seed + 1)
+    lv = jnp.float32(2**bits - 1)
+    _, scale, m_new = quant.aq_encode(a, m, _noise(shape), lv)
+    step = 2.0 * float(scale) / float(lv)
+    err = np.linalg.norm(np.asarray(a) - np.asarray(m_new))
+    assert err <= 0.5 * step * np.sqrt(a.size) + 1e-5
+
+
+@given(shape=SHAPES, bits=BITS, seed=st.integers(0, 2**16))
+def test_directq_matches_ref(shape, bits, seed):
+    a = _rand(shape, seed)
+    u = _noise(shape, seed + 3)
+    lv = jnp.float32(2**bits - 1)
+    codes, scale = quant.directq_encode(a, u, lv)
+    c_ref, s_ref = ref.directq_encode(a, u, lv)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c_ref))
+    assert float(scale) == float(s_ref)
+    a_hat = quant.directq_decode(codes, scale, lv)
+    np.testing.assert_allclose(np.asarray(a_hat),
+                               np.asarray(ref.directq_decode(c_ref, s_ref, lv)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_stochastic_rounding_unbiased(bits):
+    """E[deq(Q(x))] == x for stochastic rounding (Theorem 3.1's unbiased-Q
+    assumption). Averaged over many noise draws."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype("float32"))
+    lv = jnp.float32(2**bits - 1)
+    scale = ref.quant_scale(x)
+    n_trials = 400
+    acc = np.zeros(x.shape, dtype=np.float64)
+    for t in range(n_trials):
+        u = jnp.asarray(rng.uniform(size=x.shape).astype("float32"))
+        codes = ref.quantize(x, scale, u, lv)
+        acc += np.asarray(ref.dequantize(codes, scale, lv), dtype=np.float64)
+    mean = acc / n_trials
+    step = 2.0 * float(scale) / float(lv)
+    # per-element standard error of the rounding noise: <= step/(2 sqrt(n));
+    # the norm of the 256-dim bias vector concentrates at SE*sqrt(256).
+    se = 0.5 * step / np.sqrt(n_trials)
+    bias_norm = np.linalg.norm(mean - np.asarray(x, dtype=np.float64))
+    assert bias_norm <= 2.0 * se * np.sqrt(x.size)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_cq_contraction_bound(bits):
+    """E||x - Q(x)|| <= c_Q ||x|| with c_Q = sqrt(d)/2^b (footnote 3)."""
+    rng = np.random.default_rng(1)
+    d = 512
+    x = jnp.asarray(rng.normal(size=(d,)).astype("float32"))
+    lv = jnp.float32(2**bits - 1)
+    scale = ref.quant_scale(x)
+    errs = []
+    for t in range(50):
+        u = jnp.asarray(rng.uniform(size=x.shape).astype("float32"))
+        xh = ref.dequantize(ref.quantize(x, scale, u, lv), scale, lv)
+        errs.append(np.linalg.norm(np.asarray(xh) - np.asarray(x)))
+    c_q = np.sqrt(d) / 2**bits
+    assert np.mean(errs) <= c_q * np.linalg.norm(np.asarray(x)) + 1e-6
+
+
+def test_zero_delta_stays_fixed():
+    """When a == m the delta is 0 and the buffer must not drift."""
+    a = jnp.ones((16, 16), jnp.float32)
+    lv = jnp.float32(15.0)
+    codes, scale, m_new = quant.aq_encode(a, a, _noise(a.shape), lv)
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(a), atol=1e-7)
+
+
+def test_extreme_values():
+    """Large magnitudes and denormals survive the codec."""
+    for mag in (1e20, 1e-20, 1.0):
+        x = jnp.asarray(np.array([[mag, -mag, 0.0, mag / 3]], dtype="float32"))
+        lv = jnp.float32(15.0)
+        scale = ref.quant_scale(x)
+        xh = quant.dequantize(quant.quantize(x, scale, _noise(x.shape), lv),
+                              scale, lv)
+        step = 2.0 * float(scale) / 15.0
+        assert np.all(np.abs(np.asarray(xh) - np.asarray(x)) <= step)

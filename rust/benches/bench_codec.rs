@@ -1,0 +1,81 @@
+//! Codec micro-benchmarks: the L3 hot path. A boundary message for the
+//! paper regime is 1.6M elements; the coordinator must encode+pack well
+//! above network speed so compression never becomes the bottleneck
+//! (§Perf target: >= 1 GB/s per core).
+
+use aq_sgd::codec::delta::AqState;
+use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::codec::{f16, pack, topk};
+use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 1 << 20; // 1M elements = 4 MB fp32
+    let bytes = (n * 4) as u64;
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+    // quantize (deterministic + stochastic)
+    for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+        for bits in [2u8, 4, 8] {
+            let q = UniformQuantizer::new(bits, rounding);
+            let mut codes = vec![0u8; n];
+            let name = format!("quantize/{bits}bit/{rounding:?}/1M");
+            b.run(&name, || {
+                black_box(q.encode(&x, &mut codes, &mut rng));
+            })
+            .report_throughput(bytes);
+        }
+    }
+
+    // dequantize
+    let q = UniformQuantizer::new(4, Rounding::Nearest);
+    let mut codes = vec![0u8; n];
+    let scale = q.encode(&x, &mut codes, &mut rng);
+    let mut out = vec![0f32; n];
+    b.run("dequantize/4bit/1M", || {
+        q.decode(&codes, scale, &mut out);
+        black_box(&out);
+    })
+    .report_throughput(bytes);
+
+    // bit packing
+    for bits in [2u8, 3, 4, 8] {
+        let mut packed = vec![0u8; pack::packed_len(n, bits)];
+        b.run(&format!("pack/{bits}bit/1M"), || {
+            pack::pack_into(&codes, bits, &mut packed);
+            black_box(&packed);
+        })
+        .report_throughput(n as u64);
+        let mut unpacked = vec![0u8; n];
+        b.run(&format!("unpack/{bits}bit/1M"), || {
+            pack::unpack_into(&packed, bits, &mut unpacked);
+            black_box(&unpacked);
+        })
+        .report_throughput(n as u64);
+    }
+
+    // full AQ-SGD boundary encode (delta + quant + buffer advance)
+    let st = AqState::new(4, Rounding::Nearest);
+    let m: Vec<f32> = x.iter().map(|v| v + 0.01).collect();
+    let mut m_out = Vec::with_capacity(n);
+    b.run("aq_encode/4bit/1M", || {
+        black_box(st.encode(&x, Some(&m), &mut m_out, &mut rng));
+    })
+    .report_throughput(bytes);
+
+    // fp16 wire
+    let mut wire = Vec::new();
+    b.run("f16_encode/1M", || {
+        f16::encode(&x, &mut wire);
+        black_box(&wire);
+    })
+    .report_throughput(bytes);
+
+    // top-k (split-learning backward)
+    b.run("topk20%/8bit/64k", || {
+        black_box(topk::encode(&x[..65536], 0.2, 8, &mut rng));
+    })
+    .report_throughput(65536 * 4);
+}

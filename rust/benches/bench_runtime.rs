@@ -1,0 +1,74 @@
+//! Runtime benchmarks: per-stage artifact execution and the boundary
+//! codec paths (native vs Pallas-HLO), i.e. the real per-microbatch cost
+//! profile behind Table 3's "comp." columns on this host. Skips cleanly
+//! if artifacts are missing.
+
+use aq_sgd::codec::quantizer::Rounding;
+use aq_sgd::coordinator::boundary::ForwardBoundary;
+use aq_sgd::codec::Compression;
+use aq_sgd::runtime::{Engine, Manifest, QuantRuntime, StageInput, StageRuntime};
+use aq_sgd::store::MemStore;
+use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::util::Rng;
+
+fn main() {
+    let Ok(man) = Manifest::load("artifacts", "tiny") else {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    };
+    let b = Bencher::default();
+    let engine = Engine::cpu().unwrap();
+    let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+    let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+    let mut rng = Rng::new(4);
+    let n_tok = man.micro_batch().unwrap() * man.seq().unwrap();
+    let toks: Vec<i32> = (0..n_tok).map(|_| rng.below(man.vocab().unwrap()) as i32).collect();
+    let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
+
+    b.run("stage0_fwd/tiny", || {
+        black_box(s0.forward(&StageInput::Tokens(&toks)).unwrap());
+    })
+    .report();
+    b.run("stage1_lossbwd/tiny", || {
+        black_box(s1.loss_backward(&StageInput::Hidden(&h), &toks).unwrap());
+    })
+    .report();
+    let gx: Vec<f32> = h.iter().map(|v| v * 0.01).collect();
+    b.run("stage0_bwd/tiny", || {
+        black_box(s0.backward(&StageInput::Tokens(&toks), &gx).unwrap());
+    })
+    .report();
+
+    // boundary codecs, native vs HLO (the Pallas kernels via PJRT)
+    let n = man.boundary_len().unwrap();
+    let el = man.example_len().unwrap();
+    let ids: Vec<u64> = (0..man.micro_batch().unwrap() as u64).collect();
+    let msg_bytes = (n * 4) as u64;
+
+    let mut native = ForwardBoundary::new(
+        0,
+        Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
+        Rounding::Nearest,
+        Box::new(MemStore::new(el)),
+        None,
+    );
+    native.transfer(&ids, &h).unwrap(); // warm the buffers
+    b.run("boundary_native_aq4/16KiB", || {
+        black_box(native.transfer(&ids, &h).unwrap());
+    })
+    .report_throughput(msg_bytes);
+
+    let q = std::rc::Rc::new(QuantRuntime::load(&engine, &man).unwrap());
+    let mut hlo = ForwardBoundary::new(
+        0,
+        Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
+        Rounding::Nearest,
+        Box::new(MemStore::new(el)),
+        Some(q),
+    );
+    hlo.transfer(&ids, &h).unwrap();
+    b.run("boundary_hlo_aq4/16KiB", || {
+        black_box(hlo.transfer(&ids, &h).unwrap());
+    })
+    .report_throughput(msg_bytes);
+}

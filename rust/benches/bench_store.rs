@@ -1,0 +1,70 @@
+//! Activation-store benchmarks (paper §3.3 + App. G): buffer get/put for
+//! memory, quantized-memory and disk backends, plus prefetch overlap.
+//! The paper's claim: loading m(ξ) (0.2 ms mem / 12 ms SSD for GPT2-XL
+//! records) hides behind a 44 ms forward pass.
+
+use aq_sgd::store::{ActivationStore, DiskStore, MemStore, Prefetcher, QuantizedMemStore};
+use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::util::Rng;
+
+fn bench_store(b: &Bencher, name: &str, store: &mut dyn ActivationStore, record_len: usize) {
+    let mut rng = Rng::new(2);
+    let rec: Vec<f32> = (0..record_len).map(|_| rng.normal()).collect();
+    for ex in 0..64u64 {
+        store.put((0, ex), &rec);
+    }
+    let bytes = (record_len * 4) as u64;
+    let mut out = Vec::new();
+    let mut ex = 0u64;
+    b.run(&format!("{name}/get"), || {
+        black_box(store.get((0, ex % 64), &mut out));
+        ex += 1;
+    })
+    .report_throughput(bytes);
+    b.run(&format!("{name}/put"), || {
+        store.put((0, ex % 64), &rec);
+        ex += 1;
+    })
+    .report_throughput(bytes);
+}
+
+fn main() {
+    let b = Bencher::default();
+    // paper-regime record: seq 1024 x d 1600 = 1.6M floats; here a small
+    // (seq 64 x d 128) and a large record
+    for record_len in [64 * 128usize, 512 * 1024] {
+        println!("record = {} KiB", record_len * 4 / 1024);
+        bench_store(&b, &format!("mem/{record_len}"), &mut MemStore::new(record_len), record_len);
+        bench_store(
+            &b,
+            &format!("quant8/{record_len}"),
+            &mut QuantizedMemStore::new(record_len, 8),
+            record_len,
+        );
+        let dir = std::env::temp_dir().join(format!("aqsgd_bench_store_{}", std::process::id()));
+        bench_store(
+            &b,
+            &format!("disk/{record_len}"),
+            &mut DiskStore::new(&dir, record_len).unwrap(),
+            record_len,
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // prefetch: overlapping fetch with "compute"
+    let record_len = 64 * 128;
+    let mut mem = MemStore::new(record_len);
+    let mut rng = Rng::new(3);
+    let rec: Vec<f32> = (0..record_len).map(|_| rng.normal()).collect();
+    for ex in 0..64u64 {
+        mem.put((0, ex), &rec);
+    }
+    let pf = Prefetcher::new(Box::new(mem));
+    let mut ex = 0u64;
+    b.run("prefetcher/request+collect", || {
+        pf.request(vec![(0, ex % 64)]);
+        black_box(pf.collect());
+        ex += 1;
+    })
+    .report();
+}

@@ -1,0 +1,77 @@
+//! `cargo bench` entry regenerating the paper's throughput tables
+//! (Tables 2 and 5) plus Figure 4's bandwidth sweep, via the virtual-time
+//! simulator in the paper regime. Fast (pure simulation) — the heavier
+//! convergence counterparts live in examples/.
+
+use aq_sgd::codec::Compression;
+use aq_sgd::exp::PaperRegime;
+use aq_sgd::metrics::Table;
+use aq_sgd::net::PAPER_BANDWIDTHS;
+use aq_sgd::pipeline::{PipelineSim, Schedule, SimConfig};
+
+fn throughput(r: &PaperRegime, c: &Compression, bw: f64, schedule: Schedule) -> f64 {
+    let (fw, bwb) = r.msg_bytes(c, false);
+    let cfg = SimConfig {
+        schedule,
+        ..SimConfig::uniform(r.n_stages, r.n_micro, r.fwd_s, r.bwd_s, fw, bwb, bw)
+    };
+    PipelineSim::run(&cfg).throughput(r.n_micro, r.micro_batch)
+}
+
+fn main() {
+    let regime = PaperRegime::default();
+    println!("== Table 2: GPT2-1.5B training throughput (seqs/s) ==\n");
+    let mut t = Table::new(&["Network", "FP32", "DirectQ fw3bw6/fw4bw8", "AQ-SGD fw3bw6/fw4bw8"]);
+    for (bw, label) in PAPER_BANDWIDTHS {
+        let fp32 = throughput(&regime, &Compression::Fp32, bw, Schedule::GPipe);
+        let f = |fw_bits, bw_bits| {
+            (
+                throughput(&regime, &Compression::DirectQ { fw_bits, bw_bits }, bw, Schedule::GPipe),
+                throughput(&regime, &Compression::AqSgd { fw_bits, bw_bits }, bw, Schedule::GPipe),
+            )
+        };
+        let (d36, a36) = f(3, 6);
+        let (d48, a48) = f(4, 8);
+        t.row(vec![
+            label.to_string(),
+            format!("{fp32:.1}"),
+            format!("{d36:.1} / {d48:.1}"),
+            format!("{a36:.1} / {a48:.1}"),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== ablation: schedule (GPipe vs 1F1B) at fw4 bw8 ==\n");
+    let mut ts = Table::new(&["Network", "GPipe", "1F1B", "peak in-flight (stage0)"]);
+    let c = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    for (bw, label) in PAPER_BANDWIDTHS {
+        let g = throughput(&regime, &c, bw, Schedule::GPipe);
+        let o = throughput(&regime, &c, bw, Schedule::OneFOneB);
+        ts.row(vec![
+            label.to_string(),
+            format!("{g:.1}"),
+            format!("{o:.1}"),
+            format!(
+                "{} vs {}",
+                Schedule::GPipe.peak_in_flight(0, regime.n_stages, regime.n_micro),
+                Schedule::OneFOneB.peak_in_flight(0, regime.n_stages, regime.n_micro)
+            ),
+        ]);
+    }
+    print!("{}", ts.render());
+
+    // sanity assertions so `cargo bench` acts as a regression gate on the
+    // paper's shape: FP32 collapses with bandwidth, AQ-SGD stays flat.
+    let fp32_fast = throughput(&regime, &Compression::Fp32, 10e9, Schedule::GPipe);
+    let fp32_slow = throughput(&regime, &Compression::Fp32, 100e6, Schedule::GPipe);
+    let aq_slow = throughput(
+        &regime,
+        &Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
+        100e6,
+        Schedule::GPipe,
+    );
+    assert!(fp32_fast / fp32_slow > 4.0, "FP32 should collapse on slow nets");
+    assert!(aq_slow / fp32_slow > 3.0, "AQ-SGD speedup at 100 Mbps (paper: ~6x in seqs/s)");
+    println!("\nshape checks passed: FP32 collapses {:.1}x, AQ-SGD wins {:.1}x at 100 Mbps",
+        fp32_fast / fp32_slow, aq_slow / fp32_slow);
+}

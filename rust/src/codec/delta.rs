@@ -1,0 +1,187 @@
+//! AQ-SGD delta codec (Algorithm 1 / Algorithm 2): per-example message
+//! buffers `m(ξ)` on both sides of a pipeline boundary, with
+//! encode = `Q(a - m)` + buffer advance, decode = replica advance.
+//!
+//! `AqState` is the *native* (pure-rust) implementation used by the
+//! simulator, the split-learning example and the data-parallel gradient
+//! path; the coordinator's runtime path can alternatively run the L1
+//! Pallas `aq_encode/aq_decode` HLO artifacts — both share this exact
+//! arithmetic (validated against each other in integration tests).
+
+use super::quantizer::{Rounding, UniformQuantizer};
+use crate::util::Rng;
+
+/// One boundary-side AQ-SGD codec. Holds no buffers itself — buffers live
+/// in a `store::ActivationStore` so they can be memory- or disk-backed
+/// and optionally low-precision (paper Fig. 9e/f).
+#[derive(Clone, Copy, Debug)]
+pub struct AqState {
+    pub quant: UniformQuantizer,
+}
+
+/// An encoded AQ message: quantized delta codes + scale, or the
+/// first-visit full-precision activation.
+#[derive(Clone, Debug)]
+pub enum AqMessage {
+    /// First visit of an example: full-precision activation (Alg. 1 l.5).
+    Full(Vec<f32>),
+    /// Subsequent visits: b-bit codes of the delta + its scale.
+    Delta { codes: Vec<u8>, scale: f32 },
+}
+
+impl AqMessage {
+    /// Bytes this message occupies on the wire (packed codes + header).
+    pub fn wire_bytes(&self, bits: u8) -> u64 {
+        match self {
+            AqMessage::Full(v) => 4 * v.len() as u64,
+            AqMessage::Delta { codes, .. } => super::quant_wire_bytes(codes.len(), bits),
+        }
+    }
+}
+
+impl AqState {
+    pub fn new(bits: u8, rounding: Rounding) -> Self {
+        AqState { quant: UniformQuantizer::new(bits, rounding) }
+    }
+
+    /// Sender side. `a` is the fresh activation; `m` is the stored message
+    /// buffer for this example (`None` on first visit). On return `m_out`
+    /// holds the advanced buffer (what the receiver will reconstruct).
+    pub fn encode(&self, a: &[f32], m: Option<&[f32]>, m_out: &mut Vec<f32>, rng: &mut Rng) -> AqMessage {
+        match m {
+            None => {
+                m_out.clear();
+                m_out.extend_from_slice(a);
+                AqMessage::Full(a.to_vec())
+            }
+            Some(m) => {
+                assert_eq!(a.len(), m.len());
+                let mut delta: Vec<f32> = a.iter().zip(m).map(|(x, y)| x - y).collect();
+                let mut codes = vec![0u8; a.len()];
+                let scale = self.quant.encode(&delta, &mut codes, rng);
+                // m_new = m + deq(codes): reuse `delta` as scratch
+                self.quant.decode(&codes, scale, &mut delta);
+                m_out.clear();
+                m_out.extend(m.iter().zip(&delta).map(|(x, d)| x + d));
+                AqMessage::Delta { codes, scale }
+            }
+        }
+    }
+
+    /// Receiver side: advance the local replica of `m` and return the
+    /// activation to feed forward. Must produce *exactly* the sender's
+    /// `m_out` (bit-identical replicas — tested).
+    pub fn decode(&self, msg: &AqMessage, m: Option<&[f32]>, m_out: &mut Vec<f32>) {
+        match (msg, m) {
+            (AqMessage::Full(a), _) => {
+                m_out.clear();
+                m_out.extend_from_slice(a);
+            }
+            (AqMessage::Delta { codes, scale }, Some(m)) => {
+                assert_eq!(codes.len(), m.len());
+                let mut deq = vec![0f32; codes.len()];
+                self.quant.decode(codes, *scale, &mut deq);
+                m_out.clear();
+                m_out.extend(m.iter().zip(&deq).map(|(x, d)| x + d));
+            }
+            (AqMessage::Delta { .. }, None) => {
+                panic!("AQ delta message for an example with no buffer")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_stay_identical() {
+        let mut rng = Rng::new(1);
+        let st = AqState::new(4, Rounding::Nearest);
+        let n = 256;
+        let mut a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut m_send: Option<Vec<f32>> = None;
+        let mut m_recv: Option<Vec<f32>> = None;
+        for _ in 0..20 {
+            // activation drifts slowly, like a stabilizing model
+            for v in a.iter_mut() {
+                *v += 0.01 * rng.normal();
+            }
+            let mut ms = Vec::new();
+            let msg = st.encode(&a, m_send.as_deref(), &mut ms, &mut rng);
+            let mut mr = Vec::new();
+            st.decode(&msg, m_recv.as_deref(), &mut mr);
+            assert_eq!(ms, mr, "sender/receiver buffers diverged");
+            m_send = Some(ms);
+            m_recv = Some(mr);
+        }
+    }
+
+    #[test]
+    fn buffer_tracks_activation() {
+        // the self-enforcing dynamic: with small drift, m stays within one
+        // quantization step of a.
+        let mut rng = Rng::new(2);
+        let st = AqState::new(4, Rounding::Nearest);
+        let n = 128;
+        let mut a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut m: Option<Vec<f32>> = None;
+        for it in 0..50 {
+            for v in a.iter_mut() {
+                *v += 0.005 * rng.normal();
+            }
+            let mut m2 = Vec::new();
+            let msg = st.encode(&a, m.as_deref(), &mut m2, &mut rng);
+            if it > 0 {
+                if let AqMessage::Delta { scale, .. } = msg {
+                    let bound = st.quant.error_bound(scale) + 1e-6;
+                    for (x, y) in a.iter().zip(&m2) {
+                        assert!((x - y).abs() <= bound);
+                    }
+                }
+            }
+            m = Some(m2);
+        }
+    }
+
+    #[test]
+    fn first_visit_is_lossless() {
+        let mut rng = Rng::new(3);
+        let st = AqState::new(2, Rounding::Nearest);
+        let a: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut m = Vec::new();
+        let msg = st.encode(&a, None, &mut m, &mut rng);
+        assert!(matches!(msg, AqMessage::Full(_)));
+        assert_eq!(m, a);
+    }
+
+    #[test]
+    fn delta_beats_direct_on_drifting_signal() {
+        // the paper's Figure 1b argument: after warm-up, |delta| << |a|,
+        // so AQ reconstruction error is far below DirectQ's at equal bits.
+        let mut rng = Rng::new(4);
+        let bits = 2;
+        let st = AqState::new(bits, Rounding::Nearest);
+        let dq = UniformQuantizer::new(bits, Rounding::Nearest);
+        let n = 512;
+        let mut a: Vec<f32> = (0..n).map(|_| rng.normal() * 5.0).collect();
+        let mut m: Option<Vec<f32>> = None;
+        let mut aq_err = 0f64;
+        let mut dq_err = 0f64;
+        for it in 0..30 {
+            for v in a.iter_mut() {
+                *v += 0.01 * rng.normal();
+            }
+            let mut m2 = Vec::new();
+            st.encode(&a, m.as_deref(), &mut m2, &mut rng);
+            if it >= 5 {
+                aq_err += a.iter().zip(&m2).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+                let xh = dq.roundtrip(&a, &mut rng);
+                dq_err += a.iter().zip(&xh).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+            }
+            m = Some(m2);
+        }
+        assert!(aq_err * 20.0 < dq_err, "aq {aq_err} vs dq {dq_err}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal IEEE-754 binary16 conversion (round-to-nearest-even), used by
+//! the FP16 wire format (paper Appendix H.4) — no `half` crate offline.
+
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal half (or zero)
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        // round to nearest even
+        if (m & (half.wrapping_mul(2) - 1)) > half || ((m >> shift) & 1 == 1 && (m & (half * 2 - 1)) == half) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) == 1) {
+        v += 1; // may carry into exponent; that is still correct
+    }
+    sign | v as u16
+}
+
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            let m = (m & 0x03FF) << 13;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | m
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+pub fn encode(x: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(2 * x.len());
+    for &v in x {
+        out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+pub fn decode(bytes: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(bytes.len() / 2);
+    for c in bytes.chunks_exact(2) {
+        out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+    }
+}
+
+/// Lossy round-trip through f16 (the FP16 wire applied in place).
+pub fn roundtrip(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut r = crate::util::Rng::new(9);
+        for _ in 0..10_000 {
+            let v = r.normal() * 100.0;
+            let h = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!((h - v).abs() <= v.abs() * 1e-3 + 1e-7, "{v} -> {h}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e10)), f32::INFINITY); // overflow
+        let tiny = f16_bits_to_f32(f32_to_f16_bits(1e-7));
+        assert!(tiny >= 0.0 && tiny < 1e-6); // subnormal or flushed
+    }
+
+    #[test]
+    fn vector_roundtrip() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let mut bytes = Vec::new();
+        encode(&x, &mut bytes);
+        assert_eq!(bytes.len(), 200);
+        let mut back = Vec::new();
+        decode(&bytes, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! The wire codecs: everything that turns activations / gradients into
+//! bytes on the (simulated) network.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly — the uniform
+//! b-bit scheme of the paper (§4.1): normalize into [-1, 1] by the
+//! per-tensor max-abs `scale`, uniformly partition into `2^b` codes:
+//!
+//! ```text
+//! code = clamp(floor((x / scale + 1) / 2 * levels + u), 0, levels)
+//! deq  = (code / levels * 2 - 1) * scale
+//! ```
+//!
+//! with `levels = 2^b - 1` and rounding offset `u` (0.5 = deterministic,
+//! U[0,1) = stochastic/unbiased — the Theorem 3.1 assumption on Q).
+
+pub mod delta;
+pub mod f16;
+pub mod pack;
+pub mod quantizer;
+pub mod theory;
+pub mod topk;
+pub mod tp;
+
+pub use delta::AqState;
+pub use quantizer::{Rounding, UniformQuantizer};
+
+/// How each pipeline-boundary / data-parallel message is compressed.
+///
+/// `fw`/`bw` are the paper's "fwX bwY" bit-widths for forward activations
+/// and backward activation-gradients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compression {
+    /// Paper baseline: everything in f32.
+    Fp32,
+    /// Appendix H.4: half-precision wire format (no quantization).
+    Fp16,
+    /// DirectQ (AC-GC / TinyScript): quantize activations themselves.
+    DirectQ { fw_bits: u8, bw_bits: u8 },
+    /// AQ-SGD: quantize activation *changes* against the message buffer;
+    /// backward gradients are directly quantized (Algorithm 1 line 11).
+    AqSgd { fw_bits: u8, bw_bits: u8 },
+}
+
+impl Compression {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        // forms: "fp32", "fp16", "directq:fw3bw6", "aqsgd:fw2bw4"
+        let parse_bits = |spec: &str| -> anyhow::Result<(u8, u8)> {
+            let spec = spec.trim();
+            let rest = spec
+                .strip_prefix("fw")
+                .ok_or_else(|| anyhow::anyhow!("bad bits spec {spec:?}"))?;
+            let (fw, bw) = rest
+                .split_once("bw")
+                .ok_or_else(|| anyhow::anyhow!("bad bits spec {spec:?}"))?;
+            Ok((fw.parse()?, bw.parse()?))
+        };
+        match s {
+            "fp32" => Ok(Compression::Fp32),
+            "fp16" => Ok(Compression::Fp16),
+            _ => {
+                if let Some(spec) = s.strip_prefix("directq:") {
+                    let (fw_bits, bw_bits) = parse_bits(spec)?;
+                    Ok(Compression::DirectQ { fw_bits, bw_bits })
+                } else if let Some(spec) = s.strip_prefix("aqsgd:") {
+                    let (fw_bits, bw_bits) = parse_bits(spec)?;
+                    Ok(Compression::AqSgd { fw_bits, bw_bits })
+                } else {
+                    anyhow::bail!("unknown compression {s:?}")
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Compression::Fp32 => "FP32".into(),
+            Compression::Fp16 => "FP16".into(),
+            Compression::DirectQ { fw_bits, bw_bits } => {
+                format!("DirectQ fw{fw_bits} bw{bw_bits}")
+            }
+            Compression::AqSgd { fw_bits, bw_bits } => {
+                format!("AQ-SGD fw{fw_bits} bw{bw_bits}")
+            }
+        }
+    }
+
+    /// Wire bytes for a forward boundary message of `n` f32 elements.
+    ///
+    /// AQ-SGD's first-epoch messages are full precision (Algorithm 1 line
+    /// 5); pass `first_visit` accordingly.
+    pub fn fw_wire_bytes(&self, n: usize, first_visit: bool) -> u64 {
+        match self {
+            Compression::Fp32 => 4 * n as u64,
+            Compression::Fp16 => 2 * n as u64,
+            Compression::DirectQ { fw_bits, .. } => quant_wire_bytes(n, *fw_bits),
+            Compression::AqSgd { fw_bits, .. } => {
+                if first_visit {
+                    4 * n as u64
+                } else {
+                    quant_wire_bytes(n, *fw_bits)
+                }
+            }
+        }
+    }
+
+    /// Wire bytes for a backward boundary message of `n` f32 elements.
+    pub fn bw_wire_bytes(&self, n: usize) -> u64 {
+        match self {
+            Compression::Fp32 => 4 * n as u64,
+            Compression::Fp16 => 2 * n as u64,
+            Compression::DirectQ { bw_bits, .. }
+            | Compression::AqSgd { bw_bits, .. } => quant_wire_bytes(n, *bw_bits),
+        }
+    }
+}
+
+/// Bytes on the wire for `n` b-bit codes + the f32 scale header.
+pub fn quant_wire_bytes(n: usize, bits: u8) -> u64 {
+    pack::packed_len(n, bits) as u64 + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Compression::parse("fp32").unwrap(), Compression::Fp32);
+        assert_eq!(
+            Compression::parse("aqsgd:fw2bw4").unwrap(),
+            Compression::AqSgd { fw_bits: 2, bw_bits: 4 }
+        );
+        assert_eq!(
+            Compression::parse("directq:fw3bw6").unwrap(),
+            Compression::DirectQ { fw_bits: 3, bw_bits: 6 }
+        );
+        assert!(Compression::parse("nope").is_err());
+        assert!(Compression::parse("aqsgd:fw2").is_err());
+    }
+
+    #[test]
+    fn wire_bytes_shapes() {
+        // 4 bits: two codes per byte (+4B scale)
+        assert_eq!(quant_wire_bytes(8, 4), 4 + 4);
+        assert_eq!(quant_wire_bytes(9, 4), 5 + 4);
+        // first AQ visit is full precision
+        let c = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
+        assert_eq!(c.fw_wire_bytes(100, true), 400);
+        assert!(c.fw_wire_bytes(100, false) < 40);
+        // fp16 halves
+        assert_eq!(Compression::Fp16.fw_wire_bytes(100, false), 200);
+    }
+}

@@ -1,0 +1,182 @@
+//! Bit-packing of b-bit codes into wire bytes (LSB-first within bytes).
+//!
+//! This is what actually puts `fw2 bw4`-style messages on the simulated
+//! network: `n` codes of `bits` bits occupy `ceil(n*bits/8)` bytes. The
+//! packer is branch-free per code and is one of the L3 hot paths (see
+//! EXPERIMENTS.md §Perf).
+
+/// Packed length in bytes for `n` codes of `bits` bits.
+#[inline]
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+/// Pack `codes` (each < 2^bits) into `out`; `out` must have
+/// `packed_len(codes.len(), bits)` bytes.
+pub fn pack_into(codes: &[u8], bits: u8, out: &mut [u8]) {
+    debug_assert!(bits >= 1 && bits <= 8);
+    debug_assert_eq!(out.len(), packed_len(codes.len(), bits));
+    // §Perf fast paths: the paper's bit widths are mostly 2/4/8; direct
+    // byte assembly beats the generic shift-accumulator ~3x.
+    match bits {
+        8 => {
+            out.copy_from_slice(codes);
+            return;
+        }
+        4 => {
+            let mut it = codes.chunks_exact(2);
+            for (o, c) in out.iter_mut().zip(&mut it) {
+                *o = c[0] | (c[1] << 4);
+            }
+            if let [last] = it.remainder() {
+                out[codes.len() / 2] = *last;
+            }
+            return;
+        }
+        2 => {
+            let mut it = codes.chunks_exact(4);
+            for (o, c) in out.iter_mut().zip(&mut it) {
+                *o = c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6);
+            }
+            let rem = it.remainder();
+            if !rem.is_empty() {
+                let mut acc = 0u8;
+                for (j, &c) in rem.iter().enumerate() {
+                    acc |= c << (2 * j);
+                }
+                out[codes.len() / 4] = acc;
+            }
+            return;
+        }
+        _ => {}
+    }
+    out.fill(0);
+    let bits = bits as usize;
+    let mut acc: u32 = 0;
+    let mut acc_bits = 0usize;
+    let mut o = 0usize;
+    for &c in codes {
+        debug_assert!((c as u32) < (1u32 << bits));
+        acc |= (c as u32) << acc_bits;
+        acc_bits += bits;
+        while acc_bits >= 8 {
+            out[o] = (acc & 0xFF) as u8;
+            o += 1;
+            acc >>= 8;
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out[o] = (acc & 0xFF) as u8;
+    }
+}
+
+pub fn pack(codes: &[u8], bits: u8) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// Unpack `n` codes of `bits` bits from `bytes` into `out` (length n).
+pub fn unpack_into(bytes: &[u8], bits: u8, out: &mut [u8]) {
+    debug_assert!(bits >= 1 && bits <= 8);
+    debug_assert!(bytes.len() >= packed_len(out.len(), bits));
+    match bits {
+        8 => {
+            out.copy_from_slice(&bytes[..out.len()]);
+            return;
+        }
+        4 => {
+            let n_pairs = out.len() / 2;
+            let mut it = out.chunks_exact_mut(2);
+            for (o, &b) in (&mut it).zip(bytes) {
+                o[0] = b & 0x0F;
+                o[1] = b >> 4;
+            }
+            let rem = it.into_remainder();
+            if let [last] = rem {
+                *last = bytes[n_pairs] & 0x0F;
+            }
+            return;
+        }
+        2 => {
+            let n_quads = out.len() / 4;
+            let mut it = out.chunks_exact_mut(4);
+            for (o, &b) in (&mut it).zip(bytes) {
+                o[0] = b & 0x03;
+                o[1] = (b >> 2) & 0x03;
+                o[2] = (b >> 4) & 0x03;
+                o[3] = b >> 6;
+            }
+            let rem = it.into_remainder();
+            if !rem.is_empty() {
+                let b = bytes[n_quads];
+                for (j, o) in rem.iter_mut().enumerate() {
+                    *o = (b >> (2 * j)) & 0x03;
+                }
+            }
+            return;
+        }
+        _ => {}
+    }
+    let bits = bits as usize;
+    let mask = ((1u32 << bits) - 1) as u32;
+    let mut acc: u32 = 0;
+    let mut acc_bits = 0usize;
+    let mut i = 0usize;
+    for c in out.iter_mut() {
+        while acc_bits < bits {
+            acc |= (bytes[i] as u32) << acc_bits;
+            i += 1;
+            acc_bits += 8;
+        }
+        *c = (acc & mask) as u8;
+        acc >>= bits;
+        acc_bits -= bits;
+    }
+}
+
+pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_into(bytes, bits, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Rng::new(7);
+        for bits in 1..=8u8 {
+            for n in [0usize, 1, 7, 8, 9, 64, 1000, 4097] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() as u8) & ((1u16 << bits) - 1) as u8).collect();
+                let packed = pack(&codes, bits);
+                assert_eq!(packed.len(), packed_len(n, bits));
+                let back = unpack(&packed, bits, n);
+                assert_eq!(codes, back, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn density_is_tight() {
+        assert_eq!(packed_len(8, 1), 1);
+        assert_eq!(packed_len(8, 2), 2);
+        assert_eq!(packed_len(3, 3), 2); // 9 bits -> 2 bytes
+        assert_eq!(packed_len(4, 6), 3); // 24 bits -> 3 bytes
+        assert_eq!(packed_len(5, 8), 5);
+    }
+
+    #[test]
+    fn max_codes_survive() {
+        for bits in 1..=8u8 {
+            let max = ((1u16 << bits) - 1) as u8;
+            let codes = vec![max; 33];
+            assert_eq!(unpack(&pack(&codes, bits), bits, 33), codes);
+        }
+    }
+}

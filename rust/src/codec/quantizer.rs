@@ -1,0 +1,193 @@
+//! Uniform b-bit quantizer — the rust mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/quant.py`), used by the native boundary codec,
+//! the data-parallel gradient compressor, and the low-precision message
+//! store. Codes fit in `u8` (bits <= 8 everywhere in the paper).
+
+use crate::util::Rng;
+
+/// Rounding mode: `Nearest` is deterministic round-to-nearest (offset
+/// 0.5); `Stochastic` draws the offset from U[0,1), making the quantizer
+/// unbiased in expectation (the Theorem 3.1 requirement on Q).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    Nearest,
+    Stochastic,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u8,
+    pub rounding: Rounding,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u8, rounding: Rounding) -> Self {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
+        UniformQuantizer { bits, rounding }
+    }
+
+    #[inline]
+    pub fn levels(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Per-tensor max-abs scale (same epsilon as ref.quant_scale).
+    pub fn scale(x: &[f32]) -> f32 {
+        // branch-free fold vectorizes to maxps (§Perf)
+        x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12)
+    }
+
+    /// Quantize `x` into `codes` (same length). Returns the scale.
+    pub fn encode(&self, x: &[f32], codes: &mut [u8], rng: &mut Rng) -> f32 {
+        assert_eq!(x.len(), codes.len());
+        let scale = Self::scale(x);
+        self.encode_with_scale(x, scale, codes, rng);
+        scale
+    }
+
+    pub fn encode_with_scale(&self, x: &[f32], scale: f32, codes: &mut [u8], rng: &mut Rng) {
+        // §Perf: folded affine form y = v*k + c (2 flops/element instead
+        // of 5) and truncating cast instead of floor — valid because the
+        // clamp pins y into [0, levels] where trunc == floor. ~2x over
+        // the naive (x/scale + 1) * 0.5 * levels form.
+        let levels = self.levels();
+        let k = 0.5 * levels / scale;
+        match self.rounding {
+            Rounding::Nearest => {
+                let c0 = 0.5 * levels + 0.5;
+                for (c, &v) in codes.iter_mut().zip(x) {
+                    *c = (v * k + c0).clamp(0.0, levels) as u8;
+                }
+            }
+            Rounding::Stochastic => {
+                let c0 = 0.5 * levels;
+                for (c, &v) in codes.iter_mut().zip(x) {
+                    *c = (v * k + c0 + rng.next_f32()).clamp(0.0, levels) as u8;
+                }
+            }
+        }
+    }
+
+    /// Dequantize codes into `out` (overwrites).
+    pub fn decode(&self, codes: &[u8], scale: f32, out: &mut [f32]) {
+        assert_eq!(codes.len(), out.len());
+        let levels = self.levels();
+        let k = 2.0 * scale / levels;
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as f32 * k - scale;
+        }
+    }
+
+    /// Dequantize and *add* into `out` (the AQ buffer-advance step).
+    pub fn decode_add(&self, codes: &[u8], scale: f32, out: &mut [f32]) {
+        assert_eq!(codes.len(), out.len());
+        let levels = self.levels();
+        let k = 2.0 * scale / levels;
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o += c as f32 * k - scale;
+        }
+    }
+
+    /// Convenience round-trip: returns deq(Q(x)).
+    pub fn roundtrip(&self, x: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let mut codes = vec![0u8; x.len()];
+        let scale = self.encode(x, &mut codes, rng);
+        let mut out = vec![0f32; x.len()];
+        self.decode(&codes, scale, &mut out);
+        out
+    }
+
+    /// Max per-element reconstruction error (half step for Nearest, one
+    /// full step for Stochastic).
+    pub fn error_bound(&self, scale: f32) -> f32 {
+        let step = 2.0 * scale / self.levels();
+        match self.rounding {
+            Rounding::Nearest => 0.5 * step,
+            Rounding::Stochastic => step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        let mut r = rng();
+        let x: Vec<f32> = (0..1000).map(|_| r.normal() * 3.0).collect();
+        for bits in [2u8, 3, 4, 6, 8] {
+            let q = UniformQuantizer::new(bits, Rounding::Nearest);
+            let scale = UniformQuantizer::scale(&x);
+            let xh = q.roundtrip(&x, &mut r);
+            let bound = q.error_bound(scale) + 1e-6;
+            for (a, b) in x.iter().zip(&xh) {
+                assert!((a - b).abs() <= bound, "bits={bits} {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_cover_range() {
+        let x = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let q = UniformQuantizer::new(2, Rounding::Nearest);
+        let mut codes = [0u8; 5];
+        let scale = q.encode(&x, &mut codes, &mut rng());
+        assert_eq!(scale, 1.0);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[4], 3);
+        assert!(codes.iter().all(|&c| c <= 3));
+    }
+
+    #[test]
+    fn zero_vector_is_stable() {
+        let x = [0f32; 16];
+        let q = UniformQuantizer::new(4, Rounding::Nearest);
+        let xh = q.roundtrip(&x, &mut rng());
+        for v in xh {
+            assert!(v.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let mut r = rng();
+        let x: Vec<f32> = (0..64).map(|_| r.normal()).collect();
+        let q = UniformQuantizer::new(3, Rounding::Stochastic);
+        let n = 2000;
+        let mut acc = vec![0f64; x.len()];
+        for _ in 0..n {
+            let xh = q.roundtrip(&x, &mut r);
+            for (a, v) in acc.iter_mut().zip(&xh) {
+                *a += *v as f64;
+            }
+        }
+        let scale = UniformQuantizer::scale(&x);
+        let step = (2.0 * scale / q.levels()) as f64;
+        let se = 0.5 * step / (n as f64).sqrt();
+        let bias: f64 = x
+            .iter()
+            .zip(&acc)
+            .map(|(&xi, &a)| (a / n as f64 - xi as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(bias <= 2.0 * se * (x.len() as f64).sqrt(), "bias {bias} se {se}");
+    }
+
+    #[test]
+    fn matches_paper_fig1_regime() {
+        // 2-bit direct quantization destroys fine structure; 8-bit keeps it.
+        let mut r = rng();
+        let x: Vec<f32> = (0..4096).map(|_| r.normal()).collect();
+        let err = |bits| {
+            let q = UniformQuantizer::new(bits, Rounding::Nearest);
+            let xh = q.roundtrip(&x, &mut rng());
+            x.iter().zip(&xh).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+        };
+        assert!(err(2) > 10.0 * err(8));
+    }
+}

@@ -1,0 +1,104 @@
+//! Theorem 3.1 constants: the quantization contraction factor c_Q, the
+//! constant C, and the prescribed learning rate. Used by unit tests to
+//! pin the paper's tightness remark (c_Q = 0 recovers vanilla SGD) and by
+//! `examples/` to print the theoretical footprint of a run.
+
+/// c_Q for the simple rounding quantizer of footnote 3:
+/// `Q(x) = ||x|| * round(x/||x||)` stochastically -> c_Q = sqrt(d) / 2^b.
+pub fn c_q(dim: usize, bits: u8) -> f64 {
+    (dim as f64).sqrt() / (1u64 << bits) as f64
+}
+
+/// Smallest bit-width for which the theorem's `c_Q < sqrt(1/2)` condition
+/// holds at dimension `dim` (footnote 3's 6/11/16-bit examples).
+pub fn min_bits(dim: usize) -> u8 {
+    for b in 1..=32u8 {
+        if c_q(dim, b) < (0.5f64).sqrt() {
+            return b;
+        }
+    }
+    32
+}
+
+/// Lipschitz / bound constants of Assumption A1+A2.
+#[derive(Clone, Copy, Debug)]
+pub struct Constants {
+    pub l_f: f64,      // Lipschitz constant of grad f
+    pub l_fb: f64,     // Lipschitz constant of grad (f o b)
+    pub ell_a: f64,    // Lipschitz constant of a
+    pub c_a: f64,      // gradient bound of a
+    pub c_fb: f64,     // gradient bound of f o b
+    pub sigma2: f64,   // stochastic-gradient variance bound
+    pub n_samples: usize,
+}
+
+impl Constants {
+    /// C = 4 c_Q ell_a (1 + C_a) L_{f o b} N / sqrt(1 - 2 c_Q^2)
+    pub fn big_c(&self, cq: f64) -> f64 {
+        assert!(cq * cq < 0.5, "Theorem 3.1 requires c_Q < sqrt(1/2)");
+        4.0 * cq * self.ell_a * (1.0 + self.c_a) * self.l_fb * self.n_samples as f64
+            / (1.0 - 2.0 * cq * cq).sqrt()
+    }
+
+    /// gamma = 1 / (3 (3 L_f + C) sqrt(T))
+    pub fn learning_rate(&self, cq: f64, t: usize) -> f64 {
+        1.0 / (3.0 * (3.0 * self.l_f + self.big_c(cq)) * (t as f64).sqrt())
+    }
+
+    /// RHS of (3.1): the bound on (1/T) sum E||grad f||^2.
+    pub fn convergence_bound(&self, cq: f64, t: usize, f_gap: f64) -> f64 {
+        let c = self.big_c(cq);
+        let extra = (cq * self.c_a * self.c_fb).powi(2);
+        ((c + self.l_f) * f_gap + self.sigma2 + extra) / (t as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> Constants {
+        Constants { l_f: 1.0, l_fb: 1.0, ell_a: 1.0, c_a: 1.0, c_fb: 1.0, sigma2: 1.0, n_samples: 100 }
+    }
+
+    #[test]
+    fn footnote3_bit_requirements() {
+        // "6 bits suffice in a low-dimensional (~10^3), 11 bits in a
+        //  high-dimensional (~10^6), 16 bits in a super-high (~10^9)"
+        assert_eq!(min_bits(1_000), 6);
+        assert_eq!(min_bits(1_000_000), 11);
+        assert_eq!(min_bits(1_000_000_000), 16);
+    }
+
+    #[test]
+    fn tightness_cq_zero_recovers_sgd() {
+        let c = consts();
+        assert_eq!(c.big_c(0.0), 0.0);
+        // bound reduces to the vanilla-SGD form (L_f f_gap + sigma^2)/sqrt(T)
+        let b = c.convergence_bound(0.0, 10_000, 2.0);
+        assert!((b - (1.0 * 2.0 + 1.0) / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_monotone_in_cq_and_t() {
+        let c = consts();
+        assert!(c.convergence_bound(0.1, 100, 1.0) < c.convergence_bound(0.5, 100, 1.0));
+        assert!(c.convergence_bound(0.1, 10_000, 1.0) < c.convergence_bound(0.1, 100, 1.0));
+        // O(1/sqrt(T)) rate: quadrupling T halves the bound
+        let b1 = c.convergence_bound(0.1, 1_000, 1.0);
+        let b4 = c.convergence_bound(0.1, 4_000, 1.0);
+        assert!((b4 * 2.0 - b1).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cq_condition_enforced() {
+        consts().big_c(0.8); // > sqrt(1/2)
+    }
+
+    #[test]
+    fn lr_decreases_with_t() {
+        let c = consts();
+        assert!(c.learning_rate(0.1, 10_000) < c.learning_rate(0.1, 100));
+    }
+}

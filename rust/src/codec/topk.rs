@@ -1,0 +1,96 @@
+//! Top-k magnitude sparsification — the split-learning backward scheme
+//! `bw8[0.2]` of paper Appendix H.6 (keep the top 20% of gradient entries,
+//! then quantize the kept values to 8 bits).
+
+use super::quantizer::{Rounding, UniformQuantizer};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TopKMessage {
+    pub indices: Vec<u32>,
+    pub codes: Vec<u8>,
+    pub scale: f32,
+    pub len: usize,
+}
+
+impl TopKMessage {
+    /// Wire bytes: 4B per index + packed codes + scale header.
+    pub fn wire_bytes(&self, bits: u8) -> u64 {
+        4 * self.indices.len() as u64 + super::quant_wire_bytes(self.codes.len(), bits)
+    }
+}
+
+/// Select the `frac` largest-|x| entries, quantize them to `bits`.
+pub fn encode(x: &[f32], frac: f64, bits: u8, rng: &mut Rng) -> TopKMessage {
+    let k = ((x.len() as f64 * frac).ceil() as usize).clamp(1, x.len());
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut indices: Vec<u32> = idx[..k].to_vec();
+    indices.sort_unstable();
+    let vals: Vec<f32> = indices.iter().map(|&i| x[i as usize]).collect();
+    let q = UniformQuantizer::new(bits, Rounding::Nearest);
+    let mut codes = vec![0u8; k];
+    let scale = q.encode(&vals, &mut codes, rng);
+    TopKMessage { indices, codes, scale, len: x.len() }
+}
+
+/// Reconstruct a dense vector (zeros outside the kept set).
+pub fn decode(msg: &TopKMessage, bits: u8, out: &mut Vec<f32>) {
+    let q = UniformQuantizer::new(bits, Rounding::Nearest);
+    out.clear();
+    out.resize(msg.len, 0.0);
+    let mut vals = vec![0f32; msg.codes.len()];
+    q.decode(&msg.codes, msg.scale, &mut vals);
+    for (&i, &v) in msg.indices.iter().zip(&vals) {
+        out[i as usize] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest() {
+        let mut rng = Rng::new(5);
+        let mut x = vec![0.01f32; 100];
+        x[3] = 5.0;
+        x[42] = -7.0;
+        x[99] = 3.0;
+        let msg = encode(&x, 0.03, 8, &mut rng);
+        assert_eq!(msg.indices, vec![3, 42, 99]);
+        let mut out = Vec::new();
+        decode(&msg, 8, &mut out);
+        assert!((out[42] + 7.0).abs() < 0.1);
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_k() {
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let m20 = encode(&x, 0.2, 8, &mut rng);
+        let m100 = encode(&x, 1.0, 8, &mut rng);
+        assert!(m20.wire_bytes(8) < m100.wire_bytes(8) / 3);
+        assert_eq!(m100.codes.len(), 1000);
+    }
+
+    #[test]
+    fn full_frac_is_plain_quantization() {
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let msg = encode(&x, 1.0, 8, &mut rng);
+        let mut out = Vec::new();
+        decode(&msg, 8, &mut out);
+        let q = UniformQuantizer::new(8, Rounding::Nearest);
+        let scale = UniformQuantizer::scale(&x);
+        for (a, b) in x.iter().zip(&out) {
+            assert!((a - b).abs() <= q.error_bound(scale) + 1e-6);
+        }
+    }
+}

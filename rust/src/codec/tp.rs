@@ -1,0 +1,154 @@
+//! Tensor-parallel activation compression (paper Appendix F).
+//!
+//! Under tensor parallelism the output activation is a *sum* of partial
+//! activations, A = A_1 + ... + A_N, and compression must be applied
+//! twice around the all-reduce:
+//!
+//! ```text
+//! A_Q = Q[ Q(A_1) + Q(A_2) + ... + Q(A_N) ]          (F.2)
+//! ```
+//!
+//! The paper leaves delta compensation here as future work; we implement
+//! both the direct double quantization of (F.2) and the AQ-style variant
+//! where every Q keeps a per-shard message buffer (delta compensation
+//! applied to all Q(-), as App. F conjectures), so the ablation in the
+//! tests quantifies how much the conjecture buys.
+
+use super::delta::AqState;
+use super::quantizer::{Rounding, UniformQuantizer};
+use crate::util::Rng;
+
+/// Direct double quantization (F.2). Returns (reconstructed A_Q,
+/// total wire bytes of one all-reduce round).
+pub fn direct_tp_allreduce(shards: &[Vec<f32>], bits: u8, rng: &mut Rng) -> (Vec<f32>, u64) {
+    let n = shards[0].len();
+    let q = UniformQuantizer::new(bits, Rounding::Nearest);
+    let mut sum = vec![0f32; n];
+    let mut wire = 0u64;
+    for a in shards {
+        assert_eq!(a.len(), n);
+        let ah = q.roundtrip(a, rng);
+        wire += super::quant_wire_bytes(n, bits);
+        for (s, v) in sum.iter_mut().zip(&ah) {
+            *s += v;
+        }
+    }
+    // second quantization of the reduced value (broadcast back)
+    let out = q.roundtrip(&sum, rng);
+    wire += super::quant_wire_bytes(n, bits) * shards.len() as u64;
+    (out, wire)
+}
+
+/// AQ-style tensor-parallel all-reduce: every shard and the reduced
+/// output keep message buffers; only deltas are quantized. Buffers
+/// (`shard_m`, `out_m`) persist across calls (one slot per shard + one
+/// for the reduced tensor).
+pub struct TpAqAllreduce {
+    st: AqState,
+    shard_m: Vec<Option<Vec<f32>>>,
+    out_m: Option<Vec<f32>>,
+    bits: u8,
+    rng: Rng,
+}
+
+impl TpAqAllreduce {
+    pub fn new(n_shards: usize, bits: u8) -> Self {
+        TpAqAllreduce {
+            st: AqState::new(bits, Rounding::Nearest),
+            shard_m: vec![None; n_shards],
+            out_m: None,
+            bits,
+            rng: Rng::new(0xF0),
+        }
+    }
+
+    pub fn round(&mut self, shards: &[Vec<f32>]) -> (Vec<f32>, u64) {
+        assert_eq!(shards.len(), self.shard_m.len());
+        let n = shards[0].len();
+        let mut sum = vec![0f32; n];
+        let mut wire = 0u64;
+        for (i, a) in shards.iter().enumerate() {
+            let mut m_new = Vec::new();
+            let msg = self.st.encode(a, self.shard_m[i].as_deref(), &mut m_new, &mut self.rng);
+            wire += msg.wire_bytes(self.bits);
+            for (s, v) in sum.iter_mut().zip(&m_new) {
+                *s += v;
+            }
+            self.shard_m[i] = Some(m_new);
+        }
+        let mut out = Vec::new();
+        let msg = self.st.encode(&sum, self.out_m.as_deref(), &mut out, &mut self.rng);
+        wire += msg.wire_bytes(self.bits) * shards.len() as u64;
+        self.out_m = Some(out.clone());
+        (out, wire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shards(n_shards: usize, n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+        (0..n_shards).map(|_| (0..n).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn direct_tp_error_bounded() {
+        let mut rng = Rng::new(1);
+        let sh = shards(4, 256, &mut rng);
+        let (out, wire) = direct_tp_allreduce(&sh, 8, &mut rng);
+        let true_sum: Vec<f32> =
+            (0..256).map(|j| sh.iter().map(|s| s[j]).sum()).collect();
+        // double 8-bit quantization: error <= shard errors + final error
+        let err: f32 = out
+            .iter()
+            .zip(&true_sum)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.2, "err {err}");
+        assert!(wire > 0);
+    }
+
+    #[test]
+    fn aq_tp_beats_direct_on_drifting_activations() {
+        // App F conjecture: delta compensation helps once activations
+        // stabilize across rounds.
+        let mut rng = Rng::new(2);
+        let n = 512;
+        let bits = 4;
+        let mut sh = shards(4, n, &mut rng);
+        let mut aq = TpAqAllreduce::new(4, bits);
+        let mut direct_err = 0f64;
+        let mut aq_err = 0f64;
+        for round in 0..20 {
+            // slow drift, like a stabilizing model
+            for s in sh.iter_mut() {
+                for v in s.iter_mut() {
+                    *v += 0.01 * rng.normal();
+                }
+            }
+            let true_sum: Vec<f32> = (0..n).map(|j| sh.iter().map(|s| s[j]).sum()).collect();
+            let (d_out, _) = direct_tp_allreduce(&sh, bits, &mut rng);
+            let (a_out, _) = aq.round(&sh);
+            if round >= 3 {
+                direct_err +=
+                    d_out.iter().zip(&true_sum).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+                aq_err +=
+                    a_out.iter().zip(&true_sum).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            }
+        }
+        assert!(aq_err * 5.0 < direct_err, "aq {aq_err} vs direct {direct_err}");
+    }
+
+    #[test]
+    fn aq_tp_first_round_lossless() {
+        let mut rng = Rng::new(3);
+        let sh = shards(2, 64, &mut rng);
+        let mut aq = TpAqAllreduce::new(2, 2);
+        let (out, _) = aq.round(&sh);
+        let true_sum: Vec<f32> = (0..64).map(|j| sh.iter().map(|s| s[j]).sum()).collect();
+        for (a, b) in out.iter().zip(&true_sum) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Experiment configuration + a tiny `--key value` CLI parser (no clap in
+//! the offline environment).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::Compression;
+use crate::pipeline::Schedule;
+
+/// Parsed command line: positional args + `--key value` flags
+/// (`--flag` with no value is "true").
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse_args(args: impl Iterator<Item = String>) -> Self {
+        let mut cli = Cli::default();
+        let mut args = args.peekable();
+        while let Some(a) = args.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match args.peek() {
+                    Some(v) if !v.starts_with("--") => args.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), val);
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        cli
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse_args(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Parse "500mbps" / "10gbps" / raw bits-per-second.
+pub fn parse_bandwidth(s: &str) -> Result<f64> {
+    let t = s.trim().to_lowercase();
+    if let Some(v) = t.strip_suffix("gbps") {
+        return Ok(v.trim().parse::<f64>()? * 1e9);
+    }
+    if let Some(v) = t.strip_suffix("mbps") {
+        return Ok(v.trim().parse::<f64>()? * 1e6);
+    }
+    if let Some(v) = t.strip_suffix("kbps") {
+        return Ok(v.trim().parse::<f64>()? * 1e3);
+    }
+    Ok(t.parse::<f64>()?)
+}
+
+/// Full training-run configuration consumed by the coordinator.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifacts/<model> directory name.
+    pub model: String,
+    pub artifacts_dir: String,
+    pub compression: Compression,
+    /// Stochastic rounding for the quantizers (theory wants it; paper's
+    /// implementation uses deterministic — default false).
+    pub stochastic_rounding: bool,
+    /// Message-buffer precision (None = f32; Some(bits) = Fig 9e/f "mz").
+    pub m_bits: Option<u8>,
+    /// Buffer store backend: "mem" | "disk" | "quant".
+    pub store: String,
+    pub epochs: usize,
+    /// Micro-batches per optimizer step (macro = n_micro * micro_batch).
+    pub n_micro: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub seed: u64,
+    pub shuffle_every_epoch: bool,
+    /// Simulated link speed + latency for time accounting.
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+    pub schedule: Schedule,
+    /// Data-parallel degree (gradient averaging across replicas).
+    pub dp_degree: usize,
+    /// Gradient compression bits for the DP direction (None = fp32).
+    pub dp_grad_bits: Option<u8>,
+    /// Dataset selector: "markov" | "embedded" | "qnli" | "cola".
+    pub dataset: String,
+    pub n_examples: usize,
+    /// Run boundary compression through the HLO (Pallas) artifacts
+    /// instead of the native rust codec.
+    pub hlo_codec: bool,
+}
+
+impl TrainConfig {
+    pub fn defaults(model: &str) -> Self {
+        TrainConfig {
+            model: model.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            compression: Compression::Fp32,
+            stochastic_rounding: false,
+            m_bits: None,
+            store: "mem".to_string(),
+            epochs: 4,
+            n_micro: 4,
+            lr: 1e-3,
+            warmup_steps: 20,
+            total_steps: usize::MAX,
+            seed: 0,
+            shuffle_every_epoch: true,
+            bandwidth_bps: 1e9,
+            latency_s: 1e-4,
+            schedule: Schedule::GPipe,
+            dp_degree: 1,
+            dp_grad_bits: None,
+            dataset: "markov".to_string(),
+            n_examples: 64,
+            hlo_codec: false,
+        }
+    }
+
+    pub fn from_cli(cli: &Cli) -> Result<Self> {
+        let mut c = Self::defaults(&cli.str("model", "tiny"));
+        c.artifacts_dir = cli.str("artifacts", "artifacts");
+        c.compression = Compression::parse(&cli.str("compression", "fp32"))?;
+        c.stochastic_rounding = cli.bool("stochastic");
+        c.m_bits = match cli.usize("m-bits", 0)? {
+            0 => None,
+            b => Some(b as u8),
+        };
+        c.store = cli.str("store", "mem");
+        c.epochs = cli.usize("epochs", c.epochs)?;
+        c.n_micro = cli.usize("n-micro", c.n_micro)?;
+        c.lr = cli.f64("lr", c.lr)?;
+        c.warmup_steps = cli.usize("warmup", c.warmup_steps)?;
+        c.total_steps = cli.usize("steps", c.total_steps)?;
+        c.seed = cli.usize("seed", 0)? as u64;
+        c.shuffle_every_epoch = !cli.bool("shuffle-once");
+        c.bandwidth_bps = parse_bandwidth(&cli.str("bandwidth", "1gbps"))?;
+        c.latency_s = cli.f64("latency-ms", 0.1)? / 1e3;
+        c.schedule = Schedule::parse(&cli.str("schedule", "gpipe"))?;
+        c.dp_degree = cli.usize("dp", 1)?;
+        c.dp_grad_bits = match cli.usize("dp-bits", 0)? {
+            0 => None,
+            b => Some(b as u8),
+        };
+        c.dataset = cli.str("dataset", "markov");
+        c.n_examples = cli.usize("examples", c.n_examples)?;
+        c.hlo_codec = cli.bool("hlo-codec");
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse_args(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn cli_parsing() {
+        let c = cli("train --model small --lr 0.001 --shuffle-once --steps 100");
+        assert_eq!(c.positional, vec!["train"]);
+        assert_eq!(c.str("model", "x"), "small");
+        assert_eq!(c.f64("lr", 0.0).unwrap(), 0.001);
+        assert!(c.bool("shuffle-once"));
+        assert!(!c.bool("nope"));
+        assert_eq!(c.usize("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn bandwidth_parsing() {
+        assert_eq!(parse_bandwidth("10gbps").unwrap(), 10e9);
+        assert_eq!(parse_bandwidth("500Mbps").unwrap(), 500e6);
+        assert_eq!(parse_bandwidth("12345").unwrap(), 12345.0);
+        assert!(parse_bandwidth("fast").is_err());
+    }
+
+    #[test]
+    fn train_config_from_cli() {
+        let c = TrainConfig::from_cli(&cli(
+            "--model tiny --compression aqsgd:fw2bw4 --bandwidth 100mbps --dp 4 --dp-bits 4 --m-bits 8",
+        ))
+        .unwrap();
+        assert_eq!(c.compression, Compression::AqSgd { fw_bits: 2, bw_bits: 4 });
+        assert_eq!(c.bandwidth_bps, 100e6);
+        assert_eq!(c.dp_degree, 4);
+        assert_eq!(c.dp_grad_bits, Some(4));
+        assert_eq!(c.m_bits, Some(8));
+    }
+}

@@ -1,0 +1,307 @@
+//! Pipeline-boundary compression.
+//!
+//! A `ForwardBoundary` sits between stage `s` and `s+1`: it takes the
+//! sender's fresh activation, produces the bytes that would cross the
+//! wire, and returns the activation the *receiver* actually sees (the
+//! reconstructed `m(ξ)` for AQ-SGD, `deq(Q(a))` for DirectQ, `a` for
+//! FP32). Both sides' message buffers are bit-identical by construction
+//! (the paper's Algorithm 2 invariant), so one store instance represents
+//! both replicas; the replica property itself is pinned by tests in
+//! `codec::delta` and `tests/integration_runtime.rs`.
+//!
+//! Two interchangeable code paths:
+//!  * native  — `codec::*` (per-example scale; fastest)
+//!  * hlo     — the L1 Pallas kernels via PJRT (per-batch scale), proving
+//!    the three-layer composition on the real artifact path.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::codec::quantizer::{Rounding, UniformQuantizer};
+use crate::codec::{f16, pack, quant_wire_bytes, Compression};
+use crate::runtime::QuantRuntime;
+use crate::store::ActivationStore;
+use crate::util::Rng;
+
+/// What a transfer did: the receiver-side activation plus accounting.
+#[derive(Clone, Debug, Default)]
+pub struct TransferStats {
+    pub wire_bytes: u64,
+    /// mean |activation| over the message (Fig. 1b probe)
+    pub mean_abs_act: f64,
+    /// mean |delta| (AQ-SGD only; equals mean_abs_act otherwise)
+    pub mean_abs_delta: f64,
+    pub first_visits: usize,
+}
+
+pub struct ForwardBoundary {
+    pub boundary_id: u32,
+    compression: Compression,
+    rounding: Rounding,
+    store: Box<dyn ActivationStore>,
+    example_len: usize,
+    rng: Rng,
+    hlo: Option<Rc<QuantRuntime>>,
+}
+
+impl ForwardBoundary {
+    pub fn new(
+        boundary_id: u32,
+        compression: Compression,
+        rounding: Rounding,
+        store: Box<dyn ActivationStore>,
+        hlo: Option<Rc<QuantRuntime>>,
+    ) -> Self {
+        let example_len = store.record_len();
+        ForwardBoundary {
+            boundary_id,
+            compression,
+            rounding,
+            store,
+            example_len,
+            rng: Rng::new(0xB0D1 + boundary_id as u64),
+            hlo,
+        }
+    }
+
+    /// Transfer activation `a` ([B, S, D] row-major, one record per
+    /// example id) across the boundary. Returns (receiver activation,
+    /// stats).
+    pub fn transfer(&mut self, example_ids: &[u64], a: &[f32]) -> Result<(Vec<f32>, TransferStats)> {
+        assert_eq!(a.len(), example_ids.len() * self.example_len);
+        let mut stats = TransferStats {
+            mean_abs_act: crate::util::stats::mean_abs(a),
+            ..Default::default()
+        };
+        let out = match self.compression {
+            Compression::Fp32 => {
+                stats.wire_bytes = 4 * a.len() as u64;
+                stats.mean_abs_delta = stats.mean_abs_act;
+                a.to_vec()
+            }
+            Compression::Fp16 => {
+                stats.wire_bytes = 2 * a.len() as u64;
+                stats.mean_abs_delta = stats.mean_abs_act;
+                let mut v = a.to_vec();
+                f16::roundtrip(&mut v);
+                v
+            }
+            Compression::DirectQ { fw_bits, .. } => {
+                stats.mean_abs_delta = stats.mean_abs_act;
+                stats.wire_bytes = quant_wire_bytes(a.len(), fw_bits);
+                match &self.hlo {
+                    Some(q) => {
+                        let (codes, scale) = q.dq_encode(a, fw_bits)?;
+                        q.dq_decode(&codes, scale, fw_bits)?
+                    }
+                    None => {
+                        let q = UniformQuantizer::new(fw_bits, self.rounding);
+                        q.roundtrip(a, &mut self.rng)
+                    }
+                }
+            }
+            Compression::AqSgd { fw_bits, .. } => {
+                return self.transfer_aq(example_ids, a, fw_bits, stats);
+            }
+        };
+        Ok((out, stats))
+    }
+
+    fn transfer_aq(
+        &mut self,
+        example_ids: &[u64],
+        a: &[f32],
+        bits: u8,
+        mut stats: TransferStats,
+    ) -> Result<(Vec<f32>, TransferStats)> {
+        let el = self.example_len;
+        let bid = self.boundary_id;
+        let present: Vec<bool> =
+            example_ids.iter().map(|&ex| self.store.contains((bid, ex))).collect();
+        let all_present = present.iter().all(|&p| p);
+        let none_present = present.iter().all(|&p| !p);
+
+        // The HLO (Pallas-kernel) path works on the whole [B,S,D] tensor
+        // with one scale; valid when the batch is uniformly revisit.
+        // Mixed batches (partial epochs) fall back to the native
+        // per-example path.
+        if let (Some(q), true) = (self.hlo.clone(), all_present) {
+            let mut m = vec![0f32; a.len()];
+            let mut rec = Vec::new();
+            for (i, &ex) in example_ids.iter().enumerate() {
+                self.store.get((bid, ex), &mut rec);
+                m[i * el..(i + 1) * el].copy_from_slice(&rec);
+            }
+            let (codes, _scale, m_new) = q.aq_encode(a, &m, bits)?;
+            // pack to count true wire bytes (codes cross the wire packed)
+            let packed = pack::pack(&codes, bits);
+            stats.wire_bytes = packed.len() as u64 + 4;
+            let delta: Vec<f32> = a.iter().zip(&m).map(|(x, y)| x - y).collect();
+            stats.mean_abs_delta = crate::util::stats::mean_abs(&delta);
+            for (i, &ex) in example_ids.iter().enumerate() {
+                self.store.put((bid, ex), &m_new[i * el..(i + 1) * el]);
+            }
+            return Ok((m_new, stats));
+        }
+        if let (Some(_), false, false) = (&self.hlo, all_present, none_present) {
+            // mixed batch on the HLO path: documented native fallback
+        }
+
+        // native per-example path
+        let q = UniformQuantizer::new(bits, self.rounding);
+        let mut out = vec![0f32; a.len()];
+        let mut m = Vec::new();
+        let mut codes = vec![0u8; el];
+        let mut delta = vec![0f32; el];
+        let mut delta_abs_sum = 0f64;
+        for (i, &ex) in example_ids.iter().enumerate() {
+            let row = &a[i * el..(i + 1) * el];
+            if self.store.get((bid, ex), &mut m) {
+                for j in 0..el {
+                    delta[j] = row[j] - m[j];
+                }
+                delta_abs_sum += crate::util::stats::mean_abs(&delta) * el as f64;
+                let scale = q.encode(&delta, &mut codes, &mut self.rng);
+                // m += deq(codes) — both replicas run this exact op
+                q.decode_add(&codes, scale, &mut m);
+                stats.wire_bytes += quant_wire_bytes(el, bits);
+                out[i * el..(i + 1) * el].copy_from_slice(&m);
+                self.store.put((bid, ex), &m);
+            } else {
+                // first visit: full precision (Algorithm 1 line 5)
+                stats.first_visits += 1;
+                stats.wire_bytes += 4 * el as u64;
+                delta_abs_sum += crate::util::stats::mean_abs(row) * el as f64;
+                out[i * el..(i + 1) * el].copy_from_slice(row);
+                self.store.put((bid, ex), row);
+            }
+        }
+        stats.mean_abs_delta = delta_abs_sum / a.len() as f64;
+        Ok((out, stats))
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.store.resident_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Backward-gradient boundary: direct quantization (Algorithm 1 line 11)
+/// at `bw_bits`, or FP16/FP32 passthrough.
+pub struct BackwardBoundary {
+    compression: Compression,
+    rounding: Rounding,
+    rng: Rng,
+    hlo: Option<Rc<QuantRuntime>>,
+}
+
+impl BackwardBoundary {
+    pub fn new(compression: Compression, rounding: Rounding, hlo: Option<Rc<QuantRuntime>>) -> Self {
+        BackwardBoundary { compression, rounding, rng: Rng::new(0xBACC), hlo }
+    }
+
+    /// Returns (receiver-side gradient, wire bytes).
+    pub fn transfer(&mut self, g: &[f32]) -> Result<(Vec<f32>, u64)> {
+        match self.compression {
+            Compression::Fp32 => Ok((g.to_vec(), 4 * g.len() as u64)),
+            Compression::Fp16 => {
+                let mut v = g.to_vec();
+                f16::roundtrip(&mut v);
+                Ok((v, 2 * g.len() as u64))
+            }
+            Compression::DirectQ { bw_bits, .. } | Compression::AqSgd { bw_bits, .. } => {
+                let bytes = quant_wire_bytes(g.len(), bw_bits);
+                let out = match &self.hlo {
+                    Some(q) => {
+                        let (codes, scale) = q.dq_encode(g, bw_bits)?;
+                        q.dq_decode(&codes, scale, bw_bits)?
+                    }
+                    None => {
+                        let q = UniformQuantizer::new(bw_bits, self.rounding);
+                        q.roundtrip(g, &mut self.rng)
+                    }
+                };
+                Ok((out, bytes))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    fn mk(compression: Compression) -> ForwardBoundary {
+        ForwardBoundary::new(0, compression, Rounding::Nearest, Box::new(MemStore::new(8)), None)
+    }
+
+    #[test]
+    fn fp32_is_lossless() {
+        let mut b = mk(Compression::Fp32);
+        let a: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let (out, st) = b.transfer(&[0, 1], &a).unwrap();
+        assert_eq!(out, a);
+        assert_eq!(st.wire_bytes, 64);
+    }
+
+    #[test]
+    fn aq_first_epoch_full_then_delta() {
+        let mut b = mk(Compression::AqSgd { fw_bits: 2, bw_bits: 4 });
+        let a: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let (out1, st1) = b.transfer(&[0, 1], &a).unwrap();
+        assert_eq!(out1, a); // first visit lossless
+        assert_eq!(st1.first_visits, 2);
+        assert_eq!(st1.wire_bytes, 64);
+        // revisit: small delta, tiny wire
+        let a2: Vec<f32> = a.iter().map(|x| x + 0.01).collect();
+        let (out2, st2) = b.transfer(&[0, 1], &a2).unwrap();
+        assert_eq!(st2.first_visits, 0);
+        assert!(st2.wire_bytes < 20, "{}", st2.wire_bytes);
+        assert!(st2.mean_abs_delta < 0.02);
+        // reconstruction close to a2 (within delta quant error)
+        for (x, y) in a2.iter().zip(&out2) {
+            assert!((x - y).abs() < 0.02, "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn aq_handles_mixed_batches() {
+        let mut b = mk(Compression::AqSgd { fw_bits: 4, bw_bits: 4 });
+        let a: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        b.transfer(&[0, 1], &a).unwrap();
+        // batch with one known + one new example
+        let (_, st) = b.transfer(&[1, 7], &a).unwrap();
+        assert_eq!(st.first_visits, 1);
+    }
+
+    #[test]
+    fn directq_bounded_error() {
+        let mut b = mk(Compression::DirectQ { fw_bits: 4, bw_bits: 4 });
+        let a: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).cos()).collect();
+        let (out, st) = b.transfer(&[0, 1], &a).unwrap();
+        assert_eq!(st.wire_bytes, quant_wire_bytes(16, 4));
+        let scale = UniformQuantizer::scale(&a);
+        for (x, y) in a.iter().zip(&out) {
+            assert!((x - y).abs() <= scale / 15.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn backward_quantizes() {
+        let mut bw = BackwardBoundary::new(
+            Compression::AqSgd { fw_bits: 2, bw_bits: 8 },
+            Rounding::Nearest,
+            None,
+        );
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).sin() * 0.01).collect();
+        let (out, bytes) = bw.transfer(&g).unwrap();
+        assert_eq!(bytes, quant_wire_bytes(64, 8));
+        let scale = UniformQuantizer::scale(&g);
+        for (x, y) in g.iter().zip(&out) {
+            assert!((x - y).abs() <= scale / 255.0 + 1e-9);
+        }
+    }
+}

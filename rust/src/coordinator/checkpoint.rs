@@ -1,0 +1,73 @@
+//! Checkpointing: persist / restore the full trainer state (per-stage
+//! parameters + AdamW moments + step counter) so long fine-tuning runs
+//! survive restarts — table-stakes for a deployable trainer. Flat f32-LE
+//! tensors + a kv metadata file (same formats as the AOT artifacts).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::Trainer;
+use crate::util::kv::Kv;
+
+fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() == expect * 4, "checkpoint tensor size mismatch");
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+impl Trainer {
+    /// Write a checkpoint directory.
+    pub fn save_checkpoint(&self, dir: impl Into<PathBuf>) -> Result<()> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let mut meta = String::new();
+        meta.push_str(&format!("model {}\n", self.cfg.model));
+        meta.push_str(&format!("step {}\n", self.steps_done()));
+        meta.push_str(&format!("n_stages {}\n", self.n_stages()));
+        for s in 0..self.n_stages() {
+            let n = self.stage(s).n_params;
+            meta.push_str(&format!("stage{s}.params {n}\n"));
+            write_f32(&dir.join(format!("stage{s}_params.bin")), &self.stage(s).params)?;
+            let (m, v) = self.opt_state(s);
+            write_f32(&dir.join(format!("stage{s}_m.bin")), m)?;
+            write_f32(&dir.join(format!("stage{s}_v.bin")), v)?;
+        }
+        std::fs::write(dir.join("checkpoint.txt"), meta)?;
+        Ok(())
+    }
+
+    /// Restore parameters + optimizer state from a checkpoint directory.
+    /// The trainer must have been built from the same model config.
+    pub fn load_checkpoint(&mut self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        let meta = Kv::load(&dir.join("checkpoint.txt"))?;
+        anyhow::ensure!(
+            meta.get("model")? == self.cfg.model,
+            "checkpoint is for model {:?}, trainer is {:?}",
+            meta.get("model")?,
+            self.cfg.model
+        );
+        anyhow::ensure!(meta.usize("n_stages")? == self.n_stages());
+        let step = meta.usize("step")?;
+        for s in 0..self.n_stages() {
+            let n = self.stage(s).n_params;
+            anyhow::ensure!(meta.usize(&format!("stage{s}.params"))? == n);
+            let params = read_f32(&dir.join(format!("stage{s}_params.bin")), n)?;
+            let m = read_f32(&dir.join(format!("stage{s}_m.bin")), n)?;
+            let v = read_f32(&dir.join(format!("stage{s}_v.bin")), n)?;
+            self.stage_mut(s).params = params;
+            self.set_opt_state(s, m, v);
+        }
+        self.restore_step(step);
+        Ok(())
+    }
+}

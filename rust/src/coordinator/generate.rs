@@ -1,0 +1,163 @@
+//! Autoregressive text generation over the pipeline artifacts — the
+//! paper's Appendix I case study (comparing continuations of FP32 /
+//! DirectQ / AQ-SGD fine-tuned models on the same prompt).
+//!
+//! Decoding runs the full pipeline forward per emitted token over a
+//! sliding window of the last `seq` tokens (the artifacts are
+//! fixed-shape), greedy or temperature sampling. Only row 0 of the
+//! micro-batch is used for the prompt; the other rows are padding.
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::Trainer;
+use crate::util::Rng;
+
+pub struct GenerateCfg {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; otherwise softmax temperature.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for GenerateCfg {
+    fn default() -> Self {
+        GenerateCfg { max_new_tokens: 32, temperature: 0.0, seed: 0 }
+    }
+}
+
+impl Trainer {
+    /// Generate a continuation of `prompt` (token ids). Returns only the
+    /// newly generated tokens.
+    pub fn generate(&self, prompt: &[i32], gcfg: &GenerateCfg) -> Result<Vec<i32>> {
+        anyhow::ensure!(self.man.task()? == "lm", "generation needs an LM model");
+        let seq = self.man.seq()?;
+        let b = self.man.micro_batch()?;
+        let vocab = self.man.vocab()?;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut rng = Rng::new(gcfg.seed);
+
+        let mut ctx: Vec<i32> = prompt.to_vec();
+        let mut out = Vec::with_capacity(gcfg.max_new_tokens);
+        for _ in 0..gcfg.max_new_tokens {
+            // sliding window, left-padded with the first prompt token
+            let window: Vec<i32> = if ctx.len() >= seq {
+                ctx[ctx.len() - seq..].to_vec()
+            } else {
+                let mut w = vec![ctx[0]; seq - ctx.len()];
+                w.extend_from_slice(&ctx);
+                w
+            };
+            // the logits position to read: last filled slot
+            let pos = seq - 1;
+            // batch: row 0 = window, rows 1.. replicate (shape padding)
+            let mut tokens = Vec::with_capacity(b * seq);
+            for _ in 0..b {
+                tokens.extend_from_slice(&window);
+            }
+            let logits = self.pipeline_logits(&tokens)?;
+            // row 0, position `pos`
+            let row = &logits[pos * vocab..(pos + 1) * vocab];
+            let next = if gcfg.temperature <= 0.0 {
+                argmax(row)
+            } else {
+                sample(row, gcfg.temperature, &mut rng)
+            };
+            out.push(next as i32);
+            ctx.push(next as i32);
+        }
+        Ok(out)
+    }
+
+    /// Full-pipeline forward to logits (row-major [B, S, V]; returns
+    /// row 0 = [S, V]).
+    fn pipeline_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let k = self.n_stages();
+        let seq = self.man.seq()?;
+        let vocab = self.man.vocab()?;
+        let mut x: Vec<f32> = Vec::new();
+        for s in 0..k - 1 {
+            x = if s == 0 {
+                self.stage(0).forward(&crate::runtime::StageInput::Tokens(tokens))?
+            } else {
+                self.stage(s).forward(&crate::runtime::StageInput::Hidden(&x))?
+            };
+        }
+        let logits = if k == 1 {
+            self.stage(0).logits(&crate::runtime::StageInput::Tokens(tokens))?
+        } else {
+            self.stage(k - 1).logits(&crate::runtime::StageInput::Hidden(&x))?
+        };
+        Ok(logits[..seq * vocab].to_vec())
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+fn sample(row: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = row.iter().map(|&v| ((v - max) / temperature).exp()).collect();
+    let total: f32 = exps.iter().sum();
+    let mut u = rng.next_f32() * total;
+    for (i, &e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    exps.len() - 1
+}
+
+/// Decode byte-level tokens to a printable string (embedded corpus).
+pub fn detokenize_bytes(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let b = (t.clamp(0, 255)) as u8;
+            if b.is_ascii_graphic() || b == b' ' {
+                b as char
+            } else {
+                '?'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_sample_bounds() {
+        let row = [0.1f32, 5.0, -2.0, 1.0];
+        assert_eq!(argmax(&row), 1);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = sample(&row, 0.5, &mut rng);
+            assert!(s < 4);
+        }
+        // low temperature concentrates on the argmax
+        let mut hits = 0;
+        for _ in 0..100 {
+            if sample(&row, 0.05, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 95);
+    }
+
+    #[test]
+    fn detokenize_is_safe() {
+        assert_eq!(detokenize_bytes(&[72, 105, 33]), "Hi!");
+        assert_eq!(detokenize_bytes(&[0, 300, -5]), "???");
+    }
+}

@@ -1,0 +1,22 @@
+//! The training coordinator — the paper's system contribution.
+//!
+//! * `boundary` — per-pipeline-boundary compression (FP32 / FP16 /
+//!   DirectQ / AQ-SGD) with per-example message buffers, in both a native
+//!   rust codec and an L1-Pallas-kernel (HLO artifact) path.
+//! * `trainer`  — the synchronous pipeline training loop over the PJRT
+//!   stage artifacts: microbatch schedule, gradient accumulation, AdamW,
+//!   simulated-network time accounting, eval.
+//! * `dp`       — data-parallel gradient averaging with error-compensated
+//!   quantization ("QuantizedAdam", §4.3 / Fig. 5).
+//! * `split`    — the split-learning scenario of Appendix H.6.
+
+pub mod boundary;
+pub mod checkpoint;
+pub mod generate;
+pub mod dp;
+pub mod split;
+pub mod trainer;
+
+pub use boundary::{BackwardBoundary, ForwardBoundary, TransferStats};
+pub use dp::DpGroup;
+pub use trainer::{Probe, TrainStats, Trainer};

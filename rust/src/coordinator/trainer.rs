@@ -1,0 +1,454 @@
+//! The synchronous pipeline-parallel training loop (paper Algorithm 2,
+//! K-stage generalization of Appendix A.1), executing the AOT stage
+//! artifacts over the PJRT runtime with compressed boundaries.
+//!
+//! Numerics are *exact* for the distributed algorithm: each boundary
+//! applies the same compression a multi-machine deployment would, the
+//! receiver consumes the reconstructed message buffer, and backward
+//! gradients are quantized before crossing back. What is simulated is
+//! *time*: per-step wall time on the target network comes from the
+//! event-driven `pipeline::sim` fed with measured compute times and the
+//! exact wire bytes produced by the codecs (the byte counts come from the
+//! real packed messages, not estimates).
+
+use anyhow::{Context, Result};
+
+use crate::codec::quantizer::Rounding;
+use crate::config::TrainConfig;
+use crate::coordinator::boundary::{BackwardBoundary, ForwardBoundary};
+use crate::coordinator::dp::DpGroup;
+use crate::data::{Batch, Dataset, EpochSampler, Task};
+use crate::metrics::Recorder;
+use crate::optim::{AdamW, LrSchedule};
+use crate::pipeline::{PipelineSim, SimConfig, StageTimes};
+use crate::runtime::{Engine, Manifest, QuantRuntime, StageInput, StageRuntime};
+use crate::store::{ActivationStore, DiskStore, MemStore, QuantizedMemStore};
+use crate::util::stats::Ema;
+
+/// Fig. 1b probe: running averages of |activation| and |delta|.
+#[derive(Clone, Debug, Default)]
+pub struct Probe {
+    pub rows: Vec<(usize, f64, f64)>, // (step, mean|a|, mean|delta|)
+    acc_a: f64,
+    acc_d: f64,
+    n: usize,
+}
+
+impl Probe {
+    fn push(&mut self, a: f64, d: f64) {
+        self.acc_a += a;
+        self.acc_d += d;
+        self.n += 1;
+    }
+    fn flush(&mut self, step: usize) {
+        if self.n > 0 {
+            self.rows.push((step, self.acc_a / self.n as f64, self.acc_d / self.n as f64));
+            self.acc_a = 0.0;
+            self.acc_d = 0.0;
+            self.n = 0;
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub comm_bytes: u64,
+    pub sim_time_s: f64,
+    pub final_train_loss: f64,
+    pub final_eval_loss: f64,
+    pub buffer_bytes: u64,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub man: Manifest,
+    stages: Vec<StageRuntime>,
+    fw_bounds: Vec<ForwardBoundary>,
+    bw_bounds: Vec<BackwardBoundary>,
+    opts: Vec<AdamW>,
+    schedule: LrSchedule,
+    pub recorder: Recorder,
+    pub probe: Probe,
+    dp: Option<DpGroup>,
+    // measured per-stage compute times (seconds, EMA)
+    fwd_time: Vec<Ema>,
+    bwd_time: Vec<Ema>,
+    step_count: usize,
+    pub use_hlo_adamw: bool,
+    eval_every_steps: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        Self::with_engine(cfg, engine)
+    }
+
+    pub fn with_engine(cfg: TrainConfig, engine: Engine) -> Result<Self> {
+        let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+        let k = man.n_stages()?;
+        let mut stages = Vec::with_capacity(k);
+        for s in 0..k {
+            stages.push(StageRuntime::load(&engine, &man, s)
+                .with_context(|| format!("loading stage {s}"))?);
+        }
+        let hlo = if cfg.hlo_codec {
+            Some(std::rc::Rc::new(QuantRuntime::load(&engine, &man)?))
+        } else {
+            None
+        };
+        let el = man.example_len()?;
+        let mk_store = |b: u32| -> Result<Box<dyn ActivationStore>> {
+            Ok(match cfg.store.as_str() {
+                "mem" => Box::new(MemStore::new(el)),
+                "disk" => {
+                    let dir = std::env::temp_dir()
+                        .join(format!("aqsgd_m_{}_{}", std::process::id(), b));
+                    Box::new(DiskStore::new(dir, el)?)
+                }
+                "quant" => Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap_or(8))),
+                other => anyhow::bail!("unknown store {other:?} (mem|disk|quant)"),
+            })
+        };
+        let rounding = if cfg.stochastic_rounding { Rounding::Stochastic } else { Rounding::Nearest };
+        let mut fw_bounds = Vec::new();
+        let mut bw_bounds = Vec::new();
+        for b in 0..k.saturating_sub(1) {
+            // buffers keyed (replica-shard, example): with dp, each
+            // replica trains a disjoint shard, so one store per boundary
+            // still keys uniquely by example id.
+            let store: Box<dyn ActivationStore> = if cfg.m_bits.is_some() && cfg.store != "quant" {
+                Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap()))
+            } else {
+                mk_store(b as u32)?
+            };
+            fw_bounds.push(ForwardBoundary::new(
+                b as u32,
+                cfg.compression,
+                rounding,
+                store,
+                hlo.clone(),
+            ));
+            bw_bounds.push(BackwardBoundary::new(cfg.compression, rounding, hlo.clone()));
+        }
+        let opts = stages.iter().map(|s| AdamW::new(s.n_params)).collect();
+        let schedule = LrSchedule {
+            base_lr: cfg.lr,
+            warmup_steps: cfg.warmup_steps,
+            total_steps: cfg.total_steps,
+        };
+        let dp = if cfg.dp_degree > 1 {
+            let sizes: Vec<usize> = stages.iter().map(|s| s.n_params).collect();
+            Some(DpGroup::new(cfg.dp_degree, cfg.dp_grad_bits, &sizes, rounding))
+        } else {
+            None
+        };
+        let label = format!("{} {}", cfg.model, cfg.compression.label());
+        Ok(Trainer {
+            recorder: Recorder::new(label),
+            probe: Probe::default(),
+            fwd_time: (0..k).map(|_| Ema::new(0.2)).collect(),
+            bwd_time: (0..k).map(|_| Ema::new(0.2)).collect(),
+            cfg,
+            man,
+            stages,
+            fw_bounds,
+            bw_bounds,
+            opts,
+            schedule,
+            dp,
+            step_count: 0,
+            use_hlo_adamw: false,
+            eval_every_steps: usize::MAX,
+        })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn set_eval_every(&mut self, steps: usize) {
+        self.eval_every_steps = steps;
+    }
+
+    /// Run one microbatch through the pipeline: forward with boundary
+    /// compression, loss+backward with gradient quantization. Adds the
+    /// per-stage gradients into `grad_acc`. Returns (loss, fw wire bytes
+    /// per boundary message).
+    fn run_microbatch(&mut self, batch: &Batch, grad_acc: &mut [Vec<f32>]) -> Result<(f32, Vec<u64>)> {
+        let k = self.stages.len();
+        // cached stage inputs for the backward pass (stage 0: tokens)
+        let mut hidden_inputs: Vec<Vec<f32>> = Vec::with_capacity(k.saturating_sub(1));
+        let mut fw_bytes = Vec::with_capacity(k.saturating_sub(1));
+
+        // ---- forward ----
+        let mut x: Vec<f32> = Vec::new();
+        for s in 0..k - 1 {
+            let t0 = std::time::Instant::now();
+            let h = if s == 0 {
+                self.stages[0].forward(&StageInput::Tokens(&batch.tokens))?
+            } else {
+                self.stages[s].forward(&StageInput::Hidden(&x))?
+            };
+            self.fwd_time[s].update(t0.elapsed().as_secs_f64());
+            let (recv, stats) = self.fw_bounds[s].transfer(&batch.example_ids, &h)?;
+            self.probe.push(stats.mean_abs_act, stats.mean_abs_delta);
+            self.recorder.comm_bytes += stats.wire_bytes;
+            fw_bytes.push(stats.wire_bytes);
+            hidden_inputs.push(recv.clone());
+            x = recv;
+        }
+
+        // ---- last stage: loss + backward ----
+        let t0 = std::time::Instant::now();
+        let last = k - 1;
+        let (loss, gp_last, mut gx) = if k == 1 {
+            let (l, gp, gx) =
+                self.stages[0].loss_backward(&StageInput::Tokens(&batch.tokens), &batch.targets)?;
+            (l, gp, gx)
+        } else {
+            self.stages[last]
+                .loss_backward(&StageInput::Hidden(&x), &batch.targets)?
+        };
+        self.bwd_time[last].update(t0.elapsed().as_secs_f64());
+        for (a, g) in grad_acc[last].iter_mut().zip(&gp_last) {
+            *a += g;
+        }
+
+        // ---- backward through earlier stages ----
+        for s in (0..k.saturating_sub(1)).rev() {
+            let g_out = gx.take().context("missing boundary gradient")?;
+            let (g_recv, bytes) = self.bw_bounds[s].transfer(&g_out)?;
+            self.recorder.comm_bytes += bytes;
+            let t0 = std::time::Instant::now();
+            let input_owned;
+            let input = if s == 0 {
+                StageInput::Tokens(&batch.tokens)
+            } else {
+                input_owned = std::mem::take(&mut hidden_inputs[s - 1]);
+                StageInput::Hidden(&input_owned)
+            };
+            let (gp, gx_next) = self.stages[s].backward(&input, &g_recv)?;
+            self.bwd_time[s].update(t0.elapsed().as_secs_f64());
+            for (a, g) in grad_acc[s].iter_mut().zip(&gp) {
+                *a += g;
+            }
+            gx = gx_next;
+        }
+        Ok((loss, fw_bytes))
+    }
+
+    /// One optimizer step over `n_micro` microbatches (one replica) or
+    /// `dp_degree` shards of `n_micro` microbatches each.
+    fn train_step(&mut self, shards: &[&[Batch]]) -> Result<f64> {
+        let k = self.stages.len();
+        let mut all_fw_bytes: Vec<u64> = Vec::new();
+        let mut loss_sum = 0f64;
+        let mut n_micro_total = 0usize;
+
+        let mut replica_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(shards.len());
+        for shard in shards {
+            let mut grads: Vec<Vec<f32>> =
+                self.stages.iter().map(|s| vec![0f32; s.n_params]).collect();
+            for batch in shard.iter() {
+                let (loss, fw_bytes) = self.run_microbatch(batch, &mut grads)?;
+                loss_sum += loss as f64;
+                n_micro_total += 1;
+                // per-boundary bytes of the first boundary represent the
+                // message size for the step-time simulation
+                if let Some(&b) = fw_bytes.first() {
+                    all_fw_bytes.push(b);
+                }
+            }
+            let inv = 1.0 / shard.len() as f32;
+            for g in grads.iter_mut() {
+                for v in g.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            replica_grads.push(grads);
+        }
+
+        // ---- data-parallel reduction ----
+        let (mean_grads, dp_wire) = match &mut self.dp {
+            Some(dp) => {
+                let (m, w) = dp.reduce(&replica_grads);
+                self.recorder.comm_bytes += w * dp.degree as u64;
+                (m, w)
+            }
+            None => (replica_grads.pop().unwrap(), 0),
+        };
+
+        // ---- optimizer ----
+        self.step_count += 1;
+        let lr = self.schedule.lr(self.step_count);
+        for s in 0..k {
+            if self.use_hlo_adamw {
+                self.stages[s].adamw_step_hlo(&mean_grads[s], self.step_count, lr)?;
+                self.opts[s].step += 1;
+            } else {
+                let params = &mut self.stages[s].params;
+                self.opts[s].update(params, &mean_grads[s], lr as f32);
+            }
+        }
+
+        // ---- simulated step time on the target network ----
+        self.recorder.sim_time_s += self.simulate_step_time(&all_fw_bytes, dp_wire);
+
+        Ok(loss_sum / n_micro_total.max(1) as f64)
+    }
+
+    /// Build the event simulation for this step from measured compute
+    /// times + actual wire bytes.
+    fn simulate_step_time(&self, fw_bytes: &[u64], dp_wire: u64) -> f64 {
+        let k = self.stages.len();
+        let n_micro = fw_bytes.len().max(1);
+        let bw_elems = self.man.boundary_len().unwrap_or(0);
+        let stage_times: Vec<StageTimes> = (0..k)
+            .map(|s| StageTimes {
+                fwd_s: self.fwd_time[s].get().unwrap_or(self.bwd_time[s].get().unwrap_or(0.01) / 3.0),
+                bwd_s: self.bwd_time[s].get().unwrap_or(0.01),
+            })
+            .collect();
+        let sim = SimConfig {
+            n_stages: k,
+            n_micro,
+            stage_times,
+            fw_bytes: fw_bytes.to_vec(),
+            bw_bytes: self.cfg.compression.bw_wire_bytes(bw_elems),
+            bandwidth_bps: self.cfg.bandwidth_bps,
+            link_bandwidths: None,
+            latency_s: self.cfg.latency_s,
+            schedule: self.cfg.schedule,
+            step_overhead_s: 0.0,
+        };
+        let mut t = if k > 1 || n_micro > 0 { PipelineSim::run(&sim).step_time_s } else { 0.0 };
+        if self.cfg.dp_degree > 1 {
+            t += PipelineSim::allreduce_time(
+                dp_wire,
+                self.cfg.dp_degree,
+                self.cfg.bandwidth_bps,
+                self.cfg.latency_s,
+            );
+        }
+        t
+    }
+
+    /// Evaluation loss over a dataset (FP32 boundaries — measures model
+    /// quality, not wire effects).
+    pub fn eval(&mut self, data: &Dataset) -> Result<f64> {
+        let b = self.man.micro_batch()?;
+        let mut sampler = EpochSampler::new(data.len(), b, 1234, false);
+        let batches = sampler.epoch_batches(data);
+        let k = self.stages.len();
+        let mut loss_sum = 0f64;
+        let mut n = 0usize;
+        for batch in &batches {
+            let mut x: Vec<f32> = Vec::new();
+            for s in 0..k - 1 {
+                x = if s == 0 {
+                    self.stages[0].forward(&StageInput::Tokens(&batch.tokens))?
+                } else {
+                    self.stages[s].forward(&StageInput::Hidden(&x))?
+                };
+            }
+            let loss = if k == 1 {
+                self.stages[0].eval_loss(&StageInput::Tokens(&batch.tokens), &batch.targets)?
+            } else {
+                self.stages[k - 1].eval_loss(&StageInput::Hidden(&x), &batch.targets)?
+            };
+            loss_sum += loss as f64;
+            n += 1;
+        }
+        Ok(loss_sum / n.max(1) as f64)
+    }
+
+    /// Full training run. Returns summary stats.
+    pub fn train(&mut self, train_data: &Dataset, eval_data: Option<&Dataset>) -> Result<TrainStats> {
+        anyhow::ensure!(
+            (train_data.task == Task::Lm) == (self.man.task()? == "lm"),
+            "dataset task does not match model task"
+        );
+        let micro_b = self.man.micro_batch()?;
+        let shard_examples = self.cfg.n_micro * micro_b;
+        let total_needed = shard_examples * self.cfg.dp_degree;
+        anyhow::ensure!(
+            train_data.len() >= total_needed,
+            "dataset too small: {} examples < {total_needed} per step",
+            train_data.len()
+        );
+        let mut sampler = EpochSampler::new(
+            train_data.len(),
+            micro_b,
+            self.cfg.seed,
+            self.cfg.shuffle_every_epoch,
+        );
+        let micro_per_step = self.cfg.n_micro * self.cfg.dp_degree;
+        'epochs: for epoch in 0..self.cfg.epochs {
+            let batches = sampler.epoch_batches(train_data);
+            for step_batches in batches.chunks_exact(micro_per_step) {
+                let shards: Vec<&[Batch]> =
+                    step_batches.chunks(self.cfg.n_micro).collect();
+                let loss = self.train_step(&shards)?;
+                self.recorder.record(self.step_count, epoch, loss);
+                self.probe.flush(self.step_count);
+                if self.step_count % self.eval_every_steps == 0 {
+                    if let Some(ed) = eval_data {
+                        let el = self.eval(ed)?;
+                        eprintln!(
+                            "[{}] step {} epoch {} train {:.4} eval {:.4}",
+                            self.recorder.label, self.step_count, epoch, loss, el
+                        );
+                    }
+                }
+                if self.step_count >= self.cfg.total_steps {
+                    break 'epochs;
+                }
+            }
+        }
+        let final_eval = match eval_data {
+            Some(ed) => self.eval(ed)?,
+            None => f64::NAN,
+        };
+        Ok(TrainStats {
+            steps: self.step_count,
+            comm_bytes: self.recorder.comm_bytes,
+            sim_time_s: self.recorder.sim_time_s,
+            final_train_loss: self.recorder.final_loss(),
+            final_eval_loss: final_eval,
+            buffer_bytes: self.fw_bounds.iter().map(|b| b.resident_bytes()).sum(),
+        })
+    }
+
+    /// Direct access for tests/examples.
+    pub fn stage(&self, i: usize) -> &StageRuntime {
+        &self.stages[i]
+    }
+    pub fn stage_mut(&mut self, i: usize) -> &mut StageRuntime {
+        &mut self.stages[i]
+    }
+    pub fn steps_done(&self) -> usize {
+        self.step_count
+    }
+
+    /// Optimizer moments of stage `i` (native AdamW state — the default
+    /// update path; the HLO AdamW keeps its state in the StageRuntime).
+    pub fn opt_state(&self, i: usize) -> (&[f32], &[f32]) {
+        (&self.opts[i].m, &self.opts[i].v)
+    }
+    pub fn set_opt_state(&mut self, i: usize, m: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(m.len(), self.stages[i].n_params);
+        assert_eq!(v.len(), self.stages[i].n_params);
+        self.opts[i].m = m;
+        self.opts[i].v = v;
+    }
+
+    /// Restore the global step counter (checkpoint resume).
+    pub fn restore_step(&mut self, step: usize) {
+        self.step_count = step;
+        for o in self.opts.iter_mut() {
+            o.step = step;
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Synthetic sequence-classification tasks (the QNLI / CoLA stand-ins).
+//!
+//! The label is a (noisy) function of pattern tokens planted in the
+//! sequence, so a transformer with a pooled head can reach high accuracy
+//! while the task remains non-trivial at initialization.
+
+use super::{Dataset, Example, Task};
+use crate::util::Rng;
+
+/// "QNLI-like": balanced binary task. Class-1 sequences contain a planted
+/// marker bigram with probability `1 - noise`, class-0 sequences contain
+/// a decoy bigram.
+pub fn qnli_like(vocab: usize, seq: usize, n_examples: usize, seed: u64) -> Dataset {
+    synthetic_cls(vocab, seq, n_examples, seed, 0.5, 0.05)
+}
+
+/// "CoLA-like": imbalanced (70/30, like acceptability judgments) and
+/// noisier.
+pub fn cola_like(vocab: usize, seq: usize, n_examples: usize, seed: u64) -> Dataset {
+    synthetic_cls(vocab, seq, n_examples, seed, 0.7, 0.15)
+}
+
+pub fn synthetic_cls(
+    vocab: usize,
+    seq: usize,
+    n_examples: usize,
+    seed: u64,
+    pos_frac: f64,
+    noise: f64,
+) -> Dataset {
+    assert!(vocab >= 8 && seq >= 4);
+    let mut rng = Rng::new(seed);
+    let marker = [2i32, 3];
+    let decoy = [4i32, 5];
+    let mut examples = Vec::with_capacity(n_examples);
+    for id in 0..n_examples {
+        let label = if rng.next_f64() < pos_frac { 1 } else { 0 };
+        let mut tokens: Vec<i32> =
+            (0..seq).map(|_| 6 + rng.below(vocab - 6) as i32).collect();
+        // plant the class pattern (flip under label noise)
+        let planted = if rng.next_f64() < noise { 1 - label } else { label };
+        let pat = if planted == 1 { marker } else { decoy };
+        let pos = rng.below(seq - 1);
+        tokens[pos] = pat[0];
+        tokens[pos + 1] = pat[1];
+        examples.push(Example { id: id as u64, tokens, label });
+    }
+    Dataset { examples, task: Task::Cls }
+}
+
+/// Dirichlet-style non-IID client split for the split-learning scenario
+/// (paper App. H.6: 16 clients, concentration 0.5). Lower `alpha` means
+/// more skew. Returns per-client example-index lists.
+pub fn dirichlet_split(
+    dataset: &Dataset,
+    n_clients: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    let n_classes = dataset.examples.iter().map(|e| e.label).max().unwrap_or(0) as usize + 1;
+    let mut shards = vec![Vec::new(); n_clients];
+    // per class, draw client proportions ~ Dirichlet(alpha) via gamma draws
+    for class in 0..n_classes {
+        let idxs: Vec<usize> = dataset
+            .examples
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.label as usize == class)
+            .map(|(i, _)| i)
+            .collect();
+        let mut weights: Vec<f64> = (0..n_clients).map(|_| gamma_draw(alpha, &mut rng)).collect();
+        let total: f64 = weights.iter().sum::<f64>().max(1e-12);
+        for w in weights.iter_mut() {
+            *w /= total;
+        }
+        let mut cum = 0.0;
+        let mut boundaries = Vec::with_capacity(n_clients);
+        for w in &weights {
+            cum += w;
+            boundaries.push((cum * idxs.len() as f64).round() as usize);
+        }
+        let mut lo = 0usize;
+        for (c, &hi) in boundaries.iter().enumerate() {
+            let hi = hi.min(idxs.len());
+            for &i in &idxs[lo..hi] {
+                shards[c].push(i);
+            }
+            lo = hi;
+        }
+    }
+    shards
+}
+
+/// Marsaglia–Tsang-ish gamma sampler (shape `a`, scale 1). Adequate for
+/// Dirichlet splitting (statistical fidelity, not crypto).
+fn gamma_draw(a: f64, rng: &mut Rng) -> f64 {
+    if a < 1.0 {
+        // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+        let u = rng.next_f64().max(1e-12);
+        return gamma_draw(a + 1.0, rng) * u.powf(1.0 / a);
+    }
+    let d = a - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal() as f64;
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64().max(1e-12);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_patterns_mostly() {
+        let d = qnli_like(256, 32, 500, 1);
+        let mut correct = 0;
+        for e in &d.examples {
+            let has_marker = e.tokens.windows(2).any(|w| w == [2, 3]);
+            if (e.label == 1) == has_marker {
+                correct += 1;
+            }
+        }
+        // noise 5% -> ~95% consistency
+        assert!(correct > 440, "{correct}/500");
+    }
+
+    #[test]
+    fn cola_is_imbalanced() {
+        let d = cola_like(256, 32, 1000, 2);
+        let pos = d.examples.iter().filter(|e| e.label == 1).count();
+        assert!(pos > 600 && pos < 800, "{pos}");
+    }
+
+    #[test]
+    fn dirichlet_split_covers_all_and_skews() {
+        let d = qnli_like(64, 16, 400, 3);
+        let shards = dirichlet_split(&d, 8, 0.5, 4);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 400);
+        // non-IID: client class mixes differ
+        let frac_pos = |s: &Vec<usize>| {
+            if s.is_empty() {
+                return 0.5;
+            }
+            s.iter().filter(|&&i| d.examples[i].label == 1).count() as f64 / s.len() as f64
+        };
+        let fracs: Vec<f64> = shards.iter().map(frac_pos).collect();
+        let spread = fracs.iter().cloned().fold(0.0f64, f64::max)
+            - fracs.iter().cloned().fold(1.0f64, f64::min);
+        assert!(spread > 0.1, "spread {spread}, fracs {fracs:?}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Synthetic + embedded workloads standing in for the paper's datasets
+//! (WikiText2 / arXiv abstracts for language modeling, QNLI / CoLA for
+//! sequence classification — see DESIGN.md §3 substitutions).
+
+pub mod cls;
+pub mod lm;
+pub mod sampler;
+
+pub use sampler::{Batch, EpochSampler};
+
+/// A supervised example: token sequence + target (LM: the sequence
+/// itself, shifted inside the loss; CLS: a label).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub label: i32, // CLS only; ignored for LM
+}
+
+/// Task kind, mirroring the model config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Lm,
+    Cls,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "lm" => Ok(Task::Lm),
+            "cls" => Ok(Task::Cls),
+            _ => anyhow::bail!("unknown task {s:?}"),
+        }
+    }
+}
+
+/// A dataset: fixed example set with stable ids (AQ-SGD's buffers are
+/// keyed by example id across epochs).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub examples: Vec<Example>,
+    pub task: Task,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Split off the last `frac` as a held-out evaluation set.
+    pub fn split_eval(mut self, frac: f64) -> (Dataset, Dataset) {
+        let n_eval = ((self.examples.len() as f64 * frac) as usize).max(1);
+        let n_train = self.examples.len().saturating_sub(n_eval);
+        let eval = self.examples.split_off(n_train);
+        (
+            Dataset { examples: self.examples, task: self.task },
+            Dataset { examples: eval, task: self.task },
+        )
+    }
+}

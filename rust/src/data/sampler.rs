@@ -1,0 +1,114 @@
+//! Epoch sampling: deterministic shuffling into micro-batches whose
+//! example ids key the AQ-SGD message buffers.
+//!
+//! The paper notes (§3.3) that re-shuffling every epoch costs buffer
+//! migration under data parallelism; `shuffle_every_epoch=false`
+//! reproduces the "shuffle once" optimization.
+
+use super::{Dataset, Task};
+use crate::util::Rng;
+
+/// A micro-batch ready for the pipeline: `tokens` is row-major
+/// [micro_batch, seq]; `targets` is the label vector (CLS) or the tokens
+/// again (LM — shifting happens inside the loss artifact).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub example_ids: Vec<u64>,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub micro_batch: usize,
+    pub seq: usize,
+}
+
+pub struct EpochSampler {
+    order: Vec<usize>,
+    micro_batch: usize,
+    shuffle_every_epoch: bool,
+    rng: Rng,
+    epoch: usize,
+}
+
+impl EpochSampler {
+    pub fn new(n_examples: usize, micro_batch: usize, seed: u64, shuffle_every_epoch: bool) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n_examples).collect();
+        rng.shuffle(&mut order);
+        EpochSampler { order, micro_batch, shuffle_every_epoch, rng, epoch: 0 }
+    }
+
+    /// Micro-batches of one epoch (drops the ragged tail, like the paper's
+    /// fixed-shape training). Advances the shuffle state.
+    pub fn epoch_batches(&mut self, data: &Dataset) -> Vec<Batch> {
+        if self.epoch > 0 && self.shuffle_every_epoch {
+            self.rng.shuffle(&mut self.order);
+        }
+        self.epoch += 1;
+        let b = self.micro_batch;
+        let seq = data.examples.first().map(|e| e.tokens.len()).unwrap_or(0);
+        self.order
+            .chunks_exact(b)
+            .map(|chunk| {
+                let mut tokens = Vec::with_capacity(b * seq);
+                let mut targets = Vec::new();
+                let mut ids = Vec::with_capacity(b);
+                for &i in chunk {
+                    let e = &data.examples[i];
+                    tokens.extend_from_slice(&e.tokens);
+                    ids.push(e.id);
+                    if data.task == Task::Cls {
+                        targets.push(e.label);
+                    }
+                }
+                if data.task == Task::Lm {
+                    targets = tokens.clone();
+                }
+                Batch { example_ids: ids, tokens, targets, micro_batch: b, seq }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::lm::markov_corpus;
+
+    #[test]
+    fn batches_cover_epoch_once() {
+        let d = markov_corpus(64, 16, 40, 1);
+        let mut s = EpochSampler::new(d.len(), 4, 0, true);
+        let batches = s.epoch_batches(&d);
+        assert_eq!(batches.len(), 10);
+        let mut seen: Vec<u64> = batches.iter().flat_map(|b| b.example_ids.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        for b in &batches {
+            assert_eq!(b.tokens.len(), 4 * 16);
+            assert_eq!(b.targets.len(), 4 * 16); // LM: targets == tokens
+        }
+    }
+
+    #[test]
+    fn shuffle_once_keeps_order() {
+        let d = markov_corpus(64, 16, 32, 1);
+        let mut s = EpochSampler::new(d.len(), 4, 7, false);
+        let e1: Vec<u64> = s.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        let e2: Vec<u64> = s.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        assert_eq!(e1, e2);
+
+        let mut s2 = EpochSampler::new(d.len(), 4, 7, true);
+        let f1: Vec<u64> = s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        let f2: Vec<u64> = s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        assert_eq!(f1, e1); // same seed, same first epoch
+        assert_ne!(f1, f2);
+    }
+
+    #[test]
+    fn cls_targets_are_labels() {
+        let d = crate::data::cls::qnli_like(64, 16, 20, 2);
+        let mut s = EpochSampler::new(d.len(), 5, 0, true);
+        let batches = s.epoch_batches(&d);
+        assert_eq!(batches[0].targets.len(), 5);
+        assert!(batches[0].targets.iter().all(|&l| l == 0 || l == 1));
+    }
+}

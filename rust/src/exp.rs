@@ -1,0 +1,117 @@
+//! Shared experiment harness for the `examples/` figure & table binaries:
+//! dataset factory, single-variant runner, and sweep helpers. Keeps every
+//! reproduction script down to "declare the grid, print the table".
+
+use anyhow::Result;
+
+use crate::codec::Compression;
+use crate::config::TrainConfig;
+use crate::coordinator::{TrainStats, Trainer};
+use crate::data::{cls, lm, Dataset};
+use crate::metrics::Recorder;
+use crate::runtime::Manifest;
+
+/// Build the dataset a config names ("markov" | "arxiv" | "embedded" |
+/// "qnli" | "cola") with shapes taken from the model manifest.
+pub fn make_dataset(cfg: &TrainConfig, man: &Manifest) -> Result<Dataset> {
+    let vocab = man.vocab()?;
+    let seq = man.seq()?;
+    Ok(match cfg.dataset.as_str() {
+        "markov" => lm::markov_corpus(vocab, seq, cfg.n_examples, cfg.seed + 100),
+        "arxiv" => lm::markov_corpus(vocab, seq, cfg.n_examples, cfg.seed + 200),
+        "embedded" => lm::embedded_corpus(seq, cfg.n_examples),
+        "qnli" => cls::qnli_like(vocab, seq, cfg.n_examples, cfg.seed + 300),
+        "cola" => cls::cola_like(vocab, seq, cfg.n_examples, cfg.seed + 400),
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+/// Result of one training variant.
+pub struct RunResult {
+    pub label: String,
+    pub stats: TrainStats,
+    pub recorder: Recorder,
+    pub probe: Vec<(usize, f64, f64)>,
+    pub diverged: bool,
+}
+
+/// Train one variant to completion and hand back its trace.
+pub fn run_variant(cfg: TrainConfig, label: &str) -> Result<RunResult> {
+    let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+    let data = make_dataset(&cfg, &man)?;
+    let (train, eval) = data.split_eval(0.125);
+    let mut trainer = Trainer::new(cfg)?;
+    let stats = trainer.train(&train, Some(&eval))?;
+    Ok(RunResult {
+        label: label.to_string(),
+        diverged: trainer.recorder.diverged,
+        probe: trainer.probe.rows.clone(),
+        stats,
+        recorder: std::mem::replace(&mut trainer.recorder, Recorder::new("")),
+    })
+}
+
+/// The standard method grid of the paper's convergence figures.
+pub fn method_grid(fw: u8, bw: u8) -> Vec<(String, Compression)> {
+    vec![
+        ("FP32".into(), Compression::Fp32),
+        (format!("DirectQ fw{fw} bw{bw}"), Compression::DirectQ { fw_bits: fw, bw_bits: bw }),
+        (format!("AQ-SGD fw{fw} bw{bw}"), Compression::AqSgd { fw_bits: fw, bw_bits: bw }),
+    ]
+}
+
+/// Write a CSV with one loss-trace column block per run (long format:
+/// label,step,loss,loss_ema,sim_time_s).
+pub fn save_traces(path: &str, runs: &[RunResult]) -> Result<()> {
+    let mut out = String::from("label,step,epoch,loss,loss_ema,comm_bytes,sim_time_s\n");
+    for r in runs {
+        for row in &r.recorder.rows {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6},{},{:.4}\n",
+                r.label, row.step, row.epoch, row.loss, row.loss_ema, row.comm_bytes, row.sim_time_s
+            ));
+        }
+    }
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    println!("traces -> {path}");
+    Ok(())
+}
+
+/// Paper-regime pipeline parameters (GPT2-1.5B on 8 V100 stages,
+/// Table 3: 45 ms fwd / 135 ms bwd per microbatch, 6.4 MB boundary
+/// messages at micro-batch 1 x seq 1024 x d 1600).
+pub struct PaperRegime {
+    pub n_stages: usize,
+    pub n_micro: usize,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub fp32_msg_bytes: u64,
+    pub micro_batch: usize,
+    /// total model parameter bytes (for DP gradient volume)
+    pub param_bytes: u64,
+}
+
+impl Default for PaperRegime {
+    fn default() -> Self {
+        PaperRegime {
+            n_stages: 8,
+            n_micro: 32,
+            fwd_s: 0.045,
+            bwd_s: 0.135,
+            fp32_msg_bytes: (1 * 1024 * 1600 * 4) as u64,
+            micro_batch: 1,
+            param_bytes: 6_000_000_000, // 1.5B params * 4B
+        }
+    }
+}
+
+impl PaperRegime {
+    /// Forward/backward wire bytes for a compression scheme.
+    pub fn msg_bytes(&self, c: &Compression, first_visit: bool) -> (u64, u64) {
+        let n = (self.fp32_msg_bytes / 4) as usize;
+        (c.fw_wire_bytes(n, first_visit), c.bw_wire_bytes(n))
+    }
+}

@@ -1,0 +1,23 @@
+//! AQ-SGD: communication-efficient pipeline-parallel fine-tuning over slow
+//! networks via activation-*delta* quantization — a full-system
+//! reproduction of "Fine-tuning Language Models over Slow Networks using
+//! Activation Quantization with Guarantees" (NeurIPS 2022).
+//!
+//! Architecture (see DESIGN.md): rust owns the coordinator — pipeline
+//! schedule, network simulation, message buffers, codecs, data-parallel
+//! gradient compression — and executes AOT-compiled JAX/Pallas compute
+//! artifacts through the PJRT C API; python never runs at training time.
+
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod pipeline;
+pub mod runtime;
+pub mod store;
+pub mod testing;
+pub mod util;

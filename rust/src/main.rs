@@ -1,0 +1,143 @@
+//! `aq-sgd` launcher: train / evaluate / inspect over the AOT artifacts.
+//!
+//! Subcommands:
+//!   train       run a training job (see --help for flags)
+//!   info        print a model manifest summary
+//!   throughput  one-off pipeline-throughput simulation
+//!
+//! Examples:
+//!   aq-sgd train --model tiny --compression aqsgd:fw2bw4 --epochs 4 \
+//!                --bandwidth 100mbps --dataset markov
+//!   aq-sgd info --model small
+//!   aq-sgd throughput --stages 8 --micro 32 --bandwidth 100mbps
+
+use anyhow::Result;
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
+use aq_sgd::coordinator::Trainer;
+use aq_sgd::exp::make_dataset;
+use aq_sgd::metrics::Table;
+use aq_sgd::pipeline::{PipelineSim, SimConfig};
+use aq_sgd::runtime::Manifest;
+use aq_sgd::util::fmt;
+
+const HELP: &str = "aq-sgd <train|info|throughput> [--key value ...]
+
+train flags:
+  --model NAME            artifacts/<NAME> (default tiny)
+  --compression SPEC      fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY
+  --dataset NAME          markov | arxiv | embedded | qnli | cola
+  --examples N            dataset size (default 64)
+  --epochs N --n-micro N --lr F --warmup N --steps N --seed N
+  --bandwidth B           e.g. 100mbps, 10gbps (simulated-time accounting)
+  --schedule S            gpipe | 1f1b
+  --dp N --dp-bits B      data parallelism + gradient compression
+  --m-bits B              low-precision message buffers (Fig 9e/f)
+  --store S               mem | disk | quant
+  --hlo-codec             compress boundaries via the Pallas HLO kernels
+  --stochastic            stochastic (unbiased) rounding
+  --eval-every N          eval cadence
+  --csv PATH              write the loss trace
+";
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = TrainConfig::from_cli(cli)?;
+    let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+    let data = make_dataset(&cfg, &man)?;
+    let (train, eval) = data.split_eval(0.125);
+    let mut trainer = Trainer::new(cfg)?;
+    trainer.set_eval_every(cli.usize("eval-every", 10)?);
+    println!(
+        "model={} params={} stages={} compression={} bandwidth={}",
+        man.name(),
+        man.total_params()?,
+        man.n_stages()?,
+        trainer.cfg.compression.label(),
+        fmt::bandwidth(trainer.cfg.bandwidth_bps)
+    );
+    let stats = trainer.train(&train, Some(&eval))?;
+    println!(
+        "steps={} train_loss={:.4} eval_loss={:.4} comm={} sim_time={} buffers={}",
+        stats.steps,
+        stats.final_train_loss,
+        stats.final_eval_loss,
+        fmt::bytes(stats.comm_bytes),
+        fmt::duration_s(stats.sim_time_s),
+        fmt::bytes(stats.buffer_bytes),
+    );
+    if let Some(path) = cli.flags.get("csv") {
+        trainer.recorder.save_csv(path)?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let model = cli.str("model", "tiny");
+    let man = Manifest::load(&cli.str("artifacts", "artifacts"), &model)?;
+    println!("model       {}", man.name());
+    println!("task        {}", man.task()?);
+    println!("stages      {}", man.n_stages()?);
+    println!("params      {}", man.total_params()?);
+    println!("boundary    {:?}", man.boundary()?);
+    println!("vocab/seq   {}/{}", man.vocab()?, man.seq()?);
+    let n = man.boundary_len()?;
+    let mut t = Table::new(&["scheme", "fw bytes/microbatch", "vs fp32"]);
+    for c in [
+        Compression::Fp32,
+        Compression::Fp16,
+        Compression::DirectQ { fw_bits: 3, bw_bits: 6 },
+        Compression::AqSgd { fw_bits: 2, bw_bits: 4 },
+    ] {
+        let b = c.fw_wire_bytes(n, false);
+        t.row(vec![c.label(), fmt::bytes(b), format!("{:.1}x", 4.0 * n as f64 / b as f64)]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_throughput(cli: &Cli) -> Result<()> {
+    let stages = cli.usize("stages", 8)?;
+    let micro = cli.usize("micro", 32)?;
+    let fw_mb = cli.f64("fw-mb", 6.4)?;
+    let fwd_ms = cli.f64("fwd-ms", 45.0)?;
+    let bwd_ms = cli.f64("bwd-ms", 135.0)?;
+    let micro_batch = cli.usize("micro-batch", 1)?;
+    let bw = parse_bandwidth(&cli.str("bandwidth", "100mbps"))?;
+    let fp32_bytes = (fw_mb * 1e6) as u64;
+    let mut t = Table::new(&["scheme", "step time", "throughput (seq/s)"]);
+    for (label, fw, bw_bytes) in [
+        ("FP32", fp32_bytes, fp32_bytes),
+        ("fw4 bw8", fp32_bytes / 8, fp32_bytes / 4),
+        (
+            "fw3 bw6",
+            (fp32_bytes as f64 * 3.0 / 32.0) as u64,
+            (fp32_bytes as f64 * 6.0 / 32.0) as u64,
+        ),
+        ("fw2 bw4", fp32_bytes / 16, fp32_bytes / 8),
+    ] {
+        let cfg = SimConfig::uniform(stages, micro, fwd_ms / 1e3, bwd_ms / 1e3, fw, bw_bytes, bw);
+        let r = PipelineSim::run(&cfg);
+        t.row(vec![
+            label.to_string(),
+            fmt::duration_s(r.step_time_s),
+            format!("{:.2}", r.throughput(micro, micro_batch)),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    match cli.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&cli),
+        Some("info") => cmd_info(&cli),
+        Some("throughput") => cmd_throughput(&cli),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}

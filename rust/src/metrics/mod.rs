@@ -1,0 +1,189 @@
+//! Training/throughput metrics: loss traces, comm accounting, CSV output
+//! (every figure/table harness writes its rows through this module).
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::stats::Ema;
+
+/// One training-trace row.
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    pub step: usize,
+    pub epoch: usize,
+    pub loss: f64,
+    pub loss_ema: f64,
+    /// Cumulative bytes that crossed pipeline boundaries so far.
+    pub comm_bytes: u64,
+    /// Simulated wall-clock seconds so far (virtual network time).
+    pub sim_time_s: f64,
+    /// Real wall-clock seconds so far.
+    pub wall_time_s: f64,
+}
+
+pub struct Recorder {
+    pub label: String,
+    pub rows: Vec<TraceRow>,
+    ema: Ema,
+    start: Instant,
+    pub comm_bytes: u64,
+    pub sim_time_s: f64,
+    pub diverged: bool,
+}
+
+impl Recorder {
+    pub fn new(label: impl Into<String>) -> Self {
+        Recorder {
+            label: label.into(),
+            rows: Vec::new(),
+            ema: Ema::new(0.05),
+            start: Instant::now(),
+            comm_bytes: 0,
+            sim_time_s: 0.0,
+            diverged: false,
+        }
+    }
+
+    pub fn record(&mut self, step: usize, epoch: usize, loss: f64) {
+        if !loss.is_finite() || loss > 1e4 {
+            self.diverged = true;
+        }
+        let ema = self.ema.update(loss);
+        self.rows.push(TraceRow {
+            step,
+            epoch,
+            loss,
+            loss_ema: ema,
+            comm_bytes: self.comm_bytes,
+            sim_time_s: self.sim_time_s,
+            wall_time_s: self.start.elapsed().as_secs_f64(),
+        });
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rows.last().map(|r| r.loss_ema).unwrap_or(f64::NAN)
+    }
+
+    /// First simulated time at which the smoothed loss reaches `target`
+    /// (the paper's "time to the same loss" metric; None if never).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.rows.iter().find(|r| r.loss_ema <= target).map(|r| r.sim_time_s)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,epoch,loss,loss_ema,comm_bytes,sim_time_s,wall_time_s\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6},{:.6},{},{:.4},{:.2}",
+                r.step, r.epoch, r.loss, r.loss_ema, r.comm_bytes, r.sim_time_s, r.wall_time_s
+            );
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Minimal fixed-width table printer for the bench harnesses (matches the
+/// row/column layout of the paper's tables).
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, "| {:<width$} ", c, width = w);
+            }
+            line.push('|');
+            line
+        };
+        let header = fmt_row(&self.header, &widths);
+        out.push_str(&header);
+        out.push('\n');
+        out.push_str(&"-".repeat(header.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_tracks_divergence_and_ttl() {
+        let mut r = Recorder::new("t");
+        for i in 0..200 {
+            r.sim_time_s = i as f64;
+            r.record(i, 0, (5.0 - i as f64 * 0.5).max(0.5));
+        }
+        assert!(!r.diverged);
+        assert!(r.final_loss() < 1.0);
+        let t = r.time_to_loss(2.5).unwrap();
+        assert!(t > 0.0 && t < 200.0);
+        assert!(r.time_to_loss(-10.0).is_none());
+        r.record(200, 1, f64::NAN);
+        assert!(r.diverged);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut r = Recorder::new("t");
+        r.record(0, 0, 1.0);
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("step,"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["Network", "FP32", "AQ-SGD"]);
+        t.row(vec!["10 Gbps".into(), "3.8".into(), "4.0".into()]);
+        let s = t.render();
+        assert!(s.contains("10 Gbps"));
+        assert!(s.contains("AQ-SGD"));
+        assert_eq!(t.to_csv().lines().count(), 2);
+    }
+}

@@ -1,0 +1,160 @@
+//! Simulated slow network.
+//!
+//! The paper throttles AWS instance links with Linux `tc` (10 Gbps down to
+//! 100 Mbps). We model each point-to-point link as a FIFO serializer with
+//! a bandwidth and a per-message latency, driven by a *virtual clock*:
+//! deterministic, byte-accurate, and fast enough to sweep every (bandwidth
+//! x scheme x schedule) cell of Tables 2/3/5 in milliseconds.
+//!
+//! A real-sleep mode (`RealLink`) exists for the threaded integration test
+//! so the event model is cross-checked against wall-clock behaviour.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Standard bandwidth ladder of the paper's evaluation (bits/s).
+pub const PAPER_BANDWIDTHS: [(f64, &str); 5] = [
+    (10e9, "10 Gbps"),
+    (1e9, "1 Gbps"),
+    (500e6, "500 Mbps"),
+    (300e6, "300 Mbps"),
+    (100e6, "100 Mbps"),
+];
+
+/// A FIFO link under the virtual clock. Transmissions serialize: a message
+/// begins once the link is free, occupies it for `bytes/bandwidth`, and is
+/// delivered `latency` later (store-and-forward).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub bandwidth_bps: f64, // bits per second
+    pub latency_s: f64,
+    busy_until: f64,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0);
+        Link { bandwidth_bps, latency_s, busy_until: 0.0, bytes_sent: 0, msgs_sent: 0 }
+    }
+
+    /// Pure transmission time of `bytes` on this link.
+    pub fn tx_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / self.bandwidth_bps
+    }
+
+    /// Enqueue a transmission starting no earlier than `now`; returns the
+    /// delivery (arrival) time at the far end.
+    pub fn transmit(&mut self, now: f64, bytes: u64) -> f64 {
+        let start = now.max(self.busy_until);
+        let end = start + self.tx_time(bytes);
+        self.busy_until = end;
+        self.bytes_sent += bytes;
+        self.msgs_sent += 1;
+        end + self.latency_s
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = 0.0;
+        self.bytes_sent = 0;
+        self.msgs_sent = 0;
+    }
+}
+
+/// A message with real-time delivery semantics, for the threaded mode.
+pub struct RealLink<T> {
+    tx: mpsc::Sender<(Instant, T)>,
+    bandwidth_bps: f64,
+    latency: Duration,
+    epoch: Instant,
+    busy_until: Duration,
+}
+
+pub struct RealReceiver<T> {
+    rx: mpsc::Receiver<(Instant, T)>,
+}
+
+impl<T: Send> RealLink<T> {
+    pub fn channel(bandwidth_bps: f64, latency: Duration) -> (RealLink<T>, RealReceiver<T>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            RealLink {
+                tx,
+                bandwidth_bps,
+                latency,
+                epoch: Instant::now(),
+                busy_until: Duration::ZERO,
+            },
+            RealReceiver { rx },
+        )
+    }
+
+    /// Send `msg` as if it were `bytes` long: the call returns immediately
+    /// (communication overlaps computation); the receiver blocks until the
+    /// modeled delivery instant.
+    pub fn send(&mut self, msg: T, bytes: u64) {
+        let now = self.epoch.elapsed();
+        let start = now.max(self.busy_until);
+        let tx_t = Duration::from_secs_f64(bytes as f64 * 8.0 / self.bandwidth_bps);
+        self.busy_until = start + tx_t;
+        let deliver_at = self.epoch + self.busy_until + self.latency;
+        let _ = self.tx.send((deliver_at, msg));
+    }
+}
+
+impl<T> RealReceiver<T> {
+    /// Blocking receive honouring the modeled delivery time.
+    pub fn recv(&self) -> Option<T> {
+        match self.rx.recv() {
+            Err(_) => None,
+            Ok((at, msg)) => {
+                let now = Instant::now();
+                if at > now {
+                    std::thread::sleep(at - now);
+                }
+                Some(msg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_time_math() {
+        let l = Link::new(100e6, 0.0); // 100 Mbps
+        // 12.5 MB at 100Mbps = 1s
+        assert!((l.tx_time(12_500_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_serialization() {
+        let mut l = Link::new(8e6, 0.001); // 1 MB/s, 1ms latency
+        let a1 = l.transmit(0.0, 1_000_000); // done tx at 1.0, arrive 1.001
+        let a2 = l.transmit(0.0, 1_000_000); // queued: tx 1.0..2.0
+        assert!((a1 - 1.001).abs() < 1e-9);
+        assert!((a2 - 2.001).abs() < 1e-9);
+        // a later small message after the queue drains
+        let a3 = l.transmit(5.0, 1_000); // 8000 bits = 1 ms
+        assert!((a3 - 5.002).abs() < 1e-9);
+        assert_eq!(l.bytes_sent, 2_001_000);
+        assert_eq!(l.msgs_sent, 3);
+    }
+
+    #[test]
+    fn real_link_paces_delivery() {
+        let (mut tx, rx) = RealLink::channel(8e6, Duration::from_millis(0)); // 1 MB/s
+        let t0 = Instant::now();
+        tx.send(1u32, 20_000); // 20 ms
+        tx.send(2u32, 20_000); // +20 ms
+        assert_eq!(rx.recv(), Some(1));
+        let t1 = t0.elapsed();
+        assert_eq!(rx.recv(), Some(2));
+        let t2 = t0.elapsed();
+        assert!(t1 >= Duration::from_millis(18), "{t1:?}");
+        assert!(t2 >= Duration::from_millis(38), "{t2:?}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Optimizer: native AdamW (bit-compatible with the HLO artifact's baked
+//! hyper-parameters) + the paper's warmup-then-linear-decay LR schedule
+//! (Appendix C).
+
+/// Hyper-parameters matching `python/compile/optimizer.py`.
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// Native AdamW state for one flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+}
+
+impl AdamW {
+    pub fn new(n: usize) -> Self {
+        AdamW { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// In-place update of `params` with gradient `g` at learning rate `lr`.
+    pub fn update(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(params.len(), g.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - BETA1.powf(t);
+        let bc2 = 1.0 - BETA2.powf(t);
+        for i in 0..params.len() {
+            let gi = g[i];
+            self.m[i] = BETA1 * self.m[i] + (1.0 - BETA1) * gi;
+            self.v[i] = BETA2 * self.v[i] + (1.0 - BETA2) * gi * gi;
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            params[i] -= lr * (m_hat / (v_hat.sqrt() + EPS) + WEIGHT_DECAY * params[i]);
+        }
+    }
+}
+
+/// Warmup + linear decay over `total_steps` (paper App. C).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl LrSchedule {
+    /// Learning rate at 1-based step `step`.
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step <= self.warmup_steps {
+            return self.base_lr * step as f64 / self.warmup_steps as f64;
+        }
+        if self.total_steps == usize::MAX || self.total_steps <= self.warmup_steps {
+            return self.base_lr;
+        }
+        let rem = (self.total_steps - step) as f64;
+        let span = (self.total_steps - self.warmup_steps) as f64;
+        self.base_lr * (rem / span).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        let mut p = vec![5.0f32; 8];
+        let mut opt = AdamW::new(8);
+        for _ in 0..300 {
+            let g: Vec<f32> = p.clone(); // grad of ||p||^2/2
+            opt.update(&mut p, &g, 0.05);
+        }
+        assert!(p.iter().all(|x| x.abs() < 1.0), "{p:?}");
+    }
+
+    #[test]
+    fn matches_closed_form_first_step() {
+        // step 1: m_hat = g, v_hat = g^2 -> update ~ lr*(sign(g) + wd*p)
+        let mut p = vec![1.0f32];
+        let mut opt = AdamW::new(1);
+        opt.update(&mut p, &[2.0], 0.1);
+        let expect = 1.0 - 0.1 * (2.0 / (2.0 + EPS) + WEIGHT_DECAY * 1.0);
+        assert!((p[0] - expect).abs() < 1e-5, "{} vs {expect}", p[0]);
+    }
+
+    #[test]
+    fn schedule_shape() {
+        let s = LrSchedule { base_lr: 1.0, warmup_steps: 10, total_steps: 110 };
+        assert!((s.lr(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr(10) - 1.0).abs() < 1e-12);
+        assert!((s.lr(60) - 0.5).abs() < 1e-12);
+        assert!(s.lr(110) < 1e-12);
+        // open-ended: constant after warmup
+        let c = LrSchedule { base_lr: 0.5, warmup_steps: 5, total_steps: usize::MAX };
+        assert_eq!(c.lr(100), 0.5);
+    }
+}

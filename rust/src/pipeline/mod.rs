@@ -1,0 +1,8 @@
+//! Pipeline-parallel machinery: microbatch schedules and the event-driven
+//! virtual-time simulator that regenerates the paper's throughput tables.
+
+pub mod schedule;
+pub mod sim;
+
+pub use schedule::{Op, Schedule};
+pub use sim::{PipelineSim, SimConfig, SimResult, StageTimes};

@@ -1,0 +1,149 @@
+//! Microbatch schedules for synchronous pipeline parallelism.
+//!
+//! `GPipe`: all forwards, then all backwards (flush style) — the paper's
+//! setting (synchronous macro-batch SGD over micro-batches).
+//! `OneFOneB`: PipeDream-flush / 1F1B, which bounds in-flight activations
+//! to the stage depth — implemented as the ablation the DESIGN.md §4
+//! schedule comparison uses.
+
+/// One unit of stage work on a microbatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    GPipe,
+    OneFOneB,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "gpipe" => Ok(Schedule::GPipe),
+            "1f1b" => Ok(Schedule::OneFOneB),
+            _ => anyhow::bail!("unknown schedule {s:?} (gpipe|1f1b)"),
+        }
+    }
+
+    /// Ordered op list for `stage` out of `n_stages`, over `n_micro`
+    /// microbatches. Every stage executes each Fwd and Bwd exactly once.
+    pub fn ops(&self, stage: usize, n_stages: usize, n_micro: usize) -> Vec<Op> {
+        match self {
+            Schedule::GPipe => {
+                let mut ops: Vec<Op> = (0..n_micro).map(Op::Fwd).collect();
+                // backwards drain in reverse (LIFO), matching recompute
+                // pipelines where the last forward is the first backward
+                ops.extend((0..n_micro).rev().map(Op::Bwd));
+                ops
+            }
+            Schedule::OneFOneB => {
+                let warmup = (n_stages - 1 - stage).min(n_micro);
+                let mut ops = Vec::with_capacity(2 * n_micro);
+                for m in 0..warmup {
+                    ops.push(Op::Fwd(m));
+                }
+                let mut next_f = warmup;
+                let mut next_b = 0;
+                // steady state: one forward, one backward
+                while next_f < n_micro {
+                    ops.push(Op::Fwd(next_f));
+                    next_f += 1;
+                    ops.push(Op::Bwd(next_b));
+                    next_b += 1;
+                }
+                // drain the remaining backwards
+                while next_b < n_micro {
+                    ops.push(Op::Bwd(next_b));
+                    next_b += 1;
+                }
+                ops
+            }
+        }
+    }
+
+    /// Peak number of microbatch activations a stage must hold.
+    pub fn peak_in_flight(&self, stage: usize, n_stages: usize, n_micro: usize) -> usize {
+        match self {
+            Schedule::GPipe => n_micro,
+            Schedule::OneFOneB => (n_stages - stage).min(n_micro),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_complete(ops: &[Op], n_micro: usize) {
+        let mut fwd = vec![false; n_micro];
+        let mut bwd = vec![false; n_micro];
+        for op in ops {
+            match *op {
+                Op::Fwd(m) => {
+                    assert!(!fwd[m], "double fwd {m}");
+                    fwd[m] = true;
+                }
+                Op::Bwd(m) => {
+                    assert!(fwd[m], "bwd before fwd {m}");
+                    assert!(!bwd[m], "double bwd {m}");
+                    bwd[m] = true;
+                }
+            }
+        }
+        assert!(fwd.iter().all(|&b| b) && bwd.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn gpipe_complete() {
+        for k in 1..=8 {
+            for m in 1..=16 {
+                for s in 0..k {
+                    check_complete(&Schedule::GPipe.ops(s, k, m), m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ofob_complete() {
+        for k in 1..=8 {
+            for m in 1..=16 {
+                for s in 0..k {
+                    check_complete(&Schedule::OneFOneB.ops(s, k, m), m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ofob_bounds_in_flight() {
+        // max simultaneously-held activations on stage 0 of a deep pipe
+        let k = 8;
+        let m = 32;
+        let ops = Schedule::OneFOneB.ops(0, k, m);
+        let mut held = 0i64;
+        let mut peak = 0i64;
+        for op in ops {
+            match op {
+                Op::Fwd(_) => {
+                    held += 1;
+                    peak = peak.max(held);
+                }
+                Op::Bwd(_) => held -= 1,
+            }
+        }
+        assert!(peak as usize <= Schedule::OneFOneB.peak_in_flight(0, k, m));
+        assert!(peak < m as i64); // strictly better than GPipe
+    }
+
+    #[test]
+    fn last_stage_alternates() {
+        let ops = Schedule::OneFOneB.ops(3, 4, 6);
+        assert_eq!(ops[0], Op::Fwd(0));
+        assert_eq!(ops[1], Op::Bwd(0));
+        assert_eq!(ops[2], Op::Fwd(1));
+    }
+}

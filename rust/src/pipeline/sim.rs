@@ -1,0 +1,304 @@
+//! Event-driven virtual-time simulator of a synchronous training pipeline.
+//!
+//! Reproduces the timing model behind the paper's Tables 2/3/5 and
+//! Figures 4/5: per-stage compute times, per-boundary FIFO links with
+//! bandwidth/latency, comm/comp overlap (sends are asynchronous; a stage
+//! only blocks on *receiving* its input), and a configurable microbatch
+//! schedule. Deterministic and fast (millions of ops/s), so the bench
+//! harnesses can sweep every (bandwidth x scheme x bits) cell.
+
+use super::schedule::{Op, Schedule};
+use crate::net::Link;
+
+/// Per-microbatch compute times of one stage (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct StageTimes {
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_stages: usize,
+    pub n_micro: usize,
+    pub stage_times: Vec<StageTimes>,
+    /// Forward-message wire bytes per microbatch (may differ in AQ-SGD's
+    /// first epoch where messages are full precision).
+    pub fw_bytes: Vec<u64>,
+    /// Backward-message wire bytes (uniform across microbatches).
+    pub bw_bytes: u64,
+    pub bandwidth_bps: f64,
+    /// Per-boundary bandwidth override (length n_stages-1) for the
+    /// heterogeneous / decentralized setting of paper App. E; falls back
+    /// to `bandwidth_bps` when None.
+    pub link_bandwidths: Option<Vec<f64>>,
+    pub latency_s: f64,
+    pub schedule: Schedule,
+    /// Optimizer / codec overhead added once per step (seconds).
+    pub step_overhead_s: f64,
+}
+
+impl SimConfig {
+    /// Uniform-stage convenience constructor.
+    pub fn uniform(
+        n_stages: usize,
+        n_micro: usize,
+        fwd_s: f64,
+        bwd_s: f64,
+        fw_bytes: u64,
+        bw_bytes: u64,
+        bandwidth_bps: f64,
+    ) -> Self {
+        SimConfig {
+            n_stages,
+            n_micro,
+            stage_times: vec![StageTimes { fwd_s, bwd_s }; n_stages],
+            fw_bytes: vec![fw_bytes; n_micro],
+            bw_bytes,
+            bandwidth_bps,
+            link_bandwidths: None,
+            latency_s: 0.0,
+            schedule: Schedule::GPipe,
+            step_overhead_s: 0.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// End-to-end time of one optimizer step (seconds).
+    pub step_time_s: f64,
+    /// Per-stage busy (compute) time.
+    pub stage_busy_s: Vec<f64>,
+    /// Total bytes crossing each forward link.
+    pub fw_link_bytes: Vec<u64>,
+    pub bw_link_bytes: Vec<u64>,
+    /// Average per-message transmission times (Table 3's comm columns).
+    pub fw_msg_tx_s: f64,
+    pub bw_msg_tx_s: f64,
+    /// Mean stall time per stage (waiting on the network).
+    pub stall_s: Vec<f64>,
+}
+
+impl SimResult {
+    /// Sequences per second given the micro-batch size.
+    pub fn throughput(&self, n_micro: usize, micro_batch: usize) -> f64 {
+        (n_micro * micro_batch) as f64 / self.step_time_s
+    }
+}
+
+pub struct PipelineSim;
+
+impl PipelineSim {
+    pub fn run(cfg: &SimConfig) -> SimResult {
+        let k = cfg.n_stages;
+        let m = cfg.n_micro;
+        assert_eq!(cfg.stage_times.len(), k);
+        assert_eq!(cfg.fw_bytes.len(), m);
+
+        // one link per boundary per direction (full duplex); bandwidths
+        // may differ per boundary (App. E heterogeneous networks)
+        let link_bw = |b: usize| -> f64 {
+            cfg.link_bandwidths
+                .as_ref()
+                .map(|v| v[b])
+                .unwrap_or(cfg.bandwidth_bps)
+        };
+        let mut fw_links: Vec<Link> =
+            (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
+        let mut bw_links: Vec<Link> =
+            (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
+
+        let ops: Vec<Vec<Op>> = (0..k).map(|s| cfg.schedule.ops(s, k, m)).collect();
+        let mut op_idx = vec![0usize; k];
+        let mut stage_free = vec![0f64; k];
+        let mut stage_busy = vec![0f64; k];
+        let mut stall = vec![0f64; k];
+
+        const PENDING: f64 = f64::INFINITY;
+        // fwd_arrival[s][m]: when stage s's input activation for microbatch
+        // m is available. Stage 0 reads local data (time 0).
+        let mut fwd_arrival = vec![vec![PENDING; m]; k];
+        let mut bwd_arrival = vec![vec![PENDING; m]; k];
+        let mut fwd_done = vec![vec![PENDING; m]; k];
+        for t in fwd_arrival[0].iter_mut() {
+            *t = 0.0;
+        }
+        // last stage needs no incoming gradient
+        for t in bwd_arrival[k - 1].iter_mut() {
+            *t = PENDING; // unused; its Bwd dep is its own Fwd
+        }
+
+        let total_ops: usize = ops.iter().map(|o| o.len()).sum();
+        let mut done_ops = 0usize;
+
+        while done_ops < total_ops {
+            let mut progressed = false;
+            for s in 0..k {
+                // retire as many ready ops of stage s as possible
+                while op_idx[s] < ops[s].len() {
+                    let op = ops[s][op_idx[s]];
+                    let dep = match op {
+                        Op::Fwd(mb) => fwd_arrival[s][mb],
+                        Op::Bwd(mb) => {
+                            if s == k - 1 {
+                                fwd_done[s][mb]
+                            } else {
+                                bwd_arrival[s][mb]
+                            }
+                        }
+                    };
+                    if dep == PENDING {
+                        break;
+                    }
+                    let start = stage_free[s].max(dep);
+                    stall[s] += start - stage_free[s];
+                    let comp = match op {
+                        Op::Fwd(_) => cfg.stage_times[s].fwd_s,
+                        Op::Bwd(_) => cfg.stage_times[s].bwd_s,
+                    };
+                    let end = start + comp;
+                    stage_free[s] = end;
+                    stage_busy[s] += comp;
+                    match op {
+                        Op::Fwd(mb) => {
+                            fwd_done[s][mb] = end;
+                            if s + 1 < k {
+                                let arr = fw_links[s].transmit(end, cfg.fw_bytes[mb]);
+                                fwd_arrival[s + 1][mb] = arr;
+                            }
+                        }
+                        Op::Bwd(mb) => {
+                            if s > 0 {
+                                let arr = bw_links[s - 1].transmit(end, cfg.bw_bytes);
+                                bwd_arrival[s - 1][mb] = arr;
+                            }
+                        }
+                    }
+                    op_idx[s] += 1;
+                    done_ops += 1;
+                    progressed = true;
+                }
+            }
+            assert!(progressed, "pipeline deadlock: schedule has a dependency cycle");
+        }
+
+        let step_time_s =
+            stage_free.iter().cloned().fold(0.0f64, f64::max) + cfg.step_overhead_s;
+        let fw_tx = if k > 1 {
+            cfg.fw_bytes.iter().map(|&b| b as f64 * 8.0 / cfg.bandwidth_bps).sum::<f64>()
+                / m as f64
+        } else {
+            0.0
+        };
+        let bw_tx =
+            if k > 1 { cfg.bw_bytes as f64 * 8.0 / cfg.bandwidth_bps } else { 0.0 };
+
+        SimResult {
+            step_time_s,
+            stage_busy_s: stage_busy,
+            fw_link_bytes: fw_links.iter().map(|l| l.bytes_sent).collect(),
+            bw_link_bytes: bw_links.iter().map(|l| l.bytes_sent).collect(),
+            fw_msg_tx_s: fw_tx,
+            bw_msg_tx_s: bw_tx,
+            stall_s: stall,
+        }
+    }
+
+    /// Ring all-reduce time for the data-parallel gradient sync
+    /// (2 (r-1)/r * bytes across the slowest link), used by the Fig. 5
+    /// end-to-end compression harness.
+    pub fn allreduce_time(bytes: u64, dp_degree: usize, bandwidth_bps: f64, latency_s: f64) -> f64 {
+        if dp_degree <= 1 {
+            return 0.0;
+        }
+        let vol = 2.0 * (dp_degree as f64 - 1.0) / dp_degree as f64 * bytes as f64;
+        vol * 8.0 / bandwidth_bps + 2.0 * (dp_degree as f64 - 1.0) * latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_is_pure_compute() {
+        let cfg = SimConfig::uniform(1, 4, 0.01, 0.02, 0, 0, 1e9);
+        let r = PipelineSim::run(&cfg);
+        assert!((r.step_time_s - 4.0 * 0.03).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_bandwidth_matches_gpipe_formula() {
+        // with zero comm, GPipe step = (M + K - 1) * (f + b) for uniform
+        // stages ... actually (M + K - 1)*f + (M + K - 1)*b for f == b
+        let (k, m, f, b) = (4, 8, 0.01, 0.02);
+        let cfg = SimConfig::uniform(k, m, f, b, 0, 0, 1e12);
+        let r = PipelineSim::run(&cfg);
+        let ideal = (m + k - 1) as f64 * (f + b);
+        assert!((r.step_time_s - ideal).abs() < 1e-6, "{} vs {ideal}", r.step_time_s);
+    }
+
+    #[test]
+    fn slow_network_dominates() {
+        // 100 Mbps, 4 MB messages: 320 ms per hop >> 10 ms compute
+        let cfg = SimConfig::uniform(2, 4, 0.01, 0.02, 4_000_000, 4_000_000, 100e6);
+        let r = PipelineSim::run(&cfg);
+        // at least the serialized fw+bw transfers of all microbatches
+        assert!(r.step_time_s > 8.0 * 0.32);
+        // and a fat pipe removes that
+        let fast = SimConfig { bandwidth_bps: 100e9, ..cfg.clone() };
+        let rf = PipelineSim::run(&fast);
+        assert!(rf.step_time_s < r.step_time_s / 4.0);
+    }
+
+    #[test]
+    fn compression_speeds_up_slow_network() {
+        // the Table 2 effect in the paper's own regime (GPT2-1.5B, 8
+        // stages, 6.4 MB boundary messages, fw4/bw8): large speedup at
+        // 100 Mbps, none at 10 Gbps
+        let base = SimConfig::uniform(8, 32, 0.045, 0.135, 6_400_000, 6_400_000, 100e6);
+        let comp = SimConfig {
+            fw_bytes: vec![800_000; 32],
+            bw_bytes: 1_600_000,
+            ..base.clone()
+        };
+        let t_fp32 = PipelineSim::run(&base).step_time_s;
+        let t_q = PipelineSim::run(&comp).step_time_s;
+        assert!(t_fp32 / t_q > 2.0, "speedup {}", t_fp32 / t_q);
+
+        let fast_fp32 =
+            PipelineSim::run(&SimConfig { bandwidth_bps: 10e9, ..base }).step_time_s;
+        let fast_q =
+            PipelineSim::run(&SimConfig { bandwidth_bps: 10e9, ..comp }).step_time_s;
+        assert!((fast_fp32 / fast_q) < 1.1);
+    }
+
+    #[test]
+    fn ofob_matches_gpipe_total_time_uniform() {
+        // for uniform stages and zero comm, 1F1B and GPipe have equal
+        // flush time (same critical path), only memory differs
+        let g = SimConfig::uniform(4, 8, 0.01, 0.02, 0, 0, 1e12);
+        let o = SimConfig { schedule: Schedule::OneFOneB, ..g.clone() };
+        let tg = PipelineSim::run(&g).step_time_s;
+        let to = PipelineSim::run(&o).step_time_s;
+        assert!((tg - to).abs() < 1e-6, "{tg} vs {to}");
+    }
+
+    #[test]
+    fn bytes_accounted() {
+        let cfg = SimConfig::uniform(3, 4, 0.01, 0.01, 1000, 500, 1e9);
+        let r = PipelineSim::run(&cfg);
+        assert_eq!(r.fw_link_bytes, vec![4000, 4000]);
+        assert_eq!(r.bw_link_bytes, vec![2000, 2000]);
+    }
+
+    #[test]
+    fn allreduce_scaling() {
+        assert_eq!(PipelineSim::allreduce_time(1000, 1, 1e9, 0.0), 0.0);
+        let t2 = PipelineSim::allreduce_time(1_000_000, 2, 1e9, 0.0);
+        let t8 = PipelineSim::allreduce_time(1_000_000, 8, 1e9, 0.0);
+        assert!(t8 > t2); // 2(r-1)/r grows with r
+        assert!(t8 < 2.0 * t2);
+    }
+}

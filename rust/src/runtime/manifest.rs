@@ -1,0 +1,100 @@
+//! Typed view over `artifacts/<config>/manifest.txt`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::kv::Kv;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    kv: Kv,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().join(model);
+        let kv = Kv::load(&dir.join("manifest.txt")).with_context(|| {
+            format!(
+                "loading manifest for model {model:?} — did you run `make artifacts`? (dir: {})",
+                dir.display()
+            )
+        })?;
+        Ok(Manifest { kv, dir })
+    }
+
+    pub fn name(&self) -> &str {
+        self.kv.get("name").unwrap_or("?")
+    }
+    pub fn task(&self) -> Result<&str> {
+        self.kv.get("task")
+    }
+    pub fn n_stages(&self) -> Result<usize> {
+        self.kv.usize("n_stages")
+    }
+    pub fn vocab(&self) -> Result<usize> {
+        self.kv.usize("vocab")
+    }
+    pub fn seq(&self) -> Result<usize> {
+        self.kv.usize("seq")
+    }
+    pub fn micro_batch(&self) -> Result<usize> {
+        self.kv.usize("micro_batch")
+    }
+    pub fn d_model(&self) -> Result<usize> {
+        self.kv.usize("d_model")
+    }
+    pub fn n_classes(&self) -> Result<usize> {
+        self.kv.usize("n_classes")
+    }
+
+    /// [micro_batch, seq, d_model] — the boundary activation shape.
+    pub fn boundary(&self) -> Result<Vec<usize>> {
+        self.kv.dims("boundary")
+    }
+    pub fn boundary_len(&self) -> Result<usize> {
+        Ok(self.boundary()?.iter().product())
+    }
+    /// Activation elements per example (seq * d_model).
+    pub fn example_len(&self) -> Result<usize> {
+        let b = self.boundary()?;
+        Ok(b[1] * b[2])
+    }
+
+    pub fn stage_params(&self, stage: usize) -> Result<usize> {
+        self.kv.usize(&format!("stage{stage}.params"))
+    }
+
+    /// Path of an artifact referenced by manifest key.
+    pub fn path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.kv.get(key)?))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.kv.get_opt(key).is_some()
+    }
+
+    /// Total model parameters across stages.
+    pub fn total_params(&self) -> Result<usize> {
+        let mut n = 0;
+        for s in 0..self.n_stages()? {
+            n += self.stage_params(s)?;
+        }
+        Ok(n)
+    }
+
+    /// Read a stage's initial flat parameters (f32 LE).
+    pub fn stage_init(&self, stage: usize) -> Result<Vec<f32>> {
+        let path = self.path(&format!("stage{stage}.init"))?;
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0);
+        let n = bytes.len() / 4;
+        anyhow::ensure!(n == self.stage_params(stage)?, "init size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

@@ -1,0 +1,89 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it works with plain host `Vec<f32>` / `Vec<i32>` buffers; marshalling
+//! happens here.
+
+pub mod manifest;
+pub mod stage;
+
+pub use manifest::Manifest;
+pub use stage::{QuantRuntime, StageInput, StageRuntime};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client; create once per process.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Exe { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+}
+
+/// One compiled executable. All artifacts are lowered with
+/// `return_tuple=True`, so outputs always come back as a tuple.
+pub struct Exe {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Exe {
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} vs {} elements", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} vs {} elements", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

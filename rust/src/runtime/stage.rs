@@ -1,0 +1,240 @@
+//! Per-stage execution state: compiled artifacts + parameters + optimizer
+//! state, and the L1 quantization-kernel runtime.
+
+use anyhow::{Context, Result};
+
+use super::{lit_f32, lit_i32, lit_scalar, scalar_f32, to_f32, Engine, Exe, Manifest};
+
+/// Stage input: token ids for stage 0, hidden states otherwise.
+pub enum StageInput<'a> {
+    Tokens(&'a [i32]),
+    Hidden(&'a [f32]),
+}
+
+pub struct StageRuntime {
+    pub index: usize,
+    pub is_first: bool,
+    pub is_last: bool,
+    pub n_params: usize,
+    fwd: Option<Exe>,
+    bwd: Option<Exe>,
+    loss: Option<Exe>,
+    lossbwd: Option<Exe>,
+    logits: Option<Exe>,
+    adamw: Exe,
+    pub params: Vec<f32>,
+    pub opt_m: Vec<f32>,
+    pub opt_v: Vec<f32>,
+    // cached shapes
+    tokens_shape: Vec<usize>,
+    boundary: Vec<usize>,
+    targets_shape: Vec<usize>,
+}
+
+impl StageRuntime {
+    pub fn load(engine: &Engine, man: &Manifest, index: usize) -> Result<Self> {
+        let k = man.n_stages()?;
+        let is_first = index == 0;
+        let is_last = index == k - 1;
+        let n_params = man.stage_params(index)?;
+        let load_opt = |key: &str| -> Result<Option<Exe>> {
+            if man.has(&format!("stage{index}.{key}")) {
+                Ok(Some(engine.load(&man.path(&format!("stage{index}.{key}"))?)?))
+            } else {
+                Ok(None)
+            }
+        };
+        let boundary = man.boundary()?;
+        let micro_batch = man.micro_batch()?;
+        let seq = man.seq()?;
+        let targets_shape = if man.task()? == "lm" {
+            vec![micro_batch, seq]
+        } else {
+            vec![micro_batch]
+        };
+        Ok(StageRuntime {
+            index,
+            is_first,
+            is_last,
+            n_params,
+            fwd: load_opt("fwd")?,
+            bwd: load_opt("bwd")?,
+            loss: load_opt("loss")?,
+            lossbwd: load_opt("lossbwd")?,
+            logits: load_opt("logits")?,
+            adamw: engine.load(&man.path(&format!("stage{index}.adamw"))?)?,
+            params: man.stage_init(index)?,
+            opt_m: vec![0.0; n_params],
+            opt_v: vec![0.0; n_params],
+            tokens_shape: vec![micro_batch, seq],
+            boundary,
+            targets_shape,
+        })
+    }
+
+    fn input_lit(&self, x: &StageInput) -> Result<xla::Literal> {
+        match x {
+            StageInput::Tokens(t) => lit_i32(t, &self.tokens_shape),
+            StageInput::Hidden(h) => lit_f32(h, &self.boundary),
+        }
+    }
+
+    /// Forward pass: returns the outgoing boundary activation.
+    pub fn forward(&self, x: &StageInput) -> Result<Vec<f32>> {
+        let exe = self.fwd.as_ref().context("stage has no fwd artifact")?;
+        let p = lit_f32(&self.params, &[self.n_params])?;
+        let out = exe.run(&[p, self.input_lit(x)?])?;
+        to_f32(&out[0])
+    }
+
+    /// Backward pass (recomputation style): returns (g_params, g_input).
+    /// g_input is None for stage 0 (token input).
+    pub fn backward(&self, x: &StageInput, g_out: &[f32]) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+        let exe = self.bwd.as_ref().context("stage has no bwd artifact")?;
+        let p = lit_f32(&self.params, &[self.n_params])?;
+        let g = lit_f32(g_out, &self.boundary)?;
+        let out = exe.run(&[p, self.input_lit(x)?, g])?;
+        let gp = to_f32(&out[0])?;
+        let gx = if out.len() > 1 { Some(to_f32(&out[1])?) } else { None };
+        Ok((gp, gx))
+    }
+
+    /// Last-stage loss + backward: returns (loss, g_params, g_input).
+    pub fn loss_backward(
+        &self,
+        x: &StageInput,
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>, Option<Vec<f32>>)> {
+        let exe = self.lossbwd.as_ref().context("stage has no lossbwd artifact")?;
+        let p = lit_f32(&self.params, &[self.n_params])?;
+        let t = lit_i32(targets, &self.targets_shape)?;
+        let out = exe.run(&[p, self.input_lit(x)?, t])?;
+        let loss = scalar_f32(&out[0])?;
+        let gp = to_f32(&out[1])?;
+        let gx = if out.len() > 2 { Some(to_f32(&out[2])?) } else { None };
+        Ok((loss, gp, gx))
+    }
+
+    /// Last-stage logits (inference head, [B, S, vocab] flattened).
+    pub fn logits(&self, x: &StageInput) -> Result<Vec<f32>> {
+        let exe = self.logits.as_ref().context("stage has no logits artifact")?;
+        let p = lit_f32(&self.params, &[self.n_params])?;
+        let out = exe.run(&[p, self.input_lit(x)?])?;
+        to_f32(&out[0])
+    }
+
+    /// Last-stage evaluation loss (no gradients).
+    pub fn eval_loss(&self, x: &StageInput, targets: &[i32]) -> Result<f32> {
+        let exe = self.loss.as_ref().context("stage has no loss artifact")?;
+        let p = lit_f32(&self.params, &[self.n_params])?;
+        let t = lit_i32(targets, &self.targets_shape)?;
+        let out = exe.run(&[p, self.input_lit(x)?, t])?;
+        scalar_f32(&out[0])
+    }
+
+    /// AdamW step through the HLO artifact (step is 1-based).
+    pub fn adamw_step_hlo(&mut self, grads: &[f32], step: usize, lr: f64) -> Result<()> {
+        anyhow::ensure!(grads.len() == self.n_params);
+        let out = self.adamw.run(&[
+            lit_f32(&self.params, &[self.n_params])?,
+            lit_f32(&self.opt_m, &[self.n_params])?,
+            lit_f32(&self.opt_v, &[self.n_params])?,
+            lit_f32(grads, &[self.n_params])?,
+            lit_scalar(step as f32),
+            lit_scalar(lr as f32),
+        ])?;
+        self.params = to_f32(&out[0])?;
+        self.opt_m = to_f32(&out[1])?;
+        self.opt_v = to_f32(&out[2])?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Runtime for the L1 Pallas quantization kernels (the `--hlo-codec`
+/// boundary path). Operates on whole boundary tensors with a per-tensor
+/// scale, mirroring `python/compile/kernels/quant.py`.
+pub struct QuantRuntime {
+    aq_encode: Exe,
+    aq_decode: Exe,
+    dq_encode: Exe,
+    dq_decode: Exe,
+    boundary: Vec<usize>,
+    n: usize,
+    /// deterministic rounding offsets (0.5); stochastic mode would draw
+    /// fresh noise per call.
+    noise: Vec<f32>,
+}
+
+impl QuantRuntime {
+    pub fn load(engine: &Engine, man: &Manifest) -> Result<Self> {
+        let boundary = man.boundary()?;
+        let n = boundary.iter().product();
+        Ok(QuantRuntime {
+            aq_encode: engine.load(&man.path("quant.aq_encode")?)?,
+            aq_decode: engine.load(&man.path("quant.aq_decode")?)?,
+            dq_encode: engine.load(&man.path("quant.dq_encode")?)?,
+            dq_decode: engine.load(&man.path("quant.dq_decode")?)?,
+            boundary,
+            n,
+            noise: vec![0.5; n],
+        })
+    }
+
+    fn levels(bits: u8) -> f32 {
+        ((1u32 << bits) - 1) as f32
+    }
+
+    /// AQ-SGD encode via the Pallas kernel: (codes, scale, m_new).
+    pub fn aq_encode(&self, a: &[f32], m: &[f32], bits: u8) -> Result<(Vec<u8>, f32, Vec<f32>)> {
+        let out = self.aq_encode.run(&[
+            lit_f32(a, &self.boundary)?,
+            lit_f32(m, &self.boundary)?,
+            lit_f32(&self.noise, &self.boundary)?,
+            lit_scalar(Self::levels(bits)),
+        ])?;
+        let codes_f = to_f32(&out[0])?;
+        let scale = scalar_f32(&out[1])?;
+        let m_new = to_f32(&out[2])?;
+        Ok((codes_f.iter().map(|&c| c as u8).collect(), scale, m_new))
+    }
+
+    /// Receiver-side buffer advance.
+    pub fn aq_decode(&self, codes: &[u8], scale: f32, m: &[f32], bits: u8) -> Result<Vec<f32>> {
+        let codes_f: Vec<f32> = codes.iter().map(|&c| c as f32).collect();
+        let out = self.aq_decode.run(&[
+            lit_f32(&codes_f, &self.boundary)?,
+            lit_scalar(scale),
+            lit_f32(m, &self.boundary)?,
+            lit_scalar(Self::levels(bits)),
+        ])?;
+        to_f32(&out[0])
+    }
+
+    /// DirectQ encode: (codes, scale).
+    pub fn dq_encode(&self, a: &[f32], bits: u8) -> Result<(Vec<u8>, f32)> {
+        let out = self.dq_encode.run(&[
+            lit_f32(a, &self.boundary)?,
+            lit_f32(&self.noise, &self.boundary)?,
+            lit_scalar(Self::levels(bits)),
+        ])?;
+        let codes_f = to_f32(&out[0])?;
+        let scale = scalar_f32(&out[1])?;
+        Ok((codes_f.iter().map(|&c| c as u8).collect(), scale))
+    }
+
+    pub fn dq_decode(&self, codes: &[u8], scale: f32, bits: u8) -> Result<Vec<f32>> {
+        let codes_f: Vec<f32> = codes.iter().map(|&c| c as f32).collect();
+        let out = self.dq_decode.run(&[
+            lit_f32(&codes_f, &self.boundary)?,
+            lit_scalar(scale),
+            lit_scalar(Self::levels(bits)),
+        ])?;
+        to_f32(&out[0])
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.n
+    }
+}

@@ -1,0 +1,358 @@
+//! Per-example activation message-buffer stores (`m(ξ)` in Algorithm 1).
+//!
+//! The paper (§3.3, App. G) stores ~1 TB of buffers in host memory or SSD
+//! and hides the load/update latency behind forward compute. Here a store
+//! holds one fixed-size f32 record per (boundary, example):
+//!   * `MemStore`  — flat in-memory slabs
+//!   * `DiskStore` — one file per boundary, offset-addressed records (the
+//!      SSD-offload path; App. G's throughput comparison uses it)
+//!   * `QuantizedMemStore` — stores records as b-bit codes (paper Fig.
+//!      9e/f "mz" ablation: buffers kept in low precision)
+//! plus a `Prefetcher` that overlaps the next record fetch with compute.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::codec::pack;
+use crate::codec::quantizer::{Rounding, UniformQuantizer};
+use crate::util::Rng;
+
+/// Key: (boundary index, example id).
+pub type Key = (u32, u64);
+
+pub trait ActivationStore: Send {
+    /// Fetch the buffer for `key` into `out` (resized). Returns false if
+    /// the example has never been stored (first visit).
+    fn get(&mut self, key: Key, out: &mut Vec<f32>) -> bool;
+    fn put(&mut self, key: Key, value: &[f32]);
+    fn contains(&self, key: Key) -> bool;
+    /// Total bytes resident (memory or disk).
+    fn resident_bytes(&self) -> u64;
+    fn record_len(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct MemStore {
+    record_len: usize,
+    map: HashMap<Key, Vec<f32>>,
+}
+
+impl MemStore {
+    pub fn new(record_len: usize) -> Self {
+        MemStore { record_len, map: HashMap::new() }
+    }
+}
+
+impl ActivationStore for MemStore {
+    fn get(&mut self, key: Key, out: &mut Vec<f32>) -> bool {
+        match self.map.get(&key) {
+            None => false,
+            Some(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+                true
+            }
+        }
+    }
+
+    fn put(&mut self, key: Key, value: &[f32]) {
+        assert_eq!(value.len(), self.record_len);
+        self.map.insert(key, value.to_vec());
+    }
+
+    fn contains(&self, key: Key) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.map.len() * self.record_len * 4) as u64
+    }
+
+    fn record_len(&self) -> usize {
+        self.record_len
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Low-precision buffer store: keeps `m(ξ)` as b-bit codes + scale
+/// (Fig. 9e/f). Reads dequantize; writes re-quantize (deterministic
+/// rounding so both boundary sides stay identical).
+pub struct QuantizedMemStore {
+    record_len: usize,
+    quant: UniformQuantizer,
+    map: HashMap<Key, (Vec<u8>, f32)>,
+    rng: Rng,
+}
+
+impl QuantizedMemStore {
+    pub fn new(record_len: usize, bits: u8) -> Self {
+        QuantizedMemStore {
+            record_len,
+            quant: UniformQuantizer::new(bits, Rounding::Nearest),
+            map: HashMap::new(),
+            rng: Rng::new(0),
+        }
+    }
+}
+
+impl ActivationStore for QuantizedMemStore {
+    fn get(&mut self, key: Key, out: &mut Vec<f32>) -> bool {
+        match self.map.get(&key) {
+            None => false,
+            Some((packed, scale)) => {
+                let mut codes = vec![0u8; self.record_len];
+                pack::unpack_into(packed, self.quant.bits, &mut codes);
+                out.clear();
+                out.resize(self.record_len, 0.0);
+                self.quant.decode(&codes, *scale, out);
+                true
+            }
+        }
+    }
+
+    fn put(&mut self, key: Key, value: &[f32]) {
+        assert_eq!(value.len(), self.record_len);
+        let mut codes = vec![0u8; value.len()];
+        let scale = self.quant.encode(value, &mut codes, &mut self.rng);
+        let packed = pack::pack(&codes, self.quant.bits);
+        self.map.insert(key, (packed, scale));
+    }
+
+    fn contains(&self, key: Key) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.map
+            .values()
+            .map(|(p, _)| p.len() as u64 + 4)
+            .sum()
+    }
+
+    fn record_len(&self) -> usize {
+        self.record_len
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// File-backed store: one sparse file per boundary, record-addressed by
+/// example id (the paper's SSD offload). A one-byte presence bitmap rides
+/// in memory.
+pub struct DiskStore {
+    record_len: usize,
+    dir: PathBuf,
+    files: HashMap<u32, File>,
+    present: HashMap<Key, ()>,
+    bytes_written: u64,
+}
+
+impl DiskStore {
+    pub fn new(dir: impl Into<PathBuf>, record_len: usize) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(DiskStore { record_len, dir, files: HashMap::new(), present: HashMap::new(), bytes_written: 0 })
+    }
+
+    fn file(&mut self, boundary: u32) -> Result<&mut File> {
+        if !self.files.contains_key(&boundary) {
+            let path = self.dir.join(format!("boundary{boundary}.m"));
+            let f = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+            self.files.insert(boundary, f);
+        }
+        Ok(self.files.get_mut(&boundary).unwrap())
+    }
+
+    fn offset(&self, example: u64) -> u64 {
+        example * self.record_len as u64 * 4
+    }
+}
+
+impl ActivationStore for DiskStore {
+    fn get(&mut self, key: Key, out: &mut Vec<f32>) -> bool {
+        if !self.present.contains_key(&key) {
+            return false;
+        }
+        let off = self.offset(key.1);
+        let n = self.record_len;
+        let f = self.file(key.0).expect("open store file");
+        f.seek(SeekFrom::Start(off)).expect("seek");
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes).expect("read record");
+        out.clear();
+        out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        true
+    }
+
+    fn put(&mut self, key: Key, value: &[f32]) {
+        assert_eq!(value.len(), self.record_len);
+        let off = self.offset(key.1);
+        let f = self.file(key.0).expect("open store file");
+        f.seek(SeekFrom::Start(off)).expect("seek");
+        let mut bytes = Vec::with_capacity(value.len() * 4);
+        for v in value {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes).expect("write record");
+        self.present.insert(key, ());
+        self.bytes_written += bytes.len() as u64;
+    }
+
+    fn contains(&self, key: Key) -> bool {
+        self.present.contains_key(&key)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.present.len() * self.record_len * 4) as u64
+    }
+
+    fn record_len(&self) -> usize {
+        self.record_len
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Prefetcher: a worker thread that fetches the next examples' buffers
+/// while the caller computes (the §3.3 "hide m(ξ) loads behind the
+/// forward pass" optimization). Generic over any `ActivationStore`.
+pub struct Prefetcher {
+    req_tx: mpsc::Sender<Vec<Key>>,
+    resp_rx: mpsc::Receiver<Vec<(Key, Option<Vec<f32>>)>>,
+    handle: Option<std::thread::JoinHandle<Box<dyn ActivationStore>>>,
+}
+
+impl Prefetcher {
+    pub fn new(mut store: Box<dyn ActivationStore>) -> Self {
+        let (req_tx, req_rx) = mpsc::channel::<Vec<Key>>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            while let Ok(keys) = req_rx.recv() {
+                if keys.is_empty() {
+                    break; // shutdown signal
+                }
+                let mut out = Vec::with_capacity(keys.len());
+                for k in keys {
+                    let mut buf = Vec::new();
+                    let hit = store.get(k, &mut buf);
+                    out.push((k, hit.then_some(buf)));
+                }
+                if resp_tx.send(out).is_err() {
+                    break;
+                }
+            }
+            store
+        });
+        Prefetcher { req_tx, resp_rx, handle: Some(handle) }
+    }
+
+    /// Kick off an async fetch of `keys`.
+    pub fn request(&self, keys: Vec<Key>) {
+        assert!(!keys.is_empty());
+        self.req_tx.send(keys).expect("prefetcher alive");
+    }
+
+    /// Collect a previously requested batch (blocking).
+    pub fn collect(&self) -> Vec<(Key, Option<Vec<f32>>)> {
+        self.resp_rx.recv().expect("prefetcher alive")
+    }
+
+    /// Shut down and recover the store (so puts can continue inline).
+    pub fn into_store(mut self) -> Box<dyn ActivationStore> {
+        let _ = self.req_tx.send(Vec::new());
+        self.handle.take().unwrap().join().expect("prefetcher join")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(store: &mut dyn ActivationStore) {
+        let v: Vec<f32> = (0..store.record_len()).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let key = (0u32, 7u64);
+        let mut out = Vec::new();
+        assert!(!store.get(key, &mut out));
+        assert!(!store.contains(key));
+        store.put(key, &v);
+        assert!(store.contains(key));
+        assert!(store.get(key, &mut out));
+        assert_eq!(out.len(), v.len());
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // overwrite
+        let v2: Vec<f32> = v.iter().map(|x| x * 2.0).collect();
+        store.put(key, &v2);
+        store.get(key, &mut out);
+        assert!((out[4] - v2[4]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mem_store_roundtrip() {
+        roundtrip(&mut MemStore::new(64));
+    }
+
+    #[test]
+    fn disk_store_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("aqsgd_store_test_{}", std::process::id()));
+        roundtrip(&mut DiskStore::new(&dir, 64).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_store_many_examples() {
+        let dir = std::env::temp_dir().join(format!("aqsgd_store_many_{}", std::process::id()));
+        let mut s = DiskStore::new(&dir, 16).unwrap();
+        for ex in 0..100u64 {
+            let v: Vec<f32> = (0..16).map(|i| (ex * 16 + i) as f32).collect();
+            s.put((1, ex), &v);
+        }
+        let mut out = Vec::new();
+        assert!(s.get((1, 42), &mut out));
+        assert_eq!(out[0], 42.0 * 16.0);
+        assert_eq!(s.resident_bytes(), 100 * 16 * 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quantized_store_bounded_error() {
+        let mut s = QuantizedMemStore::new(128, 8);
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        s.put((0, 0), &v);
+        let mut out = Vec::new();
+        assert!(s.get((0, 0), &mut out));
+        let scale = UniformQuantizer::scale(&v);
+        let bound = 2.0 * scale / 255.0;
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() <= bound);
+        }
+        // 8-bit store is ~4x smaller than f32
+        assert!(s.resident_bytes() < 128 * 4 / 3);
+    }
+
+    #[test]
+    fn prefetcher_overlaps() {
+        let mut mem = MemStore::new(8);
+        for ex in 0..10 {
+            mem.put((0, ex), &[ex as f32; 8]);
+        }
+        let pf = Prefetcher::new(Box::new(mem));
+        pf.request(vec![(0, 3), (0, 99)]);
+        let got = pf.collect();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].1.as_ref().unwrap()[0], 3.0);
+        assert!(got[1].1.is_none()); // miss
+        let mut store = pf.into_store();
+        let mut out = Vec::new();
+        assert!(store.get((0, 5), &mut out));
+    }
+}

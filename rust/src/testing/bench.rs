@@ -1,0 +1,106 @@
+//! Criterion-style micro-bench harness for the `[[bench]]` targets
+//! (harness = false). Auto-calibrates iteration counts, reports
+//! median/mean ns with throughput, and honours `AQ_BENCH_FAST=1` for
+//! smoke runs.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+pub struct Bencher {
+    pub samples: usize,
+    pub min_sample_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        if std::env::var("AQ_BENCH_FAST").is_ok() {
+            Bencher { samples: 5, min_sample_s: 0.01 }
+        } else {
+            Bencher { samples: 20, min_sample_s: 0.05 }
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} {:>12.0} ns/iter (median {:>12.0}, ±{:.0})",
+            self.name, self.mean_ns, self.median_ns, self.stddev_ns
+        );
+    }
+
+    pub fn report_throughput(&self, bytes_per_iter: u64) {
+        let gbs = bytes_per_iter as f64 / self.mean_ns; // bytes/ns == GB/s
+        println!(
+            "bench {:<42} {:>12.0} ns/iter  {:>8.2} GB/s",
+            self.name, self.mean_ns, gbs
+        );
+    }
+}
+
+impl Bencher {
+    /// Measure `f`, auto-scaling iterations until a sample takes at least
+    /// `min_sample_s`.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        // calibrate
+        let mut iters = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let el = t.elapsed().as_secs_f64();
+            if el >= self.min_sample_s || iters > 1 << 30 {
+                break;
+            }
+            iters = if el <= 1e-9 { iters * 128 } else { (iters as f64 * (self.min_sample_s / el).min(128.0) * 1.2) as u64 + 1 };
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            mean_ns: stats::mean(&samples),
+            median_ns: stats::median(&samples),
+            stddev_ns: stats::stddev(&samples),
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// A value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("AQ_BENCH_FAST", "1");
+        let b = Bencher::default();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters_per_sample > 100);
+    }
+}

@@ -1,0 +1,5 @@
+//! In-tree property-testing and micro-bench helpers (the offline build has
+//! no proptest/criterion; these provide the same workflow).
+
+pub mod bench;
+pub mod prop;

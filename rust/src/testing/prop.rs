@@ -1,0 +1,76 @@
+//! Minimal property-testing harness: seeded random cases, reproducible
+//! failures. Set `AQ_PROP_SEED=<n>` to replay a failing case,
+//! `AQ_PROP_CASES=<n>` to change the case count.
+
+use crate::util::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        let cases = std::env::var("AQ_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let base_seed = std::env::var("AQ_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xA25D);
+        Prop { cases, base_seed }
+    }
+}
+
+impl Prop {
+    /// Run `f` over `cases` seeded RNGs; panics with the failing seed.
+    pub fn check(name: &str, f: impl Fn(&mut Rng)) {
+        let p = Prop::default();
+        for case in 0..p.cases {
+            let seed = p.base_seed.wrapping_add(case as u64 * 0x9E37);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+            if let Err(e) = result {
+                eprintln!(
+                    "property {name:?} failed at case {case} — replay with AQ_PROP_SEED={seed} AQ_PROP_CASES=1"
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+/// Random helpers for property generators.
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+pub fn len_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static N: AtomicUsize = AtomicUsize::new(0);
+        Prop::check("count", |_rng| {
+            N.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(N.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let n = len_in(&mut rng, 3, 17);
+            assert!((3..=17).contains(&n));
+        }
+        assert_eq!(vec_f32(&mut rng, 5, 1.0).len(), 5);
+    }
+}

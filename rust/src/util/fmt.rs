@@ -1,0 +1,33 @@
+//! Human-readable formatting for logs and bench output.
+
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 { format!("{} {}", n, UNITS[0]) } else { format!("{:.2} {}", v, UNITS[u]) }
+}
+
+pub fn duration_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+pub fn bandwidth(bytes_per_s: f64) -> String {
+    let bits = bytes_per_s * 8.0;
+    if bits >= 1e9 {
+        format!("{:.0} Gbps", bits / 1e9)
+    } else {
+        format!("{:.0} Mbps", bits / 1e6)
+    }
+}

@@ -1,0 +1,69 @@
+//! Flat `key value` text format (manifest + config files). A stand-in for
+//! JSON in this no-serde environment; one pair per line, `#` comments.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Kv {
+    map: HashMap<String, String>,
+}
+
+impl Kv {
+    pub fn parse(text: &str) -> Self {
+        let mut map = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once(char::is_whitespace) {
+                map.insert(k.to_string(), v.trim().to_string());
+            }
+        }
+        Kv { map }
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("parsing {key}"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.parse().with_context(|| format!("parsing {key}"))
+    }
+
+    /// "4x32x32" -> [4, 32, 32]
+    pub fn dims(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?
+            .split('x')
+            .map(|d| d.parse().with_context(|| format!("parsing {key}")))
+            .collect()
+    }
+
+    pub fn insert(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free utilities (the offline environment ships no rand /
+//! serde / clap; everything here replaces those).
+pub mod fmt;
+pub mod kv;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

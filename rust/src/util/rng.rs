@@ -1,0 +1,36 @@
+/// SplitMix64-seeded xoshiro256** PRNG (no external deps available offline).
+#[derive(Clone, Debug)]
+pub struct Rng { s: [u64; 4] }
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut next = || { x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31) };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0]; self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2]; self.s[0] ^= self.s[3];
+        self.s[2] ^= t; self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+    /// uniform in [0, 1)
+    pub fn next_f32(&mut self) -> f32 { (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32) }
+    pub fn next_f64(&mut self) -> f64 { (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) }
+    /// uniform integer in [0, n)
+    pub fn below(&mut self, n: usize) -> usize { (self.next_u64() % n as u64) as usize }
+    /// standard normal via Box-Muller
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() { let j = self.below(i + 1); xs.swap(i, j); }
+    }
+}

@@ -1,0 +1,53 @@
+//! Small statistics helpers used by metrics and benches.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return f64::NAN; }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 { return 0.0; }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return f64::NAN; }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 { v[n / 2] } else { 0.5 * (v[n / 2 - 1] + v[n / 2]) }
+}
+
+/// Exponential moving average (used for the paper's smoothed loss curves).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    if xs.is_empty() { return 0.0; }
+    xs.iter().map(|x| x.abs() as f64).sum::<f64>() / xs.len() as f64
+}

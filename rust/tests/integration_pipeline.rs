@@ -1,0 +1,137 @@
+//! Threaded two-machine pipeline over real-sleep simulated links: the
+//! "deployment realism" check. Machine a (stage 0) and machine b (stage
+//! 1) run on separate OS threads, exchange AQ-SGD messages over
+//! `net::RealLink`s with finite bandwidth, and must produce exactly the
+//! numbers the sequential coordinator produces.
+
+use std::time::{Duration, Instant};
+
+use aq_sgd::codec::delta::{AqMessage, AqState};
+use aq_sgd::codec::quantizer::Rounding;
+use aq_sgd::net::RealLink;
+use aq_sgd::runtime::{Engine, Manifest, StageInput, StageRuntime};
+use aq_sgd::util::Rng;
+
+fn have(model: &str) -> bool {
+    Manifest::load("artifacts", model).is_ok()
+}
+
+/// Wire form of a forward AQ message + the example's backward reply.
+enum FwMsg {
+    Activation(AqMessage),
+    Done,
+}
+
+#[test]
+fn threaded_two_machine_pipeline_matches_sequential() {
+    if !have("tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let man = Manifest::load("artifacts", "tiny").unwrap();
+    let micro_b = man.micro_batch().unwrap();
+    let seq = man.seq().unwrap();
+    let vocab = man.vocab().unwrap();
+    let n_steps = 3usize;
+    let bits = 4u8;
+
+    // fixed token stream shared by both runs
+    let mut rng = Rng::new(99);
+    let batches: Vec<Vec<i32>> = (0..n_steps)
+        .map(|_| (0..micro_b * seq).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+
+    // ---------- sequential reference ----------
+    let seq_losses: Vec<f32> = {
+        let engine = Engine::cpu().unwrap();
+        let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+        let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+        let aq = AqState::new(bits, Rounding::Nearest);
+        let mut m_send: Vec<Option<Vec<f32>>> = vec![None; n_steps];
+        let mut m_recv: Vec<Option<Vec<f32>>> = vec![None; n_steps];
+        let mut rng = Rng::new(0);
+        batches
+            .iter()
+            .enumerate()
+            .map(|(i, toks)| {
+                let h = s0.forward(&StageInput::Tokens(toks)).unwrap();
+                let mut ms = Vec::new();
+                let msg = aq.encode(&h, m_send[i].as_deref(), &mut ms, &mut rng);
+                let mut mr = Vec::new();
+                aq.decode(&msg, m_recv[i].as_deref(), &mut mr);
+                m_send[i] = Some(ms);
+                let (loss, _, _) = s1.loss_backward(&StageInput::Hidden(&mr), toks).unwrap();
+                m_recv[i] = Some(mr);
+                loss
+            })
+            .collect()
+    };
+
+    // ---------- threaded run over real-sleep links ----------
+    // 8 Mbps => a 16 KiB fp32 message takes ~16 ms: enough to observe
+    // pacing without slowing the test down.
+    let (mut fw_tx, fw_rx) = RealLink::<FwMsg>::channel(8e6, Duration::from_millis(1));
+    let (mut bw_tx, bw_rx) = RealLink::<Vec<f32>>::channel(8e6, Duration::from_millis(1));
+
+    let batches_a = batches.clone();
+    let machine_a = std::thread::spawn(move || {
+        let engine = Engine::cpu().unwrap();
+        let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+        let aq = AqState::new(bits, Rounding::Nearest);
+        let mut stores: Vec<Option<Vec<f32>>> = vec![None; batches_a.len()];
+        let mut rng = Rng::new(0);
+        for (i, toks) in batches_a.iter().enumerate() {
+            let h = s0.forward(&StageInput::Tokens(toks)).unwrap();
+            let mut m_new = Vec::new();
+            let msg = aq.encode(&h, stores[i].as_deref(), &mut m_new, &mut rng);
+            let bytes = msg.wire_bytes(bits);
+            stores[i] = Some(m_new);
+            fw_tx.send(FwMsg::Activation(msg), bytes);
+            // consume the backward gradient (machine a would run bwd here)
+            let g = bw_rx.recv().unwrap();
+            assert!(g.iter().all(|v| v.is_finite()));
+        }
+        fw_tx.send(FwMsg::Done, 1);
+    });
+
+    let man_b = Manifest::load("artifacts", "tiny").unwrap();
+    let batches_b = batches.clone();
+    let machine_b = std::thread::spawn(move || {
+        let engine = Engine::cpu().unwrap();
+        let s1 = StageRuntime::load(&engine, &man_b, 1).unwrap();
+        let aq = AqState::new(bits, Rounding::Nearest);
+        let mut stores: Vec<Option<Vec<f32>>> = vec![None; batches_b.len()];
+        let mut losses = Vec::new();
+        let mut i = 0usize;
+        while let Some(msg) = fw_rx.recv() {
+            let msg = match msg {
+                FwMsg::Done => break,
+                FwMsg::Activation(m) => m,
+            };
+            let mut m_new = Vec::new();
+            aq.decode(&msg, stores[i].as_deref(), &mut m_new);
+            let (loss, _, gx) =
+                s1.loss_backward(&StageInput::Hidden(&m_new), &batches_b[i]).unwrap();
+            stores[i] = Some(m_new);
+            let gx = gx.unwrap();
+            let bytes = 4 * gx.len() as u64;
+            bw_tx.send(gx, bytes);
+            losses.push(loss);
+            i += 1;
+        }
+        losses
+    });
+
+    let t0 = Instant::now();
+    machine_a.join().unwrap();
+    let thr_losses = machine_b.join().unwrap();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(thr_losses.len(), seq_losses.len());
+    for (a, b) in thr_losses.iter().zip(&seq_losses) {
+        assert!((a - b).abs() < 1e-6, "threaded {a} vs sequential {b}");
+    }
+    // pacing sanity: 3 fp32 fw messages (first visits, 16 KiB each at
+    // 1 MB/s) + 3 fp32 bw messages => at least ~90 ms of modeled wire time
+    assert!(elapsed >= Duration::from_millis(60), "links not paced: {elapsed:?}");
+}

@@ -1,0 +1,197 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the rust side
+//! of the L1/L2/L3 contract. Requires `make artifacts` (skips otherwise).
+
+use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::optim::AdamW;
+use aq_sgd::runtime::{Engine, Manifest, QuantRuntime, StageInput, StageRuntime};
+use aq_sgd::util::Rng;
+
+fn manifest(model: &str) -> Option<Manifest> {
+    match Manifest::load("artifacts", model) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping: artifacts/{model} not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn tokens(man: &Manifest, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let n = man.micro_batch().unwrap() * man.seq().unwrap();
+    let v = man.vocab().unwrap();
+    (0..n).map(|_| rng.below(v) as i32).collect()
+}
+
+#[test]
+fn stage_shapes_and_finiteness() {
+    let Some(man) = manifest("tiny") else { return };
+    let engine = Engine::cpu().unwrap();
+    let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+    let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+    let toks = tokens(&man, 1);
+    let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
+    assert_eq!(h.len(), man.boundary_len().unwrap());
+    assert!(h.iter().all(|v| v.is_finite()));
+    let (loss, gp, gx) = s1.loss_backward(&StageInput::Hidden(&h), &toks).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(gp.len(), man.stage_params(1).unwrap());
+    let gx = gx.unwrap();
+    assert_eq!(gx.len(), h.len());
+    let (gp0, gx0) = s0.backward(&StageInput::Tokens(&toks), &gx).unwrap();
+    assert_eq!(gp0.len(), man.stage_params(0).unwrap());
+    assert!(gx0.is_none()); // token input has no gradient
+    assert!(gp0.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn loss_artifact_matches_lossbwd() {
+    let Some(man) = manifest("tiny") else { return };
+    let engine = Engine::cpu().unwrap();
+    let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+    let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+    let toks = tokens(&man, 2);
+    let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
+    let eval = s1.eval_loss(&StageInput::Hidden(&h), &toks).unwrap();
+    let (lb, _, _) = s1.loss_backward(&StageInput::Hidden(&h), &toks).unwrap();
+    assert!((eval - lb).abs() < 1e-5, "{eval} vs {lb}");
+}
+
+#[test]
+fn gradients_pass_finite_difference_check() {
+    // spot-check d loss / d params[i] for a few indices of the last stage
+    let Some(man) = manifest("tiny") else { return };
+    let engine = Engine::cpu().unwrap();
+    let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+    let mut s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+    let toks = tokens(&man, 3);
+    let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
+    let (_, gp, _) = s1.loss_backward(&StageInput::Hidden(&h), &toks).unwrap();
+
+    let mut rng = Rng::new(7);
+    let eps = 1e-3f32;
+    for _ in 0..4 {
+        let i = rng.below(s1.n_params);
+        let orig = s1.params[i];
+        s1.params[i] = orig + eps;
+        let lp = s1.eval_loss(&StageInput::Hidden(&h), &toks).unwrap();
+        s1.params[i] = orig - eps;
+        let lm = s1.eval_loss(&StageInput::Hidden(&h), &toks).unwrap();
+        s1.params[i] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = gp[i];
+        assert!(
+            (fd - an).abs() <= 1e-2 * (1.0 + fd.abs().max(an.abs())),
+            "param {i}: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn hlo_adamw_matches_native() {
+    let Some(man) = manifest("tiny") else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut stage = StageRuntime::load(&engine, &man, 0).unwrap();
+    let n = stage.n_params;
+    let mut rng = Rng::new(11);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+
+    // native twin
+    let mut native_params = stage.params.clone();
+    let mut native_opt = AdamW::new(n);
+    for step in 1..=3usize {
+        native_opt.update(&mut native_params, &g, 1e-3);
+        stage.adamw_step_hlo(&g, step, 1e-3).unwrap();
+    }
+    let mut max_diff = 0f32;
+    for (a, b) in native_params.iter().zip(&stage.params) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-5, "adamw parity diff {max_diff}");
+}
+
+#[test]
+fn pallas_quant_kernels_match_native_codec() {
+    let Some(man) = manifest("tiny") else { return };
+    let engine = Engine::cpu().unwrap();
+    let q = QuantRuntime::load(&engine, &man).unwrap();
+    let n = man.boundary_len().unwrap();
+    let mut rng = Rng::new(13);
+    let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let m: Vec<f32> = a.iter().map(|v| v + 0.05 * rng.normal()).collect();
+
+    for bits in [2u8, 4, 8] {
+        // AQ: sender m_new == receiver m_new (the Pallas replica property)
+        let (codes, scale, m_send) = q.aq_encode(&a, &m, bits).unwrap();
+        let m_recv = q.aq_decode(&codes, scale, &m, bits).unwrap();
+        assert_eq!(m_send, m_recv, "bits={bits}");
+        assert!(codes.iter().all(|&c| (c as u16) < (1 << bits)));
+        // reconstruction within one delta quantization step
+        let quant = UniformQuantizer::new(bits, Rounding::Nearest);
+        let bound = quant.error_bound(scale) + 1e-6;
+        for (x, y) in a.iter().zip(&m_send) {
+            assert!((x - y).abs() <= bound, "bits={bits}");
+        }
+        // DirectQ matches the native quantizer's semantics exactly
+        let (dc, ds) = q.dq_encode(&a, bits).unwrap();
+        let da = q.dq_decode(&dc, ds, bits).unwrap();
+        let native_scale = UniformQuantizer::scale(&a);
+        assert!((ds - native_scale).abs() <= native_scale * 1e-6);
+        let nb = quant.error_bound(native_scale) + 1e-6;
+        for (x, y) in a.iter().zip(&da) {
+            assert!((x - y).abs() <= nb);
+        }
+    }
+}
+
+#[test]
+fn pallas_attention_model_matches_jnp_model() {
+    // tiny and tiny_pallas share seed + architecture; only the attention
+    // implementation differs (jnp vs Pallas flash kernel). Same input
+    // must give (numerically) the same boundary activation.
+    let (Some(man_j), Some(man_p)) = (manifest("tiny"), manifest("tiny_pallas")) else {
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let s_j = StageRuntime::load(&engine, &man_j, 0).unwrap();
+    let s_p = StageRuntime::load(&engine, &man_p, 0).unwrap();
+    let toks = tokens(&man_j, 4);
+    let h_j = s_j.forward(&StageInput::Tokens(&toks)).unwrap();
+    let h_p = s_p.forward(&StageInput::Tokens(&toks)).unwrap();
+    let mut max_diff = 0f32;
+    for (a, b) in h_j.iter().zip(&h_p) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-4, "pallas vs jnp attention diff {max_diff}");
+}
+
+#[test]
+fn cls_artifacts_work() {
+    let Some(man) = manifest("tiny_cls") else { return };
+    assert_eq!(man.task().unwrap(), "cls");
+    let engine = Engine::cpu().unwrap();
+    let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
+    let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
+    let toks = tokens(&man, 5);
+    let labels: Vec<i32> = (0..man.micro_batch().unwrap()).map(|i| (i % 2) as i32).collect();
+    let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
+    let (loss, gp, gx) = s1.loss_backward(&StageInput::Hidden(&h), &labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    // binary CE at init ~ ln 2
+    assert!((loss - 0.693).abs() < 0.3, "loss {loss}");
+    assert!(gp.iter().any(|&v| v != 0.0));
+    assert!(gx.unwrap().iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn manifest_accessors() {
+    let Some(man) = manifest("tiny") else { return };
+    assert_eq!(man.name(), "tiny");
+    assert_eq!(man.n_stages().unwrap(), 2);
+    assert_eq!(man.boundary().unwrap(), vec![4, 32, 32]);
+    assert_eq!(man.example_len().unwrap(), 32 * 32);
+    assert!(man.total_params().unwrap() > 10_000);
+    let init = man.stage_init(0).unwrap();
+    assert_eq!(init.len(), man.stage_params(0).unwrap());
+    assert!(init.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,296 @@
+//! End-to-end training integration: the coordinator over real PJRT
+//! artifacts. Pins the paper's qualitative claims at test scale:
+//! learning happens, AQ-SGD tracks FP32, compression saves the claimed
+//! bytes, and every configuration axis (store backend, m-bits, HLO
+//! codec, DP compression, schedules, tasks) trains.
+
+use aq_sgd::codec::Compression;
+use aq_sgd::config::TrainConfig;
+use aq_sgd::coordinator::Trainer;
+use aq_sgd::data::lm::markov_corpus;
+use aq_sgd::data::cls::qnli_like;
+use aq_sgd::exp;
+use aq_sgd::pipeline::Schedule;
+use aq_sgd::runtime::Manifest;
+
+fn have_artifacts(model: &str) -> bool {
+    if Manifest::load("artifacts", model).is_ok() {
+        true
+    } else {
+        eprintln!("skipping: artifacts/{model} not built (run `make artifacts`)");
+        false
+    }
+}
+
+fn base_cfg(model: &str) -> TrainConfig {
+    let mut c = TrainConfig::defaults(model);
+    c.epochs = 4;
+    c.n_micro = 2;
+    c.lr = 5e-3;
+    c.warmup_steps = 3;
+    c.n_examples = 48;
+    c
+}
+
+fn run(cfg: TrainConfig) -> (f64, f64, u64) {
+    let man = Manifest::load(&cfg.artifacts_dir, &cfg.model).unwrap();
+    let data = exp::make_dataset(&cfg, &man).unwrap();
+    let (train, _) = data.split_eval(0.1);
+    let mut t = Trainer::new(cfg).unwrap();
+    let first_loss = {
+        // loss of the untouched model on the train set
+        t.eval(&train).unwrap()
+    };
+    let stats = t.train(&train, None).unwrap();
+    (first_loss, stats.final_train_loss, stats.comm_bytes)
+}
+
+#[test]
+fn fp32_training_reduces_loss() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let (first, last, _) = run(base_cfg("tiny"));
+    assert!(last < first - 0.2, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn aqsgd_tracks_fp32_and_saves_bytes() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let (_, fp32_loss, fp32_bytes) = run(base_cfg("tiny"));
+    let mut cfg = base_cfg("tiny");
+    cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let (_, aq_loss, aq_bytes) = run(cfg);
+    // fw4/bw8 AQ-SGD is loss-neutral at this scale (paper Fig. 3)
+    assert!((aq_loss - fp32_loss).abs() < 0.15, "aq {aq_loss} vs fp32 {fp32_loss}");
+    // and much cheaper on the wire (first epoch is full precision, the
+    // other 3 epochs are ~8x/4x smaller)
+    assert!(aq_bytes * 2 < fp32_bytes, "aq {aq_bytes} vs fp32 {fp32_bytes}");
+}
+
+#[test]
+fn aqsgd_beats_directq_at_2bits() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mk = |c: Compression| {
+        let mut cfg = base_cfg("tiny");
+        cfg.epochs = 6;
+        cfg.compression = c;
+        run(cfg).1
+    };
+    let aq = mk(Compression::AqSgd { fw_bits: 2, bw_bits: 4 });
+    let dq = mk(Compression::DirectQ { fw_bits: 2, bw_bits: 4 });
+    assert!(aq < dq + 1e-9, "AQ {aq} should beat DirectQ {dq} at 2 bits");
+}
+
+#[test]
+fn hlo_codec_path_trains_like_native() {
+    // the Pallas-kernel boundary path vs the native rust codec: same
+    // compression semantics, so the final losses stay close
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mut native = base_cfg("tiny");
+    native.epochs = 3;
+    native.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let mut hlo = native.clone();
+    hlo.hlo_codec = true;
+    let (_, l_native, b_native) = run(native);
+    let (_, l_hlo, b_hlo) = run(hlo);
+    assert!((l_native - l_hlo).abs() < 0.2, "native {l_native} vs hlo {l_hlo}");
+    // wire accounting is nearly identical (per-batch vs per-example scale
+    // headers differ by 4B * (B-1) per message)
+    let ratio = b_native as f64 / b_hlo as f64;
+    assert!((0.9..1.1).contains(&ratio), "bytes {b_native} vs {b_hlo}");
+}
+
+#[test]
+fn stores_and_mbits_train() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    for (store, m_bits) in [("disk", None), ("mem", Some(8u8))] {
+        let mut cfg = base_cfg("tiny");
+        cfg.epochs = 3;
+        cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+        cfg.store = store.to_string();
+        cfg.m_bits = m_bits;
+        let (first, last, _) = run(cfg);
+        assert!(last < first - 0.1, "{store}/{m_bits:?}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn dp_with_quantized_gradients_trains() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mut cfg = base_cfg("tiny");
+    cfg.epochs = 3;
+    cfg.n_micro = 1;
+    cfg.dp_degree = 2;
+    cfg.dp_grad_bits = Some(4);
+    cfg.compression = Compression::AqSgd { fw_bits: 3, bw_bits: 6 };
+    cfg.n_examples = 64;
+    let (first, last, _) = run(cfg);
+    assert!(last < first - 0.1, "dp run: {first} -> {last}");
+}
+
+#[test]
+fn ofob_schedule_numerics_match_gpipe() {
+    // the schedule only affects *timing*; numerics must be identical
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mut a = base_cfg("tiny");
+    a.epochs = 2;
+    let mut b = a.clone();
+    b.schedule = Schedule::OneFOneB;
+    let (_, la, _) = run(a);
+    let (_, lb, _) = run(b);
+    assert!((la - lb).abs() < 1e-9, "{la} vs {lb}");
+}
+
+#[test]
+fn cls_task_trains() {
+    if !have_artifacts("tiny_cls") {
+        return;
+    }
+    let mut cfg = base_cfg("tiny_cls");
+    cfg.dataset = "qnli".to_string();
+    cfg.epochs = 6;
+    cfg.compression = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
+    let (first, last, _) = run(cfg);
+    assert!(last < first - 0.03, "cls: {first} -> {last}");
+}
+
+#[test]
+fn fp16_matches_fp32_closely() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mut a = base_cfg("tiny");
+    a.epochs = 2;
+    let mut b = a.clone();
+    b.compression = Compression::Fp16;
+    let (_, l32, bytes32) = run(a);
+    let (_, l16, bytes16) = run(b);
+    assert!((l32 - l16).abs() < 0.05, "{l32} vs {l16}");
+    assert_eq!(bytes16 * 2, bytes32);
+}
+
+#[test]
+fn probe_shows_delta_shrinking_below_activation() {
+    // Fig 1b: after warm-up, mean |delta| << mean |activation|
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let mut cfg = base_cfg("tiny");
+    cfg.epochs = 5;
+    cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let man = Manifest::load("artifacts", "tiny").unwrap();
+    let data = exp::make_dataset(&cfg, &man).unwrap();
+    let (train, _) = data.split_eval(0.1);
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train(&train, None).unwrap();
+    let last = t.probe.rows.last().unwrap();
+    assert!(last.2 < last.1 * 0.5, "delta {} vs act {}", last.2, last.1);
+}
+
+#[test]
+fn trainer_rejects_task_mismatch() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let cfg = base_cfg("tiny");
+    let mut t = Trainer::new(cfg).unwrap();
+    let cls_data = qnli_like(256, 32, 16, 0);
+    assert!(t.train(&cls_data, None).is_err());
+}
+
+#[test]
+fn trainer_rejects_undersized_dataset() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let cfg = base_cfg("tiny"); // needs 2*4 = 8 examples per step
+    let mut t = Trainer::new(cfg).unwrap();
+    let small = markov_corpus(256, 32, 4, 0);
+    assert!(t.train(&small, None).is_err());
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("aqsgd_ckpt_{}", std::process::id()));
+    let mut cfg = base_cfg("tiny");
+    cfg.epochs = 2;
+    let man = Manifest::load("artifacts", "tiny").unwrap();
+    let data = exp::make_dataset(&cfg, &man).unwrap();
+    let (train, _) = data.split_eval(0.1);
+
+    // train 2 epochs, checkpoint, continue 2 more
+    let mut t1 = Trainer::new(cfg.clone()).unwrap();
+    t1.train(&train, None).unwrap();
+    t1.save_checkpoint(&dir).unwrap();
+    t1.train(&train, None).unwrap();
+    let want = t1.eval(&train).unwrap();
+
+    // fresh trainer restored from the checkpoint must match exactly
+    let mut t2 = Trainer::new(cfg).unwrap();
+    t2.load_checkpoint(&dir).unwrap();
+    assert_eq!(t2.steps_done(), 10); // 2 epochs x 5 steps
+    t2.train(&train, None).unwrap();
+    let got = t2.eval(&train).unwrap();
+    assert!((want - got).abs() < 1e-6, "{want} vs {got}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() {
+    if !have_artifacts("tiny") || !have_artifacts("tiny_cls") {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("aqsgd_ckpt_bad_{}", std::process::id()));
+    let t1 = Trainer::new(base_cfg("tiny")).unwrap();
+    t1.save_checkpoint(&dir).unwrap();
+    let mut t2 = Trainer::new(base_cfg("tiny_cls")).unwrap();
+    assert!(t2.load_checkpoint(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn generation_produces_valid_tokens() {
+    if !have_artifacts("tiny") {
+        return;
+    }
+    let man = Manifest::load("artifacts", "tiny").unwrap();
+    if !man.has("stage1.logits") {
+        eprintln!("skipping: artifacts predate the logits export (re-run make artifacts)");
+        return;
+    }
+    let trainer = Trainer::new(base_cfg("tiny")).unwrap();
+    let prompt: Vec<i32> = "Hello".bytes().map(|b| b as i32).collect();
+    let gcfg = aq_sgd::coordinator::generate::GenerateCfg {
+        max_new_tokens: 8,
+        temperature: 0.0,
+        seed: 0,
+    };
+    let out = trainer.generate(&prompt, &gcfg).unwrap();
+    assert_eq!(out.len(), 8);
+    assert!(out.iter().all(|&t| t >= 0 && (t as usize) < man.vocab().unwrap()));
+    // greedy decoding is deterministic
+    let out2 = trainer.generate(&prompt, &gcfg).unwrap();
+    assert_eq!(out, out2);
+    // temperature sampling stays in range and varies with seed
+    let mut g1 = gcfg;
+    g1.temperature = 1.0;
+    g1.seed = 1;
+    let s1 = trainer.generate(&prompt, &g1).unwrap();
+    assert!(s1.iter().all(|&t| (t as usize) < man.vocab().unwrap()));
+}

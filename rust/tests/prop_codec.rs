@@ -1,0 +1,184 @@
+//! Property tests over the wire codecs (the rust mirror of the L1
+//! kernels): roundtrips, error bounds, replica identity, and the
+//! theoretical c_Q contraction.
+
+use aq_sgd::codec::delta::{AqMessage, AqState};
+use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::codec::{f16, pack, quant_wire_bytes, theory, topk, Compression};
+use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
+use aq_sgd::util::Rng;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    Prop::check("pack/unpack", |rng| {
+        let bits = 1 + rng.below(8) as u8;
+        let n = len_in(rng, 0, 5000);
+        let codes: Vec<u8> =
+            (0..n).map(|_| (rng.next_u64() as u8) & ((1u16 << bits) - 1) as u8).collect();
+        let packed = pack::pack(&codes, bits);
+        assert_eq!(packed.len(), pack::packed_len(n, bits));
+        assert_eq!(pack::unpack(&packed, bits, n), codes);
+    });
+}
+
+#[test]
+fn prop_quantizer_error_bound() {
+    Prop::check("quantizer error bound", |rng| {
+        let bits = 2 + rng.below(7) as u8;
+        let n = len_in(rng, 1, 2000);
+        let scale_mag = 10f32.powi(rng.below(7) as i32 - 3);
+        let x = vec_f32(rng, n, scale_mag);
+        let rounding =
+            if rng.below(2) == 0 { Rounding::Nearest } else { Rounding::Stochastic };
+        let q = UniformQuantizer::new(bits, rounding);
+        let scale = UniformQuantizer::scale(&x);
+        let xh = q.roundtrip(&x, rng);
+        let bound = q.error_bound(scale) * (1.0 + 1e-5) + 1e-12;
+        for (a, b) in x.iter().zip(&xh) {
+            assert!((a - b).abs() <= bound, "bits={bits} err {} bound {bound}", (a - b).abs());
+        }
+    });
+}
+
+#[test]
+fn prop_aq_replicas_bit_identical() {
+    Prop::check("aq replicas", |rng| {
+        let bits = 2 + rng.below(7) as u8;
+        let n = len_in(rng, 1, 600);
+        let st = AqState::new(bits, Rounding::Nearest);
+        let mut a = vec_f32(rng, n, 1.0);
+        let mut m_s: Option<Vec<f32>> = None;
+        let mut m_r: Option<Vec<f32>> = None;
+        for _ in 0..8 {
+            let drift = 0.1 * rng.next_f32();
+            for v in a.iter_mut() {
+                *v += drift * rng.normal();
+            }
+            let mut ms = Vec::new();
+            let msg = st.encode(&a, m_s.as_deref(), &mut ms, rng);
+            let mut mr = Vec::new();
+            st.decode(&msg, m_r.as_deref(), &mut mr);
+            assert_eq!(ms, mr);
+            // wire accounting matches the Compression enum
+            let first = m_s.is_none();
+            let c = Compression::AqSgd { fw_bits: bits, bw_bits: bits };
+            assert_eq!(msg.wire_bytes(bits), c.fw_wire_bytes(n, first));
+            if let AqMessage::Delta { codes, .. } = &msg {
+                assert!(codes.iter().all(|&c| (c as u16) < (1 << bits)));
+            }
+            m_s = Some(ms);
+            m_r = Some(mr);
+        }
+    });
+}
+
+#[test]
+fn prop_aq_error_bounded_by_delta_step() {
+    // after every revisit, |a - m| <= one quantization step of the delta
+    Prop::check("aq error bound", |rng| {
+        let bits = 2 + rng.below(7) as u8;
+        let n = len_in(rng, 1, 400);
+        let st = AqState::new(bits, Rounding::Nearest);
+        let a0 = vec_f32(rng, n, 2.0);
+        let mut m = Vec::new();
+        st.encode(&a0, None, &mut m, rng);
+        let a1: Vec<f32> = a0.iter().map(|v| v + 0.05 * rng.normal()).collect();
+        let mut m1 = Vec::new();
+        let msg = st.encode(&a1, Some(&m), &mut m1, rng);
+        if let AqMessage::Delta { scale, .. } = msg {
+            let bound = st.quant.error_bound(scale) + 1e-6;
+            for (x, y) in a1.iter().zip(&m1) {
+                assert!((x - y).abs() <= bound);
+            }
+        } else {
+            panic!("expected delta message");
+        }
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_relative_error() {
+    Prop::check("f16", |rng| {
+        let n = len_in(rng, 1, 500);
+        let mag = 10f32.powi(rng.below(9) as i32 - 4);
+        let x = vec_f32(rng, n, mag);
+        let mut bytes = Vec::new();
+        f16::encode(&x, &mut bytes);
+        assert_eq!(bytes.len(), 2 * n);
+        let mut back = Vec::new();
+        f16::decode(&bytes, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 6.2e-5, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_topk_reconstruction() {
+    Prop::check("topk", |rng| {
+        let n = len_in(rng, 4, 800);
+        let x = vec_f32(rng, n, 1.0);
+        let frac = 0.05 + rng.next_f64() * 0.9;
+        let msg = topk::encode(&x, frac, 8, rng);
+        let k = ((n as f64 * frac).ceil() as usize).clamp(1, n);
+        assert_eq!(msg.indices.len(), k);
+        let mut out = Vec::new();
+        topk::decode(&msg, 8, &mut out);
+        assert_eq!(out.len(), n);
+        // kept entries are the k largest: every dropped |x| <= min kept
+        let mut kept: Vec<f32> = msg.indices.iter().map(|&i| x[i as usize].abs()).collect();
+        kept.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thresh = kept[0];
+        for (i, v) in x.iter().enumerate() {
+            if !msg.indices.contains(&(i as u32)) {
+                assert!(v.abs() <= thresh + 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_wire_bytes_monotone_in_bits() {
+    Prop::check("wire bytes monotone", |rng| {
+        let n = len_in(rng, 1, 10_000);
+        let mut prev = 0u64;
+        for bits in 1..=8u8 {
+            let b = quant_wire_bytes(n, bits);
+            assert!(b >= prev);
+            prev = b;
+        }
+        assert!(prev <= 4 * n as u64 + 4); // 8-bit never beats fp32 + header
+    });
+}
+
+#[test]
+fn prop_theory_cq_decreases_with_bits() {
+    Prop::check("c_Q", |rng| {
+        let d = 1 + rng.below(1_000_000);
+        let mut prev = f64::INFINITY;
+        for bits in 1..=16u8 {
+            let c = theory::c_q(d, bits);
+            assert!(c < prev);
+            prev = c;
+        }
+        // min_bits really is minimal
+        let b = theory::min_bits(d);
+        assert!(theory::c_q(d, b) < (0.5f64).sqrt());
+        if b > 1 {
+            assert!(theory::c_q(d, b - 1) >= (0.5f64).sqrt());
+        }
+    });
+}
+
+#[test]
+fn prop_rng_shuffle_is_permutation() {
+    Prop::check("shuffle", |rng| {
+        let n = len_in(rng, 0, 300);
+        let mut v: Vec<usize> = (0..n).collect();
+        let mut r2 = Rng::new(rng.next_u64());
+        r2.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+    });
+}

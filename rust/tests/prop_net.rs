@@ -1,0 +1,75 @@
+//! Property tests over the network link model: FIFO ordering, bandwidth
+//! conservation, latency additivity.
+
+use aq_sgd::net::Link;
+use aq_sgd::testing::prop::{len_in, Prop};
+
+#[test]
+fn prop_fifo_arrivals_monotone() {
+    Prop::check("fifo order", |rng| {
+        let mut link = Link::new(1e6 + rng.next_f64() * 1e9, rng.next_f64() * 0.01);
+        let n = len_in(rng, 1, 200);
+        let mut now = 0.0;
+        let mut last_arrival = 0.0;
+        for _ in 0..n {
+            now += rng.next_f64() * 0.01;
+            let arrival = link.transmit(now, rng.below(1_000_000) as u64);
+            assert!(arrival >= last_arrival - 1e-12, "FIFO violated");
+            assert!(arrival >= now + link.latency_s - 1e-12);
+            last_arrival = arrival;
+        }
+    });
+}
+
+#[test]
+fn prop_bandwidth_conservation() {
+    // total occupancy equals bytes/bandwidth exactly when saturated
+    Prop::check("bandwidth conservation", |rng| {
+        let bw = 1e6 + rng.next_f64() * 1e9;
+        let mut link = Link::new(bw, 0.0);
+        let n = len_in(rng, 1, 100);
+        let mut total_bytes = 0u64;
+        let mut last = 0.0;
+        for _ in 0..n {
+            let bytes = 1 + rng.below(1_000_000) as u64;
+            total_bytes += bytes;
+            last = link.transmit(0.0, bytes); // all enqueued at t=0
+        }
+        let expect = total_bytes as f64 * 8.0 / bw;
+        assert!((last - expect).abs() < expect * 1e-6 + 1e-9);
+        assert_eq!(link.bytes_sent, total_bytes);
+    });
+}
+
+#[test]
+fn prop_latency_additive_not_serializing() {
+    // latency delays delivery but does not occupy the link
+    Prop::check("latency pipelining", |rng| {
+        let lat = 0.001 + rng.next_f64() * 0.05;
+        let mut with_lat = Link::new(1e8, lat);
+        let mut no_lat = Link::new(1e8, 0.0);
+        let n = len_in(rng, 2, 50);
+        let mut d1 = 0.0;
+        let mut d2 = 0.0;
+        for _ in 0..n {
+            let bytes = 1 + rng.below(100_000) as u64;
+            d1 = with_lat.transmit(0.0, bytes);
+            d2 = no_lat.transmit(0.0, bytes);
+        }
+        assert!((d1 - d2 - lat).abs() < 1e-9, "{d1} {d2} {lat}");
+    });
+}
+
+#[test]
+fn prop_reset_restores_state() {
+    Prop::check("reset", |rng| {
+        let mut link = Link::new(1e8, 0.001);
+        for _ in 0..len_in(rng, 1, 20) {
+            link.transmit(0.0, rng.below(100_000) as u64);
+        }
+        link.reset();
+        assert_eq!(link.bytes_sent, 0);
+        let a = link.transmit(0.0, 100);
+        assert!((a - (100.0 * 8.0 / 1e8 + 0.001)).abs() < 1e-12);
+    });
+}

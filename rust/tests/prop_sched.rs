@@ -1,0 +1,160 @@
+//! Property tests over the pipeline schedule and the virtual-time
+//! simulator: completeness, dependency-validity, physical lower bounds,
+//! and monotonicity in bandwidth / message size / compute.
+
+use aq_sgd::pipeline::{Op, PipelineSim, Schedule, SimConfig, StageTimes};
+use aq_sgd::testing::prop::{len_in, Prop};
+
+fn rand_schedule(rng: &mut aq_sgd::util::Rng) -> Schedule {
+    if rng.below(2) == 0 {
+        Schedule::GPipe
+    } else {
+        Schedule::OneFOneB
+    }
+}
+
+#[test]
+fn prop_schedule_complete_and_causal() {
+    Prop::check("schedule completeness", |rng| {
+        let k = len_in(rng, 1, 10);
+        let m = len_in(rng, 1, 24);
+        let sched = rand_schedule(rng);
+        for s in 0..k {
+            let ops = sched.ops(s, k, m);
+            assert_eq!(ops.len(), 2 * m);
+            let mut fwd = vec![false; m];
+            let mut bwd = vec![false; m];
+            for op in ops {
+                match op {
+                    Op::Fwd(i) => {
+                        assert!(!fwd[i]);
+                        fwd[i] = true;
+                    }
+                    Op::Bwd(i) => {
+                        assert!(fwd[i], "bwd before fwd");
+                        assert!(!bwd[i]);
+                        bwd[i] = true;
+                    }
+                }
+            }
+            assert!(fwd.iter().chain(bwd.iter()).all(|&b| b));
+        }
+    });
+}
+
+#[test]
+fn prop_cross_stage_fwd_order_causal() {
+    // both schedules forward microbatches in index order on every stage,
+    // which is what makes the cross-stage dependencies acyclic
+    Prop::check("fwd order", |rng| {
+        let k = len_in(rng, 2, 8);
+        let m = len_in(rng, 1, 16);
+        let sched = rand_schedule(rng);
+        for s in 0..k {
+            let fwd_order: Vec<usize> = sched
+                .ops(s, k, m)
+                .into_iter()
+                .filter_map(|op| match op {
+                    Op::Fwd(i) => Some(i),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(fwd_order, (0..m).collect::<Vec<_>>());
+        }
+    });
+}
+
+fn rand_sim(rng: &mut aq_sgd::util::Rng) -> SimConfig {
+    let k = len_in(rng, 1, 8);
+    let m = len_in(rng, 1, 16);
+    SimConfig {
+        n_stages: k,
+        n_micro: m,
+        stage_times: (0..k)
+            .map(|_| StageTimes {
+                fwd_s: 0.001 + rng.next_f64() * 0.1,
+                bwd_s: 0.001 + rng.next_f64() * 0.2,
+            })
+            .collect(),
+        fw_bytes: (0..m).map(|_| rng.below(10_000_000) as u64).collect(),
+        bw_bytes: rng.below(10_000_000) as u64,
+        bandwidth_bps: 1e6 + rng.next_f64() * 10e9,
+        link_bandwidths: None,
+        latency_s: rng.next_f64() * 0.01,
+        schedule: rand_schedule(rng),
+        step_overhead_s: 0.0,
+    }
+}
+
+#[test]
+fn prop_sim_respects_compute_lower_bound() {
+    Prop::check("sim lower bound", |rng| {
+        let cfg = rand_sim(rng);
+        let r = PipelineSim::run(&cfg);
+        // no stage can finish faster than its own total compute
+        for (s, t) in cfg.stage_times.iter().enumerate() {
+            let busy = cfg.n_micro as f64 * (t.fwd_s + t.bwd_s);
+            assert!(r.step_time_s >= busy - 1e-9, "stage {s}");
+            assert!((r.stage_busy_s[s] - busy).abs() < 1e-9);
+        }
+        // nor faster than the serialized bytes on any link
+        if cfg.n_stages > 1 {
+            let fw_total: u64 = cfg.fw_bytes.iter().sum();
+            assert!(r.step_time_s >= fw_total as f64 * 8.0 / cfg.bandwidth_bps - 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_bandwidth() {
+    Prop::check("sim bandwidth monotone", |rng| {
+        let cfg = rand_sim(rng);
+        let slow = PipelineSim::run(&cfg).step_time_s;
+        let fast = PipelineSim::run(&SimConfig {
+            bandwidth_bps: cfg.bandwidth_bps * 4.0,
+            ..cfg.clone()
+        })
+        .step_time_s;
+        assert!(fast <= slow + 1e-9, "fast {fast} slow {slow}");
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_message_size() {
+    Prop::check("sim size monotone", |rng| {
+        let cfg = rand_sim(rng);
+        let base = PipelineSim::run(&cfg).step_time_s;
+        let bigger = PipelineSim::run(&SimConfig {
+            fw_bytes: cfg.fw_bytes.iter().map(|b| b * 2 + 100).collect(),
+            bw_bytes: cfg.bw_bytes * 2 + 100,
+            ..cfg.clone()
+        })
+        .step_time_s;
+        assert!(bigger >= base - 1e-9);
+    });
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    Prop::check("sim deterministic", |rng| {
+        let cfg = rand_sim(rng);
+        let a = PipelineSim::run(&cfg).step_time_s;
+        let b = PipelineSim::run(&cfg).step_time_s;
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_sim_byte_accounting_exact() {
+    Prop::check("sim bytes", |rng| {
+        let cfg = rand_sim(rng);
+        let r = PipelineSim::run(&cfg);
+        let fw_total: u64 = cfg.fw_bytes.iter().sum();
+        for b in r.fw_link_bytes {
+            assert_eq!(b, fw_total);
+        }
+        for b in r.bw_link_bytes {
+            assert_eq!(b, cfg.bw_bytes * cfg.n_micro as u64);
+        }
+    });
+}
