@@ -6,7 +6,7 @@
 //!
 //!     cargo run --release --example case_study [-- --epochs N]
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};

@@ -3,11 +3,11 @@
 //! on the Markov corpus with AQ-SGD fw3/bw6 over a simulated 500 Mbps
 //! network; log the loss curve, throughput and communication volume.
 //!
-//!     make artifacts && cargo run --release --example e2e_train
+//!     (cd python && python -m compile.aot --out-dir ../artifacts) && cargo run --release --example e2e_train
 //!
 //! Flags: --model small|e2e  --steps N  --compression SPEC  --bandwidth B
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};

@@ -7,7 +7,7 @@
 //!
 //!     cargo run --release --example fig1_precision [-- --epochs N]
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};

@@ -12,7 +12,7 @@
 //!
 //!     cargo run --release --example fig4_end_to_end [-- --epochs N]
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};

@@ -9,7 +9,7 @@
 //!
 //!     cargo run --release --example fig5_e2e_compression
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};

@@ -10,7 +10,7 @@
 //! per artifact config (K=2 tiny, K=4 small/e2e), so the K ablation rides
 //! the model-size axis — each table says which is which.
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};

@@ -2,9 +2,9 @@
 //! with AQ-SGD 2-bit forward / 4-bit backward compression, and compare
 //! the bytes/time against uncompressed FP32.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     (cd python && python -m compile.aot --out-dir ../artifacts) && cargo run --release --example quickstart
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::TrainConfig;

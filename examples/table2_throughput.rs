@@ -10,7 +10,7 @@
 //!
 //!     cargo run --release --example table2_throughput [-- --deberta]
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::Cli;

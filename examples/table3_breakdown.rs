@@ -7,7 +7,7 @@
 //!
 //!     cargo run --release --example table3_breakdown
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::exp::PaperRegime;

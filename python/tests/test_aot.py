@@ -14,7 +14,7 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 def _manifest(name):
     path = os.path.join(ART, name, "manifest.txt")
     if not os.path.exists(path):
-        pytest.skip(f"artifacts for {name} not built (run `make artifacts`)")
+        pytest.skip(f"artifacts for {name} not built (run `python -m compile.aot` from python/)")
     out = {}
     with open(path) as f:
         for line in f:

@@ -6,15 +6,15 @@
 use aq_sgd::codec::quantizer::Rounding;
 use aq_sgd::coordinator::boundary::ForwardBoundary;
 use aq_sgd::codec::Compression;
-use aq_sgd::runtime::{Engine, Manifest, QuantRuntime, StageInput, StageRuntime};
+use aq_sgd::runtime::{Engine, QuantRuntime, StageInput, StageRuntime};
+use aq_sgd::testing::require_artifacts;
 use aq_sgd::store::MemStore;
 use aq_sgd::testing::bench::{black_box, Bencher};
 use aq_sgd::util::Rng;
 
 fn main() {
-    let Ok(man) = Manifest::load("artifacts", "tiny") else {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
-        return;
+    let Some(man) = require_artifacts("tiny") else {
+        return; // require_artifacts already printed the consolidated notice
     };
     let b = Bencher::default();
     let engine = Engine::cpu().unwrap();

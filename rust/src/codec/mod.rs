@@ -42,17 +42,27 @@ pub enum Compression {
 }
 
 impl Compression {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> crate::util::error::Result<Self> {
         // forms: "fp32", "fp16", "directq:fw3bw6", "aqsgd:fw2bw4"
-        let parse_bits = |spec: &str| -> anyhow::Result<(u8, u8)> {
+        let s = s.trim();
+        let parse_bits = |spec: &str| -> crate::util::error::Result<(u8, u8)> {
             let spec = spec.trim();
             let rest = spec
                 .strip_prefix("fw")
-                .ok_or_else(|| anyhow::anyhow!("bad bits spec {spec:?}"))?;
+                .ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
             let (fw, bw) = rest
                 .split_once("bw")
-                .ok_or_else(|| anyhow::anyhow!("bad bits spec {spec:?}"))?;
-            Ok((fw.parse()?, bw.parse()?))
+                .ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
+            let (fw, bw): (u8, u8) = (fw.parse()?, bw.parse()?);
+            // validate here so a bad spec fails with a clear parse error
+            // instead of panicking later in UniformQuantizer::new
+            for bits in [fw, bw] {
+                crate::ensure!(
+                    (1..=8).contains(&bits),
+                    "bit-width {bits} out of range in {spec:?} (quantizers support 1..=8 bits)"
+                );
+            }
+            Ok((fw, bw))
         };
         match s {
             "fp32" => Ok(Compression::Fp32),
@@ -65,7 +75,7 @@ impl Compression {
                     let (fw_bits, bw_bits) = parse_bits(spec)?;
                     Ok(Compression::AqSgd { fw_bits, bw_bits })
                 } else {
-                    anyhow::bail!("unknown compression {s:?}")
+                    crate::bail!("unknown compression {s:?}")
                 }
             }
         }
@@ -136,6 +146,25 @@ mod tests {
         );
         assert!(Compression::parse("nope").is_err());
         assert!(Compression::parse("aqsgd:fw2").is_err());
+    }
+
+    #[test]
+    fn parse_trims_whitespace() {
+        assert_eq!(Compression::parse(" fp16 ").unwrap(), Compression::Fp16);
+        assert_eq!(
+            Compression::parse("aqsgd: fw2bw4 ").unwrap(),
+            Compression::AqSgd { fw_bits: 2, bw_bits: 4 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_bits() {
+        for spec in ["aqsgd:fw0bw0", "directq:fw9bw12", "aqsgd:fw4bw0", "directq:fw0bw4"] {
+            let err = Compression::parse(spec).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{spec}: {err}");
+        }
+        // boundary widths still accepted
+        assert!(Compression::parse("aqsgd:fw1bw8").is_ok());
     }
 
     #[test]

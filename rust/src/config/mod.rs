@@ -3,10 +3,9 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
-
 use crate::codec::Compression;
 use crate::pipeline::Schedule;
+use crate::util::error::Result;
 
 /// Parsed command line: positional args + `--key value` flags
 /// (`--flag` with no value is "true").
@@ -45,14 +44,14 @@ impl Cli {
     pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| crate::err!("--{key} expects an integer, got {v:?}")),
         }
     }
 
     pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| crate::err!("--{key} expects a number, got {v:?}")),
         }
     }
 

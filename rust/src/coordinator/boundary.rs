@@ -16,12 +16,11 @@
 
 use std::rc::Rc;
 
-use anyhow::Result;
-
 use crate::codec::quantizer::{Rounding, UniformQuantizer};
 use crate::codec::{f16, pack, quant_wire_bytes, Compression};
 use crate::runtime::QuantRuntime;
 use crate::store::ActivationStore;
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// What a transfer did: the receiver-side activation plus accounting.

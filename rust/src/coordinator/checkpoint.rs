@@ -5,9 +5,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
 use crate::coordinator::trainer::Trainer;
+use crate::util::error::{Context, Result};
 use crate::util::kv::Kv;
 
 fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
@@ -20,7 +19,7 @@ fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
 
 fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    anyhow::ensure!(bytes.len() == expect * 4, "checkpoint tensor size mismatch");
+    crate::ensure!(bytes.len() == expect * 4, "checkpoint tensor size mismatch");
     Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
@@ -50,17 +49,17 @@ impl Trainer {
     pub fn load_checkpoint(&mut self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
         let meta = Kv::load(&dir.join("checkpoint.txt"))?;
-        anyhow::ensure!(
+        crate::ensure!(
             meta.get("model")? == self.cfg.model,
             "checkpoint is for model {:?}, trainer is {:?}",
             meta.get("model")?,
             self.cfg.model
         );
-        anyhow::ensure!(meta.usize("n_stages")? == self.n_stages());
+        crate::ensure!(meta.usize("n_stages")? == self.n_stages());
         let step = meta.usize("step")?;
         for s in 0..self.n_stages() {
             let n = self.stage(s).n_params;
-            anyhow::ensure!(meta.usize(&format!("stage{s}.params"))? == n);
+            crate::ensure!(meta.usize(&format!("stage{s}.params"))? == n);
             let params = read_f32(&dir.join(format!("stage{s}_params.bin")), n)?;
             let m = read_f32(&dir.join(format!("stage{s}_m.bin")), n)?;
             let v = read_f32(&dir.join(format!("stage{s}_v.bin")), n)?;

@@ -7,7 +7,7 @@
 //! fixed-shape), greedy or temperature sampling. Only row 0 of the
 //! micro-batch is used for the prompt; the other rows are padding.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::trainer::Trainer;
 use crate::util::Rng;
@@ -29,11 +29,11 @@ impl Trainer {
     /// Generate a continuation of `prompt` (token ids). Returns only the
     /// newly generated tokens.
     pub fn generate(&self, prompt: &[i32], gcfg: &GenerateCfg) -> Result<Vec<i32>> {
-        anyhow::ensure!(self.man.task()? == "lm", "generation needs an LM model");
+        crate::ensure!(self.man.task()? == "lm", "generation needs an LM model");
         let seq = self.man.seq()?;
         let b = self.man.micro_batch()?;
         let vocab = self.man.vocab()?;
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        crate::ensure!(!prompt.is_empty(), "empty prompt");
         let mut rng = Rng::new(gcfg.seed);
 
         let mut ctx: Vec<i32> = prompt.to_vec();

@@ -11,7 +11,7 @@
 //! we use the transformer classifier on the synthetic QNLI-like task and
 //! report eval *loss* (no accuracy head is exported).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::Trainer;

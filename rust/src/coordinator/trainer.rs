@@ -11,7 +11,7 @@
 //! exact wire bytes produced by the codecs (the byte counts come from the
 //! real packed messages, not estimates).
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::codec::quantizer::Rounding;
 use crate::config::TrainConfig;
@@ -108,7 +108,7 @@ impl Trainer {
                     Box::new(DiskStore::new(dir, el)?)
                 }
                 "quant" => Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap_or(8))),
-                other => anyhow::bail!("unknown store {other:?} (mem|disk|quant)"),
+                other => crate::bail!("unknown store {other:?} (mem|disk|quant)"),
             })
         };
         let rounding = if cfg.stochastic_rounding { Rounding::Stochastic } else { Rounding::Nearest };
@@ -366,14 +366,14 @@ impl Trainer {
 
     /// Full training run. Returns summary stats.
     pub fn train(&mut self, train_data: &Dataset, eval_data: Option<&Dataset>) -> Result<TrainStats> {
-        anyhow::ensure!(
+        crate::ensure!(
             (train_data.task == Task::Lm) == (self.man.task()? == "lm"),
             "dataset task does not match model task"
         );
         let micro_b = self.man.micro_batch()?;
         let shard_examples = self.cfg.n_micro * micro_b;
         let total_needed = shard_examples * self.cfg.dp_degree;
-        anyhow::ensure!(
+        crate::ensure!(
             train_data.len() >= total_needed,
             "dataset too small: {} examples < {total_needed} per step",
             train_data.len()

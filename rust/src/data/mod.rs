@@ -25,11 +25,11 @@ pub enum Task {
 }
 
 impl Task {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> crate::util::error::Result<Self> {
         match s {
             "lm" => Ok(Task::Lm),
             "cls" => Ok(Task::Cls),
-            _ => anyhow::bail!("unknown task {s:?}"),
+            _ => crate::bail!("unknown task {s:?}"),
         }
     }
 }

@@ -2,14 +2,13 @@
 //! dataset factory, single-variant runner, and sweep helpers. Keeps every
 //! reproduction script down to "declare the grid, print the table".
 
-use anyhow::Result;
-
 use crate::codec::Compression;
 use crate::config::TrainConfig;
 use crate::coordinator::{TrainStats, Trainer};
 use crate::data::{cls, lm, Dataset};
 use crate::metrics::Recorder;
 use crate::runtime::Manifest;
+use crate::util::error::Result;
 
 /// Build the dataset a config names ("markov" | "arxiv" | "embedded" |
 /// "qnli" | "cola") with shapes taken from the model manifest.
@@ -22,7 +21,7 @@ pub fn make_dataset(cfg: &TrainConfig, man: &Manifest) -> Result<Dataset> {
         "embedded" => lm::embedded_corpus(seq, cfg.n_examples),
         "qnli" => cls::qnli_like(vocab, seq, cfg.n_examples, cfg.seed + 300),
         "cola" => cls::cola_like(vocab, seq, cfg.n_examples, cfg.seed + 400),
-        other => anyhow::bail!("unknown dataset {other:?}"),
+        other => crate::bail!("unknown dataset {other:?}"),
     })
 }
 

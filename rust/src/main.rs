@@ -11,7 +11,7 @@
 //!   aq-sgd info --model small
 //!   aq-sgd throughput --stages 8 --micro 32 --bandwidth 100mbps
 
-use anyhow::Result;
+use aq_sgd::util::error::Result;
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};

@@ -83,7 +83,7 @@ impl Recorder {
         s
     }
 
-    pub fn save_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> crate::util::error::Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }

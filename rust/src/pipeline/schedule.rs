@@ -20,11 +20,11 @@ pub enum Schedule {
 }
 
 impl Schedule {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> crate::util::error::Result<Self> {
         match s {
             "gpipe" => Ok(Schedule::GPipe),
             "1f1b" => Ok(Schedule::OneFOneB),
-            _ => anyhow::bail!("unknown schedule {s:?} (gpipe|1f1b)"),
+            _ => crate::bail!("unknown schedule {s:?} (gpipe|1f1b)"),
         }
     }
 

@@ -2,8 +2,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::kv::Kv;
 
 #[derive(Clone, Debug)]
@@ -17,7 +16,7 @@ impl Manifest {
         let dir = artifacts_dir.as_ref().join(model);
         let kv = Kv::load(&dir.join("manifest.txt")).with_context(|| {
             format!(
-                "loading manifest for model {model:?} — did you run `make artifacts`? (dir: {})",
+                "loading manifest for model {model:?} — did you run `python -m compile.aot` from python/? (dir: {})",
                 dir.display()
             )
         })?;
@@ -89,9 +88,9 @@ impl Manifest {
         let path = self.path(&format!("stage{stage}.init"))?;
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(bytes.len() % 4 == 0);
+        crate::ensure!(bytes.len() % 4 == 0);
         let n = bytes.len() / 4;
-        anyhow::ensure!(n == self.stage_params(stage)?, "init size mismatch");
+        crate::ensure!(n == self.stage_params(stage)?, "init size mismatch");
         Ok(bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))

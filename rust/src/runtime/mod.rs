@@ -1,19 +1,20 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts emitted by
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
 //!
-//! This is the only module that touches the `xla` crate. Everything above
-//! it works with plain host `Vec<f32>` / `Vec<i32>` buffers; marshalling
-//! happens here.
+//! This is the only module that touches the `xla` surface (stubbed in
+//! `runtime::xla` for the offline build). Everything above it works with
+//! plain host `Vec<f32>` / `Vec<i32>` buffers; marshalling happens here.
 
 pub mod manifest;
 pub mod stage;
+pub mod xla;
 
 pub use manifest::Manifest;
 pub use stage::{QuantRuntime, StageInput, StageRuntime};
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Shared PJRT client; create once per process.
 pub struct Engine {
@@ -62,18 +63,19 @@ impl Exe {
 // Literal marshalling helpers
 // ---------------------------------------------------------------------------
 
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+pub fn lit<T: xla::Element>(data: &[T], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {dims:?} vs {} elements", data.len());
+    crate::ensure!(n == data.len(), "shape {dims:?} vs {} elements", data.len());
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
 }
 
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    lit(data, dims)
+}
+
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {dims:?} vs {} elements", data.len());
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    lit(data, dims)
 }
 
 pub fn lit_scalar(v: f32) -> xla::Literal {

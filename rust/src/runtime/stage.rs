@@ -1,9 +1,9 @@
 //! Per-stage execution state: compiled artifacts + parameters + optimizer
 //! state, and the L1 quantization-kernel runtime.
 
-use anyhow::{Context, Result};
-
+use super::xla;
 use super::{lit_f32, lit_i32, lit_scalar, scalar_f32, to_f32, Engine, Exe, Manifest};
+use crate::util::error::{Context, Result};
 
 /// Stage input: token ids for stage 0, hidden states otherwise.
 pub enum StageInput<'a> {
@@ -134,7 +134,7 @@ impl StageRuntime {
 
     /// AdamW step through the HLO artifact (step is 1-based).
     pub fn adamw_step_hlo(&mut self, grads: &[f32], step: usize, lr: f64) -> Result<()> {
-        anyhow::ensure!(grads.len() == self.n_params);
+        crate::ensure!(grads.len() == self.n_params);
         let out = self.adamw.run(&[
             lit_f32(&self.params, &[self.n_params])?,
             lit_f32(&self.opt_m, &[self.n_params])?,

@@ -1,0 +1,216 @@
+//! Host-side stand-in for the PJRT/XLA native bindings.
+//!
+//! The offline build links no XLA shared library, so this module provides
+//! the same surface the runtime layer programs against: [`Literal`] (pure
+//! host-memory marshalling) is implemented fully, while the client /
+//! compile / execute entry points return a descriptive error. Tests and
+//! benches that execute artifacts gate on both artifact presence and
+//! [`BACKEND_AVAILABLE`] (via `testing::require_artifacts`), so they skip
+//! cleanly instead of failing to build, link, or run. Swapping in a real
+//! PJRT backend means re-implementing exactly the items in this file
+//! against the C API (and flipping [`BACKEND_AVAILABLE`]) — nothing
+//! above `runtime` changes.
+
+use crate::util::error::{Error, Result};
+
+/// Whether this build can actually execute AOT artifacts. The offline
+/// stub cannot; a real PJRT binding sets this true.
+pub const BACKEND_AVAILABLE: bool = false;
+
+fn unavailable(what: &str) -> Error {
+    Error::msg(format!(
+        "PJRT backend unavailable in this build ({what}): the XLA native \
+         bindings are stubbed for the offline environment, so AOT artifacts \
+         cannot be executed"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Literal: host-side tensor container (fully functional)
+// ---------------------------------------------------------------------------
+
+/// Element types a [`Literal`] can hold. Sealed to the two dtypes the AOT
+/// artifacts use (f32 data, i32 token ids).
+pub trait Element: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<&[Self]>;
+}
+
+impl Element for f32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::F32(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::I32(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host tensor (or tuple of tensors) with row-major dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: LiteralData::F32(vec![v]), dims: Vec::new() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            crate::bail!("cannot reshape a tuple literal");
+        }
+        let n: i64 = dims.iter().product();
+        crate::ensure!(
+            n as usize == self.element_count(),
+            "reshape {dims:?} vs {} elements",
+            self.element_count()
+        );
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flat host copy of the elements.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| crate::err!("literal dtype mismatch"))
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        T::unwrap(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| crate::err!("literal is empty or dtype mismatch"))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            _ => crate::bail!("literal is not a tuple"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client / executable surface (stubbed: every entry point errors)
+// ---------------------------------------------------------------------------
+
+/// Handle to a PJRT client. Construction succeeds (it is just a handle) so
+/// callers fail later with the more actionable per-artifact error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Parsed HLO-text module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        // the caller (Engine::load) already attaches a context naming the
+        // artifact path, so don't repeat it here
+        Err(unavailable("from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let t = Literal::vec1(&[7i32, 8]);
+        assert_eq!(t.get_first_element::<i32>().unwrap(), 7);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        assert!(s.clone().to_tuple().is_err());
+        let tup = Literal { data: LiteralData::Tuple(vec![s.clone(), s]), dims: Vec::new() };
+        assert_eq!(tup.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn execution_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+        let err = HloModuleProto::from_text_file("x.hlo").unwrap_err();
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+    }
+}

@@ -16,7 +16,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::mpsc;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::codec::pack;
 use crate::codec::quantizer::{Rounding, UniformQuantizer};

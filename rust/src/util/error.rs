@@ -1,0 +1,214 @@
+//! First-party error handling (the offline environment ships no anyhow):
+//! a single dynamic [`Error`] carrying a root cause plus a chain of
+//! human-readable contexts, a crate-wide [`Result`] alias, a [`Context`]
+//! extension trait for `Result`/`Option`, and the `err!` / `bail!` /
+//! `ensure!` macros (drop-in for `anyhow!` / `bail!` / `ensure!`).
+//!
+//! Any `std::error::Error` converts into [`Error`] via `?`, preserving its
+//! `source()` chain. Like anyhow's, [`Error`] deliberately does *not*
+//! implement `std::error::Error` itself — that is what keeps the blanket
+//! `From` impl coherent.
+
+use std::fmt;
+
+/// A dynamic error: `chain[0]` is the root cause, later entries are the
+/// contexts wrapped around it (outermost last).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap this error in an outer context (consuming, like
+    /// `anyhow::Error::context`).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.push(ctx.to_string());
+        self
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Contexts outermost-first, ending at the root cause (mirrors
+    /// anyhow's `chain()` ordering).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{msg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain();
+        write!(f, "{}", it.next().unwrap_or(""))?;
+        let rest: Vec<&str> = it.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for msg in rest {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convert any standard error (io, parse, ...) so `?` works directly.
+/// The error's `source()` chain becomes the context chain.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        chain.reverse(); // root cause first
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`], like `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment for `Result` and `Option`, mirroring
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message to the error / `None` case.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (drop-in for `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::err!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds (drop-in for
+/// `anyhow::ensure!`; the message-less form stringifies the condition).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let port: u16 = s.parse().with_context(|| format!("parsing port {s:?}"))?;
+        crate::ensure!(port != 0, "port must be non-zero");
+        Ok(port)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_port("8080").unwrap(), 8080);
+        let e = parse_port("nope").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("parsing port \"nope\""), "{msg}");
+        assert!(msg.contains("invalid digit"), "{msg}");
+    }
+
+    #[test]
+    fn context_chain_order() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "mid", "root"]);
+        assert_eq!(e.to_string(), "outer: mid: root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u8> {
+            crate::ensure!(flag);
+            crate::bail!("bailed with {}", 42)
+        }
+        assert!(f(false).unwrap_err().to_string().contains("condition failed: flag"));
+        assert_eq!(f(true).unwrap_err().to_string(), "bailed with 42");
+        let e = crate::err!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn ensure_message_form() {
+        fn f(n: usize) -> Result<()> {
+            crate::ensure!(n < 10, "n too big: {n}");
+            Ok(())
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(12).unwrap_err().to_string(), "n too big: 12");
+    }
+}

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct Kv {
@@ -36,7 +36,7 @@ impl Kv {
         self.map
             .get(key)
             .map(|s| s.as_str())
-            .ok_or_else(|| anyhow!("missing key {key:?}"))
+            .ok_or_else(|| crate::err!("missing key {key:?}"))
     }
 
     pub fn get_opt(&self, key: &str) -> Option<&str> {

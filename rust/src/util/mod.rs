@@ -1,5 +1,6 @@
 //! Dependency-free utilities (the offline environment ships no rand /
-//! serde / clap; everything here replaces those).
+//! serde / clap / anyhow; everything here replaces those).
+pub mod error;
 pub mod fmt;
 pub mod kv;
 pub mod rng;

@@ -1,0 +1,128 @@
+//! Golden wire-format parity tests: pin `UniformQuantizer` + `pack` byte
+//! output against checked-in fixtures generated from the paper's
+//! reference semantics (`python/compile/kernels/ref.py`, deterministic
+//! rounding). No Python runs at test time; regenerate the fixtures with
+//! `python python/compile/kernels/gen_golden.py` if the wire format is
+//! ever intentionally changed.
+
+use aq_sgd::codec::pack;
+use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::util::Rng;
+
+const FIXTURES: &str = include_str!("fixtures/golden_quant.txt");
+
+#[derive(Debug, Default)]
+struct Case {
+    name: String,
+    bits: u8,
+    n: usize,
+    x: Vec<f32>,
+    scale: f32,
+    codes: Vec<u8>,
+    packed: Vec<u8>,
+    deq: Vec<f32>,
+}
+
+fn f32_from_hex(h: &str) -> f32 {
+    f32::from_bits(u32::from_str_radix(h, 16).expect("bad f32 hex"))
+}
+
+fn parse_fixtures(text: &str) -> Vec<Case> {
+    let mut cases = Vec::new();
+    let mut cur: Option<Case> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+        match key {
+            "case" => cur = Some(Case { name: rest.to_string(), ..Case::default() }),
+            "end" => {
+                let c = cur.take().expect("end without case");
+                assert_eq!(c.x.len(), c.n, "{}: x length vs n", c.name);
+                assert_eq!(c.codes.len(), c.n, "{}: codes length vs n", c.name);
+                assert_eq!(c.deq.len(), c.n, "{}: deq length vs n", c.name);
+                cases.push(c);
+            }
+            _ => {
+                let c = cur.as_mut().expect("field outside case");
+                match key {
+                    "bits" => c.bits = rest.parse().unwrap(),
+                    "n" => c.n = rest.parse().unwrap(),
+                    "x" => c.x = rest.split_whitespace().map(f32_from_hex).collect(),
+                    "scale" => c.scale = f32_from_hex(rest),
+                    "codes" => {
+                        c.codes = rest.split_whitespace().map(|s| s.parse().unwrap()).collect()
+                    }
+                    "packed" => {
+                        c.packed = (0..rest.len() / 2)
+                            .map(|i| u8::from_str_radix(&rest[2 * i..2 * i + 2], 16).unwrap())
+                            .collect()
+                    }
+                    "deq" => c.deq = rest.split_whitespace().map(f32_from_hex).collect(),
+                    other => panic!("unknown fixture field {other:?}"),
+                }
+            }
+        }
+    }
+    assert!(cur.is_none(), "unterminated case");
+    cases
+}
+
+#[test]
+fn golden_quantizer_and_pack_match_reference() {
+    let cases = parse_fixtures(FIXTURES);
+    assert!(cases.len() >= 5, "fixture file looks truncated");
+    let mut rng = Rng::new(0); // unused by Rounding::Nearest
+    for c in &cases {
+        let q = UniformQuantizer::new(c.bits, Rounding::Nearest);
+
+        // scale is exact (abs/max are exact f32 ops on both sides)
+        let scale = UniformQuantizer::scale(&c.x);
+        assert_eq!(scale.to_bits(), c.scale.to_bits(), "{}: scale drifted", c.name);
+
+        // codes: the on-the-wire payload must match ref.py bit-for-bit
+        let mut codes = vec![0u8; c.x.len()];
+        let enc_scale = q.encode(&c.x, &mut codes, &mut rng);
+        assert_eq!(enc_scale.to_bits(), c.scale.to_bits(), "{}", c.name);
+        assert_eq!(codes, c.codes, "{}: codes drifted from ref.py", c.name);
+
+        // packed bytes: the exact wire image
+        let packed = pack::pack(&codes, c.bits);
+        assert_eq!(packed, c.packed, "{}: packed bytes drifted", c.name);
+        assert_eq!(packed.len(), pack::packed_len(c.x.len(), c.bits), "{}", c.name);
+
+        // unpack restores the codes exactly
+        assert_eq!(pack::unpack(&packed, c.bits, codes.len()), codes, "{}", c.name);
+
+        // dequantization tracks the reference within f32 association noise
+        // (ref.py computes (c/levels*2-1)*scale; the rust decoder folds the
+        // constants — equal values, different rounding order)
+        let mut deq = vec![0f32; codes.len()];
+        q.decode(&codes, scale, &mut deq);
+        let tol = scale * 1e-6;
+        for (i, (a, b)) in deq.iter().zip(&c.deq).enumerate() {
+            assert!(
+                (a - b).abs() <= tol,
+                "{}: deq[{i}] {a} vs ref {b} (tol {tol})",
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_covers_pack_remainders_and_bit_widths() {
+    let cases = parse_fixtures(FIXTURES);
+    // the fixture set must keep exercising non-byte-aligned tails and the
+    // generic (non-2/4/8) pack path, or the golden test loses its teeth
+    assert!(
+        cases.iter().any(|c| (c.x.len() * c.bits as usize) % 8 != 0),
+        "no ragged-tail case"
+    );
+    for bits in [2u8, 3, 4, 8] {
+        assert!(cases.iter().any(|c| c.bits == bits), "no {bits}-bit case");
+    }
+    assert!(cases.iter().any(|c| c.x.iter().all(|&v| v == 0.0)), "no all-zeros case");
+}

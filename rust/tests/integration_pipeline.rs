@@ -10,11 +10,8 @@ use aq_sgd::codec::delta::{AqMessage, AqState};
 use aq_sgd::codec::quantizer::Rounding;
 use aq_sgd::net::RealLink;
 use aq_sgd::runtime::{Engine, Manifest, StageInput, StageRuntime};
+use aq_sgd::testing::{artifacts_root, require_artifacts};
 use aq_sgd::util::Rng;
-
-fn have(model: &str) -> bool {
-    Manifest::load("artifacts", model).is_ok()
-}
 
 /// Wire form of a forward AQ message + the example's backward reply.
 enum FwMsg {
@@ -24,11 +21,9 @@ enum FwMsg {
 
 #[test]
 fn threaded_two_machine_pipeline_matches_sequential() {
-    if !have("tiny") {
-        eprintln!("skipping: artifacts missing");
-        return;
-    }
-    let man = Manifest::load("artifacts", "tiny").unwrap();
+    let Some(man) = require_artifacts("tiny") else {
+        return; // require_artifacts printed the consolidated skip notice
+    };
     let micro_b = man.micro_batch().unwrap();
     let seq = man.seq().unwrap();
     let vocab = man.vocab().unwrap();
@@ -94,7 +89,7 @@ fn threaded_two_machine_pipeline_matches_sequential() {
         fw_tx.send(FwMsg::Done, 1);
     });
 
-    let man_b = Manifest::load("artifacts", "tiny").unwrap();
+    let man_b = Manifest::load(artifacts_root(), "tiny").unwrap();
     let batches_b = batches.clone();
     let machine_b = std::thread::spawn(move || {
         let engine = Engine::cpu().unwrap();

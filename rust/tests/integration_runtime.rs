@@ -1,19 +1,15 @@
 //! Integration tests over the PJRT runtime + AOT artifacts: the rust side
-//! of the L1/L2/L3 contract. Requires `make artifacts` (skips otherwise).
+//! of the L1/L2/L3 contract. Requires `python -m compile.aot` (from python/)
+//! (skips visibly otherwise, via `testing::require_artifacts`).
 
 use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
 use aq_sgd::optim::AdamW;
 use aq_sgd::runtime::{Engine, Manifest, QuantRuntime, StageInput, StageRuntime};
+use aq_sgd::testing::require_artifacts;
 use aq_sgd::util::Rng;
 
 fn manifest(model: &str) -> Option<Manifest> {
-    match Manifest::load("artifacts", model) {
-        Ok(m) => Some(m),
-        Err(_) => {
-            eprintln!("skipping: artifacts/{model} not built (run `make artifacts`)");
-            None
-        }
-    }
+    require_artifacts(model)
 }
 
 fn tokens(man: &Manifest, seed: u64) -> Vec<i32> {

@@ -3,6 +3,10 @@
 //! learning happens, AQ-SGD tracks FP32, compression saves the claimed
 //! bytes, and every configuration axis (store backend, m-bits, HLO
 //! codec, DP compression, schedules, tasks) trains.
+//!
+//! Artifact-gated: tests skip (via `testing::require_artifacts`, which
+//! prints one consolidated notice) when `artifacts/<model>` has not been
+//! built with `python -m compile.aot` (from python/).
 
 use aq_sgd::codec::Compression;
 use aq_sgd::config::TrainConfig;
@@ -12,18 +16,15 @@ use aq_sgd::data::cls::qnli_like;
 use aq_sgd::exp;
 use aq_sgd::pipeline::Schedule;
 use aq_sgd::runtime::Manifest;
+use aq_sgd::testing::{artifacts_root, require_artifacts};
 
 fn have_artifacts(model: &str) -> bool {
-    if Manifest::load("artifacts", model).is_ok() {
-        true
-    } else {
-        eprintln!("skipping: artifacts/{model} not built (run `make artifacts`)");
-        false
-    }
+    require_artifacts(model).is_some()
 }
 
 fn base_cfg(model: &str) -> TrainConfig {
     let mut c = TrainConfig::defaults(model);
+    c.artifacts_dir = artifacts_root().to_string();
     c.epochs = 4;
     c.n_micro = 2;
     c.lr = 5e-3;
@@ -185,13 +186,12 @@ fn fp16_matches_fp32_closely() {
 #[test]
 fn probe_shows_delta_shrinking_below_activation() {
     // Fig 1b: after warm-up, mean |delta| << mean |activation|
-    if !have_artifacts("tiny") {
+    let Some(man) = require_artifacts("tiny") else {
         return;
-    }
+    };
     let mut cfg = base_cfg("tiny");
     cfg.epochs = 5;
     cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
-    let man = Manifest::load("artifacts", "tiny").unwrap();
     let data = exp::make_dataset(&cfg, &man).unwrap();
     let (train, _) = data.split_eval(0.1);
     let mut t = Trainer::new(cfg).unwrap();
@@ -224,13 +224,12 @@ fn trainer_rejects_undersized_dataset() {
 
 #[test]
 fn checkpoint_roundtrip_resumes_identically() {
-    if !have_artifacts("tiny") {
+    let Some(man) = require_artifacts("tiny") else {
         return;
-    }
+    };
     let dir = std::env::temp_dir().join(format!("aqsgd_ckpt_{}", std::process::id()));
     let mut cfg = base_cfg("tiny");
     cfg.epochs = 2;
-    let man = Manifest::load("artifacts", "tiny").unwrap();
     let data = exp::make_dataset(&cfg, &man).unwrap();
     let (train, _) = data.split_eval(0.1);
 
@@ -266,12 +265,11 @@ fn checkpoint_rejects_wrong_model() {
 
 #[test]
 fn generation_produces_valid_tokens() {
-    if !have_artifacts("tiny") {
+    let Some(man) = require_artifacts("tiny") else {
         return;
-    }
-    let man = Manifest::load("artifacts", "tiny").unwrap();
+    };
     if !man.has("stage1.logits") {
-        eprintln!("skipping: artifacts predate the logits export (re-run make artifacts)");
+        eprintln!("skipping: artifacts predate the logits export (re-run `python -m compile.aot` from python/)");
         return;
     }
     let trainer = Trainer::new(base_cfg("tiny")).unwrap();
