@@ -8,7 +8,6 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::coordinator::generate::{detokenize_bytes, GenerateCfg};
 use aq_sgd::coordinator::Trainer;
@@ -41,7 +40,8 @@ fn main() -> Result<()> {
         let mut outs = Vec::new();
         for p in &prompts {
             let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
-            let gen = trainer.generate(&toks, &GenerateCfg { max_new_tokens: 24, ..Default::default() })?;
+            let gcfg = GenerateCfg { max_new_tokens: 24, ..Default::default() };
+            let gen = trainer.generate(&toks, &gcfg)?;
             outs.push(detokenize_bytes(&gen));
         }
         generations.push((label, outs));

@@ -9,17 +9,25 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::exp::PaperRegime;
 use aq_sgd::metrics::Table;
 use aq_sgd::pipeline::{PipelineSim, SimConfig};
 
-fn throughput(regime: &PaperRegime, c: &Compression, links: &[f64]) -> f64 {
+fn throughput(regime: &PaperRegime, c: &CodecSpec, links: &[f64]) -> f64 {
     let (fw, bw) = regime.msg_bytes(c, false);
     let cfg = SimConfig {
         link_bandwidths: Some(links.to_vec()),
         latency_s: 0.02, // geo-distributed RTTs
-        ..SimConfig::uniform(regime.n_stages, regime.n_micro, regime.fwd_s, regime.bwd_s, fw, bw, 1e9)
+        ..SimConfig::uniform(
+            regime.n_stages,
+            regime.n_micro,
+            regime.fwd_s,
+            regime.bwd_s,
+            fw,
+            bw,
+            1e9,
+        )
     };
     PipelineSim::run(&cfg).throughput(regime.n_micro, regime.micro_batch)
 }
@@ -37,8 +45,8 @@ fn main() -> Result<()> {
     ];
     let mut t = Table::new(&["scenario", "FP32", "AQ-SGD fw4 bw8", "speed-up"]);
     for (name, links) in scenarios {
-        let fp32 = throughput(&regime, &Compression::Fp32, &links);
-        let aq = throughput(&regime, &Compression::AqSgd { fw_bits: 4, bw_bits: 8 }, &links);
+        let fp32 = throughput(&regime, &CodecSpec::fp32(), &links);
+        let aq = throughput(&regime, &CodecSpec::aqsgd(4, 8), &links);
         t.row(vec![
             name.to_string(),
             format!("{fp32:.2} seq/s"),

@@ -9,7 +9,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
 use aq_sgd::coordinator::Trainer;
 use aq_sgd::exp;
@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     let cli = Cli::from_env();
     let model = cli.str("model", "small");
     let mut cfg = TrainConfig::defaults(&model);
-    cfg.compression = Compression::parse(&cli.str("compression", "aqsgd:fw3bw6"))?;
+    cfg.compression = CodecSpec::parse(&cli.str("compression", "aqsgd:fw3bw6"))?;
     cfg.total_steps = cli.usize("steps", 300)?;
     cfg.epochs = usize::MAX / 2; // bounded by total_steps
     cfg.n_micro = cli.usize("n-micro", 4)?;

@@ -9,7 +9,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp;
 use aq_sgd::metrics::Table;
@@ -25,12 +25,12 @@ fn main() -> Result<()> {
     cfg0.lr = 2e-3;
     cfg0.warmup_steps = 10;
 
-    let variants: Vec<(String, Compression)> = vec![
-        ("FP32".into(), Compression::Fp32),
-        ("DirectQ fw8 bw8".into(), Compression::DirectQ { fw_bits: 8, bw_bits: 8 }),
-        ("DirectQ fw4 bw4".into(), Compression::DirectQ { fw_bits: 4, bw_bits: 4 }),
-        ("DirectQ fw2 bw2".into(), Compression::DirectQ { fw_bits: 2, bw_bits: 2 }),
-        ("AQ-SGD fw2 bw2".into(), Compression::AqSgd { fw_bits: 2, bw_bits: 2 }),
+    let variants: Vec<(String, CodecSpec)> = vec![
+        ("FP32".into(), CodecSpec::fp32()),
+        ("DirectQ fw8 bw8".into(), CodecSpec::directq(8, 8)),
+        ("DirectQ fw4 bw4".into(), CodecSpec::directq(4, 4)),
+        ("DirectQ fw2 bw2".into(), CodecSpec::directq(2, 2)),
+        ("AQ-SGD fw2 bw2".into(), CodecSpec::aqsgd(2, 2)),
     ];
 
     let mut runs = Vec::new();

@@ -14,7 +14,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp;
 use aq_sgd::metrics::Table;
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     for (panel, model, dataset, fw, bw) in panels {
         let mut methods = exp::method_grid(fw, bw);
         if half {
-            methods.insert(1, ("FP16".into(), Compression::Fp16));
+            methods.insert(1, ("FP16".into(), CodecSpec::fp16()));
         }
         for (label, c) in methods {
             let mut finals = Vec::new();
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
             for seed in 0..seeds {
                 let mut cfg = TrainConfig::defaults(model);
                 cfg.dataset = dataset.to_string();
-                cfg.compression = c;
+                cfg.compression = c.clone();
                 cfg.epochs = if from_scratch { epochs * 2 } else { epochs };
                 cfg.n_micro = 3;
                 cfg.n_examples = 96;

@@ -14,7 +14,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::{CodecSpec, SchemeSpec};
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp::{self, PaperRegime};
 use aq_sgd::metrics::Table;
@@ -22,7 +22,7 @@ use aq_sgd::pipeline::{PipelineSim, SimConfig};
 use aq_sgd::util::fmt;
 
 /// Paper-regime step time for a method at a bandwidth.
-fn step_time(regime: &PaperRegime, c: &Compression, bw: f64, first_epoch: bool) -> f64 {
+fn step_time(regime: &PaperRegime, c: &CodecSpec, bw: f64, first_epoch: bool) -> f64 {
     let (fw, bwb) = regime.msg_bytes(c, first_epoch);
     let cfg = SimConfig::uniform(
         regime.n_stages,
@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     let mut runs = Vec::new();
     for (label, c) in exp::method_grid(3, 6) {
         let mut cfg = TrainConfig::defaults("tiny");
-        cfg.compression = c;
+        cfg.compression = c.clone();
         cfg.epochs = epochs;
         cfg.n_micro = 3;
         cfg.n_examples = 96;
@@ -74,10 +74,10 @@ fn main() -> Result<()> {
                 }
             }
             if bw_label == "100 Mbps" {
-                if matches!(c, Compression::Fp32) {
+                if *c == CodecSpec::fp32() {
                     headline.0 = ttl.unwrap_or(f64::NAN);
                 }
-                if matches!(c, Compression::AqSgd { .. }) {
+                if matches!(c.fw, SchemeSpec::Aq { .. }) {
                     headline.1 = ttl.unwrap_or(f64::NAN);
                 }
             }

@@ -11,7 +11,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp::{self, PaperRegime};
 use aq_sgd::metrics::Table;
@@ -25,11 +25,9 @@ fn main() -> Result<()> {
     let mut runs = Vec::new();
     let mut t = Table::new(&["method", "final loss", "diverged"]);
     for (label, c, dp_bits) in [
-        ("FP32 (no compression)".to_string(), Compression::Fp32, None),
-        ("DirectQ fw3 bw6 + grad4".to_string(),
-         Compression::DirectQ { fw_bits: 3, bw_bits: 6 }, Some(4u8)),
-        ("AQ-SGD fw3 bw6 + grad4".to_string(),
-         Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, Some(4u8)),
+        ("FP32 (no compression)".to_string(), CodecSpec::fp32(), None),
+        ("DirectQ fw3 bw6 + grad4".to_string(), CodecSpec::directq(3, 6), Some(4u8)),
+        ("AQ-SGD fw3 bw6 + grad4".to_string(), CodecSpec::aqsgd(3, 6), Some(4u8)),
     ] {
         let mut cfg = TrainConfig::defaults("tiny");
         cfg.compression = c;
@@ -60,10 +58,10 @@ fn main() -> Result<()> {
     let mut tc = Table::new(&["configuration", "step time (s)", "throughput vs FP32"]);
     let mut base_tp = 0.0;
     for (label, act, grad4) in [
-        ("no compression", Compression::Fp32, false),
-        ("activation compression only", Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, false),
-        ("gradient compression only", Compression::Fp32, true),
-        ("activation + gradient (end-to-end)", Compression::AqSgd { fw_bits: 3, bw_bits: 6 }, true),
+        ("no compression", CodecSpec::fp32(), false),
+        ("activation compression only", CodecSpec::aqsgd(3, 6), false),
+        ("gradient compression only", CodecSpec::fp32(), true),
+        ("activation + gradient (end-to-end)", CodecSpec::aqsgd(3, 6), true),
     ] {
         let (fw, bw) = regime.msg_bytes(&act, false);
         let cfg = SimConfig::uniform(
@@ -78,7 +76,8 @@ fn main() -> Result<()> {
         let pipe_t = PipelineSim::run(&cfg).step_time_s;
         // per-machine gradient shard: params / n_stages
         let grad_bytes = regime.param_bytes / regime.n_stages as u64;
-        let grad_bytes = if grad4 { (grad_bytes as f64 * grad_frac_4bit) as u64 } else { grad_bytes };
+        let grad_bytes =
+            if grad4 { (grad_bytes as f64 * grad_frac_4bit) as u64 } else { grad_bytes };
         let ar_t = PipelineSim::allreduce_time(grad_bytes, dp_degree, 100e6, 1e-3);
         let step = pipe_t + ar_t;
         let tp = (regime.n_micro * regime.micro_batch * dp_degree) as f64 / step;

@@ -12,7 +12,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp;
 use aq_sgd::metrics::Table;
@@ -37,13 +37,10 @@ fn main() -> Result<()> {
     let mut t_bits = Table::new(&["bits", "DirectQ loss", "AQ-SGD loss"]);
     for (fw, bw) in [(2u8, 4u8), (3, 6), (4, 8)] {
         let mut row = vec![format!("fw{fw} bw{bw}")];
-        for mk in [
-            Compression::DirectQ { fw_bits: fw, bw_bits: bw },
-            Compression::AqSgd { fw_bits: fw, bw_bits: bw },
-        ] {
+        for mk in [CodecSpec::directq(fw, bw), CodecSpec::aqsgd(fw, bw)] {
             let mut cfg = base("tiny", epochs);
-            cfg.compression = mk;
             let label = format!("bits {} {}", mk.label(), fw);
+            cfg.compression = mk;
             println!("== {label} ==");
             let run = exp::run_variant(cfg, &label)?;
             row.push(format!("{:.4}", run.stats.final_train_loss));
@@ -58,7 +55,7 @@ fn main() -> Result<()> {
     let mut t_m = Table::new(&["m precision", "AQ-SGD fw2 bw4 loss"]);
     for m_bits in [Some(2u8), Some(4), Some(8), None] {
         let mut cfg = base("tiny", epochs);
-        cfg.compression = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
+        cfg.compression = CodecSpec::aqsgd(2, 4);
         cfg.m_bits = m_bits;
         let label = match m_bits {
             Some(b) => format!("m{b}"),
@@ -80,15 +77,11 @@ fn main() -> Result<()> {
                 "{model} (K={})",
                 if model == "tiny" { 2 } else { 4 }
             )];
-            for mk in [
-                Compression::Fp32,
-                Compression::AqSgd { fw_bits: 2, bw_bits: 4 },
-                Compression::DirectQ { fw_bits: 2, bw_bits: 4 },
-            ] {
+            for mk in [CodecSpec::fp32(), CodecSpec::aqsgd(2, 4), CodecSpec::directq(2, 4)] {
                 let mut cfg = base(model, epochs.min(4));
+                let label = format!("K {model} {}", mk.label());
                 cfg.compression = mk;
                 cfg.lr = if model == "small" { 1e-3 } else { 2e-3 };
-                let label = format!("K {model} {}", mk.label());
                 println!("== {label} ==");
                 let run = exp::run_variant(cfg, &label)?;
                 row.push(format!("{:.4}", run.stats.final_train_loss));

@@ -6,7 +6,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::TrainConfig;
 use aq_sgd::exp;
 use aq_sgd::metrics::Table;
@@ -15,8 +15,8 @@ use aq_sgd::util::fmt;
 fn main() -> Result<()> {
     let mut table = Table::new(&["method", "final loss", "wire traffic", "sim time @100Mbps"]);
     for (label, compression) in [
-        ("FP32", Compression::Fp32),
-        ("AQ-SGD fw2 bw4", Compression::AqSgd { fw_bits: 2, bw_bits: 4 }),
+        ("FP32", CodecSpec::fp32()),
+        ("AQ-SGD fw2 bw4", CodecSpec::aqsgd(2, 4)),
     ] {
         let mut cfg = TrainConfig::defaults("tiny");
         cfg.compression = compression;

@@ -1,15 +1,16 @@
 //! Figure 10 reproduction: split learning with 16 non-IID clients
 //! (Dirichlet 0.5) on the synthetic classification task. Clients hold
 //! the cut layer; activations / activation-gradients cross the cut with
-//! FP32, DirectQ or AQ-SGD compression (paper App. H.6: fw2 bw8 with
-//! top-20% backward sparsification — our backward uses dense bw8, and the
-//! top-k codec is exercised/benchmarked in codec::topk).
+//! FP32, DirectQ or AQ-SGD compression — including paper App. H.6's
+//! exact scheme, `fw2 bw8[0.2]`: 2-bit AQ forward with top-20% + 8-bit
+//! backward sparsification, spelled `hybrid:aq2/topk0.2@8` in the codec
+//! registry and run end-to-end below.
 //!
 //!     cargo run --release --example split_learning [-- --rounds N]
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::coordinator::split::SplitLearning;
 use aq_sgd::data::cls;
@@ -23,9 +24,11 @@ fn main() -> Result<()> {
 
     let mut table = Table::new(&["method", "round", "eval loss", "comm"]);
     for (label, c) in [
-        ("FP32".to_string(), Compression::Fp32),
-        ("DirectQ fw2 bw8".to_string(), Compression::DirectQ { fw_bits: 2, bw_bits: 8 }),
-        ("AQ-SGD fw2 bw8".to_string(), Compression::AqSgd { fw_bits: 2, bw_bits: 8 }),
+        ("FP32".to_string(), CodecSpec::fp32()),
+        ("DirectQ fw2 bw8".to_string(), CodecSpec::directq(2, 8)),
+        ("AQ-SGD fw2 bw8".to_string(), CodecSpec::aqsgd(2, 8)),
+        // App. H.6's `bw8[0.2]`: top-20% backward sparsification
+        ("AQ-SGD fw2 bw8[0.2]".to_string(), CodecSpec::parse("hybrid:aq2/topk0.2@8")?),
     ] {
         let mut cfg = TrainConfig::defaults("tiny_cls");
         cfg.compression = c;

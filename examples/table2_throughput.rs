@@ -12,14 +12,14 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::Cli;
 use aq_sgd::exp::PaperRegime;
 use aq_sgd::metrics::Table;
 use aq_sgd::net::PAPER_BANDWIDTHS;
 use aq_sgd::pipeline::{PipelineSim, SimConfig};
 
-fn throughput(regime: &PaperRegime, c: &Compression, bandwidth_bps: f64) -> f64 {
+fn throughput(regime: &PaperRegime, c: &CodecSpec, bandwidth_bps: f64) -> f64 {
     let (fw, bw) = regime.msg_bytes(c, false);
     let cfg = SimConfig::uniform(
         regime.n_stages,
@@ -59,17 +59,20 @@ fn main() -> Result<()> {
     let mut t = Table::new(&[
         "Network",
         "FP32",
-        &format!("DirectQ fw{} bw{} / fw{} bw{}", schemes[0].0, schemes[0].1, schemes[1].0, schemes[1].1),
+        &format!(
+            "DirectQ fw{} bw{} / fw{} bw{}",
+            schemes[0].0, schemes[0].1, schemes[1].0, schemes[1].1
+        ),
         "AQ-SGD (same bits)",
         "AQ-SGD speedup",
     ]);
     for (bw, label) in PAPER_BANDWIDTHS {
-        let fp32 = throughput(&regime, &Compression::Fp32, bw);
+        let fp32 = throughput(&regime, &CodecSpec::fp32(), bw);
         let mut dq = Vec::new();
         let mut aq = Vec::new();
         for (f, b) in schemes {
-            dq.push(throughput(&regime, &Compression::DirectQ { fw_bits: f, bw_bits: b }, bw));
-            aq.push(throughput(&regime, &Compression::AqSgd { fw_bits: f, bw_bits: b }, bw));
+            dq.push(throughput(&regime, &CodecSpec::directq(f, b), bw));
+            aq.push(throughput(&regime, &CodecSpec::aqsgd(f, b), bw));
         }
         t.row(vec![
             label.to_string(),

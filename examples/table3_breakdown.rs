@@ -9,7 +9,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::exp::PaperRegime;
 use aq_sgd::metrics::Table;
 use aq_sgd::pipeline::{PipelineSim, SimConfig};
@@ -17,7 +17,7 @@ use aq_sgd::util::fmt;
 
 fn main() -> Result<()> {
     let regime = PaperRegime::default();
-    let c = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let c = CodecSpec::aqsgd(4, 8);
     let (fw_bytes, bw_bytes) = regime.msg_bytes(&c, false);
 
     println!(

@@ -6,6 +6,13 @@ the paper's reference semantics (`ref.py`) — scale, codes, LSB-first
 packed bytes, dequantized values — so `rust/tests/golden_codec.rs` can
 pin `UniformQuantizer` + `pack` byte output without running Python.
 
+Also produces `rust/tests/fixtures/golden_frames.txt`: full serialized
+`codec::frame::Frame` images (tag | header_len:u16 | payload_len:u32 |
+header | payload, little-endian) for every registered boundary codec
+scheme, pinned by `rust/tests/golden_frames.rs`. The frame layouts are
+emulated here byte-for-byte; change a codec's wire format and this file
+must be regenerated deliberately.
+
 The rust encoder uses an algebraically-equal but differently-associated
 affine form (`x * (0.5*levels/scale) + (0.5*levels + 0.5)`), so this
 script also emulates that f32 arithmetic exactly and asserts the codes
@@ -74,6 +81,119 @@ def hex32(v):
     return f"{np.float32(v).view(np.uint32):08x}"
 
 
+# ---------------------------------------------------------------------------
+# Frame emulation (rust/src/codec/frame.rs + the per-scheme layouts)
+
+import struct  # noqa: E402
+
+
+def frame_bytes(tag, header, payload):
+    """tag:u8 | header_len:u16 LE | payload_len:u32 LE | header | payload."""
+    return bytes([tag]) + struct.pack("<HI", len(header), len(payload)) + header + payload
+
+
+def f32le(values):
+    return np.asarray(values, dtype="<f4").tobytes()
+
+
+def frame_fp32(x):
+    return frame_bytes(1, struct.pack("<I", len(x)), f32le(x))
+
+
+def frame_fp16(x):
+    # inputs are chosen exactly f16-representable, so the rust RTNE
+    # converter and numpy's cast agree bit-for-bit
+    return frame_bytes(2, struct.pack("<I", len(x)), x.astype("<f2").tobytes())
+
+
+def frame_directq(x, bits):
+    scale, codes = rust_encode_emulated(x, bits)
+    header = struct.pack("<BIf", bits, len(x), float(scale))
+    return frame_bytes(3, header, pack_lsb_first(codes, bits))
+
+
+def frame_topk(x, frac, bits):
+    k = max(1, min(len(x), int(np.ceil(len(x) * frac))))
+    order = np.argsort(-np.abs(x), kind="stable")  # magnitudes distinct by construction
+    indices = np.sort(order[:k]).astype(np.uint32)
+    vals = x[indices]
+    scale, codes = rust_encode_emulated(vals, bits)
+    header = struct.pack("<BIIf", bits, len(x), k, float(scale))
+    payload = indices.astype("<u4").tobytes() + pack_lsb_first(codes, bits)
+    return frame_bytes(5, header, payload)
+
+
+def aq_header(bits, el, n_rec, mode=0):
+    return struct.pack("<BIIB", bits, el, n_rec, mode)
+
+
+def frame_aq_full(x, bits):
+    """First visit: one kind-0 record carrying the raw f32 row."""
+    return frame_bytes(4, aq_header(bits, len(x), 1), bytes([0]) + f32le(x))
+
+
+def frame_aq_delta(x, m, bits):
+    """Revisit: kind-1 record — per-example scale + packed delta codes.
+    Returns (frame, m_new) with m_new advanced exactly like the rust
+    decode_add path (m += codes*k - scale, all f32)."""
+    delta = (x - m).astype(F32)
+    scale, codes = rust_encode_emulated(delta, bits)
+    levels = F32(2**bits - 1)
+    k = (F32(2.0) * scale / levels).astype(F32)
+    step = (codes.astype(F32) * k).astype(F32)
+    m_new = (m + (step - scale).astype(F32)).astype(F32)
+    payload = bytes([1]) + struct.pack("<f", float(scale)) + pack_lsb_first(codes, bits)
+    return frame_bytes(4, aq_header(bits, len(x), 1), payload), m_new
+
+
+def frame_cases():
+    """(name, scheme spec, ids, [(x, frame_bytes), ...] per visit)."""
+    rng = np.random.default_rng(0xF4A3)
+    ramp = np.array([-1.0, -0.5, 0.0, 0.5, 1.0], dtype=F32)
+    yield "frame_fp32_n5", "fp32", [0], [(ramp, frame_fp32(ramp))]
+
+    h16 = rng.standard_normal(7).astype(np.float16).astype(F32)
+    assert np.all(np.abs(h16) >= 6.2e-5), "pick another seed: f16 subnormal"
+    yield "frame_fp16_n7", "fp16", [0], [(h16, frame_fp16(h16))]
+
+    q4 = (rng.standard_normal(33) * 1.5).astype(F32)
+    yield "frame_q4_n33", "q4", [0], [(q4, frame_directq(q4, 4))]
+
+    q3 = (rng.standard_normal(7) * 0.25).astype(F32)
+    yield "frame_q3_n7", "q3", [0], [(q3, frame_directq(q3, 3))]
+
+    tk = np.array([(0.1 * (i + 1)) * (-1.0 if i % 2 else 1.0) for i in range(16)], dtype=F32)
+    yield "frame_topk25_n16", "topk0.25@8", [0], [(tk, frame_topk(tk, 0.25, 8))]
+
+    x0 = rng.standard_normal(6).astype(F32)
+    x1 = (x0 + (0.01 * rng.standard_normal(6)).astype(F32)).astype(F32)
+    f0 = frame_aq_full(x0, 2)
+    f1, _m = frame_aq_delta(x1, x0, 2)  # after a full visit, m == x0 exactly
+    yield "frame_aq2_el6", "aq2", [9], [(x0, f0), (x1, f1)]
+
+
+def write_frames():
+    lines = [
+        "# Golden serialized Frame images for every boundary codec scheme.",
+        "# Generated by python/compile/kernels/gen_golden.py. Do not edit.",
+        "# x values are f32 bit patterns in hex; frame is the full wire",
+        "# image (tag|header_len|payload_len|header|payload), hex bytes.",
+        "",
+    ]
+    for name, scheme, ids, visits in frame_cases():
+        lines += [f"case {name}", f"scheme {scheme}",
+                  "ids " + " ".join(str(i) for i in ids)]
+        for vi, (x, fb) in enumerate(visits):
+            suffix = "" if vi == 0 else str(vi + 1)
+            lines += [f"x{suffix} " + " ".join(hex32(v) for v in x),
+                      f"frame{suffix} " + fb.hex()]
+        lines += ["end", ""]
+        print(f"{name}: scheme={scheme} visits={len(visits)} "
+              f"bytes={'/'.join(str(len(fb)) for _, fb in visits)}")
+    (OUT / "golden_frames.txt").write_text("\n".join(lines))
+    print(f"wrote {OUT / 'golden_frames.txt'}")
+
+
 def case_vectors():
     rng = np.random.default_rng(0xA25D)
     yield "normal_2bit_n33", 2, (rng.standard_normal(33) * 1.5).astype(F32)
@@ -119,6 +239,7 @@ def main():
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "golden_quant.txt").write_text("\n".join(lines))
     print(f"wrote {OUT / 'golden_quant.txt'}")
+    write_frames()
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@
 
 use aq_sgd::codec::delta::AqState;
 use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::codec::registry::{build_mem_pair, SchemeSpec};
 use aq_sgd::codec::{f16, pack, topk};
 use aq_sgd::testing::bench::{black_box, Bencher};
 use aq_sgd::util::Rng;
@@ -78,4 +79,35 @@ fn main() {
         black_box(topk::encode(&x[..65536], 0.2, 8, &mut rng));
     })
     .report_throughput(65536 * 4);
+
+    // ---- registry-driven: full frame encode/decode per scheme ----
+    // Every registered scheme through the real BoundaryCodec path
+    // (encode -> Frame, Frame -> decode), at the paper's bit widths.
+    let el = 1 << 18; // 256k elements = 1 MB fp32 message
+    let reg_bytes = (el * 4) as u64;
+    let ids = [0u64];
+    let a = &x[..el];
+    let a2: Vec<f32> = a.iter().map(|v| v + 1e-3).collect();
+    let mut specs: Vec<String> = vec!["fp32".into(), "fp16".into()];
+    for bits in [2u8, 4, 8] {
+        specs.push(format!("q{bits}"));
+        specs.push(format!("aq{bits}"));
+        specs.push(format!("topk0.2@{bits}"));
+    }
+    for spec in specs {
+        let scheme = SchemeSpec::parse(&spec).unwrap();
+        let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 9).unwrap();
+        // warm both halves' AQ buffers through the first-visit frame
+        let first = enc.encode(&ids, a).unwrap();
+        dec.decode(&ids, &first).unwrap();
+        b.run(&format!("frame_encode/{spec}/1MB"), || {
+            black_box(enc.encode(&ids, &a2).unwrap());
+        })
+        .report_throughput(reg_bytes);
+        let frame = enc.encode(&ids, &a2).unwrap();
+        b.run(&format!("frame_decode/{spec}/1MB"), || {
+            black_box(dec.decode(&ids, &frame).unwrap());
+        })
+        .report_throughput(reg_bytes);
+    }
 }

@@ -4,12 +4,14 @@
 //! if artifacts are missing.
 
 use aq_sgd::codec::quantizer::Rounding;
+use aq_sgd::codec::registry::{build_mem_pair, BuildCtx};
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::coordinator::boundary::ForwardBoundary;
-use aq_sgd::codec::Compression;
 use aq_sgd::runtime::{Engine, QuantRuntime, StageInput, StageRuntime};
-use aq_sgd::testing::require_artifacts;
-use aq_sgd::store::MemStore;
+use aq_sgd::store::{ActivationStore, MemStore};
 use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::require_artifacts;
+use aq_sgd::util::error::Result;
 use aq_sgd::util::Rng;
 
 fn main() {
@@ -45,13 +47,9 @@ fn main() {
     let ids: Vec<u64> = (0..man.micro_batch().unwrap() as u64).collect();
     let msg_bytes = (n * 4) as u64;
 
-    let mut native = ForwardBoundary::new(
-        0,
-        Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
-        Rounding::Nearest,
-        Box::new(MemStore::new(el)),
-        None,
-    );
+    let spec = CodecSpec::aqsgd(4, 8);
+    let (enc, dec) = build_mem_pair(&spec.fw, el, Rounding::Nearest, 1).unwrap();
+    let mut native = ForwardBoundary::new(0, el, enc, dec);
     native.transfer(&ids, &h).unwrap(); // warm the buffers
     b.run("boundary_native_aq4/16KiB", || {
         black_box(native.transfer(&ids, &h).unwrap());
@@ -59,13 +57,21 @@ fn main() {
     .report_throughput(msg_bytes);
 
     let q = std::rc::Rc::new(QuantRuntime::load(&engine, &man).unwrap());
-    let mut hlo = ForwardBoundary::new(
-        0,
-        Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
-        Rounding::Nearest,
-        Box::new(MemStore::new(el)),
-        Some(q),
-    );
+    let mut mk = |_role: &str| -> Result<Box<dyn ActivationStore>> {
+        Ok(Box::new(MemStore::new(el)))
+    };
+    let (enc, dec) = spec
+        .fw
+        .build_pair(&mut BuildCtx {
+            example_len: el,
+            rounding: Rounding::Nearest,
+            seed: 2,
+            ns: 0,
+            hlo: Some(q),
+            mk_store: &mut mk,
+        })
+        .unwrap();
+    let mut hlo = ForwardBoundary::new(0, el, enc, dec);
     hlo.transfer(&ids, &h).unwrap();
     b.run("boundary_hlo_aq4/16KiB", || {
         black_box(hlo.transfer(&ids, &h).unwrap());

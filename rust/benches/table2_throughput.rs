@@ -3,13 +3,13 @@
 //! simulator in the paper regime. Fast (pure simulation) — the heavier
 //! convergence counterparts live in examples/.
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::exp::PaperRegime;
 use aq_sgd::metrics::Table;
 use aq_sgd::net::PAPER_BANDWIDTHS;
 use aq_sgd::pipeline::{PipelineSim, Schedule, SimConfig};
 
-fn throughput(r: &PaperRegime, c: &Compression, bw: f64, schedule: Schedule) -> f64 {
+fn throughput(r: &PaperRegime, c: &CodecSpec, bw: f64, schedule: Schedule) -> f64 {
     let (fw, bwb) = r.msg_bytes(c, false);
     let cfg = SimConfig {
         schedule,
@@ -23,11 +23,11 @@ fn main() {
     println!("== Table 2: GPT2-1.5B training throughput (seqs/s) ==\n");
     let mut t = Table::new(&["Network", "FP32", "DirectQ fw3bw6/fw4bw8", "AQ-SGD fw3bw6/fw4bw8"]);
     for (bw, label) in PAPER_BANDWIDTHS {
-        let fp32 = throughput(&regime, &Compression::Fp32, bw, Schedule::GPipe);
+        let fp32 = throughput(&regime, &CodecSpec::fp32(), bw, Schedule::GPipe);
         let f = |fw_bits, bw_bits| {
             (
-                throughput(&regime, &Compression::DirectQ { fw_bits, bw_bits }, bw, Schedule::GPipe),
-                throughput(&regime, &Compression::AqSgd { fw_bits, bw_bits }, bw, Schedule::GPipe),
+                throughput(&regime, &CodecSpec::directq(fw_bits, bw_bits), bw, Schedule::GPipe),
+                throughput(&regime, &CodecSpec::aqsgd(fw_bits, bw_bits), bw, Schedule::GPipe),
             )
         };
         let (d36, a36) = f(3, 6);
@@ -43,7 +43,7 @@ fn main() {
 
     println!("\n== ablation: schedule (GPipe vs 1F1B) at fw4 bw8 ==\n");
     let mut ts = Table::new(&["Network", "GPipe", "1F1B", "peak in-flight (stage0)"]);
-    let c = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    let c = CodecSpec::aqsgd(4, 8);
     for (bw, label) in PAPER_BANDWIDTHS {
         let g = throughput(&regime, &c, bw, Schedule::GPipe);
         let o = throughput(&regime, &c, bw, Schedule::OneFOneB);
@@ -62,11 +62,11 @@ fn main() {
 
     // sanity assertions so `cargo bench` acts as a regression gate on the
     // paper's shape: FP32 collapses with bandwidth, AQ-SGD stays flat.
-    let fp32_fast = throughput(&regime, &Compression::Fp32, 10e9, Schedule::GPipe);
-    let fp32_slow = throughput(&regime, &Compression::Fp32, 100e6, Schedule::GPipe);
+    let fp32_fast = throughput(&regime, &CodecSpec::fp32(), 10e9, Schedule::GPipe);
+    let fp32_slow = throughput(&regime, &CodecSpec::fp32(), 100e6, Schedule::GPipe);
     let aq_slow = throughput(
         &regime,
-        &Compression::AqSgd { fw_bits: 4, bw_bits: 8 },
+        &CodecSpec::aqsgd(4, 8),
         100e6,
         Schedule::GPipe,
     );

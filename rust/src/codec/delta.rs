@@ -2,13 +2,24 @@
 //! buffers `m(ξ)` on both sides of a pipeline boundary, with
 //! encode = `Q(a - m)` + buffer advance, decode = replica advance.
 //!
-//! `AqState` is the *native* (pure-rust) implementation used by the
-//! simulator, the split-learning example and the data-parallel gradient
-//! path; the coordinator's runtime path can alternatively run the L1
-//! Pallas `aq_encode/aq_decode` HLO artifacts — both share this exact
-//! arithmetic (validated against each other in integration tests).
+//! Two layers live here:
+//!  * [`AqState`] — the bare single-record arithmetic (used by the
+//!    tensor-parallel all-reduce in `codec::tp` and by benches/tests).
+//!  * [`AqCodec`] — the full [`BoundaryCodec`]: batches of records keyed
+//!    by example id, buffers in an `ActivationStore`, framed wire
+//!    messages, and the optional L1-Pallas HLO kernel path. Sender and
+//!    receiver each hold their own `AqCodec`; their stores stay
+//!    bit-identical because both advance through the same [`Frame`]
+//!    (Algorithm 2's invariant — pinned by property tests).
 
+use std::rc::Rc;
+
+use super::frame::{Frame, FrameReader, FrameWriter, TAG_AQ};
 use super::quantizer::{Rounding, UniformQuantizer};
+use super::{pack, BoundaryCodec, EncodeStats};
+use crate::runtime::QuantRuntime;
+use crate::store::ActivationStore;
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// One boundary-side AQ-SGD codec. Holds no buffers itself — buffers live
@@ -47,7 +58,13 @@ impl AqState {
     /// Sender side. `a` is the fresh activation; `m` is the stored message
     /// buffer for this example (`None` on first visit). On return `m_out`
     /// holds the advanced buffer (what the receiver will reconstruct).
-    pub fn encode(&self, a: &[f32], m: Option<&[f32]>, m_out: &mut Vec<f32>, rng: &mut Rng) -> AqMessage {
+    pub fn encode(
+        &self,
+        a: &[f32],
+        m: Option<&[f32]>,
+        m_out: &mut Vec<f32>,
+        rng: &mut Rng,
+    ) -> AqMessage {
         match m {
             None => {
                 m_out.clear();
@@ -70,30 +87,285 @@ impl AqState {
 
     /// Receiver side: advance the local replica of `m` and return the
     /// activation to feed forward. Must produce *exactly* the sender's
-    /// `m_out` (bit-identical replicas — tested).
-    pub fn decode(&self, msg: &AqMessage, m: Option<&[f32]>, m_out: &mut Vec<f32>) {
+    /// `m_out` (bit-identical replicas — tested). A delta message for an
+    /// example with no buffer is a protocol violation from the peer and
+    /// returns an error instead of aborting the process.
+    pub fn decode(&self, msg: &AqMessage, m: Option<&[f32]>, m_out: &mut Vec<f32>) -> Result<()> {
         match (msg, m) {
             (AqMessage::Full(a), _) => {
                 m_out.clear();
                 m_out.extend_from_slice(a);
+                Ok(())
             }
             (AqMessage::Delta { codes, scale }, Some(m)) => {
-                assert_eq!(codes.len(), m.len());
+                crate::ensure!(
+                    codes.len() == m.len(),
+                    "AQ delta length {} does not match buffer length {}",
+                    codes.len(),
+                    m.len()
+                );
                 let mut deq = vec![0f32; codes.len()];
                 self.quant.decode(codes, *scale, &mut deq);
                 m_out.clear();
                 m_out.extend(m.iter().zip(&deq).map(|(x, d)| x + d));
+                Ok(())
             }
             (AqMessage::Delta { .. }, None) => {
-                panic!("AQ delta message for an example with no buffer")
+                crate::bail!("AQ delta message for an example with no buffer")
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Record kinds inside an AQ frame (mode-0 payload).
+const REC_FULL: u8 = 0;
+const REC_DELTA: u8 = 1;
+/// Frame modes: per-example records vs one batch-wide scale (HLO path).
+const MODE_PER_EXAMPLE: u8 = 0;
+const MODE_BATCH_SCALE: u8 = 1;
+
+/// The AQ-SGD [`BoundaryCodec`]: frame format (tag 4)
+///
+/// ```text
+/// header:  bits: u8 | el: u32 | n_rec: u32 | mode: u8
+/// payload (mode 0): per example, in id order:
+///     kind: u8 (0 = full, 1 = delta)
+///     full:  el × f32 LE
+///     delta: scale: f32 | packed_len(el, bits) code bytes
+/// payload (mode 1): scale: f32 | packed_len(n_rec · el, bits) code bytes
+/// ```
+///
+/// Mode 1 is emitted by the Pallas-HLO kernel path (one scale per batch,
+/// only when every example in the batch has a buffer); mode 0 is the
+/// native per-example path that also handles mixed first-visit batches.
+pub struct AqCodec {
+    bits: u8,
+    quant: UniformQuantizer,
+    store: Box<dyn ActivationStore>,
+    /// key namespace (the boundary id) for store keys
+    ns: u32,
+    el: usize,
+    rng: Rng,
+    hlo: Option<Rc<QuantRuntime>>,
+    stats: EncodeStats,
+}
+
+impl AqCodec {
+    pub fn new(
+        bits: u8,
+        rounding: Rounding,
+        store: Box<dyn ActivationStore>,
+        ns: u32,
+        seed: u64,
+        hlo: Option<Rc<QuantRuntime>>,
+    ) -> Self {
+        let el = store.record_len();
+        AqCodec {
+            bits,
+            quant: UniformQuantizer::new(bits, rounding),
+            store,
+            ns,
+            el,
+            rng: Rng::new(seed),
+            hlo,
+            stats: EncodeStats::default(),
+        }
+    }
+
+    fn check_batch(&self, ids: &[u64], n: usize) -> Result<()> {
+        crate::ensure!(!ids.is_empty(), "AQ transfer with no example ids");
+        crate::ensure!(
+            n == ids.len() * self.el,
+            "AQ activation length {n} != {} ids x {} elements",
+            ids.len(),
+            self.el
+        );
+        Ok(())
+    }
+
+    fn check_header(&self, ids: &[u64], frame: &Frame) -> Result<(usize, u8)> {
+        crate::ensure!(frame.tag() == TAG_AQ, "AQ codec got frame tag {}", frame.tag());
+        let mut h = FrameReader::new(frame.header());
+        let (bits, el, n_rec, mode) = (h.u8()?, h.u32()? as usize, h.u32()? as usize, h.u8()?);
+        h.done()?;
+        crate::ensure!(
+            bits == self.bits,
+            "AQ frame is {bits}-bit but this boundary is configured for {}",
+            self.bits
+        );
+        crate::ensure!(el == self.el, "AQ frame record length {el}, boundary has {}", self.el);
+        crate::ensure!(
+            n_rec == ids.len(),
+            "AQ frame has {n_rec} records for {} example ids",
+            ids.len()
+        );
+        Ok((n_rec, mode))
+    }
+
+    /// HLO batch path: one kernel call over [B·el] with a single scale.
+    fn encode_batch_hlo(&mut self, q: &Rc<QuantRuntime>, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        let el = self.el;
+        let mut m = vec![0f32; a.len()];
+        let mut rec = Vec::new();
+        for (i, &ex) in ids.iter().enumerate() {
+            self.store.get((self.ns, ex), &mut rec);
+            m[i * el..(i + 1) * el].copy_from_slice(&rec);
+        }
+        let (codes, scale, m_new) = q.aq_encode(a, &m, self.bits)?;
+        let delta: Vec<f32> = a.iter().zip(&m).map(|(x, y)| x - y).collect();
+        self.stats = EncodeStats {
+            mean_abs_delta: Some(crate::util::stats::mean_abs(&delta)),
+            first_visits: 0,
+        };
+        for (i, &ex) in ids.iter().enumerate() {
+            self.store.put((self.ns, ex), &m_new[i * el..(i + 1) * el]);
+        }
+        let mut h = FrameWriter::default();
+        h.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_BATCH_SCALE);
+        let mut p = FrameWriter::with_capacity(4 + pack::packed_len(codes.len(), self.bits));
+        p.f32(scale).bytes(&pack::pack(&codes, self.bits));
+        Ok(Frame::new(TAG_AQ, h.finish(), p.finish()))
+    }
+}
+
+impl BoundaryCodec for AqCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        self.check_batch(ids, a.len())?;
+        let el = self.el;
+
+        // The HLO (Pallas-kernel) path works on the whole [B,S,D] tensor
+        // with one scale; valid when the batch is uniformly revisit.
+        // Mixed batches (partial epochs) fall back to the native path.
+        let all_present = ids.iter().all(|&ex| self.store.contains((self.ns, ex)));
+        if let Some(q) = self.hlo.clone() {
+            if all_present && q.n_elements() == a.len() {
+                return self.encode_batch_hlo(&q, ids, a);
+            }
+        }
+
+        // native per-example path
+        let mut h = FrameWriter::default();
+        h.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_PER_EXAMPLE);
+        let mut p = FrameWriter::with_capacity(a.len()); // grows as needed
+        let mut m = Vec::new();
+        let mut codes = vec![0u8; el];
+        let mut delta = vec![0f32; el];
+        let mut delta_abs_sum = 0f64;
+        let mut first_visits = 0usize;
+        for (i, &ex) in ids.iter().enumerate() {
+            let row = &a[i * el..(i + 1) * el];
+            if self.store.get((self.ns, ex), &mut m) {
+                crate::ensure!(
+                    m.len() == el,
+                    "stored buffer for example {ex} has {} elements, want {el}",
+                    m.len()
+                );
+                for j in 0..el {
+                    delta[j] = row[j] - m[j];
+                }
+                delta_abs_sum += crate::util::stats::mean_abs(&delta) * el as f64;
+                let scale = self.quant.encode(&delta, &mut codes, &mut self.rng);
+                // m += deq(codes) — both replicas run this exact op
+                self.quant.decode_add(&codes, scale, &mut m);
+                self.store.put((self.ns, ex), &m);
+                p.u8(REC_DELTA).f32(scale).bytes(&pack::pack(&codes, self.bits));
+            } else {
+                // first visit: full precision (Algorithm 1 line 5)
+                first_visits += 1;
+                delta_abs_sum += crate::util::stats::mean_abs(row) * el as f64;
+                self.store.put((self.ns, ex), row);
+                p.u8(REC_FULL).f32_slice(row);
+            }
+        }
+        self.stats = EncodeStats {
+            mean_abs_delta: Some(delta_abs_sum / a.len() as f64),
+            first_visits,
+        };
+        Ok(Frame::new(TAG_AQ, h.finish(), p.finish()))
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let (n_rec, mode) = self.check_header(ids, frame)?;
+        let el = self.el;
+        let mut out = vec![0f32; n_rec * el];
+        let mut p = FrameReader::new(frame.payload());
+        match mode {
+            MODE_BATCH_SCALE => {
+                let scale = p.f32()?;
+                let packed = p.bytes(pack::packed_len(n_rec * el, self.bits))?;
+                p.done()?;
+                let codes = pack::unpack(packed, self.bits, n_rec * el);
+                // assemble the local buffer replica; every record must exist
+                let mut m = vec![0f32; n_rec * el];
+                let mut rec = Vec::new();
+                for (i, &ex) in ids.iter().enumerate() {
+                    crate::ensure!(
+                        self.store.get((self.ns, ex), &mut rec),
+                        "AQ delta frame for example {ex} with no message buffer"
+                    );
+                    m[i * el..(i + 1) * el].copy_from_slice(&rec);
+                }
+                match &self.hlo {
+                    Some(q) if q.n_elements() == m.len() => {
+                        m = q.aq_decode(&codes, scale, &m, self.bits)?;
+                    }
+                    _ => self.quant.decode_add(&codes, scale, &mut m),
+                }
+                for (i, &ex) in ids.iter().enumerate() {
+                    self.store.put((self.ns, ex), &m[i * el..(i + 1) * el]);
+                }
+                out.copy_from_slice(&m);
+            }
+            MODE_PER_EXAMPLE => {
+                let mut m = Vec::new();
+                for (i, &ex) in ids.iter().enumerate() {
+                    match p.u8()? {
+                        REC_FULL => {
+                            let row = p.f32_vec(el)?;
+                            self.store.put((self.ns, ex), &row);
+                            out[i * el..(i + 1) * el].copy_from_slice(&row);
+                        }
+                        REC_DELTA => {
+                            let scale = p.f32()?;
+                            let packed = p.bytes(pack::packed_len(el, self.bits))?;
+                            crate::ensure!(
+                                self.store.get((self.ns, ex), &mut m),
+                                "AQ delta frame for example {ex} with no message buffer"
+                            );
+                            let codes = pack::unpack(packed, self.bits, el);
+                            self.quant.decode_add(&codes, scale, &mut m);
+                            self.store.put((self.ns, ex), &m);
+                            out[i * el..(i + 1) * el].copy_from_slice(&m);
+                        }
+                        kind => crate::bail!("unknown AQ record kind {kind}"),
+                    }
+                }
+                p.done()?;
+            }
+            other => crate::bail!("unknown AQ frame mode {other}"),
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        format!("aq{}", self.bits)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.store.resident_bytes()
+    }
+
+    fn take_stats(&mut self) -> EncodeStats {
+        std::mem::take(&mut self.stats)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::MemStore;
 
     #[test]
     fn replicas_stay_identical() {
@@ -111,7 +383,7 @@ mod tests {
             let mut ms = Vec::new();
             let msg = st.encode(&a, m_send.as_deref(), &mut ms, &mut rng);
             let mut mr = Vec::new();
-            st.decode(&msg, m_recv.as_deref(), &mut mr);
+            st.decode(&msg, m_recv.as_deref(), &mut mr).unwrap();
             assert_eq!(ms, mr, "sender/receiver buffers diverged");
             m_send = Some(ms);
             m_recv = Some(mr);
@@ -157,6 +429,15 @@ mod tests {
     }
 
     #[test]
+    fn delta_without_buffer_is_an_error_not_a_panic() {
+        let st = AqState::new(4, Rounding::Nearest);
+        let msg = AqMessage::Delta { codes: vec![1, 2, 3], scale: 0.5 };
+        let mut m_out = Vec::new();
+        let err = st.decode(&msg, None, &mut m_out).unwrap_err();
+        assert!(err.to_string().contains("no buffer"), "{err}");
+    }
+
+    #[test]
     fn delta_beats_direct_on_drifting_signal() {
         // the paper's Figure 1b argument: after warm-up, |delta| << |a|,
         // so AQ reconstruction error is far below DirectQ's at equal bits.
@@ -183,5 +464,71 @@ mod tests {
             m = Some(m2);
         }
         assert!(aq_err * 20.0 < dq_err, "aq {aq_err} vs dq {dq_err}");
+    }
+
+    // ---- AqCodec (framed) ----
+
+    fn pair(bits: u8, el: usize) -> (AqCodec, AqCodec) {
+        let mk = || Box::new(MemStore::new(el));
+        (
+            AqCodec::new(bits, Rounding::Nearest, mk(), 0, 1, None),
+            AqCodec::new(bits, Rounding::Nearest, mk(), 0, 2, None),
+        )
+    }
+
+    #[test]
+    fn codec_first_visit_lossless_then_delta() {
+        let (mut enc, mut dec) = pair(2, 8);
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let f1 = enc.encode(&[0, 1], &a).unwrap();
+        let out1 = dec.decode(&[0, 1], &f1).unwrap();
+        assert_eq!(out1, a, "first visit must be lossless");
+        assert_eq!(enc.take_stats().first_visits, 2);
+        let a2: Vec<f32> = a.iter().map(|x| x + 0.01).collect();
+        let f2 = enc.encode(&[0, 1], &a2).unwrap();
+        let out2 = dec.decode(&[0, 1], &f2).unwrap();
+        let (w1, w2) = (f1.wire_bytes(), f2.wire_bytes());
+        assert!(w2 * 2 < w1, "{w2} vs {w1}");
+        for (x, y) in a2.iter().zip(&out2) {
+            assert!((x - y).abs() < 0.02, "{x} {y}");
+        }
+        // replica symmetry: identical state on both sides
+        assert_eq!(enc.state_bytes(), dec.state_bytes());
+    }
+
+    #[test]
+    fn codec_mixed_batch_and_malformed_frames() {
+        let (mut enc, mut dec) = pair(4, 8);
+        let a: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let f = enc.encode(&[0, 1], &a).unwrap();
+        dec.decode(&[0, 1], &f).unwrap();
+        // one known + one new example
+        let f2 = enc.encode(&[1, 7], &a).unwrap();
+        assert_eq!(enc.take_stats().first_visits, 1);
+        dec.decode(&[1, 7], &f2).unwrap();
+        // delta frame for an unseen decoder is an error, not a panic
+        let a3: Vec<f32> = a.iter().map(|x| x + 0.01).collect();
+        let f3 = enc.encode(&[0, 1], &a3).unwrap();
+        let (_, mut fresh_dec) = pair(4, 8);
+        let err = fresh_dec.decode(&[0, 1], &f3).unwrap_err();
+        assert!(err.to_string().contains("no message buffer"), "{err}");
+        // id-count mismatch
+        assert!(dec.decode(&[0], &f3).is_err());
+        // truncated payload
+        let cut = Frame::new(f3.tag(), f3.header().to_vec(), f3.payload()[..3].to_vec());
+        assert!(dec.decode(&[0, 1], &cut).is_err());
+    }
+
+    #[test]
+    fn codec_wire_bytes_are_measured_from_buffers() {
+        let (mut enc, _) = pair(4, 8);
+        let a: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let f = enc.encode(&[0, 1], &a).unwrap();
+        assert_eq!(f.wire_bytes(), f.to_bytes().len() as u64);
+        assert_eq!(
+            f.wire_bytes(),
+            (crate::codec::frame::FRAME_PRELUDE_BYTES + f.header().len() + f.payload().len()) as u64
+        );
     }
 }

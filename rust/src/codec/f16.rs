@@ -27,7 +27,8 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
         let half = 1u32 << (shift - 1);
         let mut v = m >> shift;
         // round to nearest even
-        if (m & (half.wrapping_mul(2) - 1)) > half || ((m >> shift) & 1 == 1 && (m & (half * 2 - 1)) == half) {
+        let rem = m & (half.wrapping_mul(2) - 1);
+        if rem > half || (rem == half && (m >> shift) & 1 == 1) {
             v += 1;
         }
         return sign | v as u16;

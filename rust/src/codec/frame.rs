@@ -1,0 +1,255 @@
+//! The framed wire message every boundary codec produces and consumes.
+//!
+//! A [`Frame`] is self-describing: a one-byte scheme tag, a
+//! scheme-specific header (shape, bit-width, scales), and the packed
+//! payload bytes. Serialized layout (all integers little-endian):
+//!
+//! ```text
+//! tag: u8 | header_len: u16 | payload_len: u32 | header | payload
+//! ```
+//!
+//! Wire accounting is *measured from these buffers* — `wire_bytes()` is
+//! exactly `to_bytes().len()` (pinned by tests), never re-derived
+//! arithmetically — and `from_bytes(to_bytes(f)) == f` bit-for-bit, so
+//! the in-memory fast path the trainer uses and the serialized path a
+//! real deployment would ship are interchangeable.
+
+use crate::util::error::Result;
+
+/// Fixed serialization prelude: tag (1) + header_len (2) + payload_len (4).
+pub const FRAME_PRELUDE_BYTES: usize = 7;
+
+/// Scheme tags. One per wire format, stable across releases (golden
+/// fixtures pin them).
+pub const TAG_RAW32: u8 = 1;
+pub const TAG_F16: u8 = 2;
+pub const TAG_DIRECTQ: u8 = 3;
+pub const TAG_AQ: u8 = 4;
+pub const TAG_TOPK: u8 = 5;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    tag: u8,
+    header: Vec<u8>,
+    payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(tag: u8, header: Vec<u8>, payload: Vec<u8>) -> Self {
+        Frame { tag, header, payload }
+    }
+
+    pub fn tag(&self) -> u8 {
+        self.tag
+    }
+
+    pub fn header(&self) -> &[u8] {
+        &self.header
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Bytes this message occupies on the wire: prelude + header +
+    /// payload, i.e. exactly `self.to_bytes().len()`.
+    pub fn wire_bytes(&self) -> u64 {
+        (FRAME_PRELUDE_BYTES + self.header.len() + self.payload.len()) as u64
+    }
+
+    /// Serialize to the wire image.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        out.push(self.tag);
+        out.extend_from_slice(&(self.header.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.header);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a wire image. Malformed input (truncation, trailing bytes,
+    /// oversized header) is an error, never a panic — frames arrive from
+    /// a peer.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Frame> {
+        crate::ensure!(
+            bytes.len() >= FRAME_PRELUDE_BYTES,
+            "frame truncated: {} bytes, need at least {FRAME_PRELUDE_BYTES}",
+            bytes.len()
+        );
+        let tag = bytes[0];
+        let header_len = u16::from_le_bytes([bytes[1], bytes[2]]) as usize;
+        let payload_len = u32::from_le_bytes([bytes[3], bytes[4], bytes[5], bytes[6]]) as usize;
+        let want = FRAME_PRELUDE_BYTES + header_len + payload_len;
+        crate::ensure!(
+            bytes.len() == want,
+            "frame length mismatch: got {} bytes, prelude says {want}",
+            bytes.len()
+        );
+        let header = bytes[FRAME_PRELUDE_BYTES..FRAME_PRELUDE_BYTES + header_len].to_vec();
+        let payload = bytes[FRAME_PRELUDE_BYTES + header_len..].to_vec();
+        Ok(Frame { tag, header, payload })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Little-endian writer for frame headers / payloads.
+#[derive(Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    pub fn with_capacity(n: usize) -> Self {
+        FrameWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> &mut Self {
+        self.buf.reserve(4 * v.len());
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn finish(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// Cursor-based little-endian reader with `Result` errors on truncation
+/// (a malformed frame from a peer must not abort the process).
+pub struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        FrameReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.pos + n <= self.buf.len(),
+            "frame truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the reader consumed everything (trailing garbage is an
+    /// error: a well-formed frame has no slack).
+    pub fn done(&self) -> Result<()> {
+        crate::ensure!(self.remaining() == 0, "frame has {} trailing bytes", self.remaining());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialize_roundtrip_is_identity() {
+        let f = Frame::new(TAG_DIRECTQ, vec![4, 1, 2, 3], vec![0xAB; 17]);
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len() as u64, f.wire_bytes());
+        assert_eq!(
+            f.wire_bytes(),
+            (FRAME_PRELUDE_BYTES + f.header().len() + f.payload().len()) as u64
+        );
+        let back = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn truncated_and_padded_frames_error() {
+        let f = Frame::new(TAG_RAW32, vec![1, 2], vec![3, 4, 5]);
+        let bytes = f.to_bytes();
+        assert!(Frame::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Frame::from_bytes(&bytes[..3]).is_err());
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(Frame::from_bytes(&padded).is_err());
+        assert!(Frame::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn reader_errors_on_truncation() {
+        let mut w = FrameWriter::default();
+        w.u8(7).u32(1234).f32(1.5);
+        let buf = w.finish();
+        let mut r = FrameReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 1234);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        r.done().unwrap();
+        assert!(r.u8().is_err());
+        let mut r2 = FrameReader::new(&buf);
+        assert!(r2.f32_vec(3).is_err());
+        assert!(r2.done().is_err()); // unconsumed bytes
+    }
+
+    #[test]
+    fn writer_reader_f32_slice() {
+        let x = [1.0f32, -2.5, 3.25];
+        let mut w = FrameWriter::default();
+        w.f32_slice(&x);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 12);
+        let mut r = FrameReader::new(&buf);
+        assert_eq!(r.f32_vec(3).unwrap(), x);
+    }
+}

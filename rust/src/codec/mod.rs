@@ -1,9 +1,10 @@
 //! The wire codecs: everything that turns activations / gradients into
 //! bytes on the (simulated) network.
 //!
-//! Semantics mirror `python/compile/kernels/ref.py` exactly — the uniform
-//! b-bit scheme of the paper (§4.1): normalize into [-1, 1] by the
-//! per-tensor max-abs `scale`, uniformly partition into `2^b` codes:
+//! Quantizer semantics mirror `python/compile/kernels/ref.py` exactly —
+//! the uniform b-bit scheme of the paper (§4.1): normalize into [-1, 1]
+//! by the per-tensor max-abs `scale`, uniformly partition into `2^b`
+//! codes:
 //!
 //! ```text
 //! code = clamp(floor((x / scale + 1) / 2 * levels + u), 0, levels)
@@ -12,119 +13,80 @@
 //!
 //! with `levels = 2^b - 1` and rounding offset `u` (0.5 = deterministic,
 //! U[0,1) = stochastic/unbiased — the Theorem 3.1 assumption on Q).
+//!
+//! # The codec API
+//!
+//! Every compression scheme is a [`BoundaryCodec`]: a stateful
+//! encoder-or-decoder half that turns activations into self-describing
+//! [`Frame`] wire messages and back. The two halves of a boundary share
+//! *only* the `Frame` — Algorithm 2's sender/receiver replica symmetry is
+//! enforced by construction, because the decoder can only reconstruct
+//! from bytes the encoder actually emitted. Schemes are constructed
+//! through [`registry`] spec strings (`"aqsgd:fw2bw4"`,
+//! `"topk:0.2@8"`, `"hybrid:aq2/topk0.2@8"`, ...); adding a scheme means
+//! adding one self-contained codec file and one registry arm, not
+//! enum surgery across the tree.
 
 pub mod delta;
 pub mod f16;
+pub mod frame;
 pub mod pack;
 pub mod quantizer;
+pub mod registry;
+pub mod schemes;
 pub mod theory;
 pub mod topk;
 pub mod tp;
 
-pub use delta::AqState;
+pub use delta::{AqCodec, AqState};
+pub use frame::Frame;
 pub use quantizer::{Rounding, UniformQuantizer};
+pub use registry::{CodecSpec, SchemeSpec};
 
-/// How each pipeline-boundary / data-parallel message is compressed.
-///
-/// `fw`/`bw` are the paper's "fwX bwY" bit-widths for forward activations
-/// and backward activation-gradients.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Compression {
-    /// Paper baseline: everything in f32.
-    Fp32,
-    /// Appendix H.4: half-precision wire format (no quantization).
-    Fp16,
-    /// DirectQ (AC-GC / TinyScript): quantize activations themselves.
-    DirectQ { fw_bits: u8, bw_bits: u8 },
-    /// AQ-SGD: quantize activation *changes* against the message buffer;
-    /// backward gradients are directly quantized (Algorithm 1 line 11).
-    AqSgd { fw_bits: u8, bw_bits: u8 },
+use crate::util::error::Result;
+
+/// Probe statistics from the most recent `encode` call (Fig. 1b's
+/// |delta| trace and Algorithm 1's first-visit accounting). Codecs with
+/// no delta/buffer concept report `None` / `0`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodeStats {
+    /// mean |value actually quantized| (the delta for AQ-SGD; `None`
+    /// means "same as the raw activation").
+    pub mean_abs_delta: Option<f64>,
+    /// examples sent full-precision this message (Algorithm 1 line 5).
+    pub first_visits: usize,
 }
 
-impl Compression {
-    pub fn parse(s: &str) -> crate::util::error::Result<Self> {
-        // forms: "fp32", "fp16", "directq:fw3bw6", "aqsgd:fw2bw4"
-        let s = s.trim();
-        let parse_bits = |spec: &str| -> crate::util::error::Result<(u8, u8)> {
-            let spec = spec.trim();
-            let rest = spec
-                .strip_prefix("fw")
-                .ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
-            let (fw, bw) = rest
-                .split_once("bw")
-                .ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
-            let (fw, bw): (u8, u8) = (fw.parse()?, bw.parse()?);
-            // validate here so a bad spec fails with a clear parse error
-            // instead of panicking later in UniformQuantizer::new
-            for bits in [fw, bw] {
-                crate::ensure!(
-                    (1..=8).contains(&bits),
-                    "bit-width {bits} out of range in {spec:?} (quantizers support 1..=8 bits)"
-                );
-            }
-            Ok((fw, bw))
-        };
-        match s {
-            "fp32" => Ok(Compression::Fp32),
-            "fp16" => Ok(Compression::Fp16),
-            _ => {
-                if let Some(spec) = s.strip_prefix("directq:") {
-                    let (fw_bits, bw_bits) = parse_bits(spec)?;
-                    Ok(Compression::DirectQ { fw_bits, bw_bits })
-                } else if let Some(spec) = s.strip_prefix("aqsgd:") {
-                    let (fw_bits, bw_bits) = parse_bits(spec)?;
-                    Ok(Compression::AqSgd { fw_bits, bw_bits })
-                } else {
-                    crate::bail!("unknown compression {s:?}")
-                }
-            }
-        }
+/// One half (sender *or* receiver) of a pipeline-boundary compression
+/// scheme. Stateful: AQ-style codecs hold their per-example message
+/// buffers, so a boundary owns one encoder and one decoder instance
+/// whose states advance in lockstep through the frames alone.
+pub trait BoundaryCodec {
+    /// Compress activation `a` (one record per id in `ids`, row-major)
+    /// into a wire frame, advancing any codec state.
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame>;
+
+    /// Reconstruct the receiver-side activation from a frame, advancing
+    /// any codec state. Malformed frames are `Err`, never a panic.
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>>;
+
+    /// Human-readable scheme label (also the registry spec fragment).
+    fn label(&self) -> String;
+
+    /// Bytes of persistent codec state (message buffers etc.).
+    fn state_bytes(&self) -> u64 {
+        0
     }
 
-    pub fn label(&self) -> String {
-        match self {
-            Compression::Fp32 => "FP32".into(),
-            Compression::Fp16 => "FP16".into(),
-            Compression::DirectQ { fw_bits, bw_bits } => {
-                format!("DirectQ fw{fw_bits} bw{bw_bits}")
-            }
-            Compression::AqSgd { fw_bits, bw_bits } => {
-                format!("AQ-SGD fw{fw_bits} bw{bw_bits}")
-            }
-        }
-    }
-
-    /// Wire bytes for a forward boundary message of `n` f32 elements.
-    ///
-    /// AQ-SGD's first-epoch messages are full precision (Algorithm 1 line
-    /// 5); pass `first_visit` accordingly.
-    pub fn fw_wire_bytes(&self, n: usize, first_visit: bool) -> u64 {
-        match self {
-            Compression::Fp32 => 4 * n as u64,
-            Compression::Fp16 => 2 * n as u64,
-            Compression::DirectQ { fw_bits, .. } => quant_wire_bytes(n, *fw_bits),
-            Compression::AqSgd { fw_bits, .. } => {
-                if first_visit {
-                    4 * n as u64
-                } else {
-                    quant_wire_bytes(n, *fw_bits)
-                }
-            }
-        }
-    }
-
-    /// Wire bytes for a backward boundary message of `n` f32 elements.
-    pub fn bw_wire_bytes(&self, n: usize) -> u64 {
-        match self {
-            Compression::Fp32 => 4 * n as u64,
-            Compression::Fp16 => 2 * n as u64,
-            Compression::DirectQ { bw_bits, .. }
-            | Compression::AqSgd { bw_bits, .. } => quant_wire_bytes(n, *bw_bits),
-        }
+    /// Probe stats of the most recent `encode` (encoder halves only).
+    fn take_stats(&mut self) -> EncodeStats {
+        EncodeStats::default()
     }
 }
 
-/// Bytes on the wire for `n` b-bit codes + the f32 scale header.
+/// Bytes on the wire for `n` b-bit codes + the f32 scale header (the
+/// quantized-payload arithmetic shared by the DP gradient compressor;
+/// boundary frames measure their own buffers instead).
 pub fn quant_wire_bytes(n: usize, bits: u8) -> u64 {
     pack::packed_len(n, bits) as u64 + 4
 }
@@ -134,49 +96,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_roundtrip() {
-        assert_eq!(Compression::parse("fp32").unwrap(), Compression::Fp32);
-        assert_eq!(
-            Compression::parse("aqsgd:fw2bw4").unwrap(),
-            Compression::AqSgd { fw_bits: 2, bw_bits: 4 }
-        );
-        assert_eq!(
-            Compression::parse("directq:fw3bw6").unwrap(),
-            Compression::DirectQ { fw_bits: 3, bw_bits: 6 }
-        );
-        assert!(Compression::parse("nope").is_err());
-        assert!(Compression::parse("aqsgd:fw2").is_err());
-    }
-
-    #[test]
-    fn parse_trims_whitespace() {
-        assert_eq!(Compression::parse(" fp16 ").unwrap(), Compression::Fp16);
-        assert_eq!(
-            Compression::parse("aqsgd: fw2bw4 ").unwrap(),
-            Compression::AqSgd { fw_bits: 2, bw_bits: 4 }
-        );
-    }
-
-    #[test]
-    fn parse_rejects_out_of_range_bits() {
-        for spec in ["aqsgd:fw0bw0", "directq:fw9bw12", "aqsgd:fw4bw0", "directq:fw0bw4"] {
-            let err = Compression::parse(spec).unwrap_err();
-            assert!(err.to_string().contains("out of range"), "{spec}: {err}");
-        }
-        // boundary widths still accepted
-        assert!(Compression::parse("aqsgd:fw1bw8").is_ok());
-    }
-
-    #[test]
     fn wire_bytes_shapes() {
         // 4 bits: two codes per byte (+4B scale)
         assert_eq!(quant_wire_bytes(8, 4), 4 + 4);
         assert_eq!(quant_wire_bytes(9, 4), 5 + 4);
-        // first AQ visit is full precision
-        let c = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
-        assert_eq!(c.fw_wire_bytes(100, true), 400);
-        assert!(c.fw_wire_bytes(100, false) < 40);
-        // fp16 halves
-        assert_eq!(Compression::Fp16.fw_wire_bytes(100, false), 200);
     }
 }

@@ -1,0 +1,474 @@
+//! The codec registry: spec strings → boundary codec pairs.
+//!
+//! A full boundary configuration is a [`CodecSpec`]: one [`SchemeSpec`]
+//! for the forward (activation) direction and one for the backward
+//! (activation-gradient) direction. The grammar:
+//!
+//! ```text
+//! spec     := "fp32" | "fp16"
+//!           | "directq:fw<bits>bw<bits>"      DirectQ both directions
+//!           | "aqsgd:fw<bits>bw<bits>"        AQ fw, DirectQ bw (Alg. 1)
+//!           | "topk:<frac>@<bits>"            top-k both directions
+//!           | "hybrid:<dir>/<dir>"            any fw/bw composition
+//! dir      := "fp32" | "fp16" | "q<bits>" | "aq<bits>"
+//!           | "topk<frac>@<bits>"
+//! ```
+//!
+//! e.g. `"hybrid:aq2/topk0.2@8"` is Appendix H.6's split-learning scheme
+//! (2-bit AQ forward, top-20% + 8-bit backward). Bits are 1..=8, frac in
+//! (0, 1]. `CodecSpec::parse` subsumes the old `Compression::parse`;
+//! every boundary, the trainer, and the examples obtain codecs here.
+
+use std::rc::Rc;
+
+use crate::runtime::QuantRuntime;
+use crate::store::{ActivationStore, MemStore};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+use super::delta::AqCodec;
+use super::quantizer::Rounding;
+use super::schemes::{DirectQCodec, F16Codec, Raw32Codec, TopKCodec};
+use super::BoundaryCodec;
+
+/// One direction's compression scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchemeSpec {
+    /// FP32 passthrough (paper baseline).
+    Raw32,
+    /// Half-precision wire (App. H.4).
+    F16,
+    /// Direct b-bit quantization (AC-GC / TinyScript style).
+    DirectQ { bits: u8 },
+    /// AQ-SGD delta quantization against per-example buffers.
+    Aq { bits: u8 },
+    /// Top-`frac` magnitude sparsification + b-bit quantization (App. H.6).
+    TopK { frac: f64, bits: u8 },
+}
+
+/// Everything a scheme needs to build its encoder/decoder halves.
+pub struct BuildCtx<'a> {
+    /// elements per example record — sizes AQ buffers (via the store
+    /// factory) and bounds the dense length per-message codecs accept
+    pub example_len: usize,
+    pub rounding: Rounding,
+    pub seed: u64,
+    /// store key namespace (the boundary id)
+    pub ns: u32,
+    pub hlo: Option<Rc<QuantRuntime>>,
+    /// store factory; called with a role tag ("enc" / "dec") so the two
+    /// replicas get distinct backing (e.g. separate disk files)
+    pub mk_store: &'a mut dyn FnMut(&str) -> Result<Box<dyn ActivationStore>>,
+}
+
+impl SchemeSpec {
+    /// Parse one direction spec (the `dir` grammar above).
+    pub fn parse(s: &str) -> Result<SchemeSpec> {
+        let s = s.trim();
+        match s {
+            "fp32" => return Ok(SchemeSpec::Raw32),
+            "fp16" => return Ok(SchemeSpec::F16),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("topk") {
+            return parse_topk(rest, s);
+        }
+        if let Some(bits) = s.strip_prefix("aq") {
+            return Ok(SchemeSpec::Aq { bits: parse_bits_value(bits, s)? });
+        }
+        if let Some(bits) = s.strip_prefix('q') {
+            return Ok(SchemeSpec::DirectQ { bits: parse_bits_value(bits, s)? });
+        }
+        crate::bail!("unknown scheme {s:?} (fp32|fp16|q<bits>|aq<bits>|topk<frac>@<bits>)")
+    }
+
+    /// Canonical spec fragment (round-trips through [`SchemeSpec::parse`]).
+    pub fn spec_string(&self) -> String {
+        match self {
+            SchemeSpec::Raw32 => "fp32".into(),
+            SchemeSpec::F16 => "fp16".into(),
+            SchemeSpec::DirectQ { bits } => format!("q{bits}"),
+            SchemeSpec::Aq { bits } => format!("aq{bits}"),
+            SchemeSpec::TopK { frac, bits } => format!("topk{frac}@{bits}"),
+        }
+    }
+
+    /// Build the (encoder, decoder) halves for this scheme. The halves
+    /// share no state — only the frames the encoder emits.
+    pub fn build_pair(
+        &self,
+        ctx: &mut BuildCtx,
+    ) -> Result<(Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>)> {
+        Ok(match *self {
+            SchemeSpec::Raw32 => (Box::new(Raw32Codec), Box::new(Raw32Codec)),
+            SchemeSpec::F16 => (Box::new(F16Codec), Box::new(F16Codec)),
+            SchemeSpec::DirectQ { bits } => (
+                Box::new(DirectQCodec::new(bits, ctx.rounding, ctx.seed, ctx.hlo.clone())),
+                Box::new(DirectQCodec::new(bits, ctx.rounding, ctx.seed ^ 1, ctx.hlo.clone())),
+            ),
+            SchemeSpec::Aq { bits } => {
+                let enc_store = (ctx.mk_store)("enc")?;
+                let dec_store = (ctx.mk_store)("dec")?;
+                (
+                    Box::new(AqCodec::new(
+                        bits,
+                        ctx.rounding,
+                        enc_store,
+                        ctx.ns,
+                        ctx.seed,
+                        ctx.hlo.clone(),
+                    )),
+                    Box::new(AqCodec::new(
+                        bits,
+                        ctx.rounding,
+                        dec_store,
+                        ctx.ns,
+                        ctx.seed ^ 1,
+                        ctx.hlo.clone(),
+                    )),
+                )
+            }
+            SchemeSpec::TopK { frac, bits } => (
+                Box::new(TopKCodec::new(frac, bits, ctx.rounding, ctx.example_len, ctx.seed)),
+                Box::new(TopKCodec::new(frac, bits, ctx.rounding, ctx.example_len, ctx.seed ^ 1)),
+            ),
+        })
+    }
+}
+
+/// Convenience: build a scheme's (encoder, decoder) pair backed by
+/// in-memory stores — what tests, benches, and wire-size measurement use.
+pub fn build_mem_pair(
+    scheme: &SchemeSpec,
+    example_len: usize,
+    rounding: Rounding,
+    seed: u64,
+) -> Result<(Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>)> {
+    let mut mk = |_role: &str| -> Result<Box<dyn ActivationStore>> {
+        Ok(Box::new(MemStore::new(example_len)))
+    };
+    scheme.build_pair(&mut BuildCtx {
+        example_len,
+        rounding,
+        seed,
+        ns: 0,
+        hlo: None,
+        mk_store: &mut mk,
+    })
+}
+
+// ---------------------------------------------------------------------------
+
+/// A full boundary configuration: forward + backward schemes. Replaces
+/// the old closed `Compression` enum.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodecSpec {
+    pub fw: SchemeSpec,
+    pub bw: SchemeSpec,
+}
+
+impl CodecSpec {
+    pub fn fp32() -> Self {
+        CodecSpec { fw: SchemeSpec::Raw32, bw: SchemeSpec::Raw32 }
+    }
+
+    pub fn fp16() -> Self {
+        CodecSpec { fw: SchemeSpec::F16, bw: SchemeSpec::F16 }
+    }
+
+    pub fn directq(fw_bits: u8, bw_bits: u8) -> Self {
+        CodecSpec {
+            fw: SchemeSpec::DirectQ { bits: fw_bits },
+            bw: SchemeSpec::DirectQ { bits: bw_bits },
+        }
+    }
+
+    /// AQ-SGD: delta-quantized forward, directly quantized backward
+    /// (Algorithm 1 line 11).
+    pub fn aqsgd(fw_bits: u8, bw_bits: u8) -> Self {
+        CodecSpec {
+            fw: SchemeSpec::Aq { bits: fw_bits },
+            bw: SchemeSpec::DirectQ { bits: bw_bits },
+        }
+    }
+
+    pub fn topk(frac: f64, bits: u8) -> Self {
+        let s = SchemeSpec::TopK { frac, bits };
+        CodecSpec { fw: s, bw: s }
+    }
+
+    pub fn hybrid(fw: SchemeSpec, bw: SchemeSpec) -> Self {
+        CodecSpec { fw, bw }
+    }
+
+    /// Parse a full spec string (see the module grammar).
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim();
+        match s {
+            "fp32" => return Ok(CodecSpec::fp32()),
+            "fp16" => return Ok(CodecSpec::fp16()),
+            _ => {}
+        }
+        if let Some(spec) = s.strip_prefix("directq:") {
+            let (fw, bw) = parse_fwbw(spec)?;
+            return Ok(CodecSpec::directq(fw, bw));
+        }
+        if let Some(spec) = s.strip_prefix("aqsgd:") {
+            let (fw, bw) = parse_fwbw(spec)?;
+            return Ok(CodecSpec::aqsgd(fw, bw));
+        }
+        if let Some(spec) = s.strip_prefix("topk:") {
+            let scheme = parse_topk(spec.trim(), s)?;
+            return Ok(CodecSpec { fw: scheme, bw: scheme });
+        }
+        if let Some(spec) = s.strip_prefix("hybrid:") {
+            let (fw, bw) = spec
+                .split_once('/')
+                .ok_or_else(|| crate::err!("hybrid spec {s:?} needs <fw>/<bw>"))?;
+            return Ok(CodecSpec { fw: SchemeSpec::parse(fw)?, bw: SchemeSpec::parse(bw)? });
+        }
+        crate::bail!(
+            "unknown compression {s:?} (fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY | \
+             topk:<frac>@<bits> | hybrid:<fw>/<bw>)"
+        )
+    }
+
+    /// Canonical spec string (round-trips through [`CodecSpec::parse`]).
+    pub fn spec_string(&self) -> String {
+        match (&self.fw, &self.bw) {
+            (SchemeSpec::Raw32, SchemeSpec::Raw32) => "fp32".into(),
+            (SchemeSpec::F16, SchemeSpec::F16) => "fp16".into(),
+            (SchemeSpec::DirectQ { bits: f }, SchemeSpec::DirectQ { bits: b }) => {
+                format!("directq:fw{f}bw{b}")
+            }
+            (SchemeSpec::Aq { bits: f }, SchemeSpec::DirectQ { bits: b }) => {
+                format!("aqsgd:fw{f}bw{b}")
+            }
+            (SchemeSpec::TopK { frac, bits }, bw) if self.fw == *bw => {
+                format!("topk:{frac}@{bits}")
+            }
+            (fw, bw) => format!("hybrid:{}/{}", fw.spec_string(), bw.spec_string()),
+        }
+    }
+
+    /// Display label (table headers, trainer logs).
+    pub fn label(&self) -> String {
+        match (&self.fw, &self.bw) {
+            (SchemeSpec::Raw32, SchemeSpec::Raw32) => "FP32".into(),
+            (SchemeSpec::F16, SchemeSpec::F16) => "FP16".into(),
+            (SchemeSpec::DirectQ { bits: f }, SchemeSpec::DirectQ { bits: b }) => {
+                format!("DirectQ fw{f} bw{b}")
+            }
+            (SchemeSpec::Aq { bits: f }, SchemeSpec::DirectQ { bits: b }) => {
+                format!("AQ-SGD fw{f} bw{b}")
+            }
+            (SchemeSpec::TopK { frac, bits }, bw) if self.fw == *bw => {
+                format!("TopK {:.0}% @{bits}", frac * 100.0)
+            }
+            (fw, bw) => format!("fw {} / bw {}", fw.spec_string(), bw.spec_string()),
+        }
+    }
+
+    /// Wire bytes of one forward message of `n` f32 elements, *measured*
+    /// by encoding a synthetic activation through the real codec (no
+    /// hand-maintained arithmetic). `first_visit` charges AQ-style
+    /// schemes their full-precision first epoch (Algorithm 1 line 5).
+    pub fn fw_wire_bytes(&self, n: usize, first_visit: bool) -> u64 {
+        measured_wire_bytes(&self.fw, n, first_visit)
+    }
+
+    /// Wire bytes of one backward message of `n` f32 elements (measured;
+    /// steady state for stateful schemes).
+    pub fn bw_wire_bytes(&self, n: usize) -> u64 {
+        measured_wire_bytes(&self.bw, n, false)
+    }
+}
+
+/// Encode a synthetic `n`-element message through a fresh codec and
+/// report the frame's size. Used by the throughput/regime simulations,
+/// so their byte accounting is the codec's own, not a parallel formula.
+/// Deterministic, so results are memoized — the paper-regime sweeps ask
+/// for the same (scheme, n) pair hundreds of times.
+fn measured_wire_bytes(scheme: &SchemeSpec, n: usize, first_visit: bool) -> u64 {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<(String, usize, bool), u64>>> = OnceLock::new();
+    // only AQ-style schemes distinguish first visit from steady state
+    let first_visit = first_visit && matches!(scheme, SchemeSpec::Aq { .. });
+    let key = (scheme.spec_string(), n, first_visit);
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&v) = cache.lock().unwrap().get(&key) {
+        return v;
+    }
+    let (mut enc, _dec) =
+        build_mem_pair(scheme, n, Rounding::Nearest, 0x5EED).expect("build measurement codec");
+    let mut rng = Rng::new(0xFACE);
+    let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let first = enc.encode(&[0], &a).expect("measurement encode");
+    let v = if first_visit || !matches!(scheme, SchemeSpec::Aq { .. }) {
+        first.wire_bytes()
+    } else {
+        // steady state: second visit with a small drift
+        let a2: Vec<f32> = a.iter().map(|v| v + 1e-3).collect();
+        enc.encode(&[0], &a2).expect("measurement encode").wire_bytes()
+    };
+    cache.lock().unwrap().insert(key, v);
+    v
+}
+
+/// Representative parseable specs covering every registered scheme —
+/// what the frame property tests and the codec bench iterate over.
+pub fn example_specs() -> Vec<&'static str> {
+    vec![
+        "fp32",
+        "fp16",
+        "directq:fw3bw6",
+        "aqsgd:fw2bw4",
+        "topk:0.2@8",
+        "hybrid:aq2/topk0.2@8",
+        "hybrid:fp16/q4",
+    ]
+}
+
+// ---------------------------------------------------------------------------
+
+fn parse_bits_value(v: &str, whole: &str) -> Result<u8> {
+    let bits: u8 = v
+        .trim()
+        .parse()
+        .map_err(|_| crate::err!("bad bit-width {v:?} in {whole:?}"))?;
+    check_bits(bits, whole)?;
+    Ok(bits)
+}
+
+fn check_bits(bits: u8, whole: &str) -> Result<()> {
+    crate::ensure!(
+        (1..=8).contains(&bits),
+        "bit-width {bits} out of range in {whole:?} (quantizers support 1..=8 bits)"
+    );
+    Ok(())
+}
+
+/// "fwXbwY" → (X, Y), validating both widths.
+fn parse_fwbw(spec: &str) -> Result<(u8, u8)> {
+    let spec = spec.trim();
+    let rest = spec.strip_prefix("fw").ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
+    let (fw, bw) = rest.split_once("bw").ok_or_else(|| crate::err!("bad bits spec {spec:?}"))?;
+    let fw: u8 = fw.trim().parse().map_err(|_| crate::err!("bad bits spec {spec:?}"))?;
+    let bw: u8 = bw.trim().parse().map_err(|_| crate::err!("bad bits spec {spec:?}"))?;
+    check_bits(fw, spec)?;
+    check_bits(bw, spec)?;
+    Ok((fw, bw))
+}
+
+/// "<frac>@<bits>" (after the `topk` keyword) → TopK scheme.
+fn parse_topk(rest: &str, whole: &str) -> Result<SchemeSpec> {
+    let (frac, bits) = rest
+        .split_once('@')
+        .ok_or_else(|| crate::err!("topk spec {whole:?} needs <frac>@<bits>"))?;
+    let frac: f64 =
+        frac.trim().parse().map_err(|_| crate::err!("bad top-k fraction in {whole:?}"))?;
+    crate::ensure!(
+        frac > 0.0 && frac <= 1.0,
+        "top-k fraction {frac} out of range in {whole:?} (want 0 < frac <= 1)"
+    );
+    let bits = parse_bits_value(bits, whole)?;
+    Ok(SchemeSpec::TopK { frac, bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(CodecSpec::parse("fp32").unwrap(), CodecSpec::fp32());
+        assert_eq!(CodecSpec::parse("aqsgd:fw2bw4").unwrap(), CodecSpec::aqsgd(2, 4));
+        assert_eq!(CodecSpec::parse("directq:fw3bw6").unwrap(), CodecSpec::directq(3, 6));
+        assert_eq!(CodecSpec::parse("topk:0.2@8").unwrap(), CodecSpec::topk(0.2, 8));
+        assert_eq!(
+            CodecSpec::parse("hybrid:aq2/topk0.2@8").unwrap(),
+            CodecSpec::hybrid(SchemeSpec::Aq { bits: 2 }, SchemeSpec::TopK { frac: 0.2, bits: 8 })
+        );
+        assert!(CodecSpec::parse("nope").is_err());
+        assert!(CodecSpec::parse("aqsgd:fw2").is_err());
+        assert!(CodecSpec::parse("hybrid:aq2").is_err());
+        assert!(CodecSpec::parse("topk:0.2").is_err());
+    }
+
+    #[test]
+    fn parse_trims_whitespace() {
+        assert_eq!(CodecSpec::parse(" fp16 ").unwrap(), CodecSpec::fp16());
+        assert_eq!(CodecSpec::parse("aqsgd: fw2bw4 ").unwrap(), CodecSpec::aqsgd(2, 4));
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range() {
+        for spec in ["aqsgd:fw0bw0", "directq:fw9bw12", "aqsgd:fw4bw0", "directq:fw0bw4",
+                     "topk:0.2@9", "hybrid:aq0/q4"] {
+            let err = CodecSpec::parse(spec).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{spec}: {err}");
+        }
+        for spec in ["topk:0@4", "topk:1.5@4", "topk:-0.1@4"] {
+            assert!(CodecSpec::parse(spec).is_err(), "{spec} should be rejected");
+        }
+        // boundary widths still accepted
+        assert!(CodecSpec::parse("aqsgd:fw1bw8").is_ok());
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in example_specs() {
+            let spec = CodecSpec::parse(s).unwrap();
+            let canon = spec.spec_string();
+            assert_eq!(CodecSpec::parse(&canon).unwrap(), spec, "{s} -> {canon}");
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_vocabulary() {
+        assert_eq!(CodecSpec::fp32().label(), "FP32");
+        assert_eq!(CodecSpec::fp16().label(), "FP16");
+        assert_eq!(CodecSpec::aqsgd(2, 4).label(), "AQ-SGD fw2 bw4");
+        assert_eq!(CodecSpec::directq(3, 6).label(), "DirectQ fw3 bw6");
+        assert_eq!(CodecSpec::topk(0.2, 8).label(), "TopK 20% @8");
+        assert_eq!(
+            CodecSpec::parse("hybrid:aq2/topk0.2@8").unwrap().label(),
+            "fw aq2 / bw topk0.2@8"
+        );
+    }
+
+    #[test]
+    fn measured_wire_bytes_track_scheme() {
+        let n = 1000;
+        let fp32 = CodecSpec::fp32().fw_wire_bytes(n, false);
+        assert!(fp32 >= 4 * n as u64, "fp32 {fp32}");
+        assert!(fp32 < 4 * n as u64 + 64, "fp32 header overhead too large: {fp32}");
+        let fp16 = CodecSpec::fp16().fw_wire_bytes(n, false);
+        assert!(fp16 > 2 * n as u64 && fp16 < 2 * n as u64 + 64);
+        let aq = CodecSpec::aqsgd(2, 4);
+        // first epoch full precision, steady state ~2 bits/element
+        assert!(aq.fw_wire_bytes(n, true) >= 4 * n as u64);
+        let steady = aq.fw_wire_bytes(n, false);
+        assert!(steady < n as u64, "aq2 steady {steady}");
+        assert!(aq.bw_wire_bytes(n) < 4 * n as u64 / 7);
+        // topk 20% @8: ~20% indices (4B) + 20% codes (1B)
+        let tk = CodecSpec::topk(0.2, 8).bw_wire_bytes(n);
+        assert!(tk < 4 * n as u64 / 3, "topk {tk}");
+    }
+
+    #[test]
+    fn every_example_spec_builds() {
+        for s in example_specs() {
+            let spec = CodecSpec::parse(s).unwrap();
+            for scheme in [&spec.fw, &spec.bw] {
+                let (mut enc, mut dec) =
+                    build_mem_pair(scheme, 16, Rounding::Nearest, 1).unwrap();
+                let a: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+                let f = enc.encode(&[0], &a).unwrap();
+                let out = dec.decode(&[0], &f).unwrap();
+                assert_eq!(out.len(), a.len(), "{s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! The stateless / per-message boundary codecs: FP32 passthrough, FP16
+//! wire (App. H.4), DirectQ (AC-GC / TinyScript-style direct activation
+//! quantization), and top-k sparsification + quantization (App. H.6).
+//! The stateful AQ-SGD delta codec lives in `codec::delta`.
+//!
+//! Each codec is one self-contained frame format:
+//!
+//! | codec   | tag | header                          | payload              |
+//! |---------|-----|---------------------------------|----------------------|
+//! | raw32   | 1   | n: u32                          | n × f32 LE           |
+//! | f16     | 2   | n: u32                          | n × f16 LE           |
+//! | directq | 3   | bits: u8, n: u32, scale: f32    | packed codes         |
+//! | topk    | 5   | bits: u8, n: u32, k: u32, scale | k × u32 idx + codes  |
+
+use std::rc::Rc;
+
+use crate::runtime::QuantRuntime;
+use crate::util::error::Result;
+use crate::util::Rng;
+
+use super::frame::{Frame, FrameReader, FrameWriter, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK};
+use super::quantizer::{Rounding, UniformQuantizer};
+use super::{f16, pack, topk, BoundaryCodec};
+
+/// FP32 passthrough: the paper's no-compression baseline.
+pub struct Raw32Codec;
+
+impl BoundaryCodec for Raw32Codec {
+    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
+        let mut h = FrameWriter::default();
+        h.u32(a.len() as u32);
+        let mut p = FrameWriter::with_capacity(4 * a.len());
+        p.f32_slice(a);
+        Ok(Frame::new(TAG_RAW32, h.finish(), p.finish()))
+    }
+
+    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        crate::ensure!(frame.tag() == TAG_RAW32, "raw32 codec got frame tag {}", frame.tag());
+        let mut h = FrameReader::new(frame.header());
+        let n = h.u32()? as usize;
+        h.done()?;
+        let mut p = FrameReader::new(frame.payload());
+        let out = p.f32_vec(n)?;
+        p.done()?;
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        "fp32".into()
+    }
+}
+
+/// IEEE binary16 wire format (paper Appendix H.4).
+pub struct F16Codec;
+
+impl BoundaryCodec for F16Codec {
+    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
+        let mut h = FrameWriter::default();
+        h.u32(a.len() as u32);
+        let mut payload = Vec::new();
+        f16::encode(a, &mut payload);
+        Ok(Frame::new(TAG_F16, h.finish(), payload))
+    }
+
+    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        crate::ensure!(frame.tag() == TAG_F16, "f16 codec got frame tag {}", frame.tag());
+        let mut h = FrameReader::new(frame.header());
+        let n = h.u32()? as usize;
+        h.done()?;
+        crate::ensure!(
+            frame.payload().len() == 2 * n,
+            "f16 frame payload {} bytes, want {}",
+            frame.payload().len(),
+            2 * n
+        );
+        let mut out = Vec::new();
+        f16::decode(frame.payload(), &mut out);
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        "fp16".into()
+    }
+}
+
+/// Direct b-bit quantization of the activation itself (one per-message
+/// max-abs scale), optionally through the Pallas HLO kernels.
+pub struct DirectQCodec {
+    bits: u8,
+    rounding: Rounding,
+    rng: Rng,
+    hlo: Option<Rc<QuantRuntime>>,
+}
+
+impl DirectQCodec {
+    pub fn new(bits: u8, rounding: Rounding, seed: u64, hlo: Option<Rc<QuantRuntime>>) -> Self {
+        DirectQCodec { bits, rounding, rng: Rng::new(seed), hlo }
+    }
+}
+
+impl BoundaryCodec for DirectQCodec {
+    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
+        let (codes, scale) = match &self.hlo {
+            Some(q) if q.n_elements() == a.len() => q.dq_encode(a, self.bits)?,
+            _ => {
+                let q = UniformQuantizer::new(self.bits, self.rounding);
+                let mut codes = vec![0u8; a.len()];
+                let scale = q.encode(a, &mut codes, &mut self.rng);
+                (codes, scale)
+            }
+        };
+        let mut h = FrameWriter::default();
+        h.u8(self.bits).u32(a.len() as u32).f32(scale);
+        Ok(Frame::new(TAG_DIRECTQ, h.finish(), pack::pack(&codes, self.bits)))
+    }
+
+    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        crate::ensure!(frame.tag() == TAG_DIRECTQ, "directq codec got frame tag {}", frame.tag());
+        let mut h = FrameReader::new(frame.header());
+        let (bits, n, scale) = (h.u8()?, h.u32()? as usize, h.f32()?);
+        h.done()?;
+        crate::ensure!(
+            bits == self.bits,
+            "directq frame is {bits}-bit but this boundary is configured for {}",
+            self.bits
+        );
+        crate::ensure!(
+            frame.payload().len() == pack::packed_len(n, bits),
+            "directq frame payload {} bytes, want {}",
+            frame.payload().len(),
+            pack::packed_len(n, bits)
+        );
+        let codes = pack::unpack(frame.payload(), bits, n);
+        match &self.hlo {
+            Some(q) if q.n_elements() == n => q.dq_decode(&codes, scale, bits),
+            _ => {
+                let q = UniformQuantizer::new(bits, self.rounding);
+                let mut out = vec![0f32; n];
+                q.decode(&codes, scale, &mut out);
+                Ok(out)
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("q{}", self.bits)
+    }
+}
+
+/// Top-k magnitude sparsification + b-bit quantization of the kept
+/// values (paper Appendix H.6's `bw8[0.2]` split-learning scheme).
+pub struct TopKCodec {
+    frac: f64,
+    bits: u8,
+    quant: UniformQuantizer,
+    /// elements per example record — bounds the dense length a frame may
+    /// claim, so a malformed header cannot force a huge allocation
+    el: usize,
+    rng: Rng,
+}
+
+impl TopKCodec {
+    pub fn new(frac: f64, bits: u8, rounding: Rounding, el: usize, seed: u64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "topk frac must be in (0, 1], got {frac}");
+        TopKCodec {
+            frac,
+            bits,
+            quant: UniformQuantizer::new(bits, rounding),
+            el,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl BoundaryCodec for TopKCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        crate::ensure!(
+            a.len() == ids.len() * self.el,
+            "topk message length {} != {} ids x {} elements",
+            a.len(),
+            ids.len(),
+            self.el
+        );
+        let msg = topk::encode_with(a, self.frac, &self.quant, &mut self.rng);
+        let mut h = FrameWriter::default();
+        h.u8(self.bits).u32(a.len() as u32).u32(msg.indices.len() as u32).f32(msg.scale);
+        let mut p = FrameWriter::with_capacity(
+            4 * msg.indices.len() + pack::packed_len(msg.codes.len(), self.bits),
+        );
+        for &i in &msg.indices {
+            p.u32(i);
+        }
+        p.bytes(&pack::pack(&msg.codes, self.bits));
+        Ok(Frame::new(TAG_TOPK, h.finish(), p.finish()))
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        crate::ensure!(frame.tag() == TAG_TOPK, "topk codec got frame tag {}", frame.tag());
+        let mut h = FrameReader::new(frame.header());
+        let (bits, n, k, scale) = (h.u8()?, h.u32()? as usize, h.u32()? as usize, h.f32()?);
+        h.done()?;
+        crate::ensure!(
+            bits == self.bits,
+            "topk frame is {bits}-bit but this boundary is configured for {}",
+            self.bits
+        );
+        // bound n by the configured batch shape before allocating anything
+        crate::ensure!(
+            n == ids.len() * self.el,
+            "topk frame claims {n} elements, boundary expects {} ids x {} elements",
+            ids.len(),
+            self.el
+        );
+        crate::ensure!(k <= n, "topk frame keeps {k} of {n} entries");
+        let mut p = FrameReader::new(frame.payload());
+        let mut indices = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = p.u32()? as usize;
+            crate::ensure!(i < n, "topk index {i} out of range (n = {n})");
+            indices.push(i);
+        }
+        let codes = pack::unpack(p.bytes(pack::packed_len(k, bits))?, bits, k);
+        p.done()?;
+        let mut vals = vec![0f32; k];
+        self.quant.decode(&codes, scale, &mut vals);
+        let mut out = vec![0f32; n];
+        for (&i, &v) in indices.iter().zip(&vals) {
+            out[i] = v;
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        format!("topk{}@{}", self.frac, self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(11);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn raw32_is_lossless_and_measured() {
+        let mut enc = Raw32Codec;
+        let mut dec = Raw32Codec;
+        let a = sample(37);
+        let f = enc.encode(&[0], &a).unwrap();
+        assert_eq!(f.wire_bytes(), f.to_bytes().len() as u64);
+        assert_eq!(dec.decode(&[0], &f).unwrap(), a);
+    }
+
+    #[test]
+    fn f16_decode_checks_payload_length() {
+        let mut enc = F16Codec;
+        let a = sample(9);
+        let f = enc.encode(&[0], &a).unwrap();
+        let mut bad = Frame::new(f.tag(), f.header().to_vec(), f.payload()[..4].to_vec());
+        assert!(F16Codec.decode(&[0], &bad).is_err());
+        bad = Frame::new(TAG_RAW32, f.header().to_vec(), f.payload().to_vec());
+        assert!(F16Codec.decode(&[0], &bad).is_err());
+    }
+
+    #[test]
+    fn directq_roundtrip_bounded_error() {
+        let a = sample(100);
+        let mut enc = DirectQCodec::new(4, Rounding::Nearest, 1, None);
+        let mut dec = DirectQCodec::new(4, Rounding::Nearest, 2, None);
+        let f = enc.encode(&[0], &a).unwrap();
+        let out = dec.decode(&[0], &f).unwrap();
+        let scale = UniformQuantizer::scale(&a);
+        for (x, y) in a.iter().zip(&out) {
+            assert!((x - y).abs() <= scale / 15.0 + 1e-6);
+        }
+        // bit-width mismatch between peers is an error, not UB
+        let mut dec8 = DirectQCodec::new(8, Rounding::Nearest, 3, None);
+        assert!(dec8.decode(&[0], &f).is_err());
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_rejects_bad_indices() {
+        let mut x = vec![0.01f32; 50];
+        x[7] = 4.0;
+        x[31] = -6.0;
+        let mut enc = TopKCodec::new(0.04, 8, Rounding::Nearest, 50, 1);
+        let mut dec = TopKCodec::new(0.04, 8, Rounding::Nearest, 50, 2);
+        let f = enc.encode(&[0], &x).unwrap();
+        let out = dec.decode(&[0], &f).unwrap();
+        assert!((out[31] + 6.0).abs() < 0.1);
+        assert_eq!(out[0], 0.0);
+        // corrupt an index beyond n
+        let mut payload = f.payload().to_vec();
+        payload[0..4].copy_from_slice(&200u32.to_le_bytes());
+        let bad = Frame::new(f.tag(), f.header().to_vec(), payload);
+        assert!(dec.decode(&[0], &bad).is_err());
+    }
+}

@@ -58,7 +58,15 @@ mod tests {
     use super::*;
 
     fn consts() -> Constants {
-        Constants { l_f: 1.0, l_fb: 1.0, ell_a: 1.0, c_a: 1.0, c_fb: 1.0, sigma2: 1.0, n_samples: 100 }
+        Constants {
+            l_f: 1.0,
+            l_fb: 1.0,
+            ell_a: 1.0,
+            c_a: 1.0,
+            c_fb: 1.0,
+            sigma2: 1.0,
+            n_samples: 100,
+        }
     }
 
     #[test]

@@ -20,8 +20,15 @@ impl TopKMessage {
     }
 }
 
-/// Select the `frac` largest-|x| entries, quantize them to `bits`.
+/// Select the `frac` largest-|x| entries, quantize them to `bits`
+/// (deterministic rounding — the paper's configuration).
 pub fn encode(x: &[f32], frac: f64, bits: u8, rng: &mut Rng) -> TopKMessage {
+    encode_with(x, frac, &UniformQuantizer::new(bits, Rounding::Nearest), rng)
+}
+
+/// Like [`encode`], with an explicit quantizer (rounding mode / bits come
+/// from the registry-built codec).
+pub fn encode_with(x: &[f32], frac: f64, q: &UniformQuantizer, rng: &mut Rng) -> TopKMessage {
     let k = ((x.len() as f64 * frac).ceil() as usize).clamp(1, x.len());
     let mut idx: Vec<u32> = (0..x.len() as u32).collect();
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -33,7 +40,6 @@ pub fn encode(x: &[f32], frac: f64, bits: u8, rng: &mut Rng) -> TopKMessage {
     let mut indices: Vec<u32> = idx[..k].to_vec();
     indices.sort_unstable();
     let vals: Vec<f32> = indices.iter().map(|&i| x[i as usize]).collect();
-    let q = UniformQuantizer::new(bits, Rounding::Nearest);
     let mut codes = vec![0u8; k];
     let scale = q.encode(&vals, &mut codes, rng);
     TopKMessage { indices, codes, scale, len: x.len() }

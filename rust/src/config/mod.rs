@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use crate::codec::Compression;
+use crate::codec::CodecSpec;
 use crate::pipeline::Schedule;
 use crate::util::error::Result;
 
@@ -81,7 +81,8 @@ pub struct TrainConfig {
     /// artifacts/<model> directory name.
     pub model: String,
     pub artifacts_dir: String,
-    pub compression: Compression,
+    /// Boundary codec spec (see `codec::registry` for the grammar).
+    pub compression: CodecSpec,
     /// Stochastic rounding for the quantizers (theory wants it; paper's
     /// implementation uses deterministic — default false).
     pub stochastic_rounding: bool,
@@ -118,7 +119,7 @@ impl TrainConfig {
         TrainConfig {
             model: model.to_string(),
             artifacts_dir: "artifacts".to_string(),
-            compression: Compression::Fp32,
+            compression: CodecSpec::fp32(),
             stochastic_rounding: false,
             m_bits: None,
             store: "mem".to_string(),
@@ -143,7 +144,7 @@ impl TrainConfig {
     pub fn from_cli(cli: &Cli) -> Result<Self> {
         let mut c = Self::defaults(&cli.str("model", "tiny"));
         c.artifacts_dir = cli.str("artifacts", "artifacts");
-        c.compression = Compression::parse(&cli.str("compression", "fp32"))?;
+        c.compression = CodecSpec::parse(&cli.str("compression", "fp32"))?;
         c.stochastic_rounding = cli.bool("stochastic");
         c.m_bits = match cli.usize("m-bits", 0)? {
             0 => None,
@@ -205,7 +206,7 @@ mod tests {
             "--model tiny --compression aqsgd:fw2bw4 --bandwidth 100mbps --dp 4 --dp-bits 4 --m-bits 8",
         ))
         .unwrap();
-        assert_eq!(c.compression, Compression::AqSgd { fw_bits: 2, bw_bits: 4 });
+        assert_eq!(c.compression, CodecSpec::aqsgd(2, 4));
         assert_eq!(c.bandwidth_bps, 100e6);
         assert_eq!(c.dp_degree, 4);
         assert_eq!(c.dp_grad_bits, Some(4));

@@ -1,8 +1,10 @@
 //! The training coordinator — the paper's system contribution.
 //!
-//! * `boundary` — per-pipeline-boundary compression (FP32 / FP16 /
-//!   DirectQ / AQ-SGD) with per-example message buffers, in both a native
-//!   rust codec and an L1-Pallas-kernel (HLO artifact) path.
+//! * `boundary` — per-pipeline-boundary compression: each boundary owns
+//!   a registry-built `BoundaryCodec` encoder/decoder pair (FP32 / FP16 /
+//!   DirectQ / AQ-SGD / top-k / hybrid compositions) exchanging framed
+//!   wire messages, in both a native rust path and an L1-Pallas-kernel
+//!   (HLO artifact) path.
 //! * `trainer`  — the synchronous pipeline training loop over the PJRT
 //!   stage artifacts: microbatch schedule, gradient accumulation, AdamW,
 //!   simulated-network time accounting, eval.

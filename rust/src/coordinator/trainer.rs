@@ -14,6 +14,7 @@
 use crate::util::error::{Context, Result};
 
 use crate::codec::quantizer::Rounding;
+use crate::codec::registry::BuildCtx;
 use crate::config::TrainConfig;
 use crate::coordinator::boundary::{BackwardBoundary, ForwardBoundary};
 use crate::coordinator::dp::DpGroup;
@@ -99,38 +100,52 @@ impl Trainer {
             None
         };
         let el = man.example_len()?;
-        let mk_store = |b: u32| -> Result<Box<dyn ActivationStore>> {
-            Ok(match cfg.store.as_str() {
-                "mem" => Box::new(MemStore::new(el)),
-                "disk" => {
-                    let dir = std::env::temp_dir()
-                        .join(format!("aqsgd_m_{}_{}", std::process::id(), b));
-                    Box::new(DiskStore::new(dir, el)?)
-                }
-                "quant" => Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap_or(8))),
-                other => crate::bail!("unknown store {other:?} (mem|disk|quant)"),
-            })
-        };
-        let rounding = if cfg.stochastic_rounding { Rounding::Stochastic } else { Rounding::Nearest };
+        let rounding =
+            if cfg.stochastic_rounding { Rounding::Stochastic } else { Rounding::Nearest };
         let mut fw_bounds = Vec::new();
         let mut bw_bounds = Vec::new();
         for b in 0..k.saturating_sub(1) {
             // buffers keyed (replica-shard, example): with dp, each
             // replica trains a disjoint shard, so one store per boundary
-            // still keys uniquely by example id.
-            let store: Box<dyn ActivationStore> = if cfg.m_bits.is_some() && cfg.store != "quant" {
-                Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap()))
-            } else {
-                mk_store(b as u32)?
+            // still keys uniquely by example id. The registry asks the
+            // factory for one store per codec half ("enc"/"dec") so the
+            // sender and receiver replicas share nothing but the frames.
+            let mut mk_store = |role: &str| -> Result<Box<dyn ActivationStore>> {
+                if cfg.m_bits.is_some() && cfg.store != "quant" {
+                    return Ok(Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap())));
+                }
+                Ok(match cfg.store.as_str() {
+                    "mem" => Box::new(MemStore::new(el)),
+                    "disk" => {
+                        let dir = std::env::temp_dir()
+                            .join(format!("aqsgd_m_{}_{b}_{role}", std::process::id()));
+                        Box::new(DiskStore::new(dir, el)?)
+                    }
+                    "quant" => Box::new(QuantizedMemStore::new(el, cfg.m_bits.unwrap_or(8))),
+                    other => crate::bail!("unknown store {other:?} (mem|disk|quant)"),
+                })
             };
-            fw_bounds.push(ForwardBoundary::new(
-                b as u32,
-                cfg.compression,
+            let (fw_enc, fw_dec) = cfg.compression.fw.build_pair(&mut BuildCtx {
+                example_len: el,
                 rounding,
-                store,
-                hlo.clone(),
-            ));
-            bw_bounds.push(BackwardBoundary::new(cfg.compression, rounding, hlo.clone()));
+                seed: 0xB0D1 + b as u64,
+                ns: b as u32,
+                hlo: hlo.clone(),
+                mk_store: &mut mk_store,
+            })?;
+            let mut mk_bw_store = |role: &str| -> Result<Box<dyn ActivationStore>> {
+                mk_store(&format!("bw_{role}"))
+            };
+            let (bw_enc, bw_dec) = cfg.compression.bw.build_pair(&mut BuildCtx {
+                example_len: el,
+                rounding,
+                seed: 0xBACC + b as u64,
+                ns: b as u32,
+                hlo: hlo.clone(),
+                mk_store: &mut mk_bw_store,
+            })?;
+            fw_bounds.push(ForwardBoundary::new(b as u32, el, fw_enc, fw_dec));
+            bw_bounds.push(BackwardBoundary::new(el, bw_enc, bw_dec));
         }
         let opts = stages.iter().map(|s| AdamW::new(s.n_params)).collect();
         let schedule = LrSchedule {
@@ -175,8 +190,13 @@ impl Trainer {
     /// Run one microbatch through the pipeline: forward with boundary
     /// compression, loss+backward with gradient quantization. Adds the
     /// per-stage gradients into `grad_acc`. Returns (loss, fw wire bytes
-    /// per boundary message).
-    fn run_microbatch(&mut self, batch: &Batch, grad_acc: &mut [Vec<f32>]) -> Result<(f32, Vec<u64>)> {
+    /// per boundary message, bw wire bytes of the first boundary) — both
+    /// byte counts read off the actual frames.
+    fn run_microbatch(
+        &mut self,
+        batch: &Batch,
+        grad_acc: &mut [Vec<f32>],
+    ) -> Result<(f32, Vec<u64>, u64)> {
         let k = self.stages.len();
         // cached stage inputs for the backward pass (stage 0: tokens)
         let mut hidden_inputs: Vec<Vec<f32>> = Vec::with_capacity(k.saturating_sub(1));
@@ -217,10 +237,14 @@ impl Trainer {
         }
 
         // ---- backward through earlier stages ----
+        let mut bw0_bytes = 0u64;
         for s in (0..k.saturating_sub(1)).rev() {
             let g_out = gx.take().context("missing boundary gradient")?;
-            let (g_recv, bytes) = self.bw_bounds[s].transfer(&g_out)?;
+            let (g_recv, bytes) = self.bw_bounds[s].transfer(&batch.example_ids, &g_out)?;
             self.recorder.comm_bytes += bytes;
+            if s == 0 {
+                bw0_bytes = bytes;
+            }
             let t0 = std::time::Instant::now();
             let input_owned;
             let input = if s == 0 {
@@ -236,7 +260,7 @@ impl Trainer {
             }
             gx = gx_next;
         }
-        Ok((loss, fw_bytes))
+        Ok((loss, fw_bytes, bw0_bytes))
     }
 
     /// One optimizer step over `n_micro` microbatches (one replica) or
@@ -244,6 +268,7 @@ impl Trainer {
     fn train_step(&mut self, shards: &[&[Batch]]) -> Result<f64> {
         let k = self.stages.len();
         let mut all_fw_bytes: Vec<u64> = Vec::new();
+        let mut max_bw_bytes = 0u64;
         let mut loss_sum = 0f64;
         let mut n_micro_total = 0usize;
 
@@ -252,7 +277,7 @@ impl Trainer {
             let mut grads: Vec<Vec<f32>> =
                 self.stages.iter().map(|s| vec![0f32; s.n_params]).collect();
             for batch in shard.iter() {
-                let (loss, fw_bytes) = self.run_microbatch(batch, &mut grads)?;
+                let (loss, fw_bytes, bw_bytes) = self.run_microbatch(batch, &mut grads)?;
                 loss_sum += loss as f64;
                 n_micro_total += 1;
                 // per-boundary bytes of the first boundary represent the
@@ -260,6 +285,7 @@ impl Trainer {
                 if let Some(&b) = fw_bytes.first() {
                     all_fw_bytes.push(b);
                 }
+                max_bw_bytes = max_bw_bytes.max(bw_bytes);
             }
             let inv = 1.0 / shard.len() as f32;
             for g in grads.iter_mut() {
@@ -294,20 +320,22 @@ impl Trainer {
         }
 
         // ---- simulated step time on the target network ----
-        self.recorder.sim_time_s += self.simulate_step_time(&all_fw_bytes, dp_wire);
+        self.recorder.sim_time_s += self.simulate_step_time(&all_fw_bytes, max_bw_bytes, dp_wire);
 
         Ok(loss_sum / n_micro_total.max(1) as f64)
     }
 
     /// Build the event simulation for this step from measured compute
-    /// times + actual wire bytes.
-    fn simulate_step_time(&self, fw_bytes: &[u64], dp_wire: u64) -> f64 {
+    /// times + actual wire bytes (both directions come straight from the
+    /// frames this step produced — nothing is re-derived).
+    fn simulate_step_time(&self, fw_bytes: &[u64], bw_bytes: u64, dp_wire: u64) -> f64 {
         let k = self.stages.len();
         let n_micro = fw_bytes.len().max(1);
-        let bw_elems = self.man.boundary_len().unwrap_or(0);
         let stage_times: Vec<StageTimes> = (0..k)
             .map(|s| StageTimes {
-                fwd_s: self.fwd_time[s].get().unwrap_or(self.bwd_time[s].get().unwrap_or(0.01) / 3.0),
+                fwd_s: self.fwd_time[s]
+                    .get()
+                    .unwrap_or(self.bwd_time[s].get().unwrap_or(0.01) / 3.0),
                 bwd_s: self.bwd_time[s].get().unwrap_or(0.01),
             })
             .collect();
@@ -316,7 +344,7 @@ impl Trainer {
             n_micro,
             stage_times,
             fw_bytes: fw_bytes.to_vec(),
-            bw_bytes: self.cfg.compression.bw_wire_bytes(bw_elems),
+            bw_bytes,
             bandwidth_bps: self.cfg.bandwidth_bps,
             link_bandwidths: None,
             latency_s: self.cfg.latency_s,
@@ -365,7 +393,11 @@ impl Trainer {
     }
 
     /// Full training run. Returns summary stats.
-    pub fn train(&mut self, train_data: &Dataset, eval_data: Option<&Dataset>) -> Result<TrainStats> {
+    pub fn train(
+        &mut self,
+        train_data: &Dataset,
+        eval_data: Option<&Dataset>,
+    ) -> Result<TrainStats> {
         crate::ensure!(
             (train_data.task == Task::Lm) == (self.man.task()? == "lm"),
             "dataset task does not match model task"

@@ -29,7 +29,12 @@ pub struct EpochSampler {
 }
 
 impl EpochSampler {
-    pub fn new(n_examples: usize, micro_batch: usize, seed: u64, shuffle_every_epoch: bool) -> Self {
+    pub fn new(
+        n_examples: usize,
+        micro_batch: usize,
+        seed: u64,
+        shuffle_every_epoch: bool,
+    ) -> Self {
         let mut rng = Rng::new(seed);
         let mut order: Vec<usize> = (0..n_examples).collect();
         rng.shuffle(&mut order);
@@ -97,8 +102,10 @@ mod tests {
         assert_eq!(e1, e2);
 
         let mut s2 = EpochSampler::new(d.len(), 4, 7, true);
-        let f1: Vec<u64> = s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
-        let f2: Vec<u64> = s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        let f1: Vec<u64> =
+            s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
+        let f2: Vec<u64> =
+            s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
         assert_eq!(f1, e1); // same seed, same first epoch
         assert_ne!(f1, f2);
     }

@@ -2,7 +2,7 @@
 //! dataset factory, single-variant runner, and sweep helpers. Keeps every
 //! reproduction script down to "declare the grid, print the table".
 
-use crate::codec::Compression;
+use crate::codec::CodecSpec;
 use crate::config::TrainConfig;
 use crate::coordinator::{TrainStats, Trainer};
 use crate::data::{cls, lm, Dataset};
@@ -51,11 +51,11 @@ pub fn run_variant(cfg: TrainConfig, label: &str) -> Result<RunResult> {
 }
 
 /// The standard method grid of the paper's convergence figures.
-pub fn method_grid(fw: u8, bw: u8) -> Vec<(String, Compression)> {
+pub fn method_grid(fw: u8, bw: u8) -> Vec<(String, CodecSpec)> {
     vec![
-        ("FP32".into(), Compression::Fp32),
-        (format!("DirectQ fw{fw} bw{bw}"), Compression::DirectQ { fw_bits: fw, bw_bits: bw }),
-        (format!("AQ-SGD fw{fw} bw{bw}"), Compression::AqSgd { fw_bits: fw, bw_bits: bw }),
+        ("FP32".into(), CodecSpec::fp32()),
+        (format!("DirectQ fw{fw} bw{bw}"), CodecSpec::directq(fw, bw)),
+        (format!("AQ-SGD fw{fw} bw{bw}"), CodecSpec::aqsgd(fw, bw)),
     ]
 }
 
@@ -108,8 +108,11 @@ impl Default for PaperRegime {
 }
 
 impl PaperRegime {
-    /// Forward/backward wire bytes for a compression scheme.
-    pub fn msg_bytes(&self, c: &Compression, first_visit: bool) -> (u64, u64) {
+    /// Forward/backward wire bytes for a compression scheme, *measured*
+    /// by encoding a paper-regime-sized synthetic message through the
+    /// registry-built codec (`CodecSpec::fw_wire_bytes`), not derived
+    /// from a parallel formula.
+    pub fn msg_bytes(&self, c: &CodecSpec, first_visit: bool) -> (u64, u64) {
         let n = (self.fp32_msg_bytes / 4) as usize;
         (c.fw_wire_bytes(n, first_visit), c.bw_wire_bytes(n))
     }

@@ -13,7 +13,7 @@
 
 use aq_sgd::util::error::Result;
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
 use aq_sgd::coordinator::Trainer;
 use aq_sgd::exp::make_dataset;
@@ -26,7 +26,8 @@ const HELP: &str = "aq-sgd <train|info|throughput> [--key value ...]
 
 train flags:
   --model NAME            artifacts/<NAME> (default tiny)
-  --compression SPEC      fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY
+  --compression SPEC      fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY |
+                          topk:F@B | hybrid:FW/BW (e.g. hybrid:aq2/topk0.2@8)
   --dataset NAME          markov | arxiv | embedded | qnli | cola
   --examples N            dataset size (default 64)
   --epochs N --n-micro N --lr F --warmup N --steps N --seed N
@@ -84,12 +85,8 @@ fn cmd_info(cli: &Cli) -> Result<()> {
     println!("vocab/seq   {}/{}", man.vocab()?, man.seq()?);
     let n = man.boundary_len()?;
     let mut t = Table::new(&["scheme", "fw bytes/microbatch", "vs fp32"]);
-    for c in [
-        Compression::Fp32,
-        Compression::Fp16,
-        Compression::DirectQ { fw_bits: 3, bw_bits: 6 },
-        Compression::AqSgd { fw_bits: 2, bw_bits: 4 },
-    ] {
+    for spec in ["fp32", "fp16", "directq:fw3bw6", "aqsgd:fw2bw4", "topk:0.2@8"] {
+        let c = CodecSpec::parse(spec)?;
         let b = c.fw_wire_bytes(n, false);
         t.row(vec![c.label(), fmt::bytes(b), format!("{:.1}x", 4.0 * n as f64 / b as f64)]);
     }

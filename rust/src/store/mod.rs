@@ -158,7 +158,13 @@ impl DiskStore {
     pub fn new(dir: impl Into<PathBuf>, record_len: usize) -> Result<Self> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
-        Ok(DiskStore { record_len, dir, files: HashMap::new(), present: HashMap::new(), bytes_written: 0 })
+        Ok(DiskStore {
+            record_len,
+            dir,
+            files: HashMap::new(),
+            present: HashMap::new(),
+            bytes_written: 0,
+        })
     }
 
     fn file(&mut self, boundary: u32) -> Result<&mut File> {

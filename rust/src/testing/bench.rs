@@ -62,7 +62,11 @@ impl Bencher {
             if el >= self.min_sample_s || iters > 1 << 30 {
                 break;
             }
-            iters = if el <= 1e-9 { iters * 128 } else { (iters as f64 * (self.min_sample_s / el).min(128.0) * 1.2) as u64 + 1 };
+            iters = if el <= 1e-9 {
+                iters * 128
+            } else {
+                (iters as f64 * (self.min_sample_s / el).min(128.0) * 1.2) as u64 + 1
+            };
         }
         let mut samples = Vec::with_capacity(self.samples);
         for _ in 0..self.samples {

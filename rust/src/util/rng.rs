@@ -20,8 +20,12 @@ impl Rng {
         r
     }
     /// uniform in [0, 1)
-    pub fn next_f32(&mut self) -> f32 { (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32) }
-    pub fn next_f64(&mut self) -> f64 { (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) }
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
     /// uniform integer in [0, n)
     pub fn below(&mut self, n: usize) -> usize { (self.next_u64() % n as u64) as usize }
     /// standard normal via Box-Muller

@@ -53,7 +53,7 @@ fn threaded_two_machine_pipeline_matches_sequential() {
                 let mut ms = Vec::new();
                 let msg = aq.encode(&h, m_send[i].as_deref(), &mut ms, &mut rng);
                 let mut mr = Vec::new();
-                aq.decode(&msg, m_recv[i].as_deref(), &mut mr);
+                aq.decode(&msg, m_recv[i].as_deref(), &mut mr).unwrap();
                 m_send[i] = Some(ms);
                 let (loss, _, _) = s1.loss_backward(&StageInput::Hidden(&mr), toks).unwrap();
                 m_recv[i] = Some(mr);
@@ -104,7 +104,7 @@ fn threaded_two_machine_pipeline_matches_sequential() {
                 FwMsg::Activation(m) => m,
             };
             let mut m_new = Vec::new();
-            aq.decode(&msg, stores[i].as_deref(), &mut m_new);
+            aq.decode(&msg, stores[i].as_deref(), &mut m_new).unwrap();
             let (loss, _, gx) =
                 s1.loss_backward(&StageInput::Hidden(&m_new), &batches_b[i]).unwrap();
             stores[i] = Some(m_new);

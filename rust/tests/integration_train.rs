@@ -8,7 +8,7 @@
 //! prints one consolidated notice) when `artifacts/<model>` has not been
 //! built with `python -m compile.aot` (from python/).
 
-use aq_sgd::codec::Compression;
+use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::TrainConfig;
 use aq_sgd::coordinator::Trainer;
 use aq_sgd::data::lm::markov_corpus;
@@ -62,7 +62,7 @@ fn aqsgd_tracks_fp32_and_saves_bytes() {
     }
     let (_, fp32_loss, fp32_bytes) = run(base_cfg("tiny"));
     let mut cfg = base_cfg("tiny");
-    cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    cfg.compression = CodecSpec::aqsgd(4, 8);
     let (_, aq_loss, aq_bytes) = run(cfg);
     // fw4/bw8 AQ-SGD is loss-neutral at this scale (paper Fig. 3)
     assert!((aq_loss - fp32_loss).abs() < 0.15, "aq {aq_loss} vs fp32 {fp32_loss}");
@@ -76,14 +76,14 @@ fn aqsgd_beats_directq_at_2bits() {
     if !have_artifacts("tiny") {
         return;
     }
-    let mk = |c: Compression| {
+    let mk = |c: CodecSpec| {
         let mut cfg = base_cfg("tiny");
         cfg.epochs = 6;
         cfg.compression = c;
         run(cfg).1
     };
-    let aq = mk(Compression::AqSgd { fw_bits: 2, bw_bits: 4 });
-    let dq = mk(Compression::DirectQ { fw_bits: 2, bw_bits: 4 });
+    let aq = mk(CodecSpec::aqsgd(2, 4));
+    let dq = mk(CodecSpec::directq(2, 4));
     assert!(aq < dq + 1e-9, "AQ {aq} should beat DirectQ {dq} at 2 bits");
 }
 
@@ -96,7 +96,7 @@ fn hlo_codec_path_trains_like_native() {
     }
     let mut native = base_cfg("tiny");
     native.epochs = 3;
-    native.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    native.compression = CodecSpec::aqsgd(4, 8);
     let mut hlo = native.clone();
     hlo.hlo_codec = true;
     let (_, l_native, b_native) = run(native);
@@ -116,7 +116,7 @@ fn stores_and_mbits_train() {
     for (store, m_bits) in [("disk", None), ("mem", Some(8u8))] {
         let mut cfg = base_cfg("tiny");
         cfg.epochs = 3;
-        cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+        cfg.compression = CodecSpec::aqsgd(4, 8);
         cfg.store = store.to_string();
         cfg.m_bits = m_bits;
         let (first, last, _) = run(cfg);
@@ -134,7 +134,7 @@ fn dp_with_quantized_gradients_trains() {
     cfg.n_micro = 1;
     cfg.dp_degree = 2;
     cfg.dp_grad_bits = Some(4);
-    cfg.compression = Compression::AqSgd { fw_bits: 3, bw_bits: 6 };
+    cfg.compression = CodecSpec::aqsgd(3, 6);
     cfg.n_examples = 64;
     let (first, last, _) = run(cfg);
     assert!(last < first - 0.1, "dp run: {first} -> {last}");
@@ -163,7 +163,7 @@ fn cls_task_trains() {
     let mut cfg = base_cfg("tiny_cls");
     cfg.dataset = "qnli".to_string();
     cfg.epochs = 6;
-    cfg.compression = Compression::AqSgd { fw_bits: 2, bw_bits: 4 };
+    cfg.compression = CodecSpec::aqsgd(2, 4);
     let (first, last, _) = run(cfg);
     assert!(last < first - 0.03, "cls: {first} -> {last}");
 }
@@ -176,11 +176,14 @@ fn fp16_matches_fp32_closely() {
     let mut a = base_cfg("tiny");
     a.epochs = 2;
     let mut b = a.clone();
-    b.compression = Compression::Fp16;
+    b.compression = CodecSpec::fp16();
     let (_, l32, bytes32) = run(a);
     let (_, l16, bytes16) = run(b);
     assert!((l32 - l16).abs() < 0.05, "{l32} vs {l16}");
-    assert_eq!(bytes16 * 2, bytes32);
+    // fp16 frames halve the payload; the fixed frame headers keep the
+    // measured ratio just under 2x
+    let ratio = bytes32 as f64 / bytes16 as f64;
+    assert!((1.9..=2.0).contains(&ratio), "bytes32 {bytes32} vs bytes16 {bytes16}");
 }
 
 #[test]
@@ -191,7 +194,7 @@ fn probe_shows_delta_shrinking_below_activation() {
     };
     let mut cfg = base_cfg("tiny");
     cfg.epochs = 5;
-    cfg.compression = Compression::AqSgd { fw_bits: 4, bw_bits: 8 };
+    cfg.compression = CodecSpec::aqsgd(4, 8);
     let data = exp::make_dataset(&cfg, &man).unwrap();
     let (train, _) = data.split_eval(0.1);
     let mut t = Trainer::new(cfg).unwrap();

@@ -4,7 +4,7 @@
 
 use aq_sgd::codec::delta::{AqMessage, AqState};
 use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
-use aq_sgd::codec::{f16, pack, quant_wire_bytes, theory, topk, Compression};
+use aq_sgd::codec::{f16, pack, quant_wire_bytes, theory, topk};
 use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
 use aq_sgd::util::Rng;
 
@@ -57,12 +57,12 @@ fn prop_aq_replicas_bit_identical() {
             let mut ms = Vec::new();
             let msg = st.encode(&a, m_s.as_deref(), &mut ms, rng);
             let mut mr = Vec::new();
-            st.decode(&msg, m_r.as_deref(), &mut mr);
+            st.decode(&msg, m_r.as_deref(), &mut mr).unwrap();
             assert_eq!(ms, mr);
-            // wire accounting matches the Compression enum
+            // wire accounting: full f32 on first visit, packed delta after
             let first = m_s.is_none();
-            let c = Compression::AqSgd { fw_bits: bits, bw_bits: bits };
-            assert_eq!(msg.wire_bytes(bits), c.fw_wire_bytes(n, first));
+            let want = if first { 4 * n as u64 } else { quant_wire_bytes(n, bits) };
+            assert_eq!(msg.wire_bytes(bits), want);
             if let AqMessage::Delta { codes, .. } = &msg {
                 assert!(codes.iter().all(|&c| (c as u16) < (1 << bits)));
             }

@@ -1,0 +1,132 @@
+//! Property tests over the framed codec layer: for every registered
+//! scheme, (1) the serialized wire path decodes bit-identically to the
+//! in-memory path, (2) wire accounting equals the actual serialized
+//! buffer lengths, (3) sender/receiver replica state stays symmetric
+//! across rounds, and (4) malformed frames are errors, never panics.
+
+use aq_sgd::codec::frame::{Frame, FRAME_PRELUDE_BYTES};
+use aq_sgd::codec::registry::{build_mem_pair, example_specs, CodecSpec};
+use aq_sgd::codec::{Rounding, SchemeSpec};
+use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
+
+/// All distinct direction schemes reachable from the example spec list.
+fn all_schemes() -> Vec<SchemeSpec> {
+    let mut out: Vec<SchemeSpec> = Vec::new();
+    for s in example_specs() {
+        let spec = CodecSpec::parse(s).unwrap();
+        for scheme in [spec.fw, spec.bw] {
+            if !out.contains(&scheme) {
+                out.push(scheme);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_wire_path_bit_identical_to_memory_path() {
+    let schemes = all_schemes();
+    Prop::check("frame wire == memory", |rng| {
+        let scheme = schemes[rng.below(schemes.len())];
+        let el = len_in(rng, 1, 200);
+        let n_ex = len_in(rng, 1, 4);
+        let seed = rng.next_u64();
+        // two decoders with identical initial state: one fed the in-memory
+        // frame, one fed the serialize->deserialize round-trip
+        let (mut enc, mut dec_mem) = build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap();
+        let (_, mut dec_wire) = build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap();
+        let ids: Vec<u64> = (0..n_ex as u64).collect();
+        let mut a = vec_f32(rng, el * n_ex, 1.0);
+        for round in 0..4 {
+            let frame = enc.encode(&ids, &a).unwrap();
+            // (2) measured wire bytes == serialized length == prelude+header+payload
+            let bytes = frame.to_bytes();
+            assert_eq!(frame.wire_bytes(), bytes.len() as u64);
+            assert_eq!(
+                frame.wire_bytes(),
+                (FRAME_PRELUDE_BYTES + frame.header().len() + frame.payload().len()) as u64
+            );
+            // (1) serialization round-trip is lossless and decodes identically
+            let wire_frame = Frame::from_bytes(&bytes).unwrap();
+            assert_eq!(wire_frame, frame);
+            let out_mem = dec_mem.decode(&ids, &frame).unwrap();
+            let out_wire = dec_wire.decode(&ids, &wire_frame).unwrap();
+            assert_eq!(out_mem, out_wire, "round {round}: wire path diverged from memory path");
+            assert_eq!(out_mem.len(), a.len());
+            // (3) replica symmetry: encoder and decoder state stay equal
+            assert_eq!(enc.state_bytes(), dec_mem.state_bytes(), "round {round}");
+            // drift the activation like a stabilizing model
+            for v in a.iter_mut() {
+                *v += 0.01 * rng.normal();
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_truncated_frames_error_not_panic() {
+    let schemes = all_schemes();
+    Prop::check("truncated frames", |rng| {
+        let scheme = schemes[rng.below(schemes.len())];
+        let el = len_in(rng, 1, 64);
+        let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 7).unwrap();
+        let a = vec_f32(rng, el, 1.0);
+        let frame = enc.encode(&[0], &a).unwrap();
+        dec.decode(&[0], &frame).unwrap();
+        let bytes = frame.to_bytes();
+        // cut the serialized image anywhere: parse or decode must error
+        let cut = rng.below(bytes.len());
+        match Frame::from_bytes(&bytes[..cut]) {
+            Err(_) => {}
+            Ok(f) => {
+                assert!(dec.decode(&[0], &f).is_err(), "truncated frame decoded");
+            }
+        }
+        // truncate only the payload, keeping the prelude consistent
+        if !frame.payload().is_empty() {
+            let short = Frame::new(
+                frame.tag(),
+                frame.header().to_vec(),
+                frame.payload()[..frame.payload().len() - 1].to_vec(),
+            );
+            assert!(dec.decode(&[0], &short).is_err(), "short payload decoded");
+        }
+    });
+}
+
+#[test]
+fn prop_aq_delta_for_unknown_example_errors() {
+    Prop::check("aq delta without buffer", |rng| {
+        let el = len_in(rng, 1, 64);
+        let bits = 2 + rng.below(7) as u8;
+        let scheme = SchemeSpec::Aq { bits };
+        let (mut enc, _) = build_mem_pair(&scheme, el, Rounding::Nearest, 1).unwrap();
+        let (_, mut fresh_dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 2).unwrap();
+        let a = vec_f32(rng, el, 1.0);
+        enc.encode(&[5], &a).unwrap(); // first visit (full)
+        let delta_frame = enc.encode(&[5], &a).unwrap(); // delta
+        let err = fresh_dec.decode(&[5], &delta_frame).unwrap_err();
+        assert!(err.to_string().contains("no message buffer"), "{err}");
+    });
+}
+
+#[test]
+fn frame_overhead_is_small_and_accounted() {
+    // the acceptance invariant, spelled out: reported bytes are the
+    // frame's own buffers, and the fixed overhead is single-digit bytes
+    // + the scheme header
+    for s in example_specs() {
+        let spec = CodecSpec::parse(s).unwrap();
+        for scheme in [spec.fw, spec.bw] {
+            let (mut enc, _) = build_mem_pair(&scheme, 256, Rounding::Nearest, 3).unwrap();
+            let a: Vec<f32> = (0..256).map(|i| (i as f32 * 0.1).sin()).collect();
+            let f = enc.encode(&[0], &a).unwrap();
+            assert_eq!(
+                f.wire_bytes() as usize,
+                FRAME_PRELUDE_BYTES + f.header().len() + f.payload().len(),
+                "{s}"
+            );
+            assert!(f.header().len() <= 16, "{s}: header {}", f.header().len());
+        }
+    }
+}
