@@ -6,6 +6,13 @@
 //!     (cd python && python -m compile.aot --out-dir ../artifacts) && cargo run --release --example e2e_train
 //!
 //! Flags: --model small|e2e  --steps N  --compression SPEC  --bandwidth B
+//!        --executor threads|sim
+//!
+//! With `--executor threads` the run goes through the *real* threaded
+//! pipeline runtime (`pipeline::exec`): one worker thread per stage,
+//! serialized frames over channel links, first-party stage compute — no
+//! AOT artifacts needed — and the loss/wire trajectory is cross-checked
+//! bit-for-bit against the virtual-clock oracle.
 
 use aq_sgd::util::error::Result;
 
@@ -13,8 +20,49 @@ use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
 use aq_sgd::coordinator::Trainer;
 use aq_sgd::exp;
+use aq_sgd::pipeline::Executor;
 use aq_sgd::runtime::Manifest;
 use aq_sgd::util::fmt;
+
+/// The artifact-free path: threaded executor vs virtual-clock oracle.
+fn run_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
+    let stages = cli.usize("stages", 4)?;
+    let el = cli.usize("el", 64)?;
+    let micro_b = cli.usize("micro-batch", 2)?;
+    let steps = cfg.total_steps; // --steps (default 300) — honoured as given
+    println!(
+        "e2e (threads): stages={stages} n_micro={} el={el} compression={} bandwidth={}",
+        cfg.n_micro,
+        cfg.compression.label(),
+        fmt::bandwidth(cfg.bandwidth_bps)
+    );
+    let t0 = std::time::Instant::now();
+    let (real, oracle) = exp::run_executor_with_oracle(cfg, stages, micro_b, el, steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== loss curve (every 5 steps) ==");
+    for (i, rec) in real.steps.iter().enumerate().step_by(5) {
+        println!(
+            "step {:>4}  loss {:.5}  fw {:>10}  bw {:>10}  wall {:>9}  oracle {:>9}",
+            i,
+            rec.loss,
+            fmt::bytes(rec.fw_wire_bytes.iter().sum::<u64>()),
+            fmt::bytes(rec.bw_wire_bytes.iter().sum::<u64>()),
+            fmt::duration_s(real.step_time_s[i]),
+            fmt::duration_s(oracle.step_time_s[i]),
+        );
+    }
+    let identical = real.bit_identical(&oracle);
+    println!("\n== summary ==");
+    println!("steps            {}", real.steps.len());
+    println!("final train loss {:.5}", real.steps.last().map(|r| r.loss).unwrap_or(f32::NAN));
+    println!("wall time        {} (threads + oracle)", fmt::duration_s(wall));
+    println!(
+        "determinism      trajectory vs virtual-clock oracle: {}",
+        if identical { "bit-identical" } else { "DIVERGED (bug!)" }
+    );
+    exp::check_matches_oracle(&real, &oracle)
+}
 
 fn main() -> Result<()> {
     let cli = Cli::from_env();
@@ -29,6 +77,12 @@ fn main() -> Result<()> {
     cfg.warmup_steps = cli.usize("warmup", 30)?;
     cfg.bandwidth_bps = parse_bandwidth(&cli.str("bandwidth", "500mbps"))?;
     cfg.dataset = cli.str("dataset", "markov");
+    cfg.executor = Executor::parse(&cli.str("executor", "sim"))?;
+    cfg.schedule = aq_sgd::pipeline::Schedule::parse(&cli.str("schedule", "gpipe"))?;
+
+    if cfg.executor == Executor::Threads {
+        return run_threads(&cli, &cfg);
+    }
 
     let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
     println!(

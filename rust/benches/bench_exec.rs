@@ -1,0 +1,48 @@
+//! Executor throughput: the virtual-clock numeric executor vs the real
+//! threaded runtime on the same config, across schedules and codecs.
+//! §Perf target: the threaded runtime's overhead (threads + channels +
+//! frame serialization) stays within the same order of magnitude as the
+//! single-threaded numeric path at test-sized configs.
+
+use aq_sgd::codec::CodecSpec;
+use aq_sgd::pipeline::exec::{run_threads, run_virtual, ExecConfig};
+use aq_sgd::pipeline::Schedule;
+use aq_sgd::testing::bench::{black_box, Bencher};
+
+fn cfg(spec: &str, schedule: Schedule) -> ExecConfig {
+    let mut c = ExecConfig::small(CodecSpec::parse(spec).unwrap());
+    c.schedule = schedule;
+    c.n_stages = 4;
+    c.n_micro = 8;
+    c.micro_batch = 2;
+    c.example_len = 256;
+    c.steps = 2;
+    // effectively-infinite link speed: measure runtime overhead, not
+    // modeled transmission sleeps
+    c.bandwidth_bps = 1e12;
+    c.latency_s = 0.0;
+    c
+}
+
+fn main() {
+    let b = Bencher::default();
+    for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
+        for spec in ["fp32", "aqsgd:fw2bw4", "hybrid:aq2/topk0.2@8"] {
+            let c = cfg(spec, schedule);
+            b.run(&format!("exec/virtual/{spec}/{schedule:?}"), || {
+                black_box(run_virtual(&c).unwrap());
+            })
+            .report();
+            b.run(&format!("exec/threads/{spec}/{schedule:?}"), || {
+                black_box(run_threads(&c).unwrap());
+            })
+            .report();
+        }
+    }
+
+    // wire volume per step at bench size, for the report's context
+    let c = cfg("aqsgd:fw2bw4", Schedule::GPipe);
+    let t = run_virtual(&c).unwrap();
+    let steady: u64 = t.steps.last().unwrap().fw_wire_bytes.iter().sum();
+    println!("aq2 steady-state fw wire/step at bench size: {steady} B");
+}

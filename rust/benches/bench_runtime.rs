@@ -56,7 +56,7 @@ fn main() {
     })
     .report_throughput(msg_bytes);
 
-    let q = std::rc::Rc::new(QuantRuntime::load(&engine, &man).unwrap());
+    let q = std::sync::Arc::new(QuantRuntime::load(&engine, &man).unwrap());
     let mut mk = |_role: &str| -> Result<Box<dyn ActivationStore>> {
         Ok(Box::new(MemStore::new(el)))
     };

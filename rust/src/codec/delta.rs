@@ -12,7 +12,7 @@
 //!    bit-identical because both advance through the same [`Frame`]
 //!    (Algorithm 2's invariant — pinned by property tests).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::frame::{Frame, FrameReader, FrameWriter, TAG_AQ};
 use super::quantizer::{Rounding, UniformQuantizer};
@@ -148,7 +148,7 @@ pub struct AqCodec {
     ns: u32,
     el: usize,
     rng: Rng,
-    hlo: Option<Rc<QuantRuntime>>,
+    hlo: Option<Arc<QuantRuntime>>,
     stats: EncodeStats,
 }
 
@@ -159,7 +159,7 @@ impl AqCodec {
         store: Box<dyn ActivationStore>,
         ns: u32,
         seed: u64,
-        hlo: Option<Rc<QuantRuntime>>,
+        hlo: Option<Arc<QuantRuntime>>,
     ) -> Self {
         let el = store.record_len();
         AqCodec {
@@ -205,7 +205,7 @@ impl AqCodec {
     }
 
     /// HLO batch path: one kernel call over [B·el] with a single scale.
-    fn encode_batch_hlo(&mut self, q: &Rc<QuantRuntime>, ids: &[u64], a: &[f32]) -> Result<Frame> {
+    fn encode_batch_hlo(&mut self, q: &Arc<QuantRuntime>, ids: &[u64], a: &[f32]) -> Result<Frame> {
         let el = self.el;
         let mut m = vec![0f32; a.len()];
         let mut rec = Vec::new();

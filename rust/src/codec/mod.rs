@@ -61,7 +61,13 @@ pub struct EncodeStats {
 /// scheme. Stateful: AQ-style codecs hold their per-example message
 /// buffers, so a boundary owns one encoder and one decoder instance
 /// whose states advance in lockstep through the frames alone.
-pub trait BoundaryCodec {
+///
+/// `Send` is a supertrait because the threaded pipeline executor
+/// (`pipeline::exec`) moves each half onto its endpoint's worker thread:
+/// the encoder lives with the sending stage, the decoder with the
+/// receiving stage, and only serialized [`Frame`] bytes cross between
+/// them (Algorithm 2's replica split, realized as thread ownership).
+pub trait BoundaryCodec: Send {
     /// Compress activation `a` (one record per id in `ids`, row-major)
     /// into a wire frame, advancing any codec state.
     fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame>;

@@ -19,7 +19,7 @@
 //! (0, 1]. `CodecSpec::parse` subsumes the old `Compression::parse`;
 //! every boundary, the trainer, and the examples obtain codecs here.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::runtime::QuantRuntime;
 use crate::store::{ActivationStore, MemStore};
@@ -55,7 +55,7 @@ pub struct BuildCtx<'a> {
     pub seed: u64,
     /// store key namespace (the boundary id)
     pub ns: u32,
-    pub hlo: Option<Rc<QuantRuntime>>,
+    pub hlo: Option<Arc<QuantRuntime>>,
     /// store factory; called with a role tag ("enc" / "dec") so the two
     /// replicas get distinct backing (e.g. separate disk files)
     pub mk_store: &'a mut dyn FnMut(&str) -> Result<Box<dyn ActivationStore>>,

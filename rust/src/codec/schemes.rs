@@ -12,7 +12,7 @@
 //! | directq | 3   | bits: u8, n: u32, scale: f32    | packed codes         |
 //! | topk    | 5   | bits: u8, n: u32, k: u32, scale | k × u32 idx + codes  |
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::runtime::QuantRuntime;
 use crate::util::error::Result;
@@ -89,11 +89,11 @@ pub struct DirectQCodec {
     bits: u8,
     rounding: Rounding,
     rng: Rng,
-    hlo: Option<Rc<QuantRuntime>>,
+    hlo: Option<Arc<QuantRuntime>>,
 }
 
 impl DirectQCodec {
-    pub fn new(bits: u8, rounding: Rounding, seed: u64, hlo: Option<Rc<QuantRuntime>>) -> Self {
+    pub fn new(bits: u8, rounding: Rounding, seed: u64, hlo: Option<Arc<QuantRuntime>>) -> Self {
         DirectQCodec { bits, rounding, rng: Rng::new(seed), hlo }
     }
 }

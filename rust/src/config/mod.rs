@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use crate::codec::CodecSpec;
-use crate::pipeline::Schedule;
+use crate::pipeline::{Executor, Schedule};
 use crate::util::error::Result;
 
 /// Parsed command line: positional args + `--key value` flags
@@ -102,6 +102,10 @@ pub struct TrainConfig {
     pub bandwidth_bps: f64,
     pub latency_s: f64,
     pub schedule: Schedule,
+    /// Pipeline runtime: `Sim` (single-threaded, virtual-clock time
+    /// accounting) or `Threads` (one worker thread per stage exchanging
+    /// serialized frames — see `pipeline::exec`).
+    pub executor: Executor,
     /// Data-parallel degree (gradient averaging across replicas).
     pub dp_degree: usize,
     /// Gradient compression bits for the DP direction (None = fp32).
@@ -133,6 +137,7 @@ impl TrainConfig {
             bandwidth_bps: 1e9,
             latency_s: 1e-4,
             schedule: Schedule::GPipe,
+            executor: Executor::Sim,
             dp_degree: 1,
             dp_grad_bits: None,
             dataset: "markov".to_string(),
@@ -161,6 +166,7 @@ impl TrainConfig {
         c.bandwidth_bps = parse_bandwidth(&cli.str("bandwidth", "1gbps"))?;
         c.latency_s = cli.f64("latency-ms", 0.1)? / 1e3;
         c.schedule = Schedule::parse(&cli.str("schedule", "gpipe"))?;
+        c.executor = Executor::parse(&cli.str("executor", "sim"))?;
         c.dp_degree = cli.usize("dp", 1)?;
         c.dp_grad_bits = match cli.usize("dp-bits", 0)? {
             0 => None,
@@ -211,5 +217,14 @@ mod tests {
         assert_eq!(c.dp_degree, 4);
         assert_eq!(c.dp_grad_bits, Some(4));
         assert_eq!(c.m_bits, Some(8));
+        assert_eq!(c.executor, Executor::Sim); // default
+    }
+
+    #[test]
+    fn executor_switch_from_cli() {
+        let c = TrainConfig::from_cli(&cli("--executor Threads --schedule 1F1B")).unwrap();
+        assert_eq!(c.executor, Executor::Threads);
+        assert_eq!(c.schedule, Schedule::OneFOneB);
+        assert!(TrainConfig::from_cli(&cli("--executor gpu")).is_err());
     }
 }

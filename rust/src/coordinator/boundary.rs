@@ -1,20 +1,18 @@
 //! Pipeline-boundary compression.
 //!
-//! A `ForwardBoundary` sits between stage `s` and `s+1`: it owns the two
-//! halves of a [`BoundaryCodec`] pair — the sender-side encoder and the
-//! receiver-side decoder, built from the same registry scheme but
-//! sharing *no* state. `transfer` runs activation → [`Frame`] → receiver
-//! activation; wire bytes are read off the frame's actual buffers, and
-//! Algorithm 2's sender/receiver replica invariant holds by construction
-//! because the decoder reconstructs only from frame bytes (pinned by
-//! `tests/prop_frames.rs`).
-//!
-//! `BackwardBoundary` is the same machine for the activation-gradient
-//! direction (direct quantization under the paper's `aqsgd:` spec,
-//! top-k + quantization under App. H.6's split-learning scheme, or any
-//! other registry scheme via `hybrid:`).
+//! The unit of ownership is an *endpoint half*: a [`BoundarySender`]
+//! (encoder side) or [`BoundaryReceiver`] (decoder side), each wrapping
+//! one half of a registry-built [`BoundaryCodec`] pair plus the
+//! shape-validation every transfer needs. The two halves share *no*
+//! state — only [`Frame`]s cross between them — so Algorithm 2's
+//! sender/receiver replica invariant holds by construction (pinned by
+//! `tests/prop_frames.rs`). The threaded executor (`pipeline::exec`)
+//! moves each half onto its stage's worker thread; the single-process
+//! trainer composes the same two halves back into a [`ForwardBoundary`] /
+//! [`BackwardBoundary`], so both execution modes run the identical
+//! encode/validate/decode sequence.
 
-use crate::codec::BoundaryCodec;
+use crate::codec::{BoundaryCodec, Frame};
 use crate::util::error::Result;
 
 /// What a transfer did: the receiver-side activation plus accounting.
@@ -30,33 +28,25 @@ pub struct TransferStats {
     pub first_visits: usize,
 }
 
-pub struct ForwardBoundary {
+/// Encoder endpoint of one directed boundary: validates the outgoing
+/// batch shape, runs the codec, and reads the wire accounting off the
+/// produced frame.
+pub struct BoundarySender {
     pub boundary_id: u32,
     /// elements per example record — validates batch shape on every
     /// transfer, codec-independent
     example_len: usize,
     enc: Box<dyn BoundaryCodec>,
-    dec: Box<dyn BoundaryCodec>,
 }
 
-impl ForwardBoundary {
-    pub fn new(
-        boundary_id: u32,
-        example_len: usize,
-        enc: Box<dyn BoundaryCodec>,
-        dec: Box<dyn BoundaryCodec>,
-    ) -> Self {
-        ForwardBoundary { boundary_id, example_len, enc, dec }
+impl BoundarySender {
+    pub fn new(boundary_id: u32, example_len: usize, enc: Box<dyn BoundaryCodec>) -> Self {
+        BoundarySender { boundary_id, example_len, enc }
     }
 
-    /// Transfer activation `a` ([B, S, D] row-major, one record per
-    /// example id) across the boundary. Returns (receiver activation,
-    /// stats).
-    pub fn transfer(
-        &mut self,
-        example_ids: &[u64],
-        a: &[f32],
-    ) -> Result<(Vec<f32>, TransferStats)> {
+    /// Encode activation `a` ([B, S, D] row-major, one record per example
+    /// id) into its wire frame. Returns (frame, stats).
+    pub fn encode(&mut self, example_ids: &[u64], a: &[f32]) -> Result<(Frame, TransferStats)> {
         crate::ensure!(
             a.len() == example_ids.len() * self.example_len,
             "boundary {}: activation length {} != {} ids x {} elements",
@@ -68,26 +58,18 @@ impl ForwardBoundary {
         let mean_abs_act = crate::util::stats::mean_abs(a);
         let frame = self.enc.encode(example_ids, a)?;
         let es = self.enc.take_stats();
-        let out = self.dec.decode(example_ids, &frame)?;
-        crate::ensure!(
-            out.len() == a.len(),
-            "boundary {} codec returned {} elements for a {}-element activation",
-            self.boundary_id,
-            out.len(),
-            a.len()
-        );
         let stats = TransferStats {
             wire_bytes: frame.wire_bytes(),
             mean_abs_act,
             mean_abs_delta: es.mean_abs_delta.unwrap_or(mean_abs_act),
             first_visits: es.first_visits,
         };
-        Ok((out, stats))
+        Ok((frame, stats))
     }
 
     /// Encoder-side persistent state (message buffers), i.e. what one
     /// replica of this boundary keeps resident.
-    pub fn resident_bytes(&self) -> u64 {
+    pub fn state_bytes(&self) -> u64 {
         self.enc.state_bytes()
     }
 
@@ -96,15 +78,103 @@ impl ForwardBoundary {
     }
 }
 
+/// Decoder endpoint of one directed boundary: reconstructs the
+/// receiver-side activation from a frame and validates the result shape.
+pub struct BoundaryReceiver {
+    pub boundary_id: u32,
+    example_len: usize,
+    dec: Box<dyn BoundaryCodec>,
+}
+
+impl BoundaryReceiver {
+    pub fn new(boundary_id: u32, example_len: usize, dec: Box<dyn BoundaryCodec>) -> Self {
+        BoundaryReceiver { boundary_id, example_len, dec }
+    }
+
+    /// Reconstruct the activation for `example_ids` from `frame`,
+    /// advancing any receiver-replica codec state.
+    pub fn decode(&mut self, example_ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let want = example_ids.len() * self.example_len;
+        let out = self.dec.decode(example_ids, frame)?;
+        crate::ensure!(
+            out.len() == want,
+            "boundary {} codec returned {} elements for a {}-element activation",
+            self.boundary_id,
+            out.len(),
+            want
+        );
+        Ok(out)
+    }
+
+    /// Receiver-side persistent state (the buffer replica).
+    pub fn state_bytes(&self) -> u64 {
+        self.dec.state_bytes()
+    }
+}
+
 // ---------------------------------------------------------------------------
 
-/// Backward-gradient boundary: same encoder/decoder machinery for the
+/// Forward boundary between stage `s` and `s+1` for the single-process
+/// trainer: both endpoint halves in one place, `transfer` = encode →
+/// frame → decode.
+pub struct ForwardBoundary {
+    send: BoundarySender,
+    recv: BoundaryReceiver,
+}
+
+impl ForwardBoundary {
+    pub fn new(
+        boundary_id: u32,
+        example_len: usize,
+        enc: Box<dyn BoundaryCodec>,
+        dec: Box<dyn BoundaryCodec>,
+    ) -> Self {
+        ForwardBoundary {
+            send: BoundarySender::new(boundary_id, example_len, enc),
+            recv: BoundaryReceiver::new(boundary_id, example_len, dec),
+        }
+    }
+
+    pub fn boundary_id(&self) -> u32 {
+        self.send.boundary_id
+    }
+
+    /// Transfer activation `a` across the boundary. Returns (receiver
+    /// activation, stats).
+    pub fn transfer(
+        &mut self,
+        example_ids: &[u64],
+        a: &[f32],
+    ) -> Result<(Vec<f32>, TransferStats)> {
+        let (frame, stats) = self.send.encode(example_ids, a)?;
+        let out = self.recv.decode(example_ids, &frame)?;
+        Ok((out, stats))
+    }
+
+    /// Encoder-side persistent state (message buffers).
+    pub fn resident_bytes(&self) -> u64 {
+        self.send.state_bytes()
+    }
+
+    pub fn label(&self) -> String {
+        self.send.label()
+    }
+
+    /// Split into the two endpoint halves (threaded deployment: the
+    /// sender half moves to stage `s`'s thread, the receiver half to
+    /// stage `s+1`'s).
+    pub fn into_halves(self) -> (BoundarySender, BoundaryReceiver) {
+        (self.send, self.recv)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Backward-gradient boundary: same endpoint machinery for the
 /// activation-gradient direction.
 pub struct BackwardBoundary {
-    /// elements per example record (gradients share the boundary shape)
-    example_len: usize,
-    enc: Box<dyn BoundaryCodec>,
-    dec: Box<dyn BoundaryCodec>,
+    send: BoundarySender,
+    recv: BoundaryReceiver,
 }
 
 impl BackwardBoundary {
@@ -113,27 +183,21 @@ impl BackwardBoundary {
         enc: Box<dyn BoundaryCodec>,
         dec: Box<dyn BoundaryCodec>,
     ) -> Self {
-        BackwardBoundary { example_len, enc, dec }
+        BackwardBoundary {
+            send: BoundarySender::new(0, example_len, enc),
+            recv: BoundaryReceiver::new(0, example_len, dec),
+        }
     }
 
     /// Returns (receiver-side gradient, wire bytes).
     pub fn transfer(&mut self, example_ids: &[u64], g: &[f32]) -> Result<(Vec<f32>, u64)> {
-        crate::ensure!(
-            g.len() == example_ids.len() * self.example_len,
-            "backward boundary: gradient length {} != {} ids x {} elements",
-            g.len(),
-            example_ids.len(),
-            self.example_len
-        );
-        let frame = self.enc.encode(example_ids, g)?;
-        let out = self.dec.decode(example_ids, &frame)?;
-        crate::ensure!(
-            out.len() == g.len(),
-            "backward codec returned {} elements for a {}-element gradient",
-            out.len(),
-            g.len()
-        );
-        Ok((out, frame.wire_bytes()))
+        let (frame, stats) = self.send.encode(example_ids, g)?;
+        let out = self.recv.decode(example_ids, &frame)?;
+        Ok((out, stats.wire_bytes))
+    }
+
+    pub fn into_halves(self) -> (BoundarySender, BoundaryReceiver) {
+        (self.send, self.recv)
     }
 }
 
@@ -238,5 +302,24 @@ mod tests {
         let (out, bytes) = bw.transfer(&[0], &g).unwrap();
         assert!(bytes < 4 * 100 / 2, "topk should beat fp32: {bytes}");
         assert!((out[56] + 1.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn halves_carry_replica_state_independently() {
+        // split a boundary into its endpoint halves and run the wire path
+        // by hand: encode on one half, serialize, decode on the other —
+        // exactly what the threaded executor does across threads.
+        let b = mk_fw("aqsgd:fw2bw4", 8);
+        let (mut tx, mut rx) = b.into_halves();
+        let a: Vec<f32> = (0..16).map(|i| (i as f32 * 0.4).sin()).collect();
+        for round in 0..3 {
+            let (frame, _) = tx.encode(&[0, 1], &a).unwrap();
+            let bytes = frame.to_bytes();
+            let wire = crate::codec::Frame::from_bytes(&bytes).unwrap();
+            let out = rx.decode(&[0, 1], &wire).unwrap();
+            assert_eq!(out.len(), a.len());
+            // Algorithm 2 replica symmetry across the serialized path
+            assert_eq!(tx.state_bytes(), rx.state_bytes(), "round {round}");
+        }
     }
 }

@@ -19,6 +19,8 @@ pub mod dp;
 pub mod split;
 pub mod trainer;
 
-pub use boundary::{BackwardBoundary, ForwardBoundary, TransferStats};
+pub use boundary::{
+    BackwardBoundary, BoundaryReceiver, BoundarySender, ForwardBoundary, TransferStats,
+};
 pub use dp::DpGroup;
 pub use trainer::{Probe, TrainStats, Trainer};

@@ -95,7 +95,7 @@ impl Trainer {
                 .with_context(|| format!("loading stage {s}"))?);
         }
         let hlo = if cfg.hlo_codec {
-            Some(std::rc::Rc::new(QuantRuntime::load(&engine, &man)?))
+            Some(std::sync::Arc::new(QuantRuntime::load(&engine, &man)?))
         } else {
             None
         };

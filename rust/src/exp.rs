@@ -7,6 +7,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::{TrainStats, Trainer};
 use crate::data::{cls, lm, Dataset};
 use crate::metrics::Recorder;
+use crate::pipeline::exec::{self, ExecConfig, ExecTrace};
 use crate::runtime::Manifest;
 use crate::util::error::Result;
 
@@ -48,6 +49,39 @@ pub fn run_variant(cfg: TrainConfig, label: &str) -> Result<RunResult> {
         stats,
         recorder: std::mem::replace(&mut trainer.recorder, Recorder::new("")),
     })
+}
+
+/// Run the self-contained pipeline executor the config names
+/// (`--executor threads|sim`, see `pipeline::exec`) *and* the
+/// virtual-clock oracle on the same shape; returns `(real, oracle)`.
+/// First-party stage compute + registry codecs, so it needs no AOT
+/// artifacts and no PJRT backend; the pipeline shape — normally dictated
+/// by the artifact manifest — is passed explicitly. The CLI and the
+/// examples use this for the determinism cross-check
+/// (`real.bit_identical(&oracle)` must hold — `tests/exec_vs_sim.rs`).
+pub fn run_executor_with_oracle(
+    cfg: &TrainConfig,
+    n_stages: usize,
+    micro_batch: usize,
+    example_len: usize,
+    steps: usize,
+) -> Result<(ExecTrace, ExecTrace)> {
+    let ec = ExecConfig::from_train(cfg, n_stages, micro_batch, example_len, steps);
+    let real = exec::run(&ec, cfg.executor)?;
+    let oracle = exec::run(&ec, crate::pipeline::Executor::Sim)?;
+    Ok((real, oracle))
+}
+
+/// The determinism cross-check both entry points report: Ok when the
+/// real trajectory is bit-identical to the oracle's, the shared error
+/// otherwise. Single-sourced so the check cannot drift between the CLI
+/// and the examples.
+pub fn check_matches_oracle(real: &ExecTrace, oracle: &ExecTrace) -> Result<()> {
+    crate::ensure!(
+        real.bit_identical(oracle),
+        "threaded executor diverged from the virtual-clock oracle"
+    );
+    Ok(())
 }
 
 /// The standard method grid of the paper's convergence figures.

@@ -16,7 +16,7 @@ use aq_sgd::util::error::Result;
 use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
 use aq_sgd::coordinator::Trainer;
-use aq_sgd::exp::make_dataset;
+use aq_sgd::exp::{self, make_dataset};
 use aq_sgd::metrics::Table;
 use aq_sgd::pipeline::{PipelineSim, SimConfig};
 use aq_sgd::runtime::Manifest;
@@ -33,6 +33,11 @@ train flags:
   --epochs N --n-micro N --lr F --warmup N --steps N --seed N
   --bandwidth B           e.g. 100mbps, 10gbps (simulated-time accounting)
   --schedule S            gpipe | 1f1b
+  --executor E            sim (virtual-clock trainer, default) | threads
+                          (one worker thread per stage over channel links;
+                          self-contained — needs no artifacts)
+  --stages K --el N --micro-batch B
+                          pipeline shape for --executor threads (default 4/64/2)
   --dp N --dp-bits B      data parallelism + gradient compression
   --m-bits B              low-precision message buffers (Fig 9e/f)
   --store S               mem | disk | quant
@@ -44,6 +49,9 @@ train flags:
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     let cfg = TrainConfig::from_cli(cli)?;
+    if cfg.executor == aq_sgd::pipeline::Executor::Threads {
+        return cmd_train_threads(cli, &cfg);
+    }
     let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
     let data = make_dataset(&cfg, &man)?;
     let (train, eval) = data.split_eval(0.125);
@@ -72,6 +80,46 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         println!("trace written to {path}");
     }
     Ok(())
+}
+
+/// `--executor threads`: run the self-contained threaded pipeline
+/// (first-party stage model + registry codecs over channel links) and
+/// cross-check its loss/wire trajectory against the virtual-clock twin.
+fn cmd_train_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
+    let stages = cli.usize("stages", 4)?;
+    let el = cli.usize("el", 64)?;
+    let micro_b = cli.usize("micro-batch", 2)?;
+    let steps = if cfg.total_steps == usize::MAX { 20 } else { cfg.total_steps };
+    println!(
+        "executor=threads stages={stages} n_micro={} micro_batch={micro_b} el={el} \
+         compression={} schedule={:?} bandwidth={}",
+        cfg.n_micro,
+        cfg.compression.label(),
+        cfg.schedule,
+        fmt::bandwidth(cfg.bandwidth_bps)
+    );
+    let t0 = std::time::Instant::now();
+    let (real, oracle) = exp::run_executor_with_oracle(cfg, stages, micro_b, el, steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(&["step", "loss", "fw wire", "bw wire", "wall step", "oracle step"]);
+    for (i, rec) in real.steps.iter().enumerate() {
+        t.row(vec![
+            format!("{i}"),
+            format!("{:.5}", rec.loss),
+            fmt::bytes(rec.fw_wire_bytes.iter().sum::<u64>()),
+            fmt::bytes(rec.bw_wire_bytes.iter().sum::<u64>()),
+            fmt::duration_s(real.step_time_s[i]),
+            fmt::duration_s(oracle.step_time_s[i]),
+        ]);
+    }
+    print!("{}", t.render());
+    let identical = real.bit_identical(&oracle);
+    println!(
+        "wall time {} (threads + oracle) — trajectory vs virtual-clock oracle: {}",
+        fmt::duration_s(wall),
+        if identical { "bit-identical" } else { "DIVERGED (bug!)" }
+    );
+    exp::check_matches_oracle(&real, &oracle)
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {

@@ -1,0 +1,88 @@
+//! Channel-backed frame transport for the threaded pipeline executor.
+//!
+//! A [`FrameLink`] is the sending endpoint of one directed pipeline
+//! boundary (stage s → neighbour): it owns a [`RealLink`] carrying
+//! serialized [`Frame`](crate::codec::Frame) images (`Vec<u8>`), paces
+//! delivery to the modeled bandwidth/latency, and counts the bytes it
+//! ships. (The executor's *trajectory* numbers come from the frames
+//! themselves — `Frame::wire_bytes()` via `TransferStats` — which equal
+//! these link counters because `wire_bytes() == to_bytes().len()` is
+//! pinned by `prop_frames.rs`; the counters are the transport's own
+//! per-link view.) The receiving endpoint ([`FrameLinkRx`]) blocks until
+//! the modeled delivery instant and turns a disconnected peer (a worker
+//! thread that exited early) into a `Result` error instead of a hang or
+//! a panic.
+
+use std::time::Duration;
+
+use super::{RealLink, RealReceiver};
+use crate::util::error::Result;
+
+/// Sending half of one directed boundary link.
+pub struct FrameLink {
+    link: RealLink<Vec<u8>>,
+    /// Serialized frame bytes pushed onto this link (the transport's
+    /// own accounting; equals the frame-measured trajectory sums).
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+/// Receiving half of one directed boundary link.
+pub struct FrameLinkRx {
+    rx: RealReceiver<Vec<u8>>,
+}
+
+/// Build one directed link: (sender for the upstream stage, receiver for
+/// the downstream stage).
+pub fn frame_link(bandwidth_bps: f64, latency: Duration) -> (FrameLink, FrameLinkRx) {
+    let (link, rx) = RealLink::channel(bandwidth_bps, latency);
+    (FrameLink { link, bytes_sent: 0, msgs_sent: 0 }, FrameLinkRx { rx })
+}
+
+impl FrameLink {
+    /// Send one serialized frame. Returns immediately (sends overlap
+    /// compute); the receiver blocks until the modeled delivery time of
+    /// `bytes.len()` wire bytes.
+    pub fn send(&mut self, bytes: Vec<u8>) {
+        self.bytes_sent += bytes.len() as u64;
+        self.msgs_sent += 1;
+        let n = bytes.len() as u64;
+        self.link.send(bytes, n);
+    }
+}
+
+impl FrameLinkRx {
+    /// Blocking receive honouring the modeled delivery time. A closed
+    /// channel means the peer stage's worker exited (error or panic)
+    /// before sending — surfaced as an error so the whole pipeline
+    /// unwinds instead of deadlocking.
+    pub fn recv(&self) -> Result<Vec<u8>> {
+        self.rx
+            .recv()
+            .ok_or_else(|| crate::err!("pipeline channel closed: peer stage exited early"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_arrive_in_order_with_byte_accounting() {
+        let (mut tx, rx) = frame_link(1e12, Duration::ZERO);
+        tx.send(vec![1, 2, 3]);
+        tx.send(vec![4, 5]);
+        assert_eq!(tx.bytes_sent, 5);
+        assert_eq!(tx.msgs_sent, 2);
+        assert_eq!(rx.recv().unwrap(), vec![1, 2, 3]);
+        assert_eq!(rx.recv().unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn dropped_sender_is_an_error_not_a_hang() {
+        let (tx, rx) = frame_link(1e12, Duration::ZERO);
+        drop(tx);
+        let err = rx.recv().unwrap_err();
+        assert!(err.to_string().contains("channel closed"), "{err}");
+    }
+}

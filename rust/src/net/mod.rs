@@ -9,6 +9,10 @@
 //! A real-sleep mode (`RealLink`) exists for the threaded integration test
 //! so the event model is cross-checked against wall-clock behaviour.
 
+pub mod channel;
+
+pub use channel::{frame_link, FrameLink, FrameLinkRx};
+
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 

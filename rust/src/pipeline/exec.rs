@@ -1,0 +1,815 @@
+//! Threaded pipeline executor + its virtual-clock twin.
+//!
+//! This is the first code path that actually *runs* concurrent pipeline
+//! stages: each stage is a worker thread executing its
+//! [`Schedule`](super::Schedule) op list, connected to its neighbours by
+//! channel-backed links ([`net::channel`](crate::net::channel)) that
+//! carry real serialized [`Frame`] bytes through registry-built
+//! [`BoundaryCodec`](crate::codec::BoundaryCodec) halves — the encoder
+//! half lives on the sending thread, the decoder half on the receiving
+//! thread, and AC-SGD message-buffer state advances on each side of each
+//! link through the frames alone (Algorithm 2's replica symmetry,
+//! realized as thread ownership).
+//!
+//! The same per-stage workers also run under the virtual clock
+//! ([`run_virtual`], built on [`super::step`]'s op-retirement core, the
+//! engine `PipelineSim` uses). Because ops retire in each stage's
+//! schedule order in both modes, the two executors are
+//! **seed-deterministic twins**: given the same [`ExecConfig`], their
+//! per-step loss and wire-byte trajectories are bit-identical — pinned
+//! by `tests/exec_vs_sim.rs`, which is what turns the virtual-clock
+//! simulator into a verified oracle instead of an unchecked model.
+//!
+//! Stage compute is a first-party deterministic model (elementwise
+//! affine + tanh regression), so the executor runs end-to-end with zero
+//! external dependencies — no AOT artifacts, no PJRT backend.
+
+use std::collections::VecDeque;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::codec::registry::build_mem_pair;
+use crate::codec::{CodecSpec, Frame, Rounding};
+use crate::config::TrainConfig;
+use crate::coordinator::{BoundaryReceiver, BoundarySender};
+use crate::net::{frame_link, FrameLink, FrameLinkRx};
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+
+use super::schedule::{Op, Schedule};
+use super::step::{run_step, StepConfig, StepDriver};
+
+/// Which pipeline runtime executes a training run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Executor {
+    /// Single-threaded virtual-clock execution (the verified oracle).
+    Sim,
+    /// One worker thread per stage, frames over channel-backed links.
+    Threads,
+}
+
+impl Executor {
+    /// Parse an executor name ("threads" | "sim"). Trims whitespace and
+    /// matches case-insensitively, like `Schedule::parse`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" => Ok(Executor::Sim),
+            "threads" => Ok(Executor::Threads),
+            _ => crate::bail!("unknown executor {s:?} (threads|sim)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Executor::Sim => "sim",
+            Executor::Threads => "threads",
+        }
+    }
+}
+
+/// Configuration of one executor run: pipeline shape, codec spec, and
+/// the modeled network/compute parameters for the virtual clock (the
+/// threaded mode uses bandwidth/latency to pace its links).
+#[derive(Clone, Debug)]
+pub struct ExecConfig {
+    pub n_stages: usize,
+    /// Microbatches per optimizer step.
+    pub n_micro: usize,
+    /// Examples per microbatch.
+    pub micro_batch: usize,
+    /// Elements per example record (the boundary width).
+    pub example_len: usize,
+    pub spec: CodecSpec,
+    pub rounding: Rounding,
+    pub schedule: Schedule,
+    pub seed: u64,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    pub lr: f32,
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+    /// Modeled per-microbatch compute times (virtual clock only — the
+    /// threaded mode's compute time is whatever the host takes).
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+}
+
+impl ExecConfig {
+    /// Small self-contained default: 4 stages, 4 microbatches of 2
+    /// examples x 64 elements, 4 steps — what the integration tests and
+    /// the CLI demo start from.
+    pub fn small(spec: CodecSpec) -> Self {
+        ExecConfig {
+            n_stages: 4,
+            n_micro: 4,
+            micro_batch: 2,
+            example_len: 64,
+            spec,
+            rounding: Rounding::Nearest,
+            schedule: Schedule::GPipe,
+            seed: 0,
+            steps: 4,
+            lr: 0.05,
+            bandwidth_bps: 1e11,
+            latency_s: 0.0,
+            fwd_s: 0.01,
+            bwd_s: 0.02,
+        }
+    }
+
+    /// Derive an executor config from a [`TrainConfig`] (the
+    /// `--executor` switch): compression / schedule / seed / n_micro /
+    /// lr / network come from the config; the pipeline shape — which the
+    /// artifact manifest would normally dictate — is passed explicitly.
+    pub fn from_train(
+        cfg: &TrainConfig,
+        n_stages: usize,
+        micro_batch: usize,
+        example_len: usize,
+        steps: usize,
+    ) -> Self {
+        ExecConfig {
+            n_stages,
+            n_micro: cfg.n_micro,
+            micro_batch,
+            example_len,
+            spec: cfg.compression.clone(),
+            rounding: if cfg.stochastic_rounding {
+                Rounding::Stochastic
+            } else {
+                Rounding::Nearest
+            },
+            schedule: cfg.schedule,
+            seed: cfg.seed,
+            steps,
+            lr: cfg.lr as f32,
+            bandwidth_bps: cfg.bandwidth_bps,
+            latency_s: cfg.latency_s,
+            fwd_s: 0.01,
+            bwd_s: 0.02,
+        }
+    }
+}
+
+/// One optimizer step of the trajectory both executors must agree on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepRecord {
+    /// Mean microbatch loss (accumulated in backward op order — the same
+    /// order in both modes, so equality is exact, not approximate).
+    pub loss: f32,
+    /// Serialized frame bytes crossing each forward boundary this step.
+    pub fw_wire_bytes: Vec<u64>,
+    /// Same for the backward (gradient) direction.
+    pub bw_wire_bytes: Vec<u64>,
+}
+
+/// Full trajectory of one executor run.
+#[derive(Clone, Debug)]
+pub struct ExecTrace {
+    pub executor: Executor,
+    pub steps: Vec<StepRecord>,
+    /// Virtual mode: modeled step time under the clock. Threaded mode:
+    /// measured wall time of stage 0's step loop (the stage that starts
+    /// first and drains last under a flush schedule).
+    pub step_time_s: Vec<f64>,
+    /// Per stage: resident state bytes of its (fw encoder, fw decoder)
+    /// codec halves after the run — `fw_state_bytes[s].0` must equal
+    /// `fw_state_bytes[s+1].1` for stateful schemes (replica symmetry).
+    pub fw_state_bytes: Vec<(u64, u64)>,
+    /// Peak simultaneously-held microbatch activations per stage (the
+    /// memory bound 1F1B exists to provide).
+    pub peak_in_flight: Vec<usize>,
+}
+
+impl ExecTrace {
+    pub fn losses(&self) -> Vec<f32> {
+        self.steps.iter().map(|s| s.loss).collect()
+    }
+
+    /// True when the per-step loss and wire-byte trajectories of the two
+    /// runs are identical. Losses compare as raw f32 bits, so a run that
+    /// diverges to NaN identically in both modes still counts as
+    /// identical (float `==` would not: NaN != NaN).
+    pub fn bit_identical(&self, other: &ExecTrace) -> bool {
+        self.steps.len() == other.steps.len()
+            && self.steps.iter().zip(&other.steps).all(|(a, b)| {
+                a.loss.to_bits() == b.loss.to_bits()
+                    && a.fw_wire_bytes == b.fw_wire_bytes
+                    && a.bw_wire_bytes == b.bw_wire_bytes
+            })
+    }
+}
+
+/// Run one executor end-to-end.
+pub fn run(cfg: &ExecConfig, executor: Executor) -> Result<ExecTrace> {
+    match executor {
+        Executor::Sim => run_virtual(cfg),
+        Executor::Threads => run_threads(cfg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage compute: a first-party deterministic model
+// ---------------------------------------------------------------------------
+
+/// Elementwise affine + tanh stage: `y = tanh(w ⊙ x + b)` with the
+/// matching backward. Small enough to be exactly reproducible (plain
+/// sequential f32 loops, identical on every host), rich enough that
+/// parameters drift step to step — which is what gives AC-SGD's delta
+/// codec a real signal to compress.
+struct ToyStage {
+    el: usize,
+    w: Vec<f32>,
+    b: Vec<f32>,
+    dw: Vec<f32>,
+    db: Vec<f32>,
+}
+
+impl ToyStage {
+    fn new(el: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let w = (0..el).map(|_| 0.8 + 0.2 * rng.normal()).collect();
+        let b = (0..el).map(|_| 0.05 * rng.normal()).collect();
+        ToyStage { el, w, b, dw: vec![0.0; el], db: vec![0.0; el] }
+    }
+
+    fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let el = self.el;
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| (self.w[i % el] * v + self.b[i % el]).tanh())
+            .collect()
+    }
+
+    /// Accumulate parameter gradients; return the input gradient.
+    fn backward(&mut self, x: &[f32], y: &[f32], g: &[f32]) -> Vec<f32> {
+        let el = self.el;
+        let mut dx = vec![0f32; x.len()];
+        for i in 0..x.len() {
+            let j = i % el;
+            let t = g[i] * (1.0 - y[i] * y[i]);
+            self.dw[j] += t * x[i];
+            self.db[j] += t;
+            dx[i] = t * self.w[j];
+        }
+        dx
+    }
+
+    /// SGD step over the microbatch-mean gradient; resets accumulators.
+    fn apply(&mut self, lr: f32, inv_micro: f32) {
+        for j in 0..self.el {
+            self.w[j] -= lr * self.dw[j] * inv_micro;
+            self.b[j] -= lr * self.db[j] * inv_micro;
+            self.dw[j] = 0.0;
+            self.db[j] = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage worker: everything one stage owns, in either execution mode
+// ---------------------------------------------------------------------------
+
+/// Per-step accounting one stage produces.
+#[derive(Clone, Debug, Default)]
+struct StageStep {
+    loss: Option<f32>,
+    fw_wire: u64,
+    bw_wire: u64,
+}
+
+/// One pipeline stage: its model, its codec endpoint halves (encoder
+/// toward the next stage, decoder from the previous, and the reverse
+/// pair for gradients), and the saved per-microbatch activations its
+/// backward passes need. Owned by a worker thread in threaded mode, by
+/// the virtual-clock driver otherwise — the op call sequence is the same.
+struct StageWorker {
+    stage: usize,
+    n_stages: usize,
+    n_micro: usize,
+    lr: f32,
+    model: ToyStage,
+    fw_send: Option<BoundarySender>,
+    fw_recv: Option<BoundaryReceiver>,
+    bw_send: Option<BoundarySender>,
+    bw_recv: Option<BoundaryReceiver>,
+    /// Stage 0 only: the local training inputs, one per microbatch.
+    inputs: Vec<Vec<f32>>,
+    /// Last stage only: regression targets, one per microbatch.
+    targets: Vec<Vec<f32>>,
+    /// Example ids per microbatch (keys the AC-SGD buffers).
+    ids: Vec<Vec<u64>>,
+    saved_x: Vec<Option<Vec<f32>>>,
+    saved_y: Vec<Option<Vec<f32>>>,
+    in_flight: usize,
+    peak_in_flight: usize,
+    cur: StageStep,
+}
+
+impl StageWorker {
+    /// Forward one microbatch. `incoming` is the serialized frame from
+    /// stage-1 (None on stage 0). Returns the serialized frame for
+    /// stage+1 (None on the last stage).
+    fn fwd(&mut self, mb: usize, incoming: Option<Vec<u8>>) -> Result<Option<Vec<u8>>> {
+        let x = if self.stage == 0 {
+            self.inputs[mb].clone()
+        } else {
+            let bytes = incoming
+                .with_context(|| format!("stage {}: no forward frame for mb {mb}", self.stage))?;
+            let frame = Frame::from_bytes(&bytes)?;
+            self.fw_recv
+                .as_mut()
+                .context("interior stage without a forward decoder")?
+                .decode(&self.ids[mb], &frame)?
+        };
+        let y = self.model.forward(&x);
+        let out = if let Some(tx) = self.fw_send.as_mut() {
+            let (frame, stats) = tx.encode(&self.ids[mb], &y)?;
+            self.cur.fw_wire += stats.wire_bytes;
+            Some(frame.to_bytes())
+        } else {
+            None
+        };
+        self.saved_x[mb] = Some(x);
+        self.saved_y[mb] = Some(y);
+        self.in_flight += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        Ok(out)
+    }
+
+    /// Backward one microbatch. `incoming` is the serialized gradient
+    /// frame from stage+1 (None on the last stage, which starts from the
+    /// loss). Returns the serialized gradient frame for stage-1 (None on
+    /// stage 0).
+    fn bwd(&mut self, mb: usize, incoming: Option<Vec<u8>>) -> Result<Option<Vec<u8>>> {
+        let x = self.saved_x[mb]
+            .take()
+            .with_context(|| format!("stage {}: backward before forward (mb {mb})", self.stage))?;
+        let y = self.saved_y[mb]
+            .take()
+            .with_context(|| format!("stage {}: backward before forward (mb {mb})", self.stage))?;
+        let g = if self.stage + 1 == self.n_stages {
+            // loss head: 0.5 * mean squared error against the target
+            let t = &self.targets[mb];
+            crate::ensure!(
+                t.len() == y.len(),
+                "target length {} != activation length {}",
+                t.len(),
+                y.len()
+            );
+            let n = y.len() as f32;
+            let mut loss = 0f32;
+            let mut g = vec![0f32; y.len()];
+            for i in 0..y.len() {
+                let d = y[i] - t[i];
+                loss += d * d;
+                g[i] = d / n;
+            }
+            self.cur.loss = Some(self.cur.loss.unwrap_or(0.0) + loss / (2.0 * n));
+            g
+        } else {
+            let bytes = incoming
+                .with_context(|| format!("stage {}: no backward frame for mb {mb}", self.stage))?;
+            let frame = Frame::from_bytes(&bytes)?;
+            self.bw_recv
+                .as_mut()
+                .context("interior stage without a backward decoder")?
+                .decode(&self.ids[mb], &frame)?
+        };
+        let dx = self.model.backward(&x, &y, &g);
+        self.in_flight -= 1;
+        if let Some(tx) = self.bw_send.as_mut() {
+            let (frame, stats) = tx.encode(&self.ids[mb], &dx)?;
+            self.cur.bw_wire += stats.wire_bytes;
+            Ok(Some(frame.to_bytes()))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Close one optimizer step: apply the SGD update and hand back this
+    /// step's accounting.
+    fn end_step(&mut self) -> StageStep {
+        self.model.apply(self.lr, 1.0 / self.n_micro as f32);
+        let mut rec = std::mem::take(&mut self.cur);
+        if let Some(l) = rec.loss.as_mut() {
+            *l /= self.n_micro as f32;
+        }
+        rec
+    }
+}
+
+/// Build the per-stage workers: models, data, and both codec halves of
+/// every boundary, with the sender/receiver halves sharing only their
+/// construction seed (never state). Both execution modes start from this
+/// one function, which is what makes them comparable bit for bit.
+fn build_workers(cfg: &ExecConfig) -> Result<Vec<StageWorker>> {
+    crate::ensure!(cfg.n_stages >= 1, "executor needs at least one stage");
+    crate::ensure!(cfg.n_micro >= 1, "executor needs at least one microbatch");
+    crate::ensure!(
+        cfg.micro_batch >= 1 && cfg.example_len >= 1,
+        "executor needs a non-empty microbatch shape"
+    );
+    crate::ensure!(cfg.steps >= 1, "executor needs at least one step");
+    let k = cfg.n_stages;
+    let m = cfg.n_micro;
+    let el = cfg.example_len;
+    let bsz = cfg.micro_batch;
+
+    let mut fw_send: Vec<Option<BoundarySender>> = (0..k).map(|_| None).collect();
+    let mut fw_recv: Vec<Option<BoundaryReceiver>> = (0..k).map(|_| None).collect();
+    let mut bw_send: Vec<Option<BoundarySender>> = (0..k).map(|_| None).collect();
+    let mut bw_recv: Vec<Option<BoundaryReceiver>> = (0..k).map(|_| None).collect();
+    for b in 0..k.saturating_sub(1) {
+        // same seed namespaces the trainer uses; the spec seed folds in
+        // the run seed so changing it re-randomizes stochastic rounding
+        let base = cfg.seed.wrapping_mul(0x9E37_79B9);
+        let (enc, dec) =
+            build_mem_pair(&cfg.spec.fw, el, cfg.rounding, base.wrapping_add(0xB0D1 + b as u64))?;
+        fw_send[b] = Some(BoundarySender::new(b as u32, el, enc));
+        fw_recv[b + 1] = Some(BoundaryReceiver::new(b as u32, el, dec));
+        let (enc, dec) =
+            build_mem_pair(&cfg.spec.bw, el, cfg.rounding, base.wrapping_add(0xBACC + b as u64))?;
+        bw_send[b + 1] = Some(BoundarySender::new(b as u32, el, enc));
+        bw_recv[b] = Some(BoundaryReceiver::new(b as u32, el, dec));
+    }
+
+    // deterministic dataset: stable example ids so AC-SGD buffers are
+    // revisited every step (first step full precision, then deltas)
+    let mut data_rng = Rng::new(cfg.seed ^ 0xDA7A_0001);
+    let inputs: Vec<Vec<f32>> =
+        (0..m).map(|_| (0..bsz * el).map(|_| 0.8 * data_rng.normal()).collect()).collect();
+    let mut tgt_rng = Rng::new(cfg.seed ^ 0x7A46_0002);
+    let targets: Vec<Vec<f32>> =
+        (0..m).map(|_| (0..bsz * el).map(|_| 0.5 * tgt_rng.normal()).collect()).collect();
+    let ids: Vec<Vec<u64>> =
+        (0..m).map(|mb| ((mb * bsz) as u64..((mb + 1) * bsz) as u64).collect()).collect();
+
+    let mut workers = Vec::with_capacity(k);
+    for s in 0..k {
+        workers.push(StageWorker {
+            stage: s,
+            n_stages: k,
+            n_micro: m,
+            lr: cfg.lr,
+            model: ToyStage::new(el, cfg.seed.wrapping_add(0xC0DE + 131 * s as u64)),
+            fw_send: fw_send[s].take(),
+            fw_recv: fw_recv[s].take(),
+            bw_send: bw_send[s].take(),
+            bw_recv: bw_recv[s].take(),
+            inputs: if s == 0 { inputs.clone() } else { Vec::new() },
+            targets: if s == k - 1 { targets.clone() } else { Vec::new() },
+            ids: ids.clone(),
+            saved_x: (0..m).map(|_| None).collect(),
+            saved_y: (0..m).map(|_| None).collect(),
+            in_flight: 0,
+            peak_in_flight: 0,
+            cur: StageStep::default(),
+        });
+    }
+    Ok(workers)
+}
+
+/// Fold per-stage step accounting into one [`StepRecord`]: forward wire
+/// bytes indexed by sending stage (boundary b = stage b), backward by
+/// receiving boundary (stage b+1 sends across boundary b), loss from the
+/// last stage. Both execution modes assemble through this one function.
+fn assemble_record(stage_steps: &[StageStep]) -> StepRecord {
+    let k = stage_steps.len();
+    let mut rec = StepRecord::default();
+    for (s, st) in stage_steps.iter().enumerate() {
+        if s + 1 < k {
+            rec.fw_wire_bytes.push(st.fw_wire);
+        }
+        if s > 0 {
+            rec.bw_wire_bytes.push(st.bw_wire);
+        }
+        if let Some(l) = st.loss {
+            rec.loss = l;
+        }
+    }
+    rec
+}
+
+fn collect_step(workers: &mut [StageWorker]) -> StepRecord {
+    let stage_steps: Vec<StageStep> = workers.iter_mut().map(|w| w.end_step()).collect();
+    assemble_record(&stage_steps)
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-clock mode (the oracle)
+// ---------------------------------------------------------------------------
+
+/// [`StepDriver`] that runs the real numerics under the virtual clock:
+/// frames queue in per-link FIFOs exactly as the channel transport
+/// delivers them (one producer, one consumer, schedule order on both
+/// ends), and the modeled compute/transmit times drive the clock.
+struct VirtualDriver<'a> {
+    workers: &'a mut [StageWorker],
+    fw_q: Vec<VecDeque<Vec<u8>>>,
+    bw_q: Vec<VecDeque<Vec<u8>>>,
+    fwd_s: f64,
+    bwd_s: f64,
+}
+
+impl StepDriver for VirtualDriver<'_> {
+    fn exec(&mut self, stage: usize, op: Op) -> Result<(f64, Option<u64>)> {
+        let k = self.workers.len();
+        match op {
+            Op::Fwd(mb) => {
+                let incoming = if stage > 0 {
+                    Some(self.fw_q[stage - 1].pop_front().with_context(|| {
+                        format!("virtual clock: forward frame for stage {stage} mb {mb} missing")
+                    })?)
+                } else {
+                    None
+                };
+                let out = self.workers[stage].fwd(mb, incoming)?;
+                let bytes = out.as_ref().map(|b| b.len() as u64);
+                if let Some(b) = out {
+                    self.fw_q[stage].push_back(b);
+                }
+                Ok((self.fwd_s, bytes))
+            }
+            Op::Bwd(mb) => {
+                let incoming = if stage + 1 < k {
+                    Some(self.bw_q[stage].pop_front().with_context(|| {
+                        format!("virtual clock: backward frame for stage {stage} mb {mb} missing")
+                    })?)
+                } else {
+                    None
+                };
+                let out = self.workers[stage].bwd(mb, incoming)?;
+                let bytes = out.as_ref().map(|b| b.len() as u64);
+                if let Some(b) = out {
+                    self.bw_q[stage - 1].push_back(b);
+                }
+                Ok((self.bwd_s, bytes))
+            }
+        }
+    }
+}
+
+/// Run the full training loop single-threaded under the virtual clock.
+pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
+    let mut workers = build_workers(cfg)?;
+    let k = cfg.n_stages;
+    let step_cfg = StepConfig {
+        n_stages: k,
+        n_micro: cfg.n_micro,
+        bandwidth_bps: cfg.bandwidth_bps,
+        link_bandwidths: None,
+        latency_s: cfg.latency_s,
+        schedule: cfg.schedule,
+    };
+    let mut trace = ExecTrace {
+        executor: Executor::Sim,
+        steps: Vec::with_capacity(cfg.steps),
+        step_time_s: Vec::with_capacity(cfg.steps),
+        fw_state_bytes: Vec::new(),
+        peak_in_flight: Vec::new(),
+    };
+    for _ in 0..cfg.steps {
+        let timing = {
+            let mut driver = VirtualDriver {
+                workers: &mut workers,
+                fw_q: (0..k.saturating_sub(1)).map(|_| VecDeque::new()).collect(),
+                bw_q: (0..k.saturating_sub(1)).map(|_| VecDeque::new()).collect(),
+                fwd_s: cfg.fwd_s,
+                bwd_s: cfg.bwd_s,
+            };
+            run_step(&step_cfg, &mut driver)?
+        };
+        trace.step_time_s.push(timing.step_time_s);
+        trace.steps.push(collect_step(&mut workers));
+    }
+    trace.fw_state_bytes = workers
+        .iter()
+        .map(|w| {
+            (
+                w.fw_send.as_ref().map_or(0, |h| h.state_bytes()),
+                w.fw_recv.as_ref().map_or(0, |h| h.state_bytes()),
+            )
+        })
+        .collect();
+    trace.peak_in_flight = workers.iter().map(|w| w.peak_in_flight).collect();
+    Ok(trace)
+}
+
+// ---------------------------------------------------------------------------
+// Threaded mode (the real runtime)
+// ---------------------------------------------------------------------------
+
+/// What one stage's worker thread hands back at join.
+struct StageReport {
+    per_step: Vec<StageStep>,
+    wall_s: Vec<f64>,
+    fw_state: (u64, u64),
+    peak_in_flight: usize,
+}
+
+/// Run the full training loop with one worker thread per stage,
+/// exchanging serialized frames over channel-backed links.
+pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
+    let workers = build_workers(cfg)?;
+    let k = cfg.n_stages;
+    let latency = Duration::from_secs_f64(cfg.latency_s);
+
+    let mut fw_tx: Vec<Option<FrameLink>> = (0..k).map(|_| None).collect();
+    let mut fw_rx: Vec<Option<FrameLinkRx>> = (0..k).map(|_| None).collect();
+    let mut bw_tx: Vec<Option<FrameLink>> = (0..k).map(|_| None).collect();
+    let mut bw_rx: Vec<Option<FrameLinkRx>> = (0..k).map(|_| None).collect();
+    for b in 0..k.saturating_sub(1) {
+        let (tx, rx) = frame_link(cfg.bandwidth_bps, latency);
+        fw_tx[b] = Some(tx); // stage b sends forward
+        fw_rx[b + 1] = Some(rx); // stage b+1 receives
+        let (tx, rx) = frame_link(cfg.bandwidth_bps, latency);
+        bw_tx[b + 1] = Some(tx); // stage b+1 sends gradients back
+        bw_rx[b] = Some(rx);
+    }
+
+    let mut handles = Vec::with_capacity(k);
+    for (s, mut w) in workers.into_iter().enumerate() {
+        let ops = cfg.schedule.ops(s, k, cfg.n_micro);
+        let steps = cfg.steps;
+        let mut my_fw_tx = fw_tx[s].take();
+        let my_fw_rx = fw_rx[s].take();
+        let mut my_bw_tx = bw_tx[s].take();
+        let my_bw_rx = bw_rx[s].take();
+        let spawned = thread::Builder::new()
+            .name(format!("aq-stage{s}"))
+            .spawn(move || -> Result<StageReport> {
+                let mut per_step = Vec::with_capacity(steps);
+                let mut wall_s = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    let t0 = Instant::now();
+                    for &op in &ops {
+                        match op {
+                            Op::Fwd(mb) => {
+                                let incoming = match &my_fw_rx {
+                                    Some(rx) => Some(rx.recv()?),
+                                    None => None,
+                                };
+                                if let Some(bytes) = w.fwd(mb, incoming)? {
+                                    my_fw_tx
+                                        .as_mut()
+                                        .context("non-last stage without a forward link")?
+                                        .send(bytes);
+                                }
+                            }
+                            Op::Bwd(mb) => {
+                                let incoming = match &my_bw_rx {
+                                    Some(rx) => Some(rx.recv()?),
+                                    None => None,
+                                };
+                                if let Some(bytes) = w.bwd(mb, incoming)? {
+                                    my_bw_tx
+                                        .as_mut()
+                                        .context("non-first stage without a backward link")?
+                                        .send(bytes);
+                                }
+                            }
+                        }
+                    }
+                    per_step.push(w.end_step());
+                    wall_s.push(t0.elapsed().as_secs_f64());
+                }
+                Ok(StageReport {
+                    per_step,
+                    wall_s,
+                    fw_state: (
+                        w.fw_send.as_ref().map_or(0, |h| h.state_bytes()),
+                        w.fw_recv.as_ref().map_or(0, |h| h.state_bytes()),
+                    ),
+                    peak_in_flight: w.peak_in_flight,
+                })
+            });
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                // the failed stage's closure (and its links) was dropped,
+                // so every already-spawned neighbour unwinds with a
+                // channel-closed error; drain them before reporting
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(crate::err!("failed to spawn stage {s} worker thread: {e}"));
+            }
+        }
+    }
+
+    let mut results: Vec<Result<StageReport>> = Vec::with_capacity(k);
+    for h in handles {
+        results.push(match h.join() {
+            Ok(r) => r,
+            Err(_) => Err(crate::err!("stage worker thread panicked")),
+        });
+    }
+    if results.iter().any(|r| r.is_err()) {
+        // a failing stage drops its channels, which unwinds its
+        // neighbours with "channel closed" errors — report the root
+        // cause, not the cascade
+        let mut cascade = None;
+        for r in results {
+            if let Err(e) = r {
+                if !e.to_string().contains("pipeline channel closed") {
+                    return Err(e);
+                }
+                cascade.get_or_insert(e);
+            }
+        }
+        return Err(cascade.expect("at least one error present"));
+    }
+    let reports: Vec<StageReport> = results.into_iter().map(|r| r.unwrap()).collect();
+
+    let mut trace = ExecTrace {
+        executor: Executor::Threads,
+        steps: Vec::with_capacity(cfg.steps),
+        step_time_s: Vec::with_capacity(cfg.steps),
+        fw_state_bytes: reports.iter().map(|r| r.fw_state).collect(),
+        peak_in_flight: reports.iter().map(|r| r.peak_in_flight).collect(),
+    };
+    for step in 0..cfg.steps {
+        let stage_steps: Vec<StageStep> =
+            reports.iter().map(|r| r.per_step[step].clone()).collect();
+        trace.steps.push(assemble_record(&stage_steps));
+        trace.step_time_s.push(reports[0].wall_s[step]);
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_parse_trims_and_ignores_case() {
+        assert_eq!(Executor::parse(" Threads ").unwrap(), Executor::Threads);
+        assert_eq!(Executor::parse("SIM").unwrap(), Executor::Sim);
+        let err = Executor::parse("gpu").unwrap_err().to_string();
+        assert!(err.contains("threads|sim"), "{err}");
+    }
+
+    #[test]
+    fn virtual_executor_trains_and_accounts_bytes() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.steps = 6;
+        let t = run_virtual(&cfg).unwrap();
+        assert_eq!(t.steps.len(), 6);
+        for rec in &t.steps {
+            assert!(rec.loss.is_finite());
+            assert_eq!(rec.fw_wire_bytes.len(), cfg.n_stages - 1);
+            assert_eq!(rec.bw_wire_bytes.len(), cfg.n_stages - 1);
+            for &b in rec.fw_wire_bytes.iter().chain(&rec.bw_wire_bytes) {
+                assert!(b > 0);
+            }
+        }
+        // the toy regression learns: loss drops over the run
+        assert!(
+            t.steps.last().unwrap().loss < t.steps[0].loss,
+            "{:?}",
+            t.losses()
+        );
+    }
+
+    #[test]
+    fn aq_wire_bytes_collapse_after_first_epoch() {
+        let mut cfg = ExecConfig::small(CodecSpec::aqsgd(2, 4));
+        cfg.steps = 3;
+        let t = run_virtual(&cfg).unwrap();
+        // step 0 sends full-precision first-visit records; steady state
+        // sends 2-bit deltas
+        let first: u64 = t.steps[0].fw_wire_bytes.iter().sum();
+        let steady: u64 = t.steps[2].fw_wire_bytes.iter().sum();
+        assert!(steady * 4 < first, "first {first} steady {steady}");
+        // Algorithm 2 replica symmetry across each boundary
+        for s in 0..cfg.n_stages - 1 {
+            assert!(t.fw_state_bytes[s].0 > 0);
+            assert_eq!(t.fw_state_bytes[s].0, t.fw_state_bytes[s + 1].1, "boundary {s}");
+        }
+    }
+
+    #[test]
+    fn single_stage_pipeline_works_in_both_modes() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_stages = 1;
+        cfg.steps = 2;
+        let v = run_virtual(&cfg).unwrap();
+        let t = run_threads(&cfg).unwrap();
+        assert_eq!(v.losses(), t.losses());
+        assert!(v.steps[0].fw_wire_bytes.is_empty());
+    }
+
+    #[test]
+    fn ofob_respects_the_memory_bound() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_micro = 8;
+        cfg.schedule = Schedule::OneFOneB;
+        cfg.steps = 2;
+        let t = run_virtual(&cfg).unwrap();
+        for (s, &peak) in t.peak_in_flight.iter().enumerate() {
+            let bound = cfg.schedule.peak_in_flight(s, cfg.n_stages, cfg.n_micro);
+            assert!(peak <= bound, "stage {s}: peak {peak} > bound {bound}");
+        }
+    }
+}

@@ -1,8 +1,15 @@
-//! Pipeline-parallel machinery: microbatch schedules and the event-driven
-//! virtual-time simulator that regenerates the paper's throughput tables.
+//! Pipeline-parallel machinery: microbatch schedules, the shared
+//! step-state core, the event-driven virtual-time simulator that
+//! regenerates the paper's throughput tables, and the threaded executor
+//! that runs real concurrent stages over channel-backed links (with the
+//! simulator as its verified determinism oracle — `tests/exec_vs_sim.rs`).
 
+pub mod exec;
 pub mod schedule;
 pub mod sim;
+pub mod step;
 
+pub use exec::{ExecConfig, ExecTrace, Executor, StepRecord};
 pub use schedule::{Op, Schedule};
 pub use sim::{PipelineSim, SimConfig, SimResult, StageTimes};
+pub use step::{run_step, StepConfig, StepDriver, StepTiming};

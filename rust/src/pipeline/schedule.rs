@@ -20,8 +20,11 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Parse a schedule name. Trims surrounding whitespace and matches
+    /// case-insensitively ("1F1B", " GPipe " are fine), mirroring
+    /// `CodecSpec::parse`'s tolerance for CLI-sourced strings.
     pub fn parse(s: &str) -> crate::util::error::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "gpipe" => Ok(Schedule::GPipe),
             "1f1b" => Ok(Schedule::OneFOneB),
             _ => crate::bail!("unknown schedule {s:?} (gpipe|1f1b)"),
@@ -137,6 +140,27 @@ mod tests {
         }
         assert!(peak as usize <= Schedule::OneFOneB.peak_in_flight(0, k, m));
         assert!(peak < m as i64); // strictly better than GPipe
+    }
+
+    #[test]
+    fn parse_trims_and_ignores_case() {
+        for s in ["gpipe", "GPipe", " GPIPE ", "\tgpipe\n"] {
+            assert_eq!(Schedule::parse(s).unwrap(), Schedule::GPipe, "{s:?}");
+        }
+        for s in ["1f1b", "1F1B", " 1f1B "] {
+            assert_eq!(Schedule::parse(s).unwrap(), Schedule::OneFOneB, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn parse_rejection_names_the_alternatives() {
+        for s in ["", "pipedream", "gpipe2", "1f-1b"] {
+            let err = Schedule::parse(s).unwrap_err().to_string();
+            assert!(err.contains("unknown schedule"), "{s:?}: {err}");
+            assert!(err.contains("gpipe|1f1b"), "{s:?}: {err}");
+            // the offending input is echoed back for CLI users
+            assert!(err.contains(&format!("{s:?}")), "{s:?}: {err}");
+        }
     }
 
     #[test]

@@ -6,9 +6,14 @@
 //! only blocks on *receiving* its input), and a configurable microbatch
 //! schedule. Deterministic and fast (millions of ops/s), so the bench
 //! harnesses can sweep every (bandwidth x scheme x bits) cell.
+//!
+//! The op-retirement engine itself lives in [`super::step`] and is shared
+//! with the numeric executor (`pipeline::exec`); this module only supplies
+//! the timing-only driver and the table-shaped result type.
 
 use super::schedule::{Op, Schedule};
-use crate::net::Link;
+use super::step::{run_step, StepConfig, StepDriver};
+use crate::util::error::Result;
 
 /// Per-microbatch compute times of one stage (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -89,6 +94,27 @@ impl SimResult {
 
 pub struct PipelineSim;
 
+/// Timing-only [`StepDriver`]: per-stage compute times and fixed message
+/// sizes from a [`SimConfig`], no numerics. Infallible.
+struct TimingDriver<'a> {
+    cfg: &'a SimConfig,
+}
+
+impl StepDriver for TimingDriver<'_> {
+    fn exec(&mut self, stage: usize, op: Op) -> Result<(f64, Option<u64>)> {
+        let k = self.cfg.n_stages;
+        Ok(match op {
+            Op::Fwd(mb) => (
+                self.cfg.stage_times[stage].fwd_s,
+                (stage + 1 < k).then(|| self.cfg.fw_bytes[mb]),
+            ),
+            Op::Bwd(_) => {
+                (self.cfg.stage_times[stage].bwd_s, (stage > 0).then_some(self.cfg.bw_bytes))
+            }
+        })
+    }
+}
+
 impl PipelineSim {
     pub fn run(cfg: &SimConfig) -> SimResult {
         let k = cfg.n_stages;
@@ -96,95 +122,18 @@ impl PipelineSim {
         assert_eq!(cfg.stage_times.len(), k);
         assert_eq!(cfg.fw_bytes.len(), m);
 
-        // one link per boundary per direction (full duplex); bandwidths
-        // may differ per boundary (App. E heterogeneous networks)
-        let link_bw = |b: usize| -> f64 {
-            cfg.link_bandwidths
-                .as_ref()
-                .map(|v| v[b])
-                .unwrap_or(cfg.bandwidth_bps)
+        let step_cfg = StepConfig {
+            n_stages: k,
+            n_micro: m,
+            bandwidth_bps: cfg.bandwidth_bps,
+            link_bandwidths: cfg.link_bandwidths.clone(),
+            latency_s: cfg.latency_s,
+            schedule: cfg.schedule,
         };
-        let mut fw_links: Vec<Link> =
-            (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
-        let mut bw_links: Vec<Link> =
-            (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
+        let timing = run_step(&step_cfg, &mut TimingDriver { cfg })
+            .expect("timing driver is infallible");
 
-        let ops: Vec<Vec<Op>> = (0..k).map(|s| cfg.schedule.ops(s, k, m)).collect();
-        let mut op_idx = vec![0usize; k];
-        let mut stage_free = vec![0f64; k];
-        let mut stage_busy = vec![0f64; k];
-        let mut stall = vec![0f64; k];
-
-        const PENDING: f64 = f64::INFINITY;
-        // fwd_arrival[s][m]: when stage s's input activation for microbatch
-        // m is available. Stage 0 reads local data (time 0).
-        let mut fwd_arrival = vec![vec![PENDING; m]; k];
-        let mut bwd_arrival = vec![vec![PENDING; m]; k];
-        let mut fwd_done = vec![vec![PENDING; m]; k];
-        for t in fwd_arrival[0].iter_mut() {
-            *t = 0.0;
-        }
-        // last stage needs no incoming gradient
-        for t in bwd_arrival[k - 1].iter_mut() {
-            *t = PENDING; // unused; its Bwd dep is its own Fwd
-        }
-
-        let total_ops: usize = ops.iter().map(|o| o.len()).sum();
-        let mut done_ops = 0usize;
-
-        while done_ops < total_ops {
-            let mut progressed = false;
-            for s in 0..k {
-                // retire as many ready ops of stage s as possible
-                while op_idx[s] < ops[s].len() {
-                    let op = ops[s][op_idx[s]];
-                    let dep = match op {
-                        Op::Fwd(mb) => fwd_arrival[s][mb],
-                        Op::Bwd(mb) => {
-                            if s == k - 1 {
-                                fwd_done[s][mb]
-                            } else {
-                                bwd_arrival[s][mb]
-                            }
-                        }
-                    };
-                    if dep == PENDING {
-                        break;
-                    }
-                    let start = stage_free[s].max(dep);
-                    stall[s] += start - stage_free[s];
-                    let comp = match op {
-                        Op::Fwd(_) => cfg.stage_times[s].fwd_s,
-                        Op::Bwd(_) => cfg.stage_times[s].bwd_s,
-                    };
-                    let end = start + comp;
-                    stage_free[s] = end;
-                    stage_busy[s] += comp;
-                    match op {
-                        Op::Fwd(mb) => {
-                            fwd_done[s][mb] = end;
-                            if s + 1 < k {
-                                let arr = fw_links[s].transmit(end, cfg.fw_bytes[mb]);
-                                fwd_arrival[s + 1][mb] = arr;
-                            }
-                        }
-                        Op::Bwd(mb) => {
-                            if s > 0 {
-                                let arr = bw_links[s - 1].transmit(end, cfg.bw_bytes);
-                                bwd_arrival[s - 1][mb] = arr;
-                            }
-                        }
-                    }
-                    op_idx[s] += 1;
-                    done_ops += 1;
-                    progressed = true;
-                }
-            }
-            assert!(progressed, "pipeline deadlock: schedule has a dependency cycle");
-        }
-
-        let step_time_s =
-            stage_free.iter().cloned().fold(0.0f64, f64::max) + cfg.step_overhead_s;
+        let step_time_s = timing.step_time_s + cfg.step_overhead_s;
         let fw_tx = if k > 1 {
             cfg.fw_bytes.iter().map(|&b| b as f64 * 8.0 / cfg.bandwidth_bps).sum::<f64>()
                 / m as f64
@@ -196,12 +145,12 @@ impl PipelineSim {
 
         SimResult {
             step_time_s,
-            stage_busy_s: stage_busy,
-            fw_link_bytes: fw_links.iter().map(|l| l.bytes_sent).collect(),
-            bw_link_bytes: bw_links.iter().map(|l| l.bytes_sent).collect(),
+            stage_busy_s: timing.stage_busy_s,
+            fw_link_bytes: timing.fw_link_bytes,
+            bw_link_bytes: timing.bw_link_bytes,
             fw_msg_tx_s: fw_tx,
             bw_msg_tx_s: bw_tx,
-            stall_s: stall,
+            stall_s: timing.stall_s,
         }
     }
 

@@ -1,0 +1,221 @@
+//! The step-state core: dependency-driven retirement of one optimizer
+//! step's per-stage op lists under a virtual clock.
+//!
+//! Both pipeline execution modes are built on this one engine:
+//!
+//!  * [`sim::PipelineSim`](super::sim::PipelineSim) plugs in a
+//!    timing-only driver (per-stage compute times + fixed message sizes)
+//!    to regenerate the paper's throughput tables, and
+//!  * [`exec`](super::exec)'s virtual-clock executor plugs in a driver
+//!    that runs *real numerics* — stage compute, codec encode/decode,
+//!    serialized [`Frame`](crate::codec::Frame) bytes — so the virtual
+//!    clock and the threaded runtime share one op-retirement order.
+//!
+//! The invariant that makes the sharing sound: ops retire **in each
+//! stage's schedule order** (`op_idx[s]` only advances), exactly the
+//! order a per-stage worker thread executes them. A driver that carries
+//! per-stage state therefore sees the identical call sequence under this
+//! core and under `exec::run_threads`, which is what the
+//! `tests/exec_vs_sim.rs` determinism harness pins.
+
+use super::schedule::{Op, Schedule};
+use crate::net::Link;
+use crate::util::error::Result;
+
+/// Timing/topology parameters of one pipeline step.
+#[derive(Clone, Debug)]
+pub struct StepConfig {
+    pub n_stages: usize,
+    pub n_micro: usize,
+    pub bandwidth_bps: f64,
+    /// Per-boundary bandwidth override (length n_stages-1, App. E
+    /// heterogeneous networks); falls back to `bandwidth_bps` when None.
+    pub link_bandwidths: Option<Vec<f64>>,
+    pub latency_s: f64,
+    pub schedule: Schedule,
+}
+
+/// What executes when an op retires. `exec` runs the op's work and
+/// returns `(compute_seconds, wire_bytes)`: the virtual compute time the
+/// op occupies its stage, and the size of the message it emits toward
+/// its neighbour (`None` when the op sends nothing — last-stage forward,
+/// first-stage backward, or a single-stage pipeline).
+pub trait StepDriver {
+    fn exec(&mut self, stage: usize, op: Op) -> Result<(f64, Option<u64>)>;
+}
+
+/// Virtual-clock accounting of one retired step.
+#[derive(Clone, Debug)]
+pub struct StepTiming {
+    /// End-to-end time of the step (max over stage completion times).
+    pub step_time_s: f64,
+    /// Per-stage busy (compute) time.
+    pub stage_busy_s: Vec<f64>,
+    /// Per-stage stall time (waiting on the network).
+    pub stall_s: Vec<f64>,
+    /// Bytes crossing each forward / backward link.
+    pub fw_link_bytes: Vec<u64>,
+    pub bw_link_bytes: Vec<u64>,
+}
+
+/// Retire every op of one optimizer step, advancing the virtual clock.
+///
+/// Dependencies: `Fwd(mb)` at stage `s` waits for the forward message of
+/// `mb` from `s-1` (stage 0 reads local data at t=0); `Bwd(mb)` waits for
+/// the backward message from `s+1` (the last stage depends on its own
+/// `Fwd(mb)` instead). Sends are asynchronous — a stage never blocks on
+/// its own transmission, only on *receiving* input — and each link is a
+/// FIFO serializer (see [`Link`]).
+pub fn run_step(cfg: &StepConfig, driver: &mut dyn StepDriver) -> Result<StepTiming> {
+    let k = cfg.n_stages;
+    let m = cfg.n_micro;
+    let link_bw = |b: usize| -> f64 {
+        cfg.link_bandwidths.as_ref().map(|v| v[b]).unwrap_or(cfg.bandwidth_bps)
+    };
+    let mut fw_links: Vec<Link> =
+        (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
+    let mut bw_links: Vec<Link> =
+        (0..k.saturating_sub(1)).map(|b| Link::new(link_bw(b), cfg.latency_s)).collect();
+
+    let ops: Vec<Vec<Op>> = (0..k).map(|s| cfg.schedule.ops(s, k, m)).collect();
+    let mut op_idx = vec![0usize; k];
+    let mut stage_free = vec![0f64; k];
+    let mut stage_busy = vec![0f64; k];
+    let mut stall = vec![0f64; k];
+
+    const PENDING: f64 = f64::INFINITY;
+    // fwd_arrival[s][mb]: when stage s's input activation for microbatch
+    // mb is available. Stage 0 reads local data (time 0).
+    let mut fwd_arrival = vec![vec![PENDING; m]; k];
+    let mut bwd_arrival = vec![vec![PENDING; m]; k];
+    let mut fwd_done = vec![vec![PENDING; m]; k];
+    for t in fwd_arrival[0].iter_mut() {
+        *t = 0.0;
+    }
+
+    let total_ops: usize = ops.iter().map(|o| o.len()).sum();
+    let mut done_ops = 0usize;
+
+    while done_ops < total_ops {
+        let mut progressed = false;
+        for s in 0..k {
+            // retire as many ready ops of stage s as possible, in the
+            // stage's schedule order (the same order a worker thread
+            // executes them)
+            while op_idx[s] < ops[s].len() {
+                let op = ops[s][op_idx[s]];
+                let dep = match op {
+                    Op::Fwd(mb) => fwd_arrival[s][mb],
+                    Op::Bwd(mb) => {
+                        if s == k - 1 {
+                            fwd_done[s][mb]
+                        } else {
+                            bwd_arrival[s][mb]
+                        }
+                    }
+                };
+                if dep == PENDING {
+                    break;
+                }
+                let start = stage_free[s].max(dep);
+                stall[s] += start - stage_free[s];
+                let (comp, bytes) = driver.exec(s, op)?;
+                let end = start + comp;
+                stage_free[s] = end;
+                stage_busy[s] += comp;
+                match op {
+                    Op::Fwd(mb) => {
+                        fwd_done[s][mb] = end;
+                        if s + 1 < k {
+                            if let Some(b) = bytes {
+                                fwd_arrival[s + 1][mb] = fw_links[s].transmit(end, b);
+                            }
+                        }
+                    }
+                    Op::Bwd(mb) => {
+                        if s > 0 {
+                            if let Some(b) = bytes {
+                                bwd_arrival[s - 1][mb] = bw_links[s - 1].transmit(end, b);
+                            }
+                        }
+                    }
+                }
+                op_idx[s] += 1;
+                done_ops += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline deadlock: schedule has a dependency cycle");
+    }
+
+    Ok(StepTiming {
+        step_time_s: stage_free.iter().cloned().fold(0.0f64, f64::max),
+        stage_busy_s: stage_busy,
+        stall_s: stall,
+        fw_link_bytes: fw_links.iter().map(|l| l.bytes_sent).collect(),
+        bw_link_bytes: bw_links.iter().map(|l| l.bytes_sent).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Uniform {
+        k: usize,
+        fwd_s: f64,
+        bwd_s: f64,
+        bytes: u64,
+    }
+
+    impl StepDriver for Uniform {
+        fn exec(&mut self, stage: usize, op: Op) -> Result<(f64, Option<u64>)> {
+            Ok(match op {
+                Op::Fwd(_) => {
+                    (self.fwd_s, (stage + 1 < self.k).then_some(self.bytes))
+                }
+                Op::Bwd(_) => (self.bwd_s, (stage > 0).then_some(self.bytes)),
+            })
+        }
+    }
+
+    fn cfg(k: usize, m: usize, schedule: Schedule) -> StepConfig {
+        StepConfig {
+            n_stages: k,
+            n_micro: m,
+            bandwidth_bps: 1e12,
+            link_bandwidths: None,
+            latency_s: 0.0,
+            schedule,
+        }
+    }
+
+    #[test]
+    fn gpipe_flush_formula_at_infinite_bandwidth() {
+        let (k, m, f, b) = (4usize, 8usize, 0.01, 0.02);
+        let mut d = Uniform { k, fwd_s: f, bwd_s: b, bytes: 0 };
+        let t = run_step(&cfg(k, m, Schedule::GPipe), &mut d).unwrap();
+        let ideal = (m + k - 1) as f64 * (f + b);
+        assert!((t.step_time_s - ideal).abs() < 1e-6, "{} vs {ideal}", t.step_time_s);
+    }
+
+    #[test]
+    fn link_bytes_are_per_message_sums() {
+        let (k, m) = (3usize, 4usize);
+        let mut d = Uniform { k, fwd_s: 0.01, bwd_s: 0.01, bytes: 1000 };
+        let t = run_step(&cfg(k, m, Schedule::OneFOneB), &mut d).unwrap();
+        assert_eq!(t.fw_link_bytes, vec![4000, 4000]);
+        assert_eq!(t.bw_link_bytes, vec![4000, 4000]);
+    }
+
+    #[test]
+    fn driver_errors_propagate() {
+        struct Failing;
+        impl StepDriver for Failing {
+            fn exec(&mut self, _s: usize, _op: Op) -> Result<(f64, Option<u64>)> {
+                crate::bail!("boom")
+            }
+        }
+        assert!(run_step(&cfg(2, 2, Schedule::GPipe), &mut Failing).is_err());
+    }
+}

@@ -4,7 +4,9 @@
 //! buffer lengths, (3) sender/receiver replica state stays symmetric
 //! across rounds, and (4) malformed frames are errors, never panics.
 
-use aq_sgd::codec::frame::{Frame, FRAME_PRELUDE_BYTES};
+use aq_sgd::codec::frame::{
+    Frame, FRAME_PRELUDE_BYTES, TAG_AQ, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK,
+};
 use aq_sgd::codec::registry::{build_mem_pair, example_specs, CodecSpec};
 use aq_sgd::codec::{Rounding, SchemeSpec};
 use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
@@ -90,6 +92,73 @@ fn prop_truncated_frames_error_not_panic() {
                 frame.payload()[..frame.payload().len() - 1].to_vec(),
             );
             assert!(dec.decode(&[0], &short).is_err(), "short payload decoded");
+        }
+    });
+}
+
+#[test]
+fn prop_mutated_frames_error_never_panic_or_overallocate() {
+    // fuzz-style mutation loop over every registered scheme: random
+    // truncations, tag flips, and header/payload length-field corruptions
+    // of a valid serialized frame must come back as Err — never a panic
+    // (the whole closure runs under Prop, so any panic fails the case
+    // with a replayable seed) and never an allocation beyond the
+    // configured batch shape (checked via the decoded output length).
+    let schemes = all_schemes();
+    Prop::check("mutated frames", |rng| {
+        let scheme = schemes[rng.below(schemes.len())];
+        let el = len_in(rng, 1, 64);
+        let n_ex = len_in(rng, 1, 3);
+        let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 13).unwrap();
+        let ids: Vec<u64> = (0..n_ex as u64).collect();
+        let a = vec_f32(rng, el * n_ex, 1.0);
+        // advance both halves once so stateful schemes are in steady
+        // state (AQ frames become delta records with populated buffers)
+        let warm = enc.encode(&ids, &a).unwrap();
+        dec.decode(&ids, &warm).unwrap();
+        let bytes = enc.encode(&ids, &a).unwrap().to_bytes();
+
+        // (a) truncation at any cut point: the prelude's length claim no
+        // longer matches, so parsing must error before any allocation
+        let cut = rng.below(bytes.len());
+        assert!(
+            Frame::from_bytes(&bytes[..cut]).is_err(),
+            "truncated frame ({cut}/{} bytes) parsed",
+            bytes.len()
+        );
+
+        // (b) tag flipped to every other registered scheme tag: the
+        // codec checks its tag before touching header or payload
+        for tag in [TAG_RAW32, TAG_F16, TAG_DIRECTQ, TAG_AQ, TAG_TOPK] {
+            if tag == bytes[0] {
+                continue;
+            }
+            let mut flipped = bytes.clone();
+            flipped[0] = tag;
+            let f = Frame::from_bytes(&flipped).expect("tag flip keeps lengths valid");
+            assert!(dec.decode(&ids, &f).is_err(), "frame with flipped tag {tag} decoded");
+        }
+
+        // (c) header_len / payload_len corruption: any change to a length
+        // field breaks the prelude's total-length equation
+        let field_byte = 1 + rng.below(6); // bytes 1..=2 header_len, 3..=6 payload_len
+        let mut corrupted = bytes.clone();
+        corrupted[field_byte] = corrupted[field_byte].wrapping_add(1 + rng.below(255) as u8);
+        assert!(
+            Frame::from_bytes(&corrupted).is_err(),
+            "frame with corrupted length field at byte {field_byte} parsed"
+        );
+
+        // (d) arbitrary single-bit flip: never a panic; if the frame
+        // still parses and decodes, the output must keep the configured
+        // batch shape (a malformed header cannot force a huge buffer)
+        let mut mutated = bytes.clone();
+        let pos = rng.below(mutated.len());
+        mutated[pos] ^= 1 << rng.below(8);
+        if let Ok(f) = Frame::from_bytes(&mutated) {
+            if let Ok(out) = dec.decode(&ids, &f) {
+                assert_eq!(out.len(), el * n_ex, "bit flip at {pos} changed the output shape");
+            }
         }
     });
 }

@@ -64,6 +64,61 @@ fn prop_cross_stage_fwd_order_causal() {
     });
 }
 
+#[test]
+fn grid_schedule_complete_causal_and_memory_bounded() {
+    // exhaustive grid, not sampled: every (schedule, stage, n_stages ≤ 8,
+    // n_micro ≤ 16) cell — each Fwd/Bwd exactly once, every Bwd(i) after
+    // its Fwd(i), and 1F1B's in-flight activation count never exceeds the
+    // stage depth (the memory bound the schedule exists to provide)
+    for sched in [Schedule::GPipe, Schedule::OneFOneB] {
+        for k in 1..=8usize {
+            for m in 1..=16usize {
+                for s in 0..k {
+                    let ops = sched.ops(s, k, m);
+                    assert_eq!(ops.len(), 2 * m, "{sched:?} k{k} m{m} s{s}");
+                    let mut fwd = vec![false; m];
+                    let mut bwd = vec![false; m];
+                    let mut held = 0usize;
+                    let mut peak = 0usize;
+                    for op in ops {
+                        match op {
+                            Op::Fwd(i) => {
+                                assert!(!fwd[i], "{sched:?} k{k} m{m} s{s}: double fwd {i}");
+                                fwd[i] = true;
+                                held += 1;
+                                peak = peak.max(held);
+                            }
+                            Op::Bwd(i) => {
+                                assert!(fwd[i], "{sched:?} k{k} m{m} s{s}: bwd {i} before fwd");
+                                assert!(!bwd[i], "{sched:?} k{k} m{m} s{s}: double bwd {i}");
+                                bwd[i] = true;
+                                held -= 1;
+                            }
+                        }
+                    }
+                    assert!(
+                        fwd.iter().chain(bwd.iter()).all(|&b| b),
+                        "{sched:?} k{k} m{m} s{s}: incomplete"
+                    );
+                    // peak_in_flight is the advertised bound; for 1F1B it
+                    // is at most the stage depth
+                    assert!(
+                        peak <= sched.peak_in_flight(s, k, m),
+                        "{sched:?} k{k} m{m} s{s}: held {peak} > advertised bound {}",
+                        sched.peak_in_flight(s, k, m)
+                    );
+                    if sched == Schedule::OneFOneB {
+                        assert!(
+                            peak <= k.min(m).max(1),
+                            "1F1B k{k} m{m} s{s}: held {peak} activations, stage depth {k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn rand_sim(rng: &mut aq_sgd::util::Rng) -> SimConfig {
     let k = len_in(rng, 1, 8);
     let m = len_in(rng, 1, 16);
