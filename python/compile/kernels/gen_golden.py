@@ -146,6 +146,29 @@ def frame_aq_delta(x, m, bits):
     return frame_bytes(4, aq_header(bits, len(x), 1), payload), m_new
 
 
+def ef_deq(c, bits):
+    """Bit-exact emulation of the rust DirectQ decode path: k = 2*scale /
+    levels (f32), deq = code * k - scale (f32, in that op order)."""
+    scale, codes = rust_encode_emulated(c, bits)
+    levels = F32(2**bits - 1)
+    k = (F32(2.0) * scale / levels).astype(F32)
+    return ((codes.astype(F32) * k).astype(F32) - scale).astype(F32)
+
+
+def frame_ef_directq_visits(gs, bits):
+    """Error-feedback gradient frames over DirectQ (codec::ef): the wire
+    image per visit is a plain DirectQ frame of the *compensated* value
+    c = g + e, with e advanced as c - deq(c) — all f32, mirroring
+    EfCodec::encode exactly. Returns [(g, frame_bytes), ...]."""
+    visits = []
+    e = np.zeros_like(gs[0])
+    for g in gs:
+        c = (g + e).astype(F32)
+        visits.append((g, frame_directq(c, bits)))
+        e = (c - ef_deq(c, bits)).astype(F32)
+    return visits
+
+
 def frame_cases():
     """(name, scheme spec, ids, [(x, frame_bytes), ...] per visit)."""
     rng = np.random.default_rng(0xF4A3)
@@ -170,6 +193,15 @@ def frame_cases():
     f0 = frame_aq_full(x0, 2)
     f1, _m = frame_aq_delta(x1, x0, 2)  # after a full visit, m == x0 exactly
     yield "frame_aq2_el6", "aq2", [9], [(x0, f0), (x1, f1)]
+
+    # ef: gradient frames (the --dp-codec wire format): three rounds so
+    # the fixtures pin the zero-residual first frame AND the compensated
+    # revisits where e = c - deq(c) feeds forward
+    g4 = [(rng.standard_normal(12) * 0.02).astype(F32) for _ in range(3)]
+    yield "frame_ef_q4_el12", "ef:q4", [3], frame_ef_directq_visits(g4, 4)
+
+    g2 = [(rng.standard_normal(6) * 0.05).astype(F32) for _ in range(2)]
+    yield "frame_ef_q2_el6", "ef:q2", [0], frame_ef_directq_visits(g2, 2)
 
 
 def write_frames():

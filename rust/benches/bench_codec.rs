@@ -93,6 +93,7 @@ fn main() {
         specs.push(format!("q{bits}"));
         specs.push(format!("aq{bits}"));
         specs.push(format!("topk0.2@{bits}"));
+        specs.push(format!("ef:q{bits}"));
     }
     for spec in specs {
         let scheme = SchemeSpec::parse(&spec).unwrap();

@@ -1,0 +1,44 @@
+//! Data-parallel gradient-exchange benchmarks: the registry-driven ring
+//! reduce (`DpGroup` over `net::plane::DpRing`) swept across replica
+//! degree x gradient codec. §Perf target: the framed ring path (encode +
+//! serialize + per-sender decode, plus EF residual upkeep) must stay
+//! well above slow-network speed so gradient compression never becomes
+//! the step bottleneck.
+
+use aq_sgd::codec::{CodecSpec, Rounding};
+use aq_sgd::coordinator::DpGroup;
+use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 1 << 16; // 64k-element stage gradient (256 KB fp32)
+    for degree in [2usize, 4, 8] {
+        for spec in ["fp32", "ef:directq:fw2bw2", "ef:directq:fw4bw4", "ef:directq:fw8bw8"] {
+            let cs = CodecSpec::parse(spec).unwrap();
+            let mut dp = DpGroup::new(degree, &cs, &[n], Rounding::Nearest, 1).unwrap();
+            let mut rng = Rng::new(7);
+            let grads: Vec<Vec<Vec<f32>>> = (0..degree)
+                .map(|_| vec![(0..n).map(|_| rng.normal() * 0.01).collect::<Vec<f32>>()])
+                .collect();
+            // warm one round so EF residuals exist (steady state)
+            dp.reduce(&grads).unwrap();
+            b.run(&format!("dp_reduce/{spec}/x{degree}/256KB"), || {
+                black_box(dp.reduce(&grads).unwrap());
+            })
+            .report_throughput((degree * n * 4) as u64);
+        }
+    }
+
+    // measured ring wire per codec, for the report's context
+    let g: Vec<Vec<Vec<f32>>> = {
+        let mut rng = Rng::new(9);
+        (0..2).map(|_| vec![(0..n).map(|_| rng.normal() * 0.01).collect::<Vec<f32>>()]).collect()
+    };
+    for spec in ["fp32", "ef:directq:fw4bw4"] {
+        let cs = CodecSpec::parse(spec).unwrap();
+        let mut dp = DpGroup::new(2, &cs, &[n], Rounding::Nearest, 1).unwrap();
+        let (_, wire) = dp.reduce(&g).unwrap();
+        println!("{spec}: {} B on the ring per step (x2 replicas)", wire.total_bytes);
+    }
+}

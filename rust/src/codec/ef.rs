@@ -1,0 +1,271 @@
+//! Error-feedback wrapper codec: `ef:<inner>` (paper §4.3 / Fig. 5).
+//!
+//! The "QuantizedAdam"-style gradient compressor keeps a residual `e`
+//! per record and feeds quantization error back into the next round:
+//!
+//! ```text
+//! c = g + e;   frame = inner.encode(c);   e = c - deq(frame)
+//! ```
+//!
+//! so the compression bias vanishes over time (the 1-bit-Adam property
+//! the end-to-end-compression experiments rely on). `EfCodec` composes
+//! over *any* registered inner codec:
+//!
+//!  * the **encoder half** owns the residuals plus a bit-exact replica
+//!    of the receiver's decoder — like `AqCodec`'s replica stores, the
+//!    sender learns what the receiver will reconstruct by decoding its
+//!    own frames, so both sides agree on `deq` without extra traffic;
+//!  * the **decoder half** *is* the inner decoder — error feedback is
+//!    sender-side only and invisible on the wire. Frames carry the inner
+//!    scheme's tag and layout, which is why the golden gradient-frame
+//!    fixtures for `ef:directq` pin plain DirectQ images of the
+//!    compensated values.
+
+use std::collections::HashMap;
+
+use super::{BoundaryCodec, EncodeStats, Frame};
+use crate::util::error::Result;
+
+/// Encoder-side error-feedback state.
+struct Feedback {
+    /// Replica of the receiver's decoder half; it advances through the
+    /// same frames the receiver sees, so `deq` here is bit-identical to
+    /// the receiver's reconstruction.
+    replica: Box<dyn BoundaryCodec>,
+    /// Elements per record.
+    el: usize,
+    /// Residuals keyed by record id (zero until first visit).
+    residual: HashMap<u64, Vec<f32>>,
+    stats: EncodeStats,
+}
+
+/// The `ef:` wrapper. Built through the registry (`ef:q4`,
+/// `ef:directq:fw4bw4`, ...) like every other scheme; rounding mode and
+/// rng seed flow in through the spec's `BuildCtx`, not a constructor
+/// side-channel.
+pub struct EfCodec {
+    inner: Box<dyn BoundaryCodec>,
+    fb: Option<Feedback>,
+}
+
+impl EfCodec {
+    /// The sending half: inner encoder + receiver-decoder replica +
+    /// residual store.
+    pub fn encoder(
+        inner_enc: Box<dyn BoundaryCodec>,
+        replica_dec: Box<dyn BoundaryCodec>,
+        el: usize,
+    ) -> Self {
+        EfCodec {
+            inner: inner_enc,
+            fb: Some(Feedback {
+                replica: replica_dec,
+                el,
+                residual: HashMap::new(),
+                stats: EncodeStats::default(),
+            }),
+        }
+    }
+
+    /// The receiving half: error feedback is sender-side only, so this
+    /// is a thin wrapper over the inner decoder.
+    pub fn decoder(inner_dec: Box<dyn BoundaryCodec>) -> Self {
+        EfCodec { inner: inner_dec, fb: None }
+    }
+
+    /// Bytes of sender-local residual state. Reported separately from
+    /// [`BoundaryCodec::state_bytes`] — see that impl for why.
+    pub fn residual_bytes(&self) -> u64 {
+        self.fb
+            .as_ref()
+            .map_or(0, |fb| fb.residual.values().map(|v| 4 * v.len() as u64).sum())
+    }
+}
+
+impl BoundaryCodec for EfCodec {
+    fn encode(&mut self, ids: &[u64], g: &[f32]) -> Result<Frame> {
+        let fb = self
+            .fb
+            .as_mut()
+            .ok_or_else(|| crate::err!("ef decoder half cannot encode (build the encoder half)"))?;
+        crate::ensure!(!ids.is_empty(), "ef transfer with no record ids");
+        crate::ensure!(
+            g.len() == ids.len() * fb.el,
+            "ef message length {} != {} ids x {} elements",
+            g.len(),
+            ids.len(),
+            fb.el
+        );
+        let el = fb.el;
+        // c = g + e (residual defaults to zero on first visit)
+        let mut c = g.to_vec();
+        let mut first_visits = 0usize;
+        for (i, id) in ids.iter().enumerate() {
+            match fb.residual.get(id) {
+                Some(e) => {
+                    crate::ensure!(
+                        e.len() == el,
+                        "ef residual for record {id} has {} elements, want {el}",
+                        e.len()
+                    );
+                    for (cv, ev) in c[i * el..(i + 1) * el].iter_mut().zip(e) {
+                        *cv += ev;
+                    }
+                }
+                None => first_visits += 1,
+            }
+        }
+        let frame = self.inner.encode(ids, &c)?;
+        // e = c - deq, with deq read back through the receiver replica so
+        // both sides agree bit-for-bit on what crossed the wire
+        let deq = fb.replica.decode(ids, &frame)?;
+        crate::ensure!(
+            deq.len() == c.len(),
+            "ef replica decoded {} elements for a {}-element message",
+            deq.len(),
+            c.len()
+        );
+        for (i, id) in ids.iter().enumerate() {
+            let row: Vec<f32> = c[i * el..(i + 1) * el]
+                .iter()
+                .zip(&deq[i * el..(i + 1) * el])
+                .map(|(cv, dv)| cv - dv)
+                .collect();
+            fb.residual.insert(*id, row);
+        }
+        fb.stats = EncodeStats {
+            mean_abs_delta: Some(crate::util::stats::mean_abs(&c)),
+            first_visits,
+        };
+        Ok(frame)
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        self.inner.decode(ids, frame)
+    }
+
+    fn label(&self) -> String {
+        format!("ef:{}", self.inner.label())
+    }
+
+    /// Wire-replicated state only (the inner codec's message buffers).
+    /// The encoder's residuals are sender-local — not a replica of
+    /// anything on the receiver — so they live in
+    /// [`EfCodec::residual_bytes`] instead, keeping the sender/receiver
+    /// `state_bytes` symmetry the frame property tests pin.
+    fn state_bytes(&self) -> u64 {
+        self.inner.state_bytes()
+    }
+
+    fn take_stats(&mut self) -> EncodeStats {
+        self.fb.as_mut().map(|fb| std::mem::take(&mut fb.stats)).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::registry::{build_mem_pair, SchemeSpec};
+    use crate::codec::Rounding;
+    use crate::util::Rng;
+
+    fn pair(spec: &str, el: usize, seed: u64) -> (Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>) {
+        let scheme = SchemeSpec::parse(spec).unwrap();
+        build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap()
+    }
+
+    #[test]
+    fn feedback_preserves_signal_over_time() {
+        // summed over many rounds, deq(frames) ~ summed inputs: the error
+        // feedback makes the per-round quantization bias vanish.
+        let n = 64;
+        let (mut enc, mut dec) = pair("ef:q4", n, 3);
+        let mut rng = Rng::new(3);
+        let constant: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+        let mut acc = vec![0f64; n];
+        let rounds = 200;
+        for _ in 0..rounds {
+            let g: Vec<f32> = constant.iter().map(|&c| c + 0.001 * rng.normal()).collect();
+            let frame = enc.encode(&[0], &g).unwrap();
+            let deq = dec.decode(&[0], &frame).unwrap();
+            for (a, &d) in acc.iter_mut().zip(&deq) {
+                *a += d as f64;
+            }
+        }
+        for (a, &c) in acc.iter().zip(&constant) {
+            let avg = *a / rounds as f64;
+            assert!((avg - c as f64).abs() < 3e-3, "{avg} vs {c}");
+        }
+    }
+
+    #[test]
+    fn wire_format_is_the_inner_frame() {
+        // EF adds zero wire overhead: the first-visit frame (residual 0)
+        // is byte-identical to the inner codec encoding the same values.
+        let n = 32;
+        let mut rng = Rng::new(5);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let (mut ef_enc, _) = pair("ef:q4", n, 9);
+        let (mut dq_enc, _) = pair("q4", n, 9);
+        let fe = ef_enc.encode(&[0], &g).unwrap();
+        let fd = dq_enc.encode(&[0], &g).unwrap();
+        assert_eq!(fe.to_bytes(), fd.to_bytes());
+        assert_eq!(fe.tag(), crate::codec::frame::TAG_DIRECTQ);
+    }
+
+    #[test]
+    fn residual_tracks_quantization_error() {
+        use crate::codec::schemes::DirectQCodec;
+        let n = 16;
+        let mut enc = EfCodec::encoder(
+            Box::new(DirectQCodec::new(2, Rounding::Nearest, 1, None)),
+            Box::new(DirectQCodec::new(2, Rounding::Nearest, 2, None)),
+            n,
+        );
+        assert_eq!(enc.residual_bytes(), 0);
+        let g = vec![0.01f32; n];
+        let frame = enc.encode(&[0], &g).unwrap();
+        // residual now holds exactly the round-1 quantization error
+        assert_eq!(enc.residual_bytes(), 4 * n as u64);
+        let mut probe = DirectQCodec::new(2, Rounding::Nearest, 3, None);
+        let deq = probe.decode(&[0], &frame).unwrap();
+        let e: Vec<f32> = g.iter().zip(&deq).map(|(a, b)| a - b).collect();
+        let fb = enc.fb.as_ref().unwrap();
+        assert_eq!(fb.residual.get(&0).unwrap(), &e);
+    }
+
+    #[test]
+    fn decoder_half_cannot_encode() {
+        let (_, mut dec) = pair("ef:q4", 8, 1);
+        let g = vec![0.1f32; 8];
+        let err = dec.encode(&[0], &g).unwrap_err();
+        assert!(err.to_string().contains("decoder half"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let (mut enc, _) = pair("ef:q4", 8, 1);
+        assert!(enc.encode(&[0, 1], &vec![0.0f32; 8]).is_err());
+        assert!(enc.encode(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn stateful_inner_keeps_replica_symmetry_over_the_wire() {
+        // ef over the stateful AQ inner: encoder-side inner store and
+        // receiver store must stay byte-equal through serialized frames.
+        let n = 12;
+        let (mut enc, mut dec) = pair("ef:aq2", n, 7);
+        let mut rng = Rng::new(11);
+        let mut g: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        for round in 0..4 {
+            let frame = enc.encode(&[0], &g).unwrap();
+            let wire = Frame::from_bytes(&frame.to_bytes()).unwrap();
+            let out = dec.decode(&[0], &wire).unwrap();
+            assert_eq!(out.len(), n);
+            assert_eq!(enc.state_bytes(), dec.state_bytes(), "round {round}");
+            for v in g.iter_mut() {
+                *v += 0.01 * rng.normal();
+            }
+        }
+    }
+}

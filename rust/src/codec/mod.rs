@@ -22,12 +22,16 @@
 //! *only* the `Frame` — Algorithm 2's sender/receiver replica symmetry is
 //! enforced by construction, because the decoder can only reconstruct
 //! from bytes the encoder actually emitted. Schemes are constructed
-//! through [`registry`] spec strings (`"aqsgd:fw2bw4"`,
-//! `"topk:0.2@8"`, `"hybrid:aq2/topk0.2@8"`, ...); adding a scheme means
-//! adding one self-contained codec file and one registry arm, not
-//! enum surgery across the tree.
+//! through [`registry`] spec strings (`"aqsgd:fw2bw4"`, `"topk:0.2@8"`,
+//! `"ef:directq:fw4bw4"`, `"hybrid:aq2/topk0.2@8"`, ...); adding a
+//! scheme means adding one self-contained codec file and one registry
+//! arm, not enum surgery across the tree. The same codecs serve every
+//! traffic class — forward activations, backward activation gradients,
+//! and (via the `ef:` error-feedback wrapper and `net::plane`'s ring)
+//! data-parallel model gradients.
 
 pub mod delta;
+pub mod ef;
 pub mod f16;
 pub mod frame;
 pub mod pack;
@@ -39,6 +43,7 @@ pub mod topk;
 pub mod tp;
 
 pub use delta::{AqCodec, AqState};
+pub use ef::EfCodec;
 pub use frame::Frame;
 pub use quantizer::{Rounding, UniformQuantizer};
 pub use registry::{CodecSpec, SchemeSpec};
@@ -91,8 +96,9 @@ pub trait BoundaryCodec: Send {
 }
 
 /// Bytes on the wire for `n` b-bit codes + the f32 scale header (the
-/// quantized-payload arithmetic shared by the DP gradient compressor;
-/// boundary frames measure their own buffers instead).
+/// quantized-payload arithmetic used by the tensor-parallel all-reduce
+/// model in `codec::tp`; framed codecs — including the DP gradient
+/// path — measure their own serialized buffers instead).
 pub fn quant_wire_bytes(n: usize, bits: u8) -> u64 {
     pack::packed_len(n, bits) as u64 + 4
 }

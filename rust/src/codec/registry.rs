@@ -9,15 +9,19 @@
 //!           | "directq:fw<bits>bw<bits>"      DirectQ both directions
 //!           | "aqsgd:fw<bits>bw<bits>"        AQ fw, DirectQ bw (Alg. 1)
 //!           | "topk:<frac>@<bits>"            top-k both directions
+//!           | "ef:" spec                      error feedback around both
 //!           | "hybrid:<dir>/<dir>"            any fw/bw composition
 //! dir      := "fp32" | "fp16" | "q<bits>" | "aq<bits>"
-//!           | "topk<frac>@<bits>"
+//!           | "topk<frac>@<bits>" | "ef:" dir
 //! ```
 //!
 //! e.g. `"hybrid:aq2/topk0.2@8"` is Appendix H.6's split-learning scheme
-//! (2-bit AQ forward, top-20% + 8-bit backward). Bits are 1..=8, frac in
+//! (2-bit AQ forward, top-20% + 8-bit backward), and
+//! `"ef:directq:fw4bw4"` is Fig. 5's error-compensated 4-bit gradient
+//! compressor (the `--dp-codec` default regime). Bits are 1..=8, frac in
 //! (0, 1]. `CodecSpec::parse` subsumes the old `Compression::parse`;
-//! every boundary, the trainer, and the examples obtain codecs here.
+//! every boundary, the trainer, the DP gradient ring, and the examples
+//! obtain codecs here.
 
 use std::sync::Arc;
 
@@ -27,12 +31,13 @@ use crate::util::error::Result;
 use crate::util::Rng;
 
 use super::delta::AqCodec;
+use super::ef::EfCodec;
 use super::quantizer::Rounding;
 use super::schemes::{DirectQCodec, F16Codec, Raw32Codec, TopKCodec};
 use super::BoundaryCodec;
 
 /// One direction's compression scheme.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum SchemeSpec {
     /// FP32 passthrough (paper baseline).
     Raw32,
@@ -44,6 +49,9 @@ pub enum SchemeSpec {
     Aq { bits: u8 },
     /// Top-`frac` magnitude sparsification + b-bit quantization (App. H.6).
     TopK { frac: f64, bits: u8 },
+    /// Error-feedback wrapper around any inner scheme (§4.3 / Fig. 5's
+    /// "QuantizedAdam"-style gradient compressor; see `codec::ef`).
+    Ef { inner: Box<SchemeSpec> },
 }
 
 /// Everything a scheme needs to build its encoder/decoder halves.
@@ -70,6 +78,9 @@ impl SchemeSpec {
             "fp16" => return Ok(SchemeSpec::F16),
             _ => {}
         }
+        if let Some(rest) = s.strip_prefix("ef:") {
+            return Ok(SchemeSpec::Ef { inner: Box::new(SchemeSpec::parse(rest)?) });
+        }
         if let Some(rest) = s.strip_prefix("topk") {
             return parse_topk(rest, s);
         }
@@ -79,7 +90,7 @@ impl SchemeSpec {
         if let Some(bits) = s.strip_prefix('q') {
             return Ok(SchemeSpec::DirectQ { bits: parse_bits_value(bits, s)? });
         }
-        crate::bail!("unknown scheme {s:?} (fp32|fp16|q<bits>|aq<bits>|topk<frac>@<bits>)")
+        crate::bail!("unknown scheme {s:?} (fp32|fp16|q<bits>|aq<bits>|topk<frac>@<bits>|ef:<dir>)")
     }
 
     /// Canonical spec fragment (round-trips through [`SchemeSpec::parse`]).
@@ -90,6 +101,18 @@ impl SchemeSpec {
             SchemeSpec::DirectQ { bits } => format!("q{bits}"),
             SchemeSpec::Aq { bits } => format!("aq{bits}"),
             SchemeSpec::TopK { frac, bits } => format!("topk{frac}@{bits}"),
+            SchemeSpec::Ef { inner } => format!("ef:{}", inner.spec_string()),
+        }
+    }
+
+    /// Whether the scheme sends full-precision first-visit records
+    /// (Algorithm 1 line 5) — what distinguishes first-epoch from
+    /// steady-state wire volume in the measured-bytes cache.
+    pub fn has_first_visit(&self) -> bool {
+        match self {
+            SchemeSpec::Aq { .. } => true,
+            SchemeSpec::Ef { inner } => inner.has_first_visit(),
+            _ => false,
         }
     }
 
@@ -99,19 +122,22 @@ impl SchemeSpec {
         &self,
         ctx: &mut BuildCtx,
     ) -> Result<(Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>)> {
-        Ok(match *self {
-            SchemeSpec::Raw32 => (Box::new(Raw32Codec), Box::new(Raw32Codec)),
+        Ok(match self {
+            SchemeSpec::Raw32 => (
+                Box::new(Raw32Codec) as Box<dyn BoundaryCodec>,
+                Box::new(Raw32Codec) as Box<dyn BoundaryCodec>,
+            ),
             SchemeSpec::F16 => (Box::new(F16Codec), Box::new(F16Codec)),
             SchemeSpec::DirectQ { bits } => (
-                Box::new(DirectQCodec::new(bits, ctx.rounding, ctx.seed, ctx.hlo.clone())),
-                Box::new(DirectQCodec::new(bits, ctx.rounding, ctx.seed ^ 1, ctx.hlo.clone())),
+                Box::new(DirectQCodec::new(*bits, ctx.rounding, ctx.seed, ctx.hlo.clone())),
+                Box::new(DirectQCodec::new(*bits, ctx.rounding, ctx.seed ^ 1, ctx.hlo.clone())),
             ),
             SchemeSpec::Aq { bits } => {
                 let enc_store = (ctx.mk_store)("enc")?;
                 let dec_store = (ctx.mk_store)("dec")?;
                 (
                     Box::new(AqCodec::new(
-                        bits,
+                        *bits,
                         ctx.rounding,
                         enc_store,
                         ctx.ns,
@@ -119,7 +145,7 @@ impl SchemeSpec {
                         ctx.hlo.clone(),
                     )),
                     Box::new(AqCodec::new(
-                        bits,
+                        *bits,
                         ctx.rounding,
                         dec_store,
                         ctx.ns,
@@ -129,9 +155,38 @@ impl SchemeSpec {
                 )
             }
             SchemeSpec::TopK { frac, bits } => (
-                Box::new(TopKCodec::new(frac, bits, ctx.rounding, ctx.example_len, ctx.seed)),
-                Box::new(TopKCodec::new(frac, bits, ctx.rounding, ctx.example_len, ctx.seed ^ 1)),
+                Box::new(TopKCodec::new(*frac, *bits, ctx.rounding, ctx.example_len, ctx.seed)),
+                Box::new(TopKCodec::new(
+                    *frac,
+                    *bits,
+                    ctx.rounding,
+                    ctx.example_len,
+                    ctx.seed ^ 1,
+                )),
             ),
+            SchemeSpec::Ef { inner } => {
+                // The encoder needs a bit-exact replica of the receiver's
+                // decoder (codec::ef feedback loop): build one extra inner
+                // pair under a namespaced store role and keep its decoder.
+                let example_len = ctx.example_len;
+                let replica_dec = {
+                    let mut mk = |role: &str| (ctx.mk_store)(&format!("ef_replica_{role}"));
+                    let mut rctx = BuildCtx {
+                        example_len,
+                        rounding: ctx.rounding,
+                        seed: ctx.seed,
+                        ns: ctx.ns,
+                        hlo: ctx.hlo.clone(),
+                        mk_store: &mut mk,
+                    };
+                    inner.build_pair(&mut rctx)?.1
+                };
+                let (inner_enc, inner_dec) = inner.build_pair(ctx)?;
+                (
+                    Box::new(EfCodec::encoder(inner_enc, replica_dec, example_len)),
+                    Box::new(EfCodec::decoder(inner_dec)),
+                )
+            }
         })
     }
 }
@@ -194,11 +249,20 @@ impl CodecSpec {
 
     pub fn topk(frac: f64, bits: u8) -> Self {
         let s = SchemeSpec::TopK { frac, bits };
-        CodecSpec { fw: s, bw: s }
+        CodecSpec { fw: s.clone(), bw: s }
     }
 
     pub fn hybrid(fw: SchemeSpec, bw: SchemeSpec) -> Self {
         CodecSpec { fw, bw }
+    }
+
+    /// Error feedback around both directions of `inner` (the Fig. 5
+    /// gradient-compression regime, e.g. `ef:directq:fw4bw4`).
+    pub fn ef(inner: CodecSpec) -> Self {
+        CodecSpec {
+            fw: SchemeSpec::Ef { inner: Box::new(inner.fw) },
+            bw: SchemeSpec::Ef { inner: Box::new(inner.bw) },
+        }
     }
 
     /// Parse a full spec string (see the module grammar).
@@ -219,7 +283,16 @@ impl CodecSpec {
         }
         if let Some(spec) = s.strip_prefix("topk:") {
             let scheme = parse_topk(spec.trim(), s)?;
-            return Ok(CodecSpec { fw: scheme, bw: scheme });
+            return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
+        }
+        if let Some(spec) = s.strip_prefix("ef:") {
+            // full inner spec ("ef:directq:fw4bw4") or a single direction
+            // scheme applied to both ("ef:q4")
+            if let Ok(inner) = CodecSpec::parse(spec) {
+                return Ok(CodecSpec::ef(inner));
+            }
+            let scheme = SchemeSpec::Ef { inner: Box::new(SchemeSpec::parse(spec)?) };
+            return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
         }
         if let Some(spec) = s.strip_prefix("hybrid:") {
             let (fw, bw) = spec
@@ -229,12 +302,16 @@ impl CodecSpec {
         }
         crate::bail!(
             "unknown compression {s:?} (fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY | \
-             topk:<frac>@<bits> | hybrid:<fw>/<bw>)"
+             topk:<frac>@<bits> | ef:<spec> | hybrid:<fw>/<bw>)"
         )
     }
 
     /// Canonical spec string (round-trips through [`CodecSpec::parse`]).
     pub fn spec_string(&self) -> String {
+        if let (SchemeSpec::Ef { inner: f }, SchemeSpec::Ef { inner: b }) = (&self.fw, &self.bw) {
+            let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+            return format!("ef:{}", inner.spec_string());
+        }
         match (&self.fw, &self.bw) {
             (SchemeSpec::Raw32, SchemeSpec::Raw32) => "fp32".into(),
             (SchemeSpec::F16, SchemeSpec::F16) => "fp16".into(),
@@ -253,6 +330,10 @@ impl CodecSpec {
 
     /// Display label (table headers, trainer logs).
     pub fn label(&self) -> String {
+        if let (SchemeSpec::Ef { inner: f }, SchemeSpec::Ef { inner: b }) = (&self.fw, &self.bw) {
+            let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+            return format!("EF {}", inner.label());
+        }
         match (&self.fw, &self.bw) {
             (SchemeSpec::Raw32, SchemeSpec::Raw32) => "FP32".into(),
             (SchemeSpec::F16, SchemeSpec::F16) => "FP16".into(),
@@ -293,8 +374,9 @@ fn measured_wire_bytes(scheme: &SchemeSpec, n: usize, first_visit: bool) -> u64 
     use std::collections::HashMap;
     use std::sync::{Mutex, OnceLock};
     static CACHE: OnceLock<Mutex<HashMap<(String, usize, bool), u64>>> = OnceLock::new();
-    // only AQ-style schemes distinguish first visit from steady state
-    let first_visit = first_visit && matches!(scheme, SchemeSpec::Aq { .. });
+    // only first-visit schemes (AQ, ef:aq) distinguish first visit from
+    // steady state
+    let first_visit = first_visit && scheme.has_first_visit();
     let key = (scheme.spec_string(), n, first_visit);
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     if let Some(&v) = cache.lock().unwrap().get(&key) {
@@ -305,7 +387,7 @@ fn measured_wire_bytes(scheme: &SchemeSpec, n: usize, first_visit: bool) -> u64 
     let mut rng = Rng::new(0xFACE);
     let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
     let first = enc.encode(&[0], &a).expect("measurement encode");
-    let v = if first_visit || !matches!(scheme, SchemeSpec::Aq { .. }) {
+    let v = if first_visit || !scheme.has_first_visit() {
         first.wire_bytes()
     } else {
         // steady state: second visit with a small drift
@@ -325,6 +407,7 @@ pub fn example_specs() -> Vec<&'static str> {
         "directq:fw3bw6",
         "aqsgd:fw2bw4",
         "topk:0.2@8",
+        "ef:directq:fw4bw4",
         "hybrid:aq2/topk0.2@8",
         "hybrid:fp16/q4",
     ]
@@ -414,6 +497,46 @@ mod tests {
         }
         // boundary widths still accepted
         assert!(CodecSpec::parse("aqsgd:fw1bw8").is_ok());
+    }
+
+    #[test]
+    fn parse_ef_wrapper() {
+        let spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        assert_eq!(spec, CodecSpec::ef(CodecSpec::directq(4, 4)));
+        assert_eq!(spec.spec_string(), "ef:directq:fw4bw4");
+        assert_eq!(spec.label(), "EF DirectQ fw4 bw4");
+        // scheme-level wrapper (hybrid directions, golden fixtures)
+        assert_eq!(
+            SchemeSpec::parse("ef:q4").unwrap(),
+            SchemeSpec::Ef { inner: Box::new(SchemeSpec::DirectQ { bits: 4 }) }
+        );
+        assert_eq!(SchemeSpec::parse("ef:q4").unwrap().spec_string(), "ef:q4");
+        // nesting and hybrids compose
+        assert!(CodecSpec::parse("hybrid:ef:q4/fp16").is_ok());
+        assert!(CodecSpec::parse("ef:aqsgd:fw2bw4").is_ok());
+        // malformed inner specs are rejected
+        assert!(CodecSpec::parse("ef:").is_err());
+        assert!(CodecSpec::parse("ef:q9").is_err());
+        assert!(SchemeSpec::parse("ef:nope").is_err());
+    }
+
+    #[test]
+    fn ef_first_visit_tracks_inner() {
+        assert!(!SchemeSpec::parse("ef:q4").unwrap().has_first_visit());
+        assert!(SchemeSpec::parse("ef:aq2").unwrap().has_first_visit());
+        assert!(SchemeSpec::parse("aq2").unwrap().has_first_visit());
+        assert!(!SchemeSpec::parse("fp16").unwrap().has_first_visit());
+    }
+
+    #[test]
+    fn ef_wire_bytes_match_inner_scheme() {
+        // EF is invisible on the wire: measured bytes equal the inner
+        // scheme's (the compensated values quantize to same-size frames)
+        let n = 1000;
+        let ef = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        let dq = CodecSpec::directq(4, 4);
+        assert_eq!(ef.fw_wire_bytes(n, false), dq.fw_wire_bytes(n, false));
+        assert_eq!(ef.bw_wire_bytes(n), dq.bw_wire_bytes(n));
     }
 
     #[test]

@@ -108,8 +108,10 @@ pub struct TrainConfig {
     pub executor: Executor,
     /// Data-parallel degree (gradient averaging across replicas).
     pub dp_degree: usize,
-    /// Gradient compression bits for the DP direction (None = fp32).
-    pub dp_grad_bits: Option<u8>,
+    /// Gradient codec for the DP ring (`--dp-codec`, same registry
+    /// grammar as `compression`; `ef:directq:fw4bw4` is the Fig. 5
+    /// error-compensated regime, `fp32` = uncompressed exchange).
+    pub dp_codec: CodecSpec,
     /// Dataset selector: "markov" | "embedded" | "qnli" | "cola".
     pub dataset: String,
     pub n_examples: usize,
@@ -139,7 +141,7 @@ impl TrainConfig {
             schedule: Schedule::GPipe,
             executor: Executor::Sim,
             dp_degree: 1,
-            dp_grad_bits: None,
+            dp_codec: CodecSpec::fp32(),
             dataset: "markov".to_string(),
             n_examples: 64,
             hlo_codec: false,
@@ -168,9 +170,14 @@ impl TrainConfig {
         c.schedule = Schedule::parse(&cli.str("schedule", "gpipe"))?;
         c.executor = Executor::parse(&cli.str("executor", "sim"))?;
         c.dp_degree = cli.usize("dp", 1)?;
-        c.dp_grad_bits = match cli.usize("dp-bits", 0)? {
-            0 => None,
-            b => Some(b as u8),
+        c.dp_codec = match cli.flags.get("dp-codec") {
+            Some(spec) => CodecSpec::parse(spec)?,
+            // legacy shorthand: --dp-bits B = error-compensated B-bit
+            // DirectQ, the paper's "QuantizedAdam" regime
+            None => match cli.usize("dp-bits", 0)? {
+                0 => CodecSpec::fp32(),
+                b => CodecSpec::parse(&format!("ef:directq:fw{b}bw{b}"))?,
+            },
         };
         c.dataset = cli.str("dataset", "markov");
         c.n_examples = cli.usize("examples", c.n_examples)?;
@@ -215,9 +222,24 @@ mod tests {
         assert_eq!(c.compression, CodecSpec::aqsgd(2, 4));
         assert_eq!(c.bandwidth_bps, 100e6);
         assert_eq!(c.dp_degree, 4);
-        assert_eq!(c.dp_grad_bits, Some(4));
+        // --dp-bits is shorthand for the error-compensated DirectQ regime
+        assert_eq!(c.dp_codec, CodecSpec::parse("ef:directq:fw4bw4").unwrap());
         assert_eq!(c.m_bits, Some(8));
         assert_eq!(c.executor, Executor::Sim); // default
+    }
+
+    #[test]
+    fn dp_codec_from_cli() {
+        let c = TrainConfig::from_cli(&cli("--dp 2 --dp-codec ef:directq:fw2bw2")).unwrap();
+        assert_eq!(c.dp_codec, CodecSpec::parse("ef:directq:fw2bw2").unwrap());
+        // explicit --dp-codec wins over the shorthand
+        let c =
+            TrainConfig::from_cli(&cli("--dp 2 --dp-codec fp32 --dp-bits 4")).unwrap();
+        assert_eq!(c.dp_codec, CodecSpec::fp32());
+        // default is uncompressed exchange
+        assert_eq!(TrainConfig::from_cli(&cli("--dp 2")).unwrap().dp_codec, CodecSpec::fp32());
+        assert!(TrainConfig::from_cli(&cli("--dp 2 --dp-codec nope")).is_err());
+        assert!(TrainConfig::from_cli(&cli("--dp 2 --dp-bits 9")).is_err());
     }
 
     #[test]

@@ -32,6 +32,11 @@ impl Trainer {
         meta.push_str(&format!("model {}\n", self.cfg.model));
         meta.push_str(&format!("step {}\n", self.steps_done()));
         meta.push_str(&format!("n_stages {}\n", self.n_stages()));
+        // codec specs are soft state (AQ buffers / EF residuals are not
+        // checkpointed); recorded so a resume under a different codec is
+        // caught instead of silently changing the compression dynamics
+        meta.push_str(&format!("compression {}\n", self.cfg.compression.spec_string()));
+        meta.push_str(&format!("dp_codec {}\n", self.cfg.dp_codec.spec_string()));
         for s in 0..self.n_stages() {
             let n = self.stage(s).n_params;
             meta.push_str(&format!("stage{s}.params {n}\n"));
@@ -56,6 +61,26 @@ impl Trainer {
             self.cfg.model
         );
         crate::ensure!(meta.usize("n_stages")? == self.n_stages());
+        // spec keys are absent in pre-CommPlane checkpoints; validate
+        // only when present
+        if let Some(spec) = meta.get_opt("compression") {
+            crate::ensure!(
+                spec == self.cfg.compression.spec_string(),
+                "checkpoint was written with compression {spec:?}, trainer is configured \
+                 for {:?} (AQ message buffers are not checkpointed, so resuming under a \
+                 different boundary codec would silently change the compression dynamics)",
+                self.cfg.compression.spec_string()
+            );
+        }
+        if let Some(spec) = meta.get_opt("dp_codec") {
+            crate::ensure!(
+                spec == self.cfg.dp_codec.spec_string(),
+                "checkpoint was written with dp codec {spec:?}, trainer is configured \
+                 for {:?} (EF residuals are not checkpointed, so resuming under a \
+                 different DP codec would silently change the compensation dynamics)",
+                self.cfg.dp_codec.spec_string()
+            );
+        }
         let step = meta.usize("step")?;
         for s in 0..self.n_stages() {
             let n = self.stage(s).n_params;

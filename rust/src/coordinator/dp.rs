@@ -1,98 +1,158 @@
-//! Data-parallel gradient averaging with error-compensated quantization —
-//! the "QuantizedAdam"-style compressor of §4.3 / Figure 5.
+//! Data-parallel gradient exchange over the CommPlane — the third
+//! traffic class of the paper's end-to-end compression story (§4.3 /
+//! Figure 5).
 //!
-//! Each replica keeps an error-feedback residual e_r per stage:
-//!     e_r += g_r;  q_r = Q(e_r);  e_r -= deq(q_r)
-//! the replicas exchange deq(q_r) (ring all-reduce on the wire) and apply
-//! the mean to a shared AdamW state. With synchronized updates and
-//! identical initialization the replica parameters stay equal, so a
-//! single parameter copy represents all replicas exactly.
+//! [`DpGroup`] simulates `degree` replicas in one process, but the
+//! gradients travel exactly the way a deployment would ship them: each
+//! replica owns a registry-built codec endpoint (typically an
+//! `ef:<inner>` error-feedback wrapper, whose residuals live *in the
+//! codec* — see `codec::ef`), encodes its per-stage gradient into a
+//! [`Frame`](crate::codec::Frame), and the frames circulate an
+//! all-gather ring ([`DpRing`]) whose per-sender decoder replicas
+//! reconstruct every contribution. Wire bytes are the serialized frame
+//! sizes — no `quant_wire_bytes`-style parallel arithmetic — and the
+//! synchronized-update invariant (all replicas compute the bit-identical
+//! mean, so one parameter copy represents them all) is *asserted* every
+//! step instead of assumed.
 
-use crate::codec::quantizer::{Rounding, UniformQuantizer};
-use crate::codec::quant_wire_bytes;
-use crate::util::Rng;
+use std::time::Duration;
+
+use crate::codec::quantizer::Rounding;
+use crate::codec::CodecSpec;
+use crate::net::plane::{dp_rings, DpRing};
+use crate::util::error::Result;
+
+/// Measured wire accounting of one reduce round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DpWire {
+    /// Serialized frame bytes shipped across all ring edges (what the
+    /// trainer's comm counter records).
+    pub total_bytes: u64,
+    /// Largest single frame of the round — gates one serialized hop in
+    /// the ring time model (`PipelineSim::ring_allgather_time`).
+    pub max_frame_bytes: u64,
+}
 
 pub struct DpGroup {
     pub degree: usize,
-    /// None = uncompressed (fp32) gradient exchange.
-    pub bits: Option<u8>,
-    /// error-feedback residuals: [replica][stage] -> flat residual
-    err: Vec<Vec<Vec<f32>>>,
-    rounding: Rounding,
-    rng: Rng,
+    spec: CodecSpec,
+    /// [replica][stage] ring endpoints, wired by unpaced in-process links.
+    rings: Vec<Vec<DpRing>>,
+    stage_sizes: Vec<usize>,
 }
 
 impl DpGroup {
-    pub fn new(degree: usize, bits: Option<u8>, stage_sizes: &[usize], rounding: Rounding) -> Self {
-        let err = (0..degree)
-            .map(|_| stage_sizes.iter().map(|&n| vec![0f32; n]).collect())
-            .collect();
-        DpGroup { degree, bits, err, rounding, rng: Rng::new(0xD9) }
+    /// Build the exchange group. `spec` names the gradient codec (the
+    /// `--dp-codec` knob, e.g. `ef:directq:fw4bw4`; `fp32` for
+    /// uncompressed exchange); `rounding` and `seed` flow into every
+    /// codec half through the registry, so stochastic-rounding
+    /// determinism is configured here and nowhere else.
+    pub fn new(
+        degree: usize,
+        spec: &CodecSpec,
+        stage_sizes: &[usize],
+        rounding: Rounding,
+        seed: u64,
+    ) -> Result<Self> {
+        crate::ensure!(degree >= 1, "dp group needs at least one replica");
+        crate::ensure!(!stage_sizes.is_empty(), "dp group needs at least one stage");
+        // [stage] -> per-replica rings, then transpose to [replica][stage]
+        let mut per_stage = Vec::with_capacity(stage_sizes.len());
+        for (s, &n) in stage_sizes.iter().enumerate() {
+            crate::ensure!(n >= 1, "dp stage {s} has an empty gradient");
+            per_stage.push(dp_rings(
+                &spec.fw,
+                degree,
+                n,
+                rounding,
+                seed ^ ((s as u64) << 8),
+                f64::INFINITY,
+                Duration::ZERO,
+            )?);
+        }
+        let mut rings: Vec<Vec<DpRing>> = (0..degree).map(|_| Vec::new()).collect();
+        for stage_rings in per_stage {
+            for (r, ring) in stage_rings.into_iter().enumerate() {
+                rings[r].push(ring);
+            }
+        }
+        Ok(DpGroup { degree, spec: spec.clone(), rings, stage_sizes: stage_sizes.to_vec() })
     }
 
-    /// Average per-replica per-stage gradients; returns (mean gradients,
-    /// wire bytes each replica sends in the all-reduce).
-    pub fn reduce(&mut self, grads: &[Vec<Vec<f32>>]) -> (Vec<Vec<f32>>, u64) {
-        assert_eq!(grads.len(), self.degree);
-        let n_stages = grads[0].len();
-        let mut wire = 0u64;
-        let mut mean: Vec<Vec<f32>> =
-            grads[0].iter().map(|g| vec![0f32; g.len()]).collect();
-        match self.bits {
-            None => {
-                for r in grads {
-                    for (s, g) in r.iter().enumerate() {
-                        for (m, &v) in mean[s].iter_mut().zip(g) {
-                            *m += v;
-                        }
-                    }
-                }
-                for s in 0..n_stages {
-                    wire += 4 * grads[0][s].len() as u64;
-                }
-            }
-            Some(bits) => {
-                let q = UniformQuantizer::new(bits, self.rounding);
-                for (ri, r) in grads.iter().enumerate() {
-                    for (s, g) in r.iter().enumerate() {
-                        let e = &mut self.err[ri][s];
-                        assert_eq!(e.len(), g.len());
-                        // e += g
-                        for (ei, &gi) in e.iter_mut().zip(g) {
-                            *ei += gi;
-                        }
-                        // q = Q(e); e -= deq(q); mean += deq(q)
-                        let mut codes = vec![0u8; e.len()];
-                        let scale = q.encode(e, &mut codes, &mut self.rng);
-                        let mut deq = vec![0f32; e.len()];
-                        q.decode(&codes, scale, &mut deq);
-                        for j in 0..e.len() {
-                            e[j] -= deq[j];
-                            mean[s][j] += deq[j];
-                        }
-                        if ri == 0 {
-                            // every replica sends the same volume
-                        }
-                    }
-                }
-                for s in 0..n_stages {
-                    wire += quant_wire_bytes(grads[0][s].len(), bits);
-                }
-            }
-        }
-        let inv = 1.0 / self.degree as f32;
-        for s in mean.iter_mut() {
-            for v in s.iter_mut() {
-                *v *= inv;
-            }
-        }
-        (mean, wire)
+    pub fn spec(&self) -> &CodecSpec {
+        &self.spec
     }
+
+    /// Average per-replica per-stage gradients through the ring. Returns
+    /// `(mean gradients, measured wire accounting)`. Shape mismatches
+    /// are errors, never panics — gradients arrive from per-replica
+    /// compute that a deployment cannot assume well-formed.
+    pub fn reduce(&mut self, grads: &[Vec<Vec<f32>>]) -> Result<(Vec<Vec<f32>>, DpWire)> {
+        crate::ensure!(
+            grads.len() == self.degree,
+            "dp reduce got {} replicas, group has {}",
+            grads.len(),
+            self.degree
+        );
+        let n_stages = self.stage_sizes.len();
+        for (r, g) in grads.iter().enumerate() {
+            crate::ensure!(
+                g.len() == n_stages,
+                "dp replica {r} has {} stages, group has {n_stages}",
+                g.len()
+            );
+            for (s, v) in g.iter().enumerate() {
+                crate::ensure!(
+                    v.len() == self.stage_sizes[s],
+                    "dp replica {r} stage {s}: gradient length {} != {}",
+                    v.len(),
+                    self.stage_sizes[s]
+                );
+            }
+        }
+
+        let mut mean = Vec::with_capacity(n_stages);
+        let mut wire = DpWire::default();
+        for s in 0..n_stages {
+            // single-threaded phase order (the virtual twin of the
+            // per-thread blocking ring in pipeline::exec)
+            for (row, g) in self.rings.iter_mut().zip(grads) {
+                row[s].send_own(&g[s])?;
+            }
+            for hop in 1..self.degree {
+                for row in self.rings.iter_mut() {
+                    row[s].hop(hop)?;
+                }
+            }
+            let mut stage_mean: Option<Vec<f32>> = None;
+            for (r, row) in self.rings.iter_mut().enumerate() {
+                let (m, sent) = row[s].finish()?;
+                wire.total_bytes += sent;
+                wire.max_frame_bytes = wire.max_frame_bytes.max(row[s].take_max_frame());
+                match &stage_mean {
+                    None => stage_mean = Some(m),
+                    Some(m0) => crate::ensure!(
+                        bits_equal(m0, &m),
+                        "synchronized-update invariant violated: replica {r} mean \
+                         diverged at stage {s}"
+                    ),
+                }
+            }
+            mean.push(stage_mean.expect("degree >= 1"));
+        }
+        Ok((mean, wire))
+    }
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::frame::FRAME_PRELUDE_BYTES;
+    use crate::util::Rng;
 
     fn grads(degree: usize, n: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
         let mut rng = Rng::new(seed);
@@ -101,25 +161,35 @@ mod tests {
             .collect()
     }
 
+    fn group(degree: usize, spec: &str, sizes: &[usize]) -> DpGroup {
+        DpGroup::new(degree, &CodecSpec::parse(spec).unwrap(), sizes, Rounding::Nearest, 0)
+            .unwrap()
+    }
+
     #[test]
-    fn uncompressed_is_exact_mean() {
+    fn uncompressed_is_exact_mean_with_measured_frames() {
         let g = grads(4, 32, 1);
-        let mut dp = DpGroup::new(4, None, &[32], Rounding::Nearest);
-        let (mean, wire) = dp.reduce(&g);
+        let mut dp = group(4, "fp32", &[32]);
+        let (mean, wire) = dp.reduce(&g).unwrap();
         for j in 0..32 {
             let want: f32 = g.iter().map(|r| r[0][j]).sum::<f32>() / 4.0;
             assert!((mean[0][j] - want).abs() < 1e-6);
         }
-        assert_eq!(wire, 128);
+        // every byte is a serialized raw32 frame: prelude + n:u32 + 4n
+        let frame = (FRAME_PRELUDE_BYTES + 4 + 4 * 32) as u64;
+        // 4 replicas each ship own frame + 2 forwards
+        assert_eq!(wire.total_bytes, 4 * 3 * frame);
+        assert_eq!(wire.max_frame_bytes, frame);
     }
 
     #[test]
     fn error_feedback_preserves_signal_over_time() {
         // summed over many rounds, compressed mean ~ true mean (error
-        // feedback makes the bias vanish) — the 1-bit-Adam property.
+        // feedback makes the bias vanish) — the 1-bit-Adam property,
+        // now through ef: codec frames on the ring.
         let degree = 2;
         let n = 64;
-        let mut dp = DpGroup::new(degree, Some(4), &[n], Rounding::Nearest);
+        let mut dp = group(degree, "ef:directq:fw4bw4", &[n]);
         let mut rng = Rng::new(3);
         let constant: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
         let mut acc = vec![0f64; n];
@@ -133,7 +203,7 @@ mod tests {
                         .collect::<Vec<f32>>()]
                 })
                 .collect();
-            let (mean, _) = dp.reduce(&g);
+            let (mean, _) = dp.reduce(&g).unwrap();
             for (a, &m) in acc.iter_mut().zip(&mean[0]) {
                 *a += m as f64;
             }
@@ -147,10 +217,43 @@ mod tests {
     #[test]
     fn compressed_wire_is_smaller() {
         let g = grads(2, 1000, 5);
-        let mut fp = DpGroup::new(2, None, &[1000], Rounding::Nearest);
-        let mut q4 = DpGroup::new(2, Some(4), &[1000], Rounding::Nearest);
-        let (_, w_fp) = fp.reduce(&g);
-        let (_, w_q) = q4.reduce(&g);
-        assert!(w_q * 7 < w_fp, "{w_q} vs {w_fp}");
+        let mut fp = group(2, "fp32", &[1000]);
+        let mut q4 = group(2, "ef:directq:fw4bw4", &[1000]);
+        let (_, w_fp) = fp.reduce(&g).unwrap();
+        let (_, w_q) = q4.reduce(&g).unwrap();
+        assert!(w_q.total_bytes * 7 < w_fp.total_bytes, "{w_q:?} vs {w_fp:?}");
+    }
+
+    #[test]
+    fn shape_mismatches_are_errors_not_panics() {
+        let mut dp = group(2, "ef:directq:fw4bw4", &[16, 8]);
+        // wrong replica count
+        assert!(dp.reduce(&grads(3, 16, 1)).is_err());
+        // wrong stage count
+        assert!(dp.reduce(&grads(2, 16, 1)).is_err());
+        // wrong stage length
+        let bad: Vec<Vec<Vec<f32>>> =
+            (0..2).map(|_| vec![vec![0.0; 16], vec![0.0; 9]]).collect();
+        assert!(dp.reduce(&bad).is_err());
+        // a well-formed round still works afterwards
+        let ok: Vec<Vec<Vec<f32>>> =
+            (0..2).map(|_| vec![vec![0.01; 16], vec![0.02; 8]]).collect();
+        assert!(dp.reduce(&ok).is_ok());
+    }
+
+    #[test]
+    fn stochastic_rounding_is_seeded_through_the_registry() {
+        // same seed -> identical trajectories; different seed -> different
+        // (determinism is configured in one place, not a hidden rng)
+        let spec = CodecSpec::parse("ef:directq:fw2bw2").unwrap();
+        let mk = |seed: u64| {
+            DpGroup::new(2, &spec, &[64], Rounding::Stochastic, seed).unwrap()
+        };
+        let g = grads(2, 64, 9);
+        let (m1, _) = mk(7).reduce(&g).unwrap();
+        let (m2, _) = mk(7).reduce(&g).unwrap();
+        let (m3, _) = mk(8).reduce(&g).unwrap();
+        assert!(bits_equal(&m1[0], &m2[0]), "same seed must reproduce");
+        assert!(!bits_equal(&m1[0], &m3[0]), "different seed must differ");
     }
 }

@@ -8,8 +8,9 @@
 //! * `trainer`  — the synchronous pipeline training loop over the PJRT
 //!   stage artifacts: microbatch schedule, gradient accumulation, AdamW,
 //!   simulated-network time accounting, eval.
-//! * `dp`       — data-parallel gradient averaging with error-compensated
-//!   quantization ("QuantizedAdam", §4.3 / Fig. 5).
+//! * `dp`       — data-parallel gradient averaging over the CommPlane's
+//!   framed all-gather ring, with registry-built `ef:` error-feedback
+//!   codecs ("QuantizedAdam", §4.3 / Fig. 5).
 //! * `split`    — the split-learning scenario of Appendix H.6.
 
 pub mod boundary;
@@ -22,5 +23,5 @@ pub mod trainer;
 pub use boundary::{
     BackwardBoundary, BoundaryReceiver, BoundarySender, ForwardBoundary, TransferStats,
 };
-pub use dp::DpGroup;
+pub use dp::{DpGroup, DpWire};
 pub use trainer::{Probe, TrainStats, Trainer};

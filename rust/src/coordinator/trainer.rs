@@ -155,7 +155,13 @@ impl Trainer {
         };
         let dp = if cfg.dp_degree > 1 {
             let sizes: Vec<usize> = stages.iter().map(|s| s.n_params).collect();
-            Some(DpGroup::new(cfg.dp_degree, cfg.dp_grad_bits, &sizes, rounding))
+            Some(DpGroup::new(
+                cfg.dp_degree,
+                &cfg.dp_codec,
+                &sizes,
+                rounding,
+                cfg.seed ^ 0xD9,
+            )?)
         } else {
             None
         };
@@ -296,14 +302,14 @@ impl Trainer {
             replica_grads.push(grads);
         }
 
-        // ---- data-parallel reduction ----
+        // ---- data-parallel reduction (framed codec ring, measured) ----
         let (mean_grads, dp_wire) = match &mut self.dp {
             Some(dp) => {
-                let (m, w) = dp.reduce(&replica_grads);
-                self.recorder.comm_bytes += w * dp.degree as u64;
+                let (m, w) = dp.reduce(&replica_grads)?;
+                self.recorder.comm_bytes += w.total_bytes;
                 (m, w)
             }
-            None => (replica_grads.pop().unwrap(), 0),
+            None => (replica_grads.pop().unwrap(), crate::coordinator::dp::DpWire::default()),
         };
 
         // ---- optimizer ----
@@ -326,9 +332,15 @@ impl Trainer {
     }
 
     /// Build the event simulation for this step from measured compute
-    /// times + actual wire bytes (both directions come straight from the
-    /// frames this step produced — nothing is re-derived).
-    fn simulate_step_time(&self, fw_bytes: &[u64], bw_bytes: u64, dp_wire: u64) -> f64 {
+    /// times + actual wire bytes (all three traffic classes come
+    /// straight from the frames this step produced — nothing is
+    /// re-derived).
+    fn simulate_step_time(
+        &self,
+        fw_bytes: &[u64],
+        bw_bytes: u64,
+        dp_wire: crate::coordinator::dp::DpWire,
+    ) -> f64 {
         let k = self.stages.len();
         let n_micro = fw_bytes.len().max(1);
         let stage_times: Vec<StageTimes> = (0..k)
@@ -353,8 +365,10 @@ impl Trainer {
         };
         let mut t = if k > 1 || n_micro > 0 { PipelineSim::run(&sim).step_time_s } else { 0.0 };
         if self.cfg.dp_degree > 1 {
-            t += PipelineSim::allreduce_time(
-                dp_wire,
+            // per-stage rings run concurrently; the largest frame gates
+            // each of the ring's serialized hop rounds
+            t += PipelineSim::ring_allgather_time(
+                dp_wire.max_frame_bytes,
                 self.cfg.dp_degree,
                 self.cfg.bandwidth_bps,
                 self.cfg.latency_s,

@@ -150,4 +150,44 @@ impl PaperRegime {
         let n = (self.fp32_msg_bytes / 4) as usize;
         (c.fw_wire_bytes(n, first_visit), c.bw_wire_bytes(n))
     }
+
+    /// Elements of one machine's DP gradient shard (params / stages).
+    pub fn dp_shard_elems(&self) -> usize {
+        (self.param_bytes / 4 / self.n_stages as u64) as usize
+    }
+}
+
+/// Ring chunk size the regime harnesses encode DP gradients at
+/// (4M elements = 16 MB fp32 per frame — large enough to amortize the
+/// frame header, small enough to build without regime-sized buffers).
+pub const DP_RING_CHUNK_ELEMS: usize = 1 << 22;
+
+/// Wire bytes one replica's `n`-element DP gradient occupies under
+/// `spec`, *measured* by encoding real chunk frames through the
+/// registry-built gradient codec and summing their serialized sizes —
+/// the ring ships the shard as `ceil(n / chunk)` frames, and every
+/// reported byte is `Frame::to_bytes().len()` of one of them. (Chunks of
+/// equal length produce identical-size frames for the dense gradient
+/// codecs, so each distinct length is encoded once.)
+pub fn measured_dp_frame_bytes(spec: &CodecSpec, n: usize, chunk: usize) -> Result<u64> {
+    crate::ensure!(chunk >= 1, "dp chunk must be non-empty");
+    let full = n / chunk;
+    let rem = n % chunk;
+    let mut total = 0u64;
+    for (len, count) in [(chunk, full as u64), (rem, u64::from(rem > 0))] {
+        if count == 0 {
+            continue;
+        }
+        let (mut enc, _) = crate::codec::registry::build_mem_pair(
+            &spec.fw,
+            len,
+            crate::codec::Rounding::Nearest,
+            0xD9,
+        )?;
+        let mut rng = crate::util::Rng::new(0x6AAD);
+        let g: Vec<f32> = (0..len).map(|_| 1e-3 * rng.normal()).collect();
+        let frame = enc.encode(&[0], &g)?;
+        total += frame.to_bytes().len() as u64 * count;
+    }
+    Ok(total)
 }

@@ -27,7 +27,8 @@ const HELP: &str = "aq-sgd <train|info|throughput> [--key value ...]
 train flags:
   --model NAME            artifacts/<NAME> (default tiny)
   --compression SPEC      fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY |
-                          topk:F@B | hybrid:FW/BW (e.g. hybrid:aq2/topk0.2@8)
+                          topk:F@B | ef:SPEC | hybrid:FW/BW
+                          (e.g. hybrid:aq2/topk0.2@8)
   --dataset NAME          markov | arxiv | embedded | qnli | cola
   --examples N            dataset size (default 64)
   --epochs N --n-micro N --lr F --warmup N --steps N --seed N
@@ -38,7 +39,11 @@ train flags:
                           self-contained — needs no artifacts)
   --stages K --el N --micro-batch B
                           pipeline shape for --executor threads (default 4/64/2)
-  --dp N --dp-bits B      data parallelism + gradient compression
+  --dp N                  data-parallel replicas (ring gradient exchange)
+  --dp-codec SPEC         DP gradient codec, same grammar as --compression
+                          (ef:directq:fw4bw4 = Fig. 5's error-compensated
+                          regime; default fp32; --dp-bits B is shorthand
+                          for ef:directq:fwBbwB)
   --m-bits B              low-precision message buffers (Fig 9e/f)
   --store S               mem | disk | quant
   --hlo-codec             compress boundaries via the Pallas HLO kernels
@@ -92,22 +97,27 @@ fn cmd_train_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     let steps = if cfg.total_steps == usize::MAX { 20 } else { cfg.total_steps };
     println!(
         "executor=threads stages={stages} n_micro={} micro_batch={micro_b} el={el} \
-         compression={} schedule={:?} bandwidth={}",
+         compression={} dp={} dp_codec={} schedule={:?} bandwidth={}",
         cfg.n_micro,
         cfg.compression.label(),
+        cfg.dp_degree,
+        cfg.dp_codec.label(),
         cfg.schedule,
         fmt::bandwidth(cfg.bandwidth_bps)
     );
     let t0 = std::time::Instant::now();
     let (real, oracle) = exp::run_executor_with_oracle(cfg, stages, micro_b, el, steps)?;
     let wall = t0.elapsed().as_secs_f64();
-    let mut t = Table::new(&["step", "loss", "fw wire", "bw wire", "wall step", "oracle step"]);
+    let mut t = Table::new(&[
+        "step", "loss", "fw wire", "bw wire", "dp wire", "wall step", "oracle step",
+    ]);
     for (i, rec) in real.steps.iter().enumerate() {
         t.row(vec![
             format!("{i}"),
             format!("{:.5}", rec.loss),
             fmt::bytes(rec.fw_wire_bytes.iter().sum::<u64>()),
             fmt::bytes(rec.bw_wire_bytes.iter().sum::<u64>()),
+            fmt::bytes(rec.dp_wire_bytes.iter().sum::<u64>()),
             fmt::duration_s(real.step_time_s[i]),
             fmt::duration_s(oracle.step_time_s[i]),
         ]);

@@ -10,8 +10,10 @@
 //! so the event model is cross-checked against wall-clock behaviour.
 
 pub mod channel;
+pub mod plane;
 
 pub use channel::{frame_link, FrameLink, FrameLinkRx};
+pub use plane::{dp_rings, link_endpoints, DpRing, LinkEndpointRx, LinkEndpointTx};
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};

@@ -1,0 +1,375 @@
+//! The CommPlane: one codec/transport endpoint abstraction for every
+//! traffic class the paper compresses end-to-end (§4.3) — forward
+//! activations, backward activation gradients, and data-parallel model
+//! gradients.
+//!
+//! A [`LinkEndpointTx`]/[`LinkEndpointRx`] pair bonds one registry-built
+//! codec half to one directed [`FrameLink`]: the sender encodes into a
+//! [`Frame`], ships the serialized image, and reads its byte accounting
+//! off the real buffers; the receiver blocks on the paced link and
+//! decodes. The threaded pipeline executor runs its stage boundaries
+//! over these endpoints with real channel pacing; the virtual-clock
+//! executor runs the *same* endpoints over unpaced links
+//! (`f64::INFINITY` bandwidth, zero latency — a pure FIFO), which is
+//! what keeps the two executors bit-identical twins: same codec objects,
+//! same call order, only the clock differs.
+//!
+//! [`DpRing`] builds the third traffic class on the same endpoints: an
+//! all-gather ring over `degree` replicas in which each replica encodes
+//! its (typically `ef:`-wrapped, error-compensated) gradient once,
+//! forwards its neighbours' frames for `degree - 1` serialized hops, and
+//! reconstructs every sender's contribution through per-sender decoder
+//! replicas — so with synchronized updates all replicas compute the
+//! bit-identical mean, and every reported DP wire byte is the serialized
+//! size of a real frame.
+
+use std::time::Duration;
+
+use super::{frame_link, FrameLink, FrameLinkRx};
+use crate::codec::registry::{build_mem_pair, SchemeSpec};
+use crate::codec::{BoundaryCodec, Frame, Rounding};
+use crate::coordinator::boundary::{BoundaryReceiver, BoundarySender, TransferStats};
+use crate::util::error::{Context, Result};
+
+/// Sending endpoint: codec encoder half + paced frame link + accounting.
+pub struct LinkEndpointTx {
+    enc: BoundarySender,
+    link: FrameLink,
+}
+
+/// Receiving endpoint: paced frame link + codec decoder half.
+pub struct LinkEndpointRx {
+    dec: BoundaryReceiver,
+    link: FrameLinkRx,
+}
+
+/// Bond a codec pair to a fresh directed link. `bandwidth_bps` may be
+/// `f64::INFINITY` (the virtual-clock executor's unpaced FIFO mode).
+pub fn link_endpoints(
+    boundary_id: u32,
+    example_len: usize,
+    enc: Box<dyn BoundaryCodec>,
+    dec: Box<dyn BoundaryCodec>,
+    bandwidth_bps: f64,
+    latency: Duration,
+) -> (LinkEndpointTx, LinkEndpointRx) {
+    let (tx, rx) = frame_link(bandwidth_bps, latency);
+    (
+        LinkEndpointTx { enc: BoundarySender::new(boundary_id, example_len, enc), link: tx },
+        LinkEndpointRx { dec: BoundaryReceiver::new(boundary_id, example_len, dec), link: rx },
+    )
+}
+
+impl LinkEndpointTx {
+    /// Encode one message and ship its serialized frame. The returned
+    /// stats carry the measured wire bytes (`Frame::wire_bytes()`, which
+    /// equals the shipped image length).
+    pub fn send(&mut self, ids: &[u64], a: &[f32]) -> Result<TransferStats> {
+        let (frame, stats) = self.enc.encode(ids, a)?;
+        self.link.send(frame.to_bytes());
+        Ok(stats)
+    }
+
+    /// Like [`send`](Self::send), but also hands back the serialized
+    /// image — the DP ring decodes the sender's own frame locally so
+    /// every replica reconstructs the identical mean.
+    pub fn send_keep(&mut self, ids: &[u64], a: &[f32]) -> Result<(TransferStats, Vec<u8>)> {
+        let (frame, stats) = self.enc.encode(ids, a)?;
+        let bytes = frame.to_bytes();
+        self.link.send(bytes.clone());
+        Ok((stats, bytes))
+    }
+
+    /// Ship an already-serialized frame unchanged (ring forwarding).
+    pub fn forward(&mut self, bytes: Vec<u8>) {
+        self.link.send(bytes);
+    }
+
+    /// Total serialized bytes shipped on this link.
+    pub fn bytes_sent(&self) -> u64 {
+        self.link.bytes_sent
+    }
+
+    /// Encoder-side persistent codec state (message buffers etc.).
+    pub fn state_bytes(&self) -> u64 {
+        self.enc.state_bytes()
+    }
+}
+
+impl LinkEndpointRx {
+    /// Blocking receive + decode of the next frame.
+    pub fn recv(&mut self, ids: &[u64]) -> Result<Vec<f32>> {
+        let bytes = self.link.recv()?;
+        let frame = Frame::from_bytes(&bytes)?;
+        self.dec.decode(ids, &frame)
+    }
+
+    /// Receive the raw serialized frame (the ring decodes per sender,
+    /// not per link).
+    pub fn recv_raw(&self) -> Result<Vec<u8>> {
+        self.link.recv()
+    }
+
+    /// Decoder-side persistent codec state (the buffer replica).
+    pub fn state_bytes(&self) -> u64 {
+        self.dec.state_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// One replica's endpoint of a per-stage gradient all-gather ring.
+///
+/// Protocol per optimizer step (degree `d`, replica `r`):
+///  1. [`send_own`](Self::send_own) — encode the local (error-compensated)
+///     gradient once and ship it to replica `r+1`;
+///  2. `d - 1` [`hop`](Self::hop)s — receive the next frame from `r-1`
+///     and forward it to `r+1` unless it has completed the ring;
+///  3. [`finish`](Self::finish) — decode all `d` frames *in sender
+///     order* through per-sender decoder replicas and return the mean.
+///
+/// Because every replica decodes the same `d` frames with
+/// identically-initialized decoders and accumulates in the same order,
+/// the means are bit-identical across replicas (the synchronized-update
+/// invariant `DpGroup` asserts every step).
+pub struct DpRing {
+    pub replica: usize,
+    pub degree: usize,
+    n: usize,
+    ids: [u64; 1],
+    /// own EF/codec encoder bonded to the outgoing ring edge
+    tx: LinkEndpointTx,
+    /// incoming ring edge, raw (decode happens per sender)
+    rx: FrameLinkRx,
+    /// per-sender decoder replicas (index = originating replica)
+    dec: Vec<BoundaryReceiver>,
+    /// frames of the current round, slotted by sender
+    frames: Vec<Option<Vec<u8>>>,
+    sent_bytes: u64,
+    max_frame: u64,
+}
+
+/// Build the `degree` ring endpoints for one stage's gradient exchange:
+/// `n`-element gradients compressed under `scheme` (normally an `ef:`
+/// wrapper). One registry build per sender seeds that sender's encoder
+/// and *every* replica's decoder-for-that-sender identically, so the
+/// decoder replicas start — and stay — in lockstep. Rounding and seed
+/// flow in from the caller's config; there is no constructor-internal
+/// rng.
+pub fn dp_rings(
+    scheme: &SchemeSpec,
+    degree: usize,
+    n: usize,
+    rounding: Rounding,
+    seed: u64,
+    bandwidth_bps: f64,
+    latency: Duration,
+) -> Result<Vec<DpRing>> {
+    crate::ensure!(degree >= 1, "dp ring needs at least one replica");
+    crate::ensure!(n >= 1, "dp ring needs a non-empty gradient");
+    let sender_seed = |j: usize| seed ^ (0xD9D9_0000 | j as u64);
+    // directed ring edges j -> (j+1) % degree
+    let mut edge_tx: Vec<Option<FrameLink>> = (0..degree).map(|_| None).collect();
+    let mut edge_rx: Vec<Option<FrameLinkRx>> = (0..degree).map(|_| None).collect();
+    for j in 0..degree {
+        let (tx, rx) = frame_link(bandwidth_bps, latency);
+        edge_tx[j] = Some(tx);
+        edge_rx[(j + 1) % degree] = Some(rx);
+    }
+    let mut rings = Vec::with_capacity(degree);
+    for r in 0..degree {
+        let enc = build_mem_pair(scheme, n, rounding, sender_seed(r))?.0;
+        let mut dec = Vec::with_capacity(degree);
+        for j in 0..degree {
+            let half = build_mem_pair(scheme, n, rounding, sender_seed(j))?.1;
+            dec.push(BoundaryReceiver::new(j as u32, n, half));
+        }
+        let link = edge_tx[r].take().expect("edge distributed once");
+        rings.push(DpRing {
+            replica: r,
+            degree,
+            n,
+            ids: [0],
+            tx: LinkEndpointTx { enc: BoundarySender::new(r as u32, n, enc), link },
+            rx: edge_rx[r].take().expect("edge distributed once"),
+            dec,
+            frames: (0..degree).map(|_| None).collect(),
+            sent_bytes: 0,
+            max_frame: 0,
+        });
+    }
+    Ok(rings)
+}
+
+impl DpRing {
+    /// Step 1: encode this replica's gradient and ship it around the
+    /// ring. Returns the encoder's transfer stats.
+    pub fn send_own(&mut self, g: &[f32]) -> Result<TransferStats> {
+        crate::ensure!(
+            g.len() == self.n,
+            "dp ring replica {}: gradient length {} != {}",
+            self.replica,
+            g.len(),
+            self.n
+        );
+        let (stats, bytes) = self.tx.send_keep(&self.ids, g)?;
+        self.sent_bytes += bytes.len() as u64;
+        self.max_frame = self.max_frame.max(bytes.len() as u64);
+        crate::ensure!(
+            self.frames[self.replica].replace(bytes).is_none(),
+            "dp ring replica {}: send_own called twice in one round",
+            self.replica
+        );
+        Ok(stats)
+    }
+
+    /// Step 2, executed `degree - 1` times with `hop = 1..degree`:
+    /// receive the next frame from the predecessor and forward it unless
+    /// it has completed the ring.
+    pub fn hop(&mut self, hop: usize) -> Result<()> {
+        crate::ensure!(
+            hop >= 1 && hop < self.degree,
+            "dp ring hop {hop} out of range for degree {}",
+            self.degree
+        );
+        let bytes = self.rx.recv()?;
+        let origin = (self.replica + self.degree - hop) % self.degree;
+        if hop + 1 < self.degree {
+            // not yet at the origin's predecessor: keep it moving
+            self.sent_bytes += bytes.len() as u64;
+            self.max_frame = self.max_frame.max(bytes.len() as u64);
+            self.tx.forward(bytes.clone());
+        }
+        crate::ensure!(
+            self.frames[origin].replace(bytes).is_none(),
+            "dp ring replica {}: duplicate frame from sender {origin}",
+            self.replica
+        );
+        Ok(())
+    }
+
+    /// Step 3: decode every sender's frame in sender order and return
+    /// `(mean gradient, serialized bytes this replica shipped)`.
+    pub fn finish(&mut self) -> Result<(Vec<f32>, u64)> {
+        let mut acc = vec![0f32; self.n];
+        for j in 0..self.degree {
+            let bytes = self.frames[j]
+                .take()
+                .with_context(|| format!("dp ring finish before the frame from sender {j}"))?;
+            let frame = Frame::from_bytes(&bytes)?;
+            let deq = self.dec[j].decode(&self.ids, &frame)?;
+            for (a, d) in acc.iter_mut().zip(&deq) {
+                *a += d;
+            }
+        }
+        let inv = 1.0 / self.degree as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        Ok((acc, std::mem::take(&mut self.sent_bytes)))
+    }
+
+    /// Convenience for the threaded executor (each replica runs on its
+    /// own thread, so the blocking hops interleave naturally).
+    pub fn all_reduce(&mut self, g: &[f32]) -> Result<(Vec<f32>, u64)> {
+        self.send_own(g)?;
+        for hop in 1..self.degree {
+            self.hop(hop)?;
+        }
+        self.finish()
+    }
+
+    /// Largest serialized frame seen since the last call (sizes the
+    /// virtual clock's hop rounds); resets the watermark.
+    pub fn take_max_frame(&mut self) -> u64 {
+        std::mem::take(&mut self.max_frame)
+    }
+
+    /// Encoder-side persistent codec state.
+    pub fn state_bytes(&self) -> u64 {
+        self.tx.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecSpec;
+    use crate::util::Rng;
+
+    fn unpaced() -> (f64, Duration) {
+        (f64::INFINITY, Duration::ZERO)
+    }
+
+    /// Drive all rings through one round in the single-threaded phase
+    /// order (what DpGroup and the virtual-clock executor do).
+    fn round(rings: &mut [DpRing], grads: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+        let d = rings.len();
+        for (r, ring) in rings.iter_mut().enumerate() {
+            ring.send_own(&grads[r]).unwrap();
+        }
+        for hop in 1..d {
+            for ring in rings.iter_mut() {
+                ring.hop(hop).unwrap();
+            }
+        }
+        rings.iter_mut().map(|ring| ring.finish().unwrap()).collect()
+    }
+
+    #[test]
+    fn fp32_ring_is_exact_mean_with_measured_bytes() {
+        let (bw, lat) = unpaced();
+        let n = 32;
+        let d = 4;
+        let spec = CodecSpec::fp32();
+        let mut rings = dp_rings(&spec.fw, d, n, Rounding::Nearest, 1, bw, lat).unwrap();
+        let mut rng = Rng::new(1);
+        let grads: Vec<Vec<f32>> =
+            (0..d).map(|_| (0..n).map(|_| rng.normal() * 0.1).collect()).collect();
+        let results = round(&mut rings, &grads);
+        for j in 0..n {
+            let want: f32 = grads.iter().map(|g| g[j]).sum::<f32>() / d as f32;
+            for (mean, _) in &results {
+                assert!((mean[j] - want).abs() < 1e-6);
+            }
+        }
+        // every replica ships its own frame plus d-2 forwards, every one
+        // a real serialized raw32 frame (prelude 7 + n:u32 + 4n payload)
+        let frame = (crate::codec::frame::FRAME_PRELUDE_BYTES + 4 + 4 * n) as u64;
+        for (_, sent) in &results {
+            assert_eq!(*sent, (d as u64 - 1) * frame);
+        }
+    }
+
+    #[test]
+    fn replicas_compute_bit_identical_means() {
+        let (bw, lat) = unpaced();
+        let n = 64;
+        let d = 3;
+        let spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        let mut rings = dp_rings(&spec.fw, d, n, Rounding::Stochastic, 7, bw, lat).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let grads: Vec<Vec<f32>> =
+                (0..d).map(|_| (0..n).map(|_| rng.normal() * 0.01).collect()).collect();
+            let results = round(&mut rings, &grads);
+            let (m0, _) = &results[0];
+            for (m, _) in &results[1..] {
+                let same =
+                    m0.iter().zip(m).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "replica means diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_errors_on_bad_shapes_and_missing_phases() {
+        let (bw, lat) = unpaced();
+        let spec = CodecSpec::fp32();
+        let mut rings = dp_rings(&spec.fw, 2, 8, Rounding::Nearest, 1, bw, lat).unwrap();
+        assert!(rings[0].send_own(&vec![0.0; 7]).is_err());
+        // finish before the peer frame arrived: error, not a hang/panic
+        rings[0].send_own(&vec![0.0; 8]).unwrap();
+        assert!(rings[0].finish().is_err());
+    }
+}

@@ -1,42 +1,48 @@
-//! Threaded pipeline executor + its virtual-clock twin.
+//! Threaded pipeline executor + its virtual-clock twin, over the
+//! unified CommPlane.
 //!
-//! This is the first code path that actually *runs* concurrent pipeline
-//! stages: each stage is a worker thread executing its
-//! [`Schedule`](super::Schedule) op list, connected to its neighbours by
-//! channel-backed links ([`net::channel`](crate::net::channel)) that
-//! carry real serialized [`Frame`] bytes through registry-built
-//! [`BoundaryCodec`](crate::codec::BoundaryCodec) halves — the encoder
-//! half lives on the sending thread, the decoder half on the receiving
-//! thread, and AC-SGD message-buffer state advances on each side of each
-//! link through the frames alone (Algorithm 2's replica symmetry,
-//! realized as thread ownership).
+//! Every message class travels the same way: a registry-built
+//! [`BoundaryCodec`](crate::codec::BoundaryCodec) half bonded to a
+//! directed frame link — a [`LinkEndpointTx`]/[`LinkEndpointRx`] pair
+//! (`net::plane`). Stage workers are pure compute (first-party
+//! deterministic tanh-affine stages + SGD, per-microbatch saved
+//! activations); the endpoints own the codecs and the byte accounting,
+//! and serialized [`Frame`](crate::codec::Frame) images are the only
+//! thing that crosses between stages *or* between data-parallel
+//! replicas:
 //!
-//! The same per-stage workers also run under the virtual clock
-//! ([`run_virtual`], built on [`super::step`]'s op-retirement core, the
-//! engine `PipelineSim` uses). Because ops retire in each stage's
-//! schedule order in both modes, the two executors are
-//! **seed-deterministic twins**: given the same [`ExecConfig`], their
-//! per-step loss and wire-byte trajectories are bit-identical — pinned
-//! by `tests/exec_vs_sim.rs`, which is what turns the virtual-clock
-//! simulator into a verified oracle instead of an unchecked model.
+//!  * **forward activations / backward gradients** — per-boundary
+//!    endpoint pairs, encoder on the sending stage, decoder on the
+//!    receiving stage;
+//!  * **DP model gradients** (`dp_degree > 1`) — a per-stage
+//!    [`DpRing`]: each replica's stage encodes its error-compensated
+//!    gradient (the `ef:` codec of `dp_spec`) once, frames circulate
+//!    `degree - 1` serialized hops, and every replica reconstructs the
+//!    bit-identical mean through per-sender decoder replicas.
 //!
-//! Stage compute is a first-party deterministic model (elementwise
-//! affine + tanh regression), so the executor runs end-to-end with zero
-//! external dependencies — no AOT artifacts, no PJRT backend.
+//! The two execution modes share one worker/endpoint construction:
+//! `run_threads` runs one thread per (replica, stage) with link pacing
+//! at the configured bandwidth/latency; `run_virtual` runs the same
+//! endpoints over unpaced links (infinite bandwidth — a pure FIFO)
+//! under [`super::step`]'s op-retirement clock, modeling the ring's
+//! serialized hops separately. Because ops retire in per-stage schedule
+//! order in both modes and every codec object sees the identical call
+//! sequence, the executors are **seed-deterministic twins**: per-step
+//! loss, per-link wire bytes, DP ring bytes, and per-replica parameter
+//! digests are bit-identical — pinned by `tests/exec_vs_sim.rs`.
 
-use std::collections::VecDeque;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::codec::registry::build_mem_pair;
-use crate::codec::{CodecSpec, Frame, Rounding};
+use crate::codec::{CodecSpec, Rounding};
 use crate::config::TrainConfig;
-use crate::coordinator::{BoundaryReceiver, BoundarySender};
-use crate::net::{frame_link, FrameLink, FrameLinkRx};
+use crate::net::plane::{dp_rings, link_endpoints, DpRing, LinkEndpointRx, LinkEndpointTx};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 use super::schedule::{Op, Schedule};
+use super::sim::PipelineSim;
 use super::step::{run_step, StepConfig, StepDriver};
 
 /// Which pipeline runtime executes a training run.
@@ -44,7 +50,7 @@ use super::step::{run_step, StepConfig, StepDriver};
 pub enum Executor {
     /// Single-threaded virtual-clock execution (the verified oracle).
     Sim,
-    /// One worker thread per stage, frames over channel-backed links.
+    /// One worker thread per (replica, stage), frames over channel links.
     Threads,
 }
 
@@ -67,7 +73,7 @@ impl Executor {
     }
 }
 
-/// Configuration of one executor run: pipeline shape, codec spec, and
+/// Configuration of one executor run: pipeline shape, codec specs, and
 /// the modeled network/compute parameters for the virtual clock (the
 /// threaded mode uses bandwidth/latency to pace its links).
 #[derive(Clone, Debug)]
@@ -92,12 +98,19 @@ pub struct ExecConfig {
     /// threaded mode's compute time is whatever the host takes).
     pub fwd_s: f64,
     pub bwd_s: f64,
+    /// Data-parallel replicas (1 = no DP). Each replica runs the full
+    /// pipeline on a disjoint shard and exchanges model gradients over
+    /// the per-stage ring after every step.
+    pub dp_degree: usize,
+    /// Gradient codec for the DP ring (`--dp-codec`; `ef:directq:fw4bw4`
+    /// is Fig. 5's error-compensated regime).
+    pub dp_spec: CodecSpec,
 }
 
 impl ExecConfig {
     /// Small self-contained default: 4 stages, 4 microbatches of 2
-    /// examples x 64 elements, 4 steps — what the integration tests and
-    /// the CLI demo start from.
+    /// examples x 64 elements, 4 steps, no DP — what the integration
+    /// tests and the CLI demo start from.
     pub fn small(spec: CodecSpec) -> Self {
         ExecConfig {
             n_stages: 4,
@@ -114,13 +127,16 @@ impl ExecConfig {
             latency_s: 0.0,
             fwd_s: 0.01,
             bwd_s: 0.02,
+            dp_degree: 1,
+            dp_spec: CodecSpec::fp32(),
         }
     }
 
     /// Derive an executor config from a [`TrainConfig`] (the
-    /// `--executor` switch): compression / schedule / seed / n_micro /
-    /// lr / network come from the config; the pipeline shape — which the
-    /// artifact manifest would normally dictate — is passed explicitly.
+    /// `--executor` switch): compression / dp codec / schedule / seed /
+    /// n_micro / lr / network come from the config; the pipeline shape —
+    /// which the artifact manifest would normally dictate — is passed
+    /// explicitly.
     pub fn from_train(
         cfg: &TrainConfig,
         n_stages: usize,
@@ -147,6 +163,8 @@ impl ExecConfig {
             latency_s: cfg.latency_s,
             fwd_s: 0.01,
             bwd_s: 0.02,
+            dp_degree: cfg.dp_degree,
+            dp_spec: cfg.dp_codec.clone(),
         }
     }
 }
@@ -154,13 +172,23 @@ impl ExecConfig {
 /// One optimizer step of the trajectory both executors must agree on.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepRecord {
-    /// Mean microbatch loss (accumulated in backward op order — the same
-    /// order in both modes, so equality is exact, not approximate).
+    /// Mean microbatch loss across replicas (accumulated in fixed
+    /// replica/backward-op order — the same order in both modes, so
+    /// equality is exact, not approximate).
     pub loss: f32,
-    /// Serialized frame bytes crossing each forward boundary this step.
+    /// Serialized frame bytes crossing each forward boundary this step
+    /// (summed over replicas).
     pub fw_wire_bytes: Vec<u64>,
-    /// Same for the backward (gradient) direction.
+    /// Same for the backward (activation-gradient) direction.
     pub bw_wire_bytes: Vec<u64>,
+    /// Serialized DP ring frame bytes shipped per stage this step
+    /// (summed over replicas; all zeros when `dp_degree == 1`).
+    pub dp_wire_bytes: Vec<u64>,
+    /// Per-replica parameter digest after the step's update (FNV-1a
+    /// over all stage parameter bits, stage order). With error-feedback
+    /// compression and synchronized updates these must all be equal —
+    /// the replica-equality invariant.
+    pub replica_digests: Vec<u64>,
 }
 
 /// Full trajectory of one executor run.
@@ -168,16 +196,18 @@ pub struct StepRecord {
 pub struct ExecTrace {
     pub executor: Executor,
     pub steps: Vec<StepRecord>,
-    /// Virtual mode: modeled step time under the clock. Threaded mode:
-    /// measured wall time of stage 0's step loop (the stage that starts
-    /// first and drains last under a flush schedule).
+    /// Virtual mode: modeled step time under the clock (pipeline + DP
+    /// ring hops). Threaded mode: measured wall time of replica 0 /
+    /// stage 0's step loop.
     pub step_time_s: Vec<f64>,
-    /// Per stage: resident state bytes of its (fw encoder, fw decoder)
-    /// codec halves after the run — `fw_state_bytes[s].0` must equal
-    /// `fw_state_bytes[s+1].1` for stateful schemes (replica symmetry).
+    /// Per (replica, stage), flattened `replica * n_stages + stage`:
+    /// resident state bytes of the (fw encoder, fw decoder) endpoint
+    /// halves after the run — the encoder entry of boundary `s` must
+    /// equal the decoder entry of stage `s+1` for stateful schemes
+    /// (replica symmetry).
     pub fw_state_bytes: Vec<(u64, u64)>,
-    /// Peak simultaneously-held microbatch activations per stage (the
-    /// memory bound 1F1B exists to provide).
+    /// Peak simultaneously-held microbatch activations per (replica,
+    /// stage), flattened like `fw_state_bytes`.
     pub peak_in_flight: Vec<usize>,
 }
 
@@ -186,16 +216,19 @@ impl ExecTrace {
         self.steps.iter().map(|s| s.loss).collect()
     }
 
-    /// True when the per-step loss and wire-byte trajectories of the two
-    /// runs are identical. Losses compare as raw f32 bits, so a run that
-    /// diverges to NaN identically in both modes still counts as
-    /// identical (float `==` would not: NaN != NaN).
+    /// True when the per-step loss, wire-byte, DP ring, and
+    /// replica-digest trajectories of the two runs are identical. Losses
+    /// compare as raw f32 bits, so a run that diverges to NaN
+    /// identically in both modes still counts as identical (float `==`
+    /// would not: NaN != NaN).
     pub fn bit_identical(&self, other: &ExecTrace) -> bool {
         self.steps.len() == other.steps.len()
             && self.steps.iter().zip(&other.steps).all(|(a, b)| {
                 a.loss.to_bits() == b.loss.to_bits()
                     && a.fw_wire_bytes == b.fw_wire_bytes
                     && a.bw_wire_bytes == b.bw_wire_bytes
+                    && a.dp_wire_bytes == b.dp_wire_bytes
+                    && a.replica_digests == b.replica_digests
             })
     }
 }
@@ -216,7 +249,7 @@ pub fn run(cfg: &ExecConfig, executor: Executor) -> Result<ExecTrace> {
 /// matching backward. Small enough to be exactly reproducible (plain
 /// sequential f32 loops, identical on every host), rich enough that
 /// parameters drift step to step — which is what gives AC-SGD's delta
-/// codec a real signal to compress.
+/// codec and the EF gradient compressor a real signal to work with.
 struct ToyStage {
     el: usize,
     w: Vec<f32>,
@@ -255,81 +288,106 @@ impl ToyStage {
         dx
     }
 
-    /// SGD step over the microbatch-mean gradient; resets accumulators.
-    fn apply(&mut self, lr: f32, inv_micro: f32) {
-        for j in 0..self.el {
-            self.w[j] -= lr * self.dw[j] * inv_micro;
-            self.b[j] -= lr * self.db[j] * inv_micro;
-            self.dw[j] = 0.0;
-            self.db[j] = 0.0;
+    /// The microbatch-mean step gradient as one flat `[dw, db]` vector —
+    /// what crosses the DP ring. Resets the accumulators.
+    fn take_step_grad(&mut self, inv_micro: f32) -> Vec<f32> {
+        let mut g = Vec::with_capacity(2 * self.el);
+        g.extend(self.dw.iter().map(|v| v * inv_micro));
+        g.extend(self.db.iter().map(|v| v * inv_micro));
+        for v in self.dw.iter_mut() {
+            *v = 0.0;
         }
+        for v in self.db.iter_mut() {
+            *v = 0.0;
+        }
+        g
+    }
+
+    /// SGD step over a flat `[dw, db]` gradient (local or ring-mean).
+    fn apply_grad(&mut self, lr: f32, g: &[f32]) {
+        debug_assert_eq!(g.len(), 2 * self.el);
+        for j in 0..self.el {
+            self.w[j] -= lr * g[j];
+            self.b[j] -= lr * g[self.el + j];
+        }
+    }
+
+    /// FNV-1a over the parameter bits — the replica-equality probe.
+    fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in self.w.iter().chain(&self.b) {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
     }
 }
 
 // ---------------------------------------------------------------------------
-// Stage worker: everything one stage owns, in either execution mode
+// Stage worker (pure compute) + its CommPlane endpoints
 // ---------------------------------------------------------------------------
 
-/// Per-step accounting one stage produces.
-#[derive(Clone, Debug, Default)]
+/// Per-step byte accounting one stage's endpoints produce.
+#[derive(Clone, Copy, Debug, Default)]
+struct StageAcct {
+    fw_wire: u64,
+    bw_wire: u64,
+    dp_wire: u64,
+}
+
+/// Per-step record one stage hands back at step close.
+#[derive(Clone, Copy, Debug, Default)]
 struct StageStep {
     loss: Option<f32>,
     fw_wire: u64,
     bw_wire: u64,
+    dp_wire: u64,
+    digest: u64,
 }
 
-/// One pipeline stage: its model, its codec endpoint halves (encoder
-/// toward the next stage, decoder from the previous, and the reverse
-/// pair for gradients), and the saved per-microbatch activations its
-/// backward passes need. Owned by a worker thread in threaded mode, by
-/// the virtual-clock driver otherwise — the op call sequence is the same.
+/// One pipeline stage's compute: its model, local data shard, and the
+/// saved per-microbatch activations its backward passes need. Codecs and
+/// transport live in the stage's [`StageEndpoints`] — the worker only
+/// sees decoded activations, which is what lets both execution modes
+/// (and the virtual/threaded transports) share this one type.
 struct StageWorker {
+    replica: usize,
     stage: usize,
     n_stages: usize,
     n_micro: usize,
     lr: f32,
     model: ToyStage,
-    fw_send: Option<BoundarySender>,
-    fw_recv: Option<BoundaryReceiver>,
-    bw_send: Option<BoundarySender>,
-    bw_recv: Option<BoundaryReceiver>,
-    /// Stage 0 only: the local training inputs, one per microbatch.
+    /// Stage 0 only: the replica's training inputs, one per microbatch.
     inputs: Vec<Vec<f32>>,
     /// Last stage only: regression targets, one per microbatch.
     targets: Vec<Vec<f32>>,
-    /// Example ids per microbatch (keys the AC-SGD buffers).
+    /// Example ids per microbatch (keys the AC-SGD buffers; disjoint
+    /// across replicas, which train disjoint shards).
     ids: Vec<Vec<u64>>,
     saved_x: Vec<Option<Vec<f32>>>,
     saved_y: Vec<Option<Vec<f32>>>,
     in_flight: usize,
     peak_in_flight: usize,
-    cur: StageStep,
+    loss_acc: Option<f32>,
 }
 
 impl StageWorker {
-    /// Forward one microbatch. `incoming` is the serialized frame from
-    /// stage-1 (None on stage 0). Returns the serialized frame for
-    /// stage+1 (None on the last stage).
-    fn fwd(&mut self, mb: usize, incoming: Option<Vec<u8>>) -> Result<Option<Vec<u8>>> {
+    /// Forward one microbatch over the already-decoded input activation
+    /// (None on stage 0, which reads its local shard). Returns the
+    /// activation to ship to stage+1 (None on the last stage).
+    fn fwd(&mut self, mb: usize, incoming: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
         let x = if self.stage == 0 {
             self.inputs[mb].clone()
         } else {
-            let bytes = incoming
-                .with_context(|| format!("stage {}: no forward frame for mb {mb}", self.stage))?;
-            let frame = Frame::from_bytes(&bytes)?;
-            self.fw_recv
-                .as_mut()
-                .context("interior stage without a forward decoder")?
-                .decode(&self.ids[mb], &frame)?
+            incoming.with_context(|| {
+                format!(
+                    "replica {} stage {}: no forward activation for mb {mb}",
+                    self.replica, self.stage
+                )
+            })?
         };
         let y = self.model.forward(&x);
-        let out = if let Some(tx) = self.fw_send.as_mut() {
-            let (frame, stats) = tx.encode(&self.ids[mb], &y)?;
-            self.cur.fw_wire += stats.wire_bytes;
-            Some(frame.to_bytes())
-        } else {
-            None
-        };
+        let out = (self.stage + 1 < self.n_stages).then(|| y.clone());
         self.saved_x[mb] = Some(x);
         self.saved_y[mb] = Some(y);
         self.in_flight += 1;
@@ -337,17 +395,22 @@ impl StageWorker {
         Ok(out)
     }
 
-    /// Backward one microbatch. `incoming` is the serialized gradient
-    /// frame from stage+1 (None on the last stage, which starts from the
-    /// loss). Returns the serialized gradient frame for stage-1 (None on
-    /// stage 0).
-    fn bwd(&mut self, mb: usize, incoming: Option<Vec<u8>>) -> Result<Option<Vec<u8>>> {
-        let x = self.saved_x[mb]
-            .take()
-            .with_context(|| format!("stage {}: backward before forward (mb {mb})", self.stage))?;
-        let y = self.saved_y[mb]
-            .take()
-            .with_context(|| format!("stage {}: backward before forward (mb {mb})", self.stage))?;
+    /// Backward one microbatch. `incoming` is the decoded gradient from
+    /// stage+1 (None on the last stage, which starts from the loss).
+    /// Returns the gradient to ship to stage-1 (None on stage 0).
+    fn bwd(&mut self, mb: usize, incoming: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+        let x = self.saved_x[mb].take().with_context(|| {
+            format!(
+                "replica {} stage {}: backward before forward (mb {mb})",
+                self.replica, self.stage
+            )
+        })?;
+        let y = self.saved_y[mb].take().with_context(|| {
+            format!(
+                "replica {} stage {}: backward before forward (mb {mb})",
+                self.replica, self.stage
+            )
+        })?;
         let g = if self.stage + 1 == self.n_stages {
             // loss head: 0.5 * mean squared error against the target
             let t = &self.targets[mb];
@@ -365,45 +428,58 @@ impl StageWorker {
                 loss += d * d;
                 g[i] = d / n;
             }
-            self.cur.loss = Some(self.cur.loss.unwrap_or(0.0) + loss / (2.0 * n));
+            self.loss_acc = Some(self.loss_acc.unwrap_or(0.0) + loss / (2.0 * n));
             g
         } else {
-            let bytes = incoming
-                .with_context(|| format!("stage {}: no backward frame for mb {mb}", self.stage))?;
-            let frame = Frame::from_bytes(&bytes)?;
-            self.bw_recv
-                .as_mut()
-                .context("interior stage without a backward decoder")?
-                .decode(&self.ids[mb], &frame)?
+            incoming.with_context(|| {
+                format!(
+                    "replica {} stage {}: no backward gradient for mb {mb}",
+                    self.replica, self.stage
+                )
+            })?
         };
         let dx = self.model.backward(&x, &y, &g);
         self.in_flight -= 1;
-        if let Some(tx) = self.bw_send.as_mut() {
-            let (frame, stats) = tx.encode(&self.ids[mb], &dx)?;
-            self.cur.bw_wire += stats.wire_bytes;
-            Ok(Some(frame.to_bytes()))
-        } else {
-            Ok(None)
-        }
+        Ok(if self.stage > 0 { Some(dx) } else { None })
     }
 
-    /// Close one optimizer step: apply the SGD update and hand back this
-    /// step's accounting.
-    fn end_step(&mut self) -> StageStep {
-        self.model.apply(self.lr, 1.0 / self.n_micro as f32);
-        let mut rec = std::mem::take(&mut self.cur);
-        if let Some(l) = rec.loss.as_mut() {
-            *l /= self.n_micro as f32;
+    fn take_step_grad(&mut self) -> Vec<f32> {
+        self.model.take_step_grad(1.0 / self.n_micro as f32)
+    }
+
+    fn apply_grad(&mut self, g: &[f32]) {
+        self.model.apply_grad(self.lr, g);
+    }
+
+    /// Close one optimizer step: hand back loss + accounting + the
+    /// post-update parameter digest.
+    fn end_step(&mut self, acct: StageAcct) -> StageStep {
+        StageStep {
+            loss: self.loss_acc.take().map(|l| l / self.n_micro as f32),
+            fw_wire: acct.fw_wire,
+            bw_wire: acct.bw_wire,
+            dp_wire: acct.dp_wire,
+            digest: self.model.digest(),
         }
-        rec
     }
 }
 
-/// Build the per-stage workers: models, data, and both codec halves of
-/// every boundary, with the sender/receiver halves sharing only their
-/// construction seed (never state). Both execution modes start from this
-/// one function, which is what makes them comparable bit for bit.
-fn build_workers(cfg: &ExecConfig) -> Result<Vec<StageWorker>> {
+/// The CommPlane endpoints one (replica, stage) owns: boundary codec
+/// halves bonded to their links, plus the stage's DP ring endpoint.
+#[derive(Default)]
+struct StageEndpoints {
+    fw_tx: Option<LinkEndpointTx>,
+    fw_rx: Option<LinkEndpointRx>,
+    bw_tx: Option<LinkEndpointTx>,
+    bw_rx: Option<LinkEndpointRx>,
+    dp: Option<DpRing>,
+}
+
+/// Build the per-replica per-stage workers: models (identically
+/// initialized across replicas — the synchronized-update premise), data
+/// shards (disjoint per replica), and bookkeeping. Both execution modes
+/// start from this one function.
+fn build_workers(cfg: &ExecConfig) -> Result<Vec<Vec<StageWorker>>> {
     crate::ensure!(cfg.n_stages >= 1, "executor needs at least one stage");
     crate::ensure!(cfg.n_micro >= 1, "executor needs at least one microbatch");
     crate::ensure!(
@@ -411,148 +487,239 @@ fn build_workers(cfg: &ExecConfig) -> Result<Vec<StageWorker>> {
         "executor needs a non-empty microbatch shape"
     );
     crate::ensure!(cfg.steps >= 1, "executor needs at least one step");
+    crate::ensure!(cfg.dp_degree >= 1, "executor needs at least one replica");
     let k = cfg.n_stages;
     let m = cfg.n_micro;
     let el = cfg.example_len;
     let bsz = cfg.micro_batch;
 
-    let mut fw_send: Vec<Option<BoundarySender>> = (0..k).map(|_| None).collect();
-    let mut fw_recv: Vec<Option<BoundaryReceiver>> = (0..k).map(|_| None).collect();
-    let mut bw_send: Vec<Option<BoundarySender>> = (0..k).map(|_| None).collect();
-    let mut bw_recv: Vec<Option<BoundaryReceiver>> = (0..k).map(|_| None).collect();
-    for b in 0..k.saturating_sub(1) {
-        // same seed namespaces the trainer uses; the spec seed folds in
-        // the run seed so changing it re-randomizes stochastic rounding
-        let base = cfg.seed.wrapping_mul(0x9E37_79B9);
-        let (enc, dec) =
-            build_mem_pair(&cfg.spec.fw, el, cfg.rounding, base.wrapping_add(0xB0D1 + b as u64))?;
-        fw_send[b] = Some(BoundarySender::new(b as u32, el, enc));
-        fw_recv[b + 1] = Some(BoundaryReceiver::new(b as u32, el, dec));
-        let (enc, dec) =
-            build_mem_pair(&cfg.spec.bw, el, cfg.rounding, base.wrapping_add(0xBACC + b as u64))?;
-        bw_send[b + 1] = Some(BoundarySender::new(b as u32, el, enc));
-        bw_recv[b] = Some(BoundaryReceiver::new(b as u32, el, dec));
-    }
+    let mut workers = Vec::with_capacity(cfg.dp_degree);
+    for r in 0..cfg.dp_degree {
+        // deterministic per-replica shard: stable, replica-disjoint
+        // example ids so AC-SGD buffers key uniquely and are revisited
+        // every step (first step full precision, then deltas)
+        let mut data_rng = Rng::new(cfg.seed ^ (0xDA7A_0001 + ((r as u64) << 16)));
+        let inputs: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..bsz * el).map(|_| 0.8 * data_rng.normal()).collect())
+            .collect();
+        let mut tgt_rng = Rng::new(cfg.seed ^ (0x7A46_0002 + ((r as u64) << 16)));
+        let targets: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..bsz * el).map(|_| 0.5 * tgt_rng.normal()).collect())
+            .collect();
+        let base_id = (r * m * bsz) as u64;
+        let ids: Vec<Vec<u64>> = (0..m)
+            .map(|mb| (base_id + (mb * bsz) as u64..base_id + ((mb + 1) * bsz) as u64).collect())
+            .collect();
 
-    // deterministic dataset: stable example ids so AC-SGD buffers are
-    // revisited every step (first step full precision, then deltas)
-    let mut data_rng = Rng::new(cfg.seed ^ 0xDA7A_0001);
-    let inputs: Vec<Vec<f32>> =
-        (0..m).map(|_| (0..bsz * el).map(|_| 0.8 * data_rng.normal()).collect()).collect();
-    let mut tgt_rng = Rng::new(cfg.seed ^ 0x7A46_0002);
-    let targets: Vec<Vec<f32>> =
-        (0..m).map(|_| (0..bsz * el).map(|_| 0.5 * tgt_rng.normal()).collect()).collect();
-    let ids: Vec<Vec<u64>> =
-        (0..m).map(|mb| ((mb * bsz) as u64..((mb + 1) * bsz) as u64).collect()).collect();
-
-    let mut workers = Vec::with_capacity(k);
-    for s in 0..k {
-        workers.push(StageWorker {
-            stage: s,
-            n_stages: k,
-            n_micro: m,
-            lr: cfg.lr,
-            model: ToyStage::new(el, cfg.seed.wrapping_add(0xC0DE + 131 * s as u64)),
-            fw_send: fw_send[s].take(),
-            fw_recv: fw_recv[s].take(),
-            bw_send: bw_send[s].take(),
-            bw_recv: bw_recv[s].take(),
-            inputs: if s == 0 { inputs.clone() } else { Vec::new() },
-            targets: if s == k - 1 { targets.clone() } else { Vec::new() },
-            ids: ids.clone(),
-            saved_x: (0..m).map(|_| None).collect(),
-            saved_y: (0..m).map(|_| None).collect(),
-            in_flight: 0,
-            peak_in_flight: 0,
-            cur: StageStep::default(),
-        });
+        let mut row = Vec::with_capacity(k);
+        for s in 0..k {
+            row.push(StageWorker {
+                replica: r,
+                stage: s,
+                n_stages: k,
+                n_micro: m,
+                lr: cfg.lr,
+                // model seed deliberately replica-independent: replicas
+                // start equal, and the synchronized (ring-mean) updates
+                // keep them equal — the invariant the digests pin
+                model: ToyStage::new(el, cfg.seed.wrapping_add(0xC0DE + 131 * s as u64)),
+                inputs: if s == 0 { inputs.clone() } else { Vec::new() },
+                targets: if s == k - 1 { targets.clone() } else { Vec::new() },
+                ids: ids.clone(),
+                saved_x: (0..m).map(|_| None).collect(),
+                saved_y: (0..m).map(|_| None).collect(),
+                in_flight: 0,
+                peak_in_flight: 0,
+                loss_acc: None,
+            });
+        }
+        workers.push(row);
     }
     Ok(workers)
 }
 
-/// Fold per-stage step accounting into one [`StepRecord`]: forward wire
-/// bytes indexed by sending stage (boundary b = stage b), backward by
-/// receiving boundary (stage b+1 sends across boundary b), loss from the
-/// last stage. Both execution modes assemble through this one function.
-fn assemble_record(stage_steps: &[StageStep]) -> StepRecord {
-    let k = stage_steps.len();
-    let mut rec = StepRecord::default();
-    for (s, st) in stage_steps.iter().enumerate() {
-        if s + 1 < k {
-            rec.fw_wire_bytes.push(st.fw_wire);
-        }
-        if s > 0 {
-            rec.bw_wire_bytes.push(st.bw_wire);
-        }
-        if let Some(l) = st.loss {
-            rec.loss = l;
+/// Build every CommPlane endpoint: boundary codec pairs per replica
+/// (sender/receiver halves sharing only their construction seed, never
+/// state) and the per-stage DP rings. The two execution modes differ
+/// only in the pacing passed here — real bandwidth/latency for threads,
+/// `f64::INFINITY` / zero (a pure FIFO) for the virtual clock — so the
+/// codec objects and their call order are identical.
+fn build_planes(
+    cfg: &ExecConfig,
+    bandwidth_bps: f64,
+    latency: Duration,
+) -> Result<Vec<Vec<StageEndpoints>>> {
+    let d = cfg.dp_degree;
+    let k = cfg.n_stages;
+    let el = cfg.example_len;
+    let mut planes: Vec<Vec<StageEndpoints>> =
+        (0..d).map(|_| (0..k).map(|_| StageEndpoints::default()).collect()).collect();
+    for (r, plane) in planes.iter_mut().enumerate() {
+        // same seed namespaces the trainer uses, offset per replica; the
+        // run seed folds in so changing it re-randomizes stochastic
+        // rounding everywhere at once
+        let base = cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add((r as u64) << 32);
+        for b in 0..k.saturating_sub(1) {
+            let seed = base.wrapping_add(0xB0D1 + b as u64);
+            let (enc, dec) = build_mem_pair(&cfg.spec.fw, el, cfg.rounding, seed)?;
+            let (tx, rx) = link_endpoints(b as u32, el, enc, dec, bandwidth_bps, latency);
+            plane[b].fw_tx = Some(tx);
+            plane[b + 1].fw_rx = Some(rx);
+            let seed = base.wrapping_add(0xBACC + b as u64);
+            let (enc, dec) = build_mem_pair(&cfg.spec.bw, el, cfg.rounding, seed)?;
+            let (tx, rx) = link_endpoints(b as u32, el, enc, dec, bandwidth_bps, latency);
+            plane[b + 1].bw_tx = Some(tx);
+            plane[b].bw_rx = Some(rx);
         }
     }
-    rec
+    if d > 1 {
+        let grad_len = 2 * el; // flat [dw, db]
+        for s in 0..k {
+            let seed = cfg.seed.wrapping_mul(0x9E37_79B9) ^ (0xDD00 + ((s as u64) << 8));
+            let rings =
+                dp_rings(&cfg.dp_spec.fw, d, grad_len, cfg.rounding, seed, bandwidth_bps, latency)?;
+            for (r, ring) in rings.into_iter().enumerate() {
+                planes[r][s].dp = Some(ring);
+            }
+        }
+    }
+    Ok(planes)
 }
 
-fn collect_step(workers: &mut [StageWorker]) -> StepRecord {
-    let stage_steps: Vec<StageStep> = workers.iter_mut().map(|w| w.end_step()).collect();
-    assemble_record(&stage_steps)
+/// Execute one schedule op through the stage's endpoints: receive +
+/// decode the input frame (if any), run the compute, encode + ship the
+/// output frame (if any). Returns the shipped wire bytes. Both execution
+/// modes funnel through this one function — the identical call sequence
+/// per codec object is what makes them bit-identical twins.
+fn exec_op(
+    w: &mut StageWorker,
+    ep: &mut StageEndpoints,
+    acct: &mut StageAcct,
+    op: Op,
+) -> Result<Option<u64>> {
+    match op {
+        Op::Fwd(mb) => {
+            let incoming = match ep.fw_rx.as_mut() {
+                Some(rx) => Some(rx.recv(&w.ids[mb])?),
+                None => None,
+            };
+            match w.fwd(mb, incoming)? {
+                Some(y) => {
+                    let tx =
+                        ep.fw_tx.as_mut().context("non-last stage without a forward endpoint")?;
+                    let st = tx.send(&w.ids[mb], &y)?;
+                    acct.fw_wire += st.wire_bytes;
+                    Ok(Some(st.wire_bytes))
+                }
+                None => Ok(None),
+            }
+        }
+        Op::Bwd(mb) => {
+            let incoming = match ep.bw_rx.as_mut() {
+                Some(rx) => Some(rx.recv(&w.ids[mb])?),
+                None => None,
+            };
+            match w.bwd(mb, incoming)? {
+                Some(dx) => {
+                    let tx =
+                        ep.bw_tx.as_mut().context("non-first stage without a backward endpoint")?;
+                    let st = tx.send(&w.ids[mb], &dx)?;
+                    acct.bw_wire += st.wire_bytes;
+                    Ok(Some(st.wire_bytes))
+                }
+                None => Ok(None),
+            }
+        }
+    }
+}
+
+/// Close one optimizer step for one (replica, stage): exchange the step
+/// gradient over the DP ring when one exists (blocking — the threaded
+/// mode's replica threads interleave the hops), apply the update.
+fn close_step(w: &mut StageWorker, ep: &mut StageEndpoints, acct: &mut StageAcct) -> Result<()> {
+    let g = w.take_step_grad();
+    match ep.dp.as_mut() {
+        Some(ring) => {
+            let (mean, sent) = ring.all_reduce(&g)?;
+            acct.dp_wire += sent;
+            w.apply_grad(&mean);
+        }
+        None => w.apply_grad(&g),
+    }
+    Ok(())
+}
+
+/// Fold per-(replica, stage) step records into one [`StepRecord`]:
+/// forward wire bytes indexed by sending stage, backward by receiving
+/// boundary, DP bytes by stage, loss averaged over replicas in replica
+/// order, one parameter digest per replica. Both execution modes
+/// assemble through this one function.
+fn assemble_record(stage_steps: &[Vec<StageStep>]) -> StepRecord {
+    let k = stage_steps.first().map_or(0, |row| row.len());
+    let mut rec = StepRecord {
+        loss: 0.0,
+        fw_wire_bytes: vec![0; k.saturating_sub(1)],
+        bw_wire_bytes: vec![0; k.saturating_sub(1)],
+        dp_wire_bytes: vec![0; k],
+        replica_digests: Vec::with_capacity(stage_steps.len()),
+    };
+    let mut loss_sum = 0f32;
+    let mut n_loss = 0u32;
+    for row in stage_steps {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for (s, st) in row.iter().enumerate() {
+            if s + 1 < k {
+                rec.fw_wire_bytes[s] += st.fw_wire;
+            }
+            if s > 0 {
+                rec.bw_wire_bytes[s - 1] += st.bw_wire;
+            }
+            rec.dp_wire_bytes[s] += st.dp_wire;
+            if let Some(l) = st.loss {
+                loss_sum += l;
+                n_loss += 1;
+            }
+            h ^= st.digest;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        rec.replica_digests.push(h);
+    }
+    rec.loss = loss_sum / n_loss.max(1) as f32;
+    rec
 }
 
 // ---------------------------------------------------------------------------
 // Virtual-clock mode (the oracle)
 // ---------------------------------------------------------------------------
 
-/// [`StepDriver`] that runs the real numerics under the virtual clock:
-/// frames queue in per-link FIFOs exactly as the channel transport
-/// delivers them (one producer, one consumer, schedule order on both
-/// ends), and the modeled compute/transmit times drive the clock.
+/// [`StepDriver`] running one replica's real numerics under the virtual
+/// clock: the same endpoints as the threaded mode, over unpaced FIFO
+/// links, with the modeled compute/transmit times driving the clock.
 struct VirtualDriver<'a> {
     workers: &'a mut [StageWorker],
-    fw_q: Vec<VecDeque<Vec<u8>>>,
-    bw_q: Vec<VecDeque<Vec<u8>>>,
+    plane: &'a mut [StageEndpoints],
+    acct: &'a mut [StageAcct],
     fwd_s: f64,
     bwd_s: f64,
 }
 
 impl StepDriver for VirtualDriver<'_> {
     fn exec(&mut self, stage: usize, op: Op) -> Result<(f64, Option<u64>)> {
-        let k = self.workers.len();
-        match op {
-            Op::Fwd(mb) => {
-                let incoming = if stage > 0 {
-                    Some(self.fw_q[stage - 1].pop_front().with_context(|| {
-                        format!("virtual clock: forward frame for stage {stage} mb {mb} missing")
-                    })?)
-                } else {
-                    None
-                };
-                let out = self.workers[stage].fwd(mb, incoming)?;
-                let bytes = out.as_ref().map(|b| b.len() as u64);
-                if let Some(b) = out {
-                    self.fw_q[stage].push_back(b);
-                }
-                Ok((self.fwd_s, bytes))
-            }
-            Op::Bwd(mb) => {
-                let incoming = if stage + 1 < k {
-                    Some(self.bw_q[stage].pop_front().with_context(|| {
-                        format!("virtual clock: backward frame for stage {stage} mb {mb} missing")
-                    })?)
-                } else {
-                    None
-                };
-                let out = self.workers[stage].bwd(mb, incoming)?;
-                let bytes = out.as_ref().map(|b| b.len() as u64);
-                if let Some(b) = out {
-                    self.bw_q[stage - 1].push_back(b);
-                }
-                Ok((self.bwd_s, bytes))
-            }
-        }
+        let bytes =
+            exec_op(&mut self.workers[stage], &mut self.plane[stage], &mut self.acct[stage], op)?;
+        let comp = match op {
+            Op::Fwd(_) => self.fwd_s,
+            Op::Bwd(_) => self.bwd_s,
+        };
+        Ok((comp, bytes))
     }
 }
 
 /// Run the full training loop single-threaded under the virtual clock.
 pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
     let mut workers = build_workers(cfg)?;
+    let mut planes = build_planes(cfg, f64::INFINITY, Duration::ZERO)?;
+    let d = cfg.dp_degree;
     let k = cfg.n_stages;
     let step_cfg = StepConfig {
         n_stages: k,
@@ -570,29 +737,91 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
         peak_in_flight: Vec::new(),
     };
     for _ in 0..cfg.steps {
-        let timing = {
-            let mut driver = VirtualDriver {
-                workers: &mut workers,
-                fw_q: (0..k.saturating_sub(1)).map(|_| VecDeque::new()).collect(),
-                bw_q: (0..k.saturating_sub(1)).map(|_| VecDeque::new()).collect(),
-                fwd_s: cfg.fwd_s,
-                bwd_s: cfg.bwd_s,
-            };
-            run_step(&step_cfg, &mut driver)?
-        };
-        trace.step_time_s.push(timing.step_time_s);
-        trace.steps.push(collect_step(&mut workers));
+        let mut acct: Vec<Vec<StageAcct>> = vec![vec![StageAcct::default(); k]; d];
+        // replicas run concurrently in a deployment; under the virtual
+        // clock each runs its own step independently (no shared state
+        // until the ring), and the step time is the slowest replica's
+        let mut pipe_time = 0f64;
+        for ((wrow, prow), arow) in
+            workers.iter_mut().zip(planes.iter_mut()).zip(acct.iter_mut())
+        {
+            let timing = run_step(
+                &step_cfg,
+                &mut VirtualDriver {
+                    workers: wrow.as_mut_slice(),
+                    plane: prow.as_mut_slice(),
+                    acct: arow.as_mut_slice(),
+                    fwd_s: cfg.fwd_s,
+                    bwd_s: cfg.bwd_s,
+                },
+            )?;
+            pipe_time = pipe_time.max(timing.step_time_s);
+        }
+        // DP ring, phase-ordered (the single-threaded twin of the
+        // per-thread blocking exchange): sends, then hop rounds, then
+        // decode + apply — identical per-object call order either way
+        let mut dp_time = 0f64;
+        if d > 1 {
+            for s in 0..k {
+                for (wrow, prow) in workers.iter_mut().zip(planes.iter_mut()) {
+                    let g = wrow[s].take_step_grad();
+                    prow[s].dp.as_mut().context("replica without a dp ring")?.send_own(&g)?;
+                }
+                for hop in 1..d {
+                    for prow in planes.iter_mut() {
+                        prow[s].dp.as_mut().context("replica without a dp ring")?.hop(hop)?;
+                    }
+                }
+                let mut max_frame = 0u64;
+                for ((wrow, prow), arow) in
+                    workers.iter_mut().zip(planes.iter_mut()).zip(acct.iter_mut())
+                {
+                    let ring = prow[s].dp.as_mut().context("replica without a dp ring")?;
+                    let (mean, sent) = ring.finish()?;
+                    arow[s].dp_wire += sent;
+                    max_frame = max_frame.max(ring.take_max_frame());
+                    wrow[s].apply_grad(&mean);
+                }
+                // per-stage rings run concurrently; each costs d-1
+                // serialized hop rounds gated by its largest frame
+                dp_time = dp_time.max(PipelineSim::ring_allgather_time(
+                    max_frame,
+                    d,
+                    cfg.bandwidth_bps,
+                    cfg.latency_s,
+                ));
+            }
+        } else {
+            for (w, (ep, a)) in workers[0]
+                .iter_mut()
+                .zip(planes[0].iter_mut().zip(acct[0].iter_mut()))
+            {
+                close_step(w, ep, a)?;
+            }
+        }
+        trace.step_time_s.push(pipe_time + dp_time);
+        let stage_steps: Vec<Vec<StageStep>> = workers
+            .iter_mut()
+            .zip(&acct)
+            .map(|(wrow, arow)| {
+                wrow.iter_mut().zip(arow).map(|(w, &a)| w.end_step(a)).collect()
+            })
+            .collect();
+        trace.steps.push(assemble_record(&stage_steps));
     }
-    trace.fw_state_bytes = workers
+    trace.fw_state_bytes = planes
         .iter()
-        .map(|w| {
-            (
-                w.fw_send.as_ref().map_or(0, |h| h.state_bytes()),
-                w.fw_recv.as_ref().map_or(0, |h| h.state_bytes()),
-            )
+        .flat_map(|row| {
+            row.iter().map(|ep| {
+                (
+                    ep.fw_tx.as_ref().map_or(0, |h| h.state_bytes()),
+                    ep.fw_rx.as_ref().map_or(0, |h| h.state_bytes()),
+                )
+            })
         })
         .collect();
-    trace.peak_in_flight = workers.iter().map(|w| w.peak_in_flight).collect();
+    trace.peak_in_flight =
+        workers.iter().flat_map(|row| row.iter().map(|w| w.peak_in_flight)).collect();
     Ok(trace)
 }
 
@@ -600,7 +829,7 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
 // Threaded mode (the real runtime)
 // ---------------------------------------------------------------------------
 
-/// What one stage's worker thread hands back at join.
+/// What one (replica, stage) worker thread hands back at join.
 struct StageReport {
     per_step: Vec<StageStep>,
     wall_s: Vec<f64>,
@@ -608,97 +837,64 @@ struct StageReport {
     peak_in_flight: usize,
 }
 
-/// Run the full training loop with one worker thread per stage,
-/// exchanging serialized frames over channel-backed links.
+/// Run the full training loop with one worker thread per (replica,
+/// stage), exchanging serialized frames over paced channel links — and,
+/// with `dp_degree > 1`, blocking ring hops between replica threads.
 pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
     let workers = build_workers(cfg)?;
+    let planes = build_planes(cfg, cfg.bandwidth_bps, Duration::from_secs_f64(cfg.latency_s))?;
+    let d = cfg.dp_degree;
     let k = cfg.n_stages;
-    let latency = Duration::from_secs_f64(cfg.latency_s);
 
-    let mut fw_tx: Vec<Option<FrameLink>> = (0..k).map(|_| None).collect();
-    let mut fw_rx: Vec<Option<FrameLinkRx>> = (0..k).map(|_| None).collect();
-    let mut bw_tx: Vec<Option<FrameLink>> = (0..k).map(|_| None).collect();
-    let mut bw_rx: Vec<Option<FrameLinkRx>> = (0..k).map(|_| None).collect();
-    for b in 0..k.saturating_sub(1) {
-        let (tx, rx) = frame_link(cfg.bandwidth_bps, latency);
-        fw_tx[b] = Some(tx); // stage b sends forward
-        fw_rx[b + 1] = Some(rx); // stage b+1 receives
-        let (tx, rx) = frame_link(cfg.bandwidth_bps, latency);
-        bw_tx[b + 1] = Some(tx); // stage b+1 sends gradients back
-        bw_rx[b] = Some(rx);
-    }
-
-    let mut handles = Vec::with_capacity(k);
-    for (s, mut w) in workers.into_iter().enumerate() {
-        let ops = cfg.schedule.ops(s, k, cfg.n_micro);
-        let steps = cfg.steps;
-        let mut my_fw_tx = fw_tx[s].take();
-        let my_fw_rx = fw_rx[s].take();
-        let mut my_bw_tx = bw_tx[s].take();
-        let my_bw_rx = bw_rx[s].take();
-        let spawned = thread::Builder::new()
-            .name(format!("aq-stage{s}"))
-            .spawn(move || -> Result<StageReport> {
-                let mut per_step = Vec::with_capacity(steps);
-                let mut wall_s = Vec::with_capacity(steps);
-                for _ in 0..steps {
-                    let t0 = Instant::now();
-                    for &op in &ops {
-                        match op {
-                            Op::Fwd(mb) => {
-                                let incoming = match &my_fw_rx {
-                                    Some(rx) => Some(rx.recv()?),
-                                    None => None,
-                                };
-                                if let Some(bytes) = w.fwd(mb, incoming)? {
-                                    my_fw_tx
-                                        .as_mut()
-                                        .context("non-last stage without a forward link")?
-                                        .send(bytes);
-                                }
-                            }
-                            Op::Bwd(mb) => {
-                                let incoming = match &my_bw_rx {
-                                    Some(rx) => Some(rx.recv()?),
-                                    None => None,
-                                };
-                                if let Some(bytes) = w.bwd(mb, incoming)? {
-                                    my_bw_tx
-                                        .as_mut()
-                                        .context("non-first stage without a backward link")?
-                                        .send(bytes);
-                                }
-                            }
+    let mut handles = Vec::with_capacity(d * k);
+    for (r, (wrow, prow)) in workers.into_iter().zip(planes.into_iter()).enumerate() {
+        for (s, (mut w, mut ep)) in wrow.into_iter().zip(prow.into_iter()).enumerate() {
+            let ops = cfg.schedule.ops(s, k, cfg.n_micro);
+            let steps = cfg.steps;
+            let spawned = thread::Builder::new()
+                .name(format!("aq-r{r}s{s}"))
+                .spawn(move || -> Result<StageReport> {
+                    let mut per_step = Vec::with_capacity(steps);
+                    let mut wall_s = Vec::with_capacity(steps);
+                    for _ in 0..steps {
+                        let t0 = Instant::now();
+                        let mut acct = StageAcct::default();
+                        for &op in &ops {
+                            exec_op(&mut w, &mut ep, &mut acct, op)?;
                         }
+                        close_step(&mut w, &mut ep, &mut acct)?;
+                        per_step.push(w.end_step(acct));
+                        wall_s.push(t0.elapsed().as_secs_f64());
                     }
-                    per_step.push(w.end_step());
-                    wall_s.push(t0.elapsed().as_secs_f64());
+                    Ok(StageReport {
+                        per_step,
+                        wall_s,
+                        fw_state: (
+                            ep.fw_tx.as_ref().map_or(0, |h| h.state_bytes()),
+                            ep.fw_rx.as_ref().map_or(0, |h| h.state_bytes()),
+                        ),
+                        peak_in_flight: w.peak_in_flight,
+                    })
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // the failed stage's closure (and its links) was
+                    // dropped, so every already-spawned neighbour unwinds
+                    // with a channel-closed error; drain them before
+                    // reporting
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(crate::err!(
+                        "failed to spawn replica {r} stage {s} worker thread: {e}"
+                    ));
                 }
-                Ok(StageReport {
-                    per_step,
-                    wall_s,
-                    fw_state: (
-                        w.fw_send.as_ref().map_or(0, |h| h.state_bytes()),
-                        w.fw_recv.as_ref().map_or(0, |h| h.state_bytes()),
-                    ),
-                    peak_in_flight: w.peak_in_flight,
-                })
-            });
-        match spawned {
-            Ok(h) => handles.push(h),
-            Err(e) => {
-                // the failed stage's closure (and its links) was dropped,
-                // so every already-spawned neighbour unwinds with a
-                // channel-closed error; drain them before reporting
-                for h in handles {
-                    let _ = h.join();
-                }
-                return Err(crate::err!("failed to spawn stage {s} worker thread: {e}"));
             }
         }
     }
 
-    let mut results: Vec<Result<StageReport>> = Vec::with_capacity(k);
+    let mut results: Vec<Result<StageReport>> = Vec::with_capacity(d * k);
     for h in handles {
         results.push(match h.join() {
             Ok(r) => r,
@@ -707,8 +903,8 @@ pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
     }
     if results.iter().any(|r| r.is_err()) {
         // a failing stage drops its channels, which unwinds its
-        // neighbours with "channel closed" errors — report the root
-        // cause, not the cascade
+        // neighbours (and ring peers) with "channel closed" errors —
+        // report the root cause, not the cascade
         let mut cascade = None;
         for r in results {
             if let Err(e) = r {
@@ -730,8 +926,9 @@ pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
         peak_in_flight: reports.iter().map(|r| r.peak_in_flight).collect(),
     };
     for step in 0..cfg.steps {
-        let stage_steps: Vec<StageStep> =
-            reports.iter().map(|r| r.per_step[step].clone()).collect();
+        let stage_steps: Vec<Vec<StageStep>> = (0..d)
+            .map(|r| (0..k).map(|s| reports[r * k + s].per_step[step]).collect())
+            .collect();
         trace.steps.push(assemble_record(&stage_steps));
         trace.step_time_s.push(reports[0].wall_s[step]);
     }
@@ -763,6 +960,9 @@ mod tests {
             for &b in rec.fw_wire_bytes.iter().chain(&rec.bw_wire_bytes) {
                 assert!(b > 0);
             }
+            // no DP: the ring column stays zero
+            assert!(rec.dp_wire_bytes.iter().all(|&b| b == 0));
+            assert_eq!(rec.replica_digests.len(), 1);
         }
         // the toy regression learns: loss drops over the run
         assert!(
@@ -811,5 +1011,38 @@ mod tests {
             let bound = cfg.schedule.peak_in_flight(s, cfg.n_stages, cfg.n_micro);
             assert!(peak <= bound, "stage {s}: peak {peak} > bound {bound}");
         }
+    }
+
+    #[test]
+    fn dp_replicas_stay_bit_identical_every_step() {
+        let mut cfg = ExecConfig::small(CodecSpec::aqsgd(2, 4));
+        cfg.dp_degree = 2;
+        cfg.dp_spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        cfg.steps = 5;
+        let t = run_virtual(&cfg).unwrap();
+        for (i, rec) in t.steps.iter().enumerate() {
+            assert_eq!(rec.replica_digests.len(), 2);
+            assert_eq!(
+                rec.replica_digests[0], rec.replica_digests[1],
+                "step {i}: replica parameters diverged"
+            );
+            // every stage shipped real ring frames
+            assert!(rec.dp_wire_bytes.iter().all(|&b| b > 0), "step {i}: {rec:?}");
+        }
+        assert!(t.steps.iter().all(|r| r.loss.is_finite()));
+    }
+
+    #[test]
+    fn dp_ring_compression_shrinks_the_gradient_wire() {
+        let mut fp = ExecConfig::small(CodecSpec::fp32());
+        fp.dp_degree = 2;
+        fp.steps = 2;
+        let mut ef = fp.clone();
+        ef.dp_spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        let t_fp = run_virtual(&fp).unwrap();
+        let t_ef = run_virtual(&ef).unwrap();
+        let b_fp: u64 = t_fp.steps[1].dp_wire_bytes.iter().sum();
+        let b_ef: u64 = t_ef.steps[1].dp_wire_bytes.iter().sum();
+        assert!(b_ef * 6 < b_fp, "ef {b_ef} vs fp32 {b_fp}");
     }
 }

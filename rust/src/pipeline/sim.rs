@@ -164,6 +164,22 @@ impl PipelineSim {
         let vol = 2.0 * (dp_degree as f64 - 1.0) / dp_degree as f64 * bytes as f64;
         vol * 8.0 / bandwidth_bps + 2.0 * (dp_degree as f64 - 1.0) * latency_s
     }
+
+    /// All-gather ring time for the CommPlane's framed gradient exchange
+    /// (`net::plane::DpRing`): `degree - 1` serialized hop rounds, each
+    /// gated by the largest frame forwarded that round. `max_frame_bytes`
+    /// is measured off the real serialized frames, never re-derived.
+    pub fn ring_allgather_time(
+        max_frame_bytes: u64,
+        degree: usize,
+        bandwidth_bps: f64,
+        latency_s: f64,
+    ) -> f64 {
+        if degree <= 1 {
+            return 0.0;
+        }
+        (degree - 1) as f64 * (max_frame_bytes as f64 * 8.0 / bandwidth_bps + latency_s)
+    }
 }
 
 #[cfg(test)]
@@ -249,5 +265,13 @@ mod tests {
         let t8 = PipelineSim::allreduce_time(1_000_000, 8, 1e9, 0.0);
         assert!(t8 > t2); // 2(r-1)/r grows with r
         assert!(t8 < 2.0 * t2);
+    }
+
+    #[test]
+    fn ring_allgather_scaling() {
+        assert_eq!(PipelineSim::ring_allgather_time(1000, 1, 1e9, 0.0), 0.0);
+        // d-1 hop rounds, each one frame transmission + latency
+        let t = PipelineSim::ring_allgather_time(1_000_000, 4, 8e6, 0.001);
+        assert!((t - 3.0 * (1.0 + 0.001)).abs() < 1e-9, "{t}");
     }
 }

@@ -1,11 +1,13 @@
 //! The determinism contract between the two pipeline runtimes: for the
 //! same config and seed, the threaded executor (worker threads + channel
 //! links + serialized frames) and the single-threaded virtual-clock
-//! executor produce **bit-identical** per-step loss and per-link
-//! wire-byte trajectories, across both schedules and the paper's codec
-//! spectrum. This is what turns `pipeline::sim` into a verified oracle:
-//! every throughput table the simulator produces is backed by a runtime
-//! whose numerics provably match it.
+//! executor produce **bit-identical** per-step loss, per-link wire-byte,
+//! DP-ring, and replica-digest trajectories, across both schedules and
+//! the paper's codec spectrum — including the Fig. 5 end-to-end cell
+//! where activations *and* data-parallel model gradients are compressed.
+//! This is what turns `pipeline::sim` into a verified oracle: every
+//! throughput table the simulator produces is backed by a runtime whose
+//! numerics provably match it.
 
 use aq_sgd::codec::CodecSpec;
 use aq_sgd::pipeline::exec::{run_threads, run_virtual, ExecConfig, ExecTrace};
@@ -25,6 +27,16 @@ fn cfg(spec: &str, schedule: Schedule, seed: u64) -> ExecConfig {
     c
 }
 
+/// The Fig. 5 end-to-end-compressed cell: AQ-SGD activations + EF
+/// DirectQ DP gradient frames, dp degree 2.
+fn e2e_cfg(schedule: Schedule, seed: u64) -> ExecConfig {
+    let mut c = cfg("aqsgd:fw2bw4", schedule, seed);
+    c.n_stages = 3; // 6 threads: 2 replicas x 3 stages
+    c.dp_degree = 2;
+    c.dp_spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+    c
+}
+
 /// Assert two traces are bit-identical where the contract demands it.
 fn assert_identical(a: &ExecTrace, b: &ExecTrace, what: &str) {
     assert_eq!(a.steps.len(), b.steps.len(), "{what}: step counts differ");
@@ -38,6 +50,8 @@ fn assert_identical(a: &ExecTrace, b: &ExecTrace, what: &str) {
         );
         assert_eq!(ra.fw_wire_bytes, rb.fw_wire_bytes, "{what}: step {i} fw bytes");
         assert_eq!(ra.bw_wire_bytes, rb.bw_wire_bytes, "{what}: step {i} bw bytes");
+        assert_eq!(ra.dp_wire_bytes, rb.dp_wire_bytes, "{what}: step {i} dp ring bytes");
+        assert_eq!(ra.replica_digests, rb.replica_digests, "{what}: step {i} param digests");
     }
     // replica states must agree across modes too (same codec advances)
     assert_eq!(a.fw_state_bytes, b.fw_state_bytes, "{what}: codec state bytes");
@@ -68,6 +82,55 @@ fn threads_match_sim_across_schedules_and_codecs() {
 }
 
 #[test]
+fn end_to_end_compressed_cell_matches_across_executors() {
+    // the acceptance cell: aqsgd:fw2bw4 activations + ef:directq:fw4bw4
+    // DP gradients, dp degree 2, pinned bit-identically in both modes
+    for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
+        let c = e2e_cfg(schedule, 13);
+        let sim = run_virtual(&c).expect("virtual e2e run");
+        let thr = run_threads(&c).expect("threaded e2e run");
+        assert_identical(&sim, &thr, &format!("e2e/{schedule:?}"));
+        for (i, rec) in sim.steps.iter().enumerate() {
+            // the ring shipped real frames at every stage
+            assert_eq!(rec.dp_wire_bytes.len(), c.n_stages);
+            assert!(rec.dp_wire_bytes.iter().all(|&b| b > 0), "step {i}: {rec:?}");
+        }
+    }
+}
+
+#[test]
+fn replica_parameters_stay_bit_identical_across_steps() {
+    // error feedback + synchronized (ring-mean) updates: the replicas'
+    // parameter digests agree after every step, in both executors
+    let c = e2e_cfg(Schedule::GPipe, 21);
+    for trace in [run_virtual(&c).unwrap(), run_threads(&c).unwrap()] {
+        for (i, rec) in trace.steps.iter().enumerate() {
+            assert_eq!(rec.replica_digests.len(), c.dp_degree);
+            assert!(
+                rec.replica_digests.windows(2).all(|w| w[0] == w[1]),
+                "{:?} step {i}: replica parameters diverged: {:?}",
+                trace.executor,
+                rec.replica_digests
+            );
+        }
+        // and the trajectory moves: digests change step over step
+        let first = trace.steps[0].replica_digests[0];
+        let last = trace.steps.last().unwrap().replica_digests[0];
+        assert_ne!(first, last, "parameters never updated");
+    }
+}
+
+#[test]
+fn dp_compression_shrinks_ring_bytes_in_both_modes() {
+    let mut fp = e2e_cfg(Schedule::GPipe, 3);
+    fp.dp_spec = CodecSpec::fp32();
+    let ef = e2e_cfg(Schedule::GPipe, 3);
+    let b_fp: u64 = run_threads(&fp).unwrap().steps[1].dp_wire_bytes.iter().sum();
+    let b_ef: u64 = run_threads(&ef).unwrap().steps[1].dp_wire_bytes.iter().sum();
+    assert!(b_ef * 6 < b_fp, "ef ring {b_ef} vs fp32 ring {b_fp}");
+}
+
+#[test]
 fn trajectories_depend_on_the_seed() {
     // the twin property is meaningful only if the trajectory actually
     // varies: a different seed must give a different loss path
@@ -79,8 +142,9 @@ fn trajectories_depend_on_the_seed() {
 #[test]
 fn threads_are_deterministic_across_repeated_runs() {
     // real threads, run twice: scheduling noise must not leak into the
-    // numerics (the per-stage op order pins them)
-    let c = cfg("aqsgd:fw2bw4", Schedule::OneFOneB, 3);
+    // numerics (the per-stage op order pins them) — including the DP
+    // ring, whose decode order is per-sender, not per-arrival
+    let c = e2e_cfg(Schedule::OneFOneB, 3);
     let r1 = run_threads(&c).expect("first threaded run");
     let r2 = run_threads(&c).expect("second threaded run");
     assert_identical(&r1, &r2, "threads x2");

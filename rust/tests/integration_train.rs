@@ -133,7 +133,7 @@ fn dp_with_quantized_gradients_trains() {
     cfg.epochs = 3;
     cfg.n_micro = 1;
     cfg.dp_degree = 2;
-    cfg.dp_grad_bits = Some(4);
+    cfg.dp_codec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
     cfg.compression = CodecSpec::aqsgd(3, 6);
     cfg.n_examples = 64;
     let (first, last, _) = run(cfg);

@@ -26,10 +26,21 @@ fn all_schemes() -> Vec<SchemeSpec> {
 }
 
 #[test]
+fn fuzz_coverage_includes_the_ef_gradient_codec() {
+    // the mutation/truncation loops below iterate all_schemes(); pin that
+    // the ef: error-feedback wrapper is in that set so the DP gradient
+    // frames get the same fuzz pass as the activation frames
+    assert!(
+        all_schemes().iter().any(|s| matches!(s, SchemeSpec::Ef { .. })),
+        "example_specs() lost its ef: entry — DP frames would go unfuzzed"
+    );
+}
+
+#[test]
 fn prop_wire_path_bit_identical_to_memory_path() {
     let schemes = all_schemes();
     Prop::check("frame wire == memory", |rng| {
-        let scheme = schemes[rng.below(schemes.len())];
+        let scheme = schemes[rng.below(schemes.len())].clone();
         let el = len_in(rng, 1, 200);
         let n_ex = len_in(rng, 1, 4);
         let seed = rng.next_u64();
@@ -69,7 +80,7 @@ fn prop_wire_path_bit_identical_to_memory_path() {
 fn prop_truncated_frames_error_not_panic() {
     let schemes = all_schemes();
     Prop::check("truncated frames", |rng| {
-        let scheme = schemes[rng.below(schemes.len())];
+        let scheme = schemes[rng.below(schemes.len())].clone();
         let el = len_in(rng, 1, 64);
         let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 7).unwrap();
         let a = vec_f32(rng, el, 1.0);
@@ -106,7 +117,7 @@ fn prop_mutated_frames_error_never_panic_or_overallocate() {
     // configured batch shape (checked via the decoded output length).
     let schemes = all_schemes();
     Prop::check("mutated frames", |rng| {
-        let scheme = schemes[rng.below(schemes.len())];
+        let scheme = schemes[rng.below(schemes.len())].clone();
         let el = len_in(rng, 1, 64);
         let n_ex = len_in(rng, 1, 3);
         let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 13).unwrap();
