@@ -1,17 +1,23 @@
 //! Codec micro-benchmarks: the L3 hot path. A boundary message for the
 //! paper regime is 1.6M elements; the coordinator must encode+pack well
 //! above network speed so compression never becomes the bottleneck
-//! (§Perf target: >= 1 GB/s per core).
+//! (§Perf target: >= 1 GB/s per core on the frame encode path).
+//!
+//! This is the suite `BENCH_BASELINE.json` pins: run with
+//! `-- --quick --json bench.json` for the machine-readable report the
+//! CI `bench-diff` job compares. Names and problem sizes are identical
+//! in quick and full mode.
 
 use aq_sgd::codec::delta::AqState;
+use aq_sgd::codec::frame::{FrameBuf, FrameView};
 use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
 use aq_sgd::codec::registry::{build_mem_pair, SchemeSpec};
 use aq_sgd::codec::{f16, pack, topk};
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 use aq_sgd::util::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let mut s = BenchSuite::from_args("bench_codec");
     let n = 1 << 20; // 1M elements = 4 MB fp32
     let bytes = (n * 4) as u64;
     let mut rng = Rng::new(1);
@@ -23,10 +29,9 @@ fn main() {
             let q = UniformQuantizer::new(bits, rounding);
             let mut codes = vec![0u8; n];
             let name = format!("quantize/{bits}bit/{rounding:?}/1M");
-            b.run(&name, || {
+            s.run_throughput(&name, bytes, || {
                 black_box(q.encode(&x, &mut codes, &mut rng));
-            })
-            .report_throughput(bytes);
+            });
         }
     }
 
@@ -35,54 +40,50 @@ fn main() {
     let mut codes = vec![0u8; n];
     let scale = q.encode(&x, &mut codes, &mut rng);
     let mut out = vec![0f32; n];
-    b.run("dequantize/4bit/1M", || {
+    s.run_throughput("dequantize/4bit/1M", bytes, || {
         q.decode(&codes, scale, &mut out);
         black_box(&out);
-    })
-    .report_throughput(bytes);
+    });
 
     // bit packing
     for bits in [2u8, 3, 4, 8] {
         let mut packed = vec![0u8; pack::packed_len(n, bits)];
-        b.run(&format!("pack/{bits}bit/1M"), || {
+        s.run_throughput(&format!("pack/{bits}bit/1M"), n as u64, || {
             pack::pack_into(&codes, bits, &mut packed);
             black_box(&packed);
-        })
-        .report_throughput(n as u64);
+        });
         let mut unpacked = vec![0u8; n];
-        b.run(&format!("unpack/{bits}bit/1M"), || {
+        s.run_throughput(&format!("unpack/{bits}bit/1M"), n as u64, || {
             pack::unpack_into(&packed, bits, &mut unpacked);
             black_box(&unpacked);
-        })
-        .report_throughput(n as u64);
+        });
     }
 
     // full AQ-SGD boundary encode (delta + quant + buffer advance)
     let st = AqState::new(4, Rounding::Nearest);
     let m: Vec<f32> = x.iter().map(|v| v + 0.01).collect();
     let mut m_out = Vec::with_capacity(n);
-    b.run("aq_encode/4bit/1M", || {
+    s.run_throughput("aq_encode/4bit/1M", bytes, || {
         black_box(st.encode(&x, Some(&m), &mut m_out, &mut rng));
-    })
-    .report_throughput(bytes);
+    });
 
     // fp16 wire
     let mut wire = Vec::new();
-    b.run("f16_encode/1M", || {
+    s.run_throughput("f16_encode/1M", bytes, || {
         f16::encode(&x, &mut wire);
         black_box(&wire);
-    })
-    .report_throughput(bytes);
+    });
 
     // top-k (split-learning backward)
-    b.run("topk20%/8bit/64k", || {
+    s.run_throughput("topk20%/8bit/64k", 65536 * 4, || {
         black_box(topk::encode(&x[..65536], 0.2, 8, &mut rng));
-    })
-    .report_throughput(65536 * 4);
+    });
 
     // ---- registry-driven: full frame encode/decode per scheme ----
-    // Every registered scheme through the real BoundaryCodec path
-    // (encode -> Frame, Frame -> decode), at the paper's bit widths.
+    // Every registered scheme through the real BoundaryCodec path, both
+    // the allocating form (encode -> Frame -> decode) and the scratch
+    // hot path (encode_into -> FrameBuf, FrameView -> decode_into) the
+    // executors run in steady state.
     let el = 1 << 18; // 256k elements = 1 MB fp32 message
     let reg_bytes = (el * 4) as u64;
     let ids = [0u64];
@@ -101,14 +102,32 @@ fn main() {
         // warm both halves' AQ buffers through the first-visit frame
         let first = enc.encode(&ids, a).unwrap();
         dec.decode(&ids, &first).unwrap();
-        b.run(&format!("frame_encode/{spec}/1MB"), || {
+        s.run_throughput(&format!("frame_encode/{spec}/1MB"), reg_bytes, || {
             black_box(enc.encode(&ids, &a2).unwrap());
-        })
-        .report_throughput(reg_bytes);
+        });
         let frame = enc.encode(&ids, &a2).unwrap();
-        b.run(&format!("frame_decode/{spec}/1MB"), || {
+        s.run_throughput(&format!("frame_decode/{spec}/1MB"), reg_bytes, || {
             black_box(dec.decode(&ids, &frame).unwrap());
-        })
-        .report_throughput(reg_bytes);
+        });
+
+        // scratch path: separate halves so warmed capacities persist
+        let (mut enc2, mut dec2) = build_mem_pair(&scheme, el, Rounding::Nearest, 9).unwrap();
+        let mut buf = FrameBuf::new();
+        let mut out = vec![0f32; el];
+        enc2.encode_into(&ids, a, &mut buf).unwrap();
+        dec2.decode_into(&ids, &FrameView::parse(buf.as_bytes()).unwrap(), &mut out).unwrap();
+        s.run_throughput(&format!("frame_encode_into/{spec}/1MB"), reg_bytes, || {
+            enc2.encode_into(&ids, &a2, &mut buf).unwrap();
+            black_box(buf.as_bytes());
+        });
+        enc2.encode_into(&ids, &a2, &mut buf).unwrap();
+        let wire: Vec<u8> = buf.as_bytes().to_vec();
+        s.run_throughput(&format!("frame_decode_into/{spec}/1MB"), reg_bytes, || {
+            let view = FrameView::parse(&wire).unwrap();
+            dec2.decode_into(&ids, &view, &mut out).unwrap();
+            black_box(&out);
+        });
     }
+
+    s.finish().unwrap();
 }

@@ -7,11 +7,11 @@
 
 use aq_sgd::codec::{CodecSpec, Rounding};
 use aq_sgd::coordinator::DpGroup;
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 use aq_sgd::util::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let mut s = BenchSuite::from_args("bench_dp");
     let n = 1 << 16; // 64k-element stage gradient (256 KB fp32)
     for degree in [2usize, 4, 8] {
         for spec in ["fp32", "ef:directq:fw2bw2", "ef:directq:fw4bw4", "ef:directq:fw8bw8"] {
@@ -23,10 +23,13 @@ fn main() {
                 .collect();
             // warm one round so EF residuals exist (steady state)
             dp.reduce(&grads).unwrap();
-            b.run(&format!("dp_reduce/{spec}/x{degree}/256KB"), || {
-                black_box(dp.reduce(&grads).unwrap());
-            })
-            .report_throughput((degree * n * 4) as u64);
+            s.run_throughput(
+                &format!("dp_reduce/{spec}/x{degree}/256KB"),
+                (degree * n * 4) as u64,
+                || {
+                    black_box(dp.reduce(&grads).unwrap());
+                },
+            );
         }
     }
 
@@ -41,4 +44,6 @@ fn main() {
         let (_, wire) = dp.reduce(&g).unwrap();
         println!("{spec}: {} B on the ring per step (x2 replicas)", wire.total_bytes);
     }
+
+    s.finish().unwrap();
 }

@@ -7,7 +7,7 @@
 use aq_sgd::codec::CodecSpec;
 use aq_sgd::pipeline::exec::{run_threads, run_virtual, ExecConfig};
 use aq_sgd::pipeline::Schedule;
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 
 fn cfg(spec: &str, schedule: Schedule) -> ExecConfig {
     let mut c = ExecConfig::small(CodecSpec::parse(spec).unwrap());
@@ -25,18 +25,16 @@ fn cfg(spec: &str, schedule: Schedule) -> ExecConfig {
 }
 
 fn main() {
-    let b = Bencher::default();
+    let mut s = BenchSuite::from_args("bench_exec");
     for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
         for spec in ["fp32", "aqsgd:fw2bw4", "hybrid:aq2/topk0.2@8"] {
             let c = cfg(spec, schedule);
-            b.run(&format!("exec/virtual/{spec}/{schedule:?}"), || {
+            s.run(&format!("exec/virtual/{spec}/{schedule:?}"), || {
                 black_box(run_virtual(&c).unwrap());
-            })
-            .report();
-            b.run(&format!("exec/threads/{spec}/{schedule:?}"), || {
+            });
+            s.run(&format!("exec/threads/{spec}/{schedule:?}"), || {
                 black_box(run_threads(&c).unwrap());
-            })
-            .report();
+            });
         }
     }
 
@@ -45,4 +43,6 @@ fn main() {
     let t = run_virtual(&c).unwrap();
     let steady: u64 = t.steps.last().unwrap().fw_wire_bytes.iter().sum();
     println!("aq2 steady-state fw wire/step at bench size: {steady} B");
+
+    s.finish().unwrap();
 }

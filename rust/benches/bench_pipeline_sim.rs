@@ -3,10 +3,10 @@
 //! `PipelineSim::run`. §Perf target: >= 10^6 simulated ops/s.
 
 use aq_sgd::pipeline::{PipelineSim, Schedule, SimConfig};
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 
 fn main() {
-    let b = Bencher::default();
+    let mut s = BenchSuite::from_args("bench_pipeline_sim");
     for (k, m) in [(2usize, 8usize), (8, 32), (8, 128)] {
         let ops = (2 * k * m) as f64;
         for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
@@ -14,7 +14,7 @@ fn main() {
                 schedule,
                 ..SimConfig::uniform(k, m, 0.045, 0.135, 800_000, 1_600_000, 100e6)
             };
-            let r = b.run(&format!("sim/K{k}/M{m}/{schedule:?}"), || {
+            let r = s.run(&format!("sim/K{k}/M{m}/{schedule:?}"), || {
                 black_box(PipelineSim::run(&cfg));
             });
             println!(
@@ -26,7 +26,7 @@ fn main() {
 
     // a full Table 2 sweep (5 bandwidths x 4 schemes)
     let cfg0 = SimConfig::uniform(8, 32, 0.045, 0.135, 6_400_000, 6_400_000, 100e6);
-    b.run("table2_full_sweep/20cells", || {
+    s.run("table2_full_sweep/20cells", || {
         for bw in [10e9, 1e9, 500e6, 300e6, 100e6] {
             for div in [1u64, 8, 10, 16] {
                 let cfg = SimConfig {
@@ -38,6 +38,7 @@ fn main() {
                 black_box(PipelineSim::run(&cfg));
             }
         }
-    })
-    .report();
+    });
+
+    s.finish().unwrap();
 }

@@ -9,16 +9,19 @@ use aq_sgd::codec::CodecSpec;
 use aq_sgd::coordinator::boundary::ForwardBoundary;
 use aq_sgd::runtime::{Engine, QuantRuntime, StageInput, StageRuntime};
 use aq_sgd::store::{ActivationStore, MemStore};
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 use aq_sgd::testing::require_artifacts;
 use aq_sgd::util::error::Result;
 use aq_sgd::util::Rng;
 
 fn main() {
+    let mut s = BenchSuite::from_args("bench_runtime");
     let Some(man) = require_artifacts("tiny") else {
-        return; // require_artifacts already printed the consolidated notice
+        // require_artifacts already printed the consolidated notice; an
+        // empty JSON report (if requested) keeps the pipeline well-formed
+        s.finish().unwrap();
+        return;
     };
-    let b = Bencher::default();
     let engine = Engine::cpu().unwrap();
     let s0 = StageRuntime::load(&engine, &man, 0).unwrap();
     let s1 = StageRuntime::load(&engine, &man, 1).unwrap();
@@ -27,19 +30,16 @@ fn main() {
     let toks: Vec<i32> = (0..n_tok).map(|_| rng.below(man.vocab().unwrap()) as i32).collect();
     let h = s0.forward(&StageInput::Tokens(&toks)).unwrap();
 
-    b.run("stage0_fwd/tiny", || {
+    s.run("stage0_fwd/tiny", || {
         black_box(s0.forward(&StageInput::Tokens(&toks)).unwrap());
-    })
-    .report();
-    b.run("stage1_lossbwd/tiny", || {
+    });
+    s.run("stage1_lossbwd/tiny", || {
         black_box(s1.loss_backward(&StageInput::Hidden(&h), &toks).unwrap());
-    })
-    .report();
+    });
     let gx: Vec<f32> = h.iter().map(|v| v * 0.01).collect();
-    b.run("stage0_bwd/tiny", || {
+    s.run("stage0_bwd/tiny", || {
         black_box(s0.backward(&StageInput::Tokens(&toks), &gx).unwrap());
-    })
-    .report();
+    });
 
     // boundary codecs, native vs HLO (the Pallas kernels via PJRT)
     let n = man.boundary_len().unwrap();
@@ -51,10 +51,9 @@ fn main() {
     let (enc, dec) = build_mem_pair(&spec.fw, el, Rounding::Nearest, 1).unwrap();
     let mut native = ForwardBoundary::new(0, el, enc, dec);
     native.transfer(&ids, &h).unwrap(); // warm the buffers
-    b.run("boundary_native_aq4/16KiB", || {
+    s.run_throughput("boundary_native_aq4/16KiB", msg_bytes, || {
         black_box(native.transfer(&ids, &h).unwrap());
-    })
-    .report_throughput(msg_bytes);
+    });
 
     let q = std::sync::Arc::new(QuantRuntime::load(&engine, &man).unwrap());
     let mut mk = |_role: &str| -> Result<Box<dyn ActivationStore>> {
@@ -73,8 +72,9 @@ fn main() {
         .unwrap();
     let mut hlo = ForwardBoundary::new(0, el, enc, dec);
     hlo.transfer(&ids, &h).unwrap();
-    b.run("boundary_hlo_aq4/16KiB", || {
+    s.run_throughput("boundary_hlo_aq4/16KiB", msg_bytes, || {
         black_box(hlo.transfer(&ids, &h).unwrap());
-    })
-    .report_throughput(msg_bytes);
+    });
+
+    s.finish().unwrap();
 }

@@ -4,10 +4,10 @@
 //! records) hides behind a 44 ms forward pass.
 
 use aq_sgd::store::{ActivationStore, DiskStore, MemStore, Prefetcher, QuantizedMemStore};
-use aq_sgd::testing::bench::{black_box, Bencher};
+use aq_sgd::testing::bench::{black_box, BenchSuite};
 use aq_sgd::util::Rng;
 
-fn bench_store(b: &Bencher, name: &str, store: &mut dyn ActivationStore, record_len: usize) {
+fn bench_store(s: &mut BenchSuite, name: &str, store: &mut dyn ActivationStore, record_len: usize) {
     let mut rng = Rng::new(2);
     let rec: Vec<f32> = (0..record_len).map(|_| rng.normal()).collect();
     for ex in 0..64u64 {
@@ -16,34 +16,37 @@ fn bench_store(b: &Bencher, name: &str, store: &mut dyn ActivationStore, record_
     let bytes = (record_len * 4) as u64;
     let mut out = Vec::new();
     let mut ex = 0u64;
-    b.run(&format!("{name}/get"), || {
+    s.run_throughput(&format!("{name}/get"), bytes, || {
         black_box(store.get((0, ex % 64), &mut out));
         ex += 1;
-    })
-    .report_throughput(bytes);
-    b.run(&format!("{name}/put"), || {
+    });
+    s.run_throughput(&format!("{name}/put"), bytes, || {
         store.put((0, ex % 64), &rec);
         ex += 1;
-    })
-    .report_throughput(bytes);
+    });
 }
 
 fn main() {
-    let b = Bencher::default();
+    let mut s = BenchSuite::from_args("bench_store");
     // paper-regime record: seq 1024 x d 1600 = 1.6M floats; here a small
     // (seq 64 x d 128) and a large record
     for record_len in [64 * 128usize, 512 * 1024] {
         println!("record = {} KiB", record_len * 4 / 1024);
-        bench_store(&b, &format!("mem/{record_len}"), &mut MemStore::new(record_len), record_len);
         bench_store(
-            &b,
+            &mut s,
+            &format!("mem/{record_len}"),
+            &mut MemStore::new(record_len),
+            record_len,
+        );
+        bench_store(
+            &mut s,
             &format!("quant8/{record_len}"),
             &mut QuantizedMemStore::new(record_len, 8),
             record_len,
         );
         let dir = std::env::temp_dir().join(format!("aqsgd_bench_store_{}", std::process::id()));
         bench_store(
-            &b,
+            &mut s,
             &format!("disk/{record_len}"),
             &mut DiskStore::new(&dir, record_len).unwrap(),
             record_len,
@@ -61,10 +64,11 @@ fn main() {
     }
     let pf = Prefetcher::new(Box::new(mem));
     let mut ex = 0u64;
-    b.run("prefetcher/request+collect", || {
+    s.run("prefetcher/request+collect", || {
         pf.request(vec![(0, ex % 64)]);
         black_box(pf.collect());
         ex += 1;
-    })
-    .report();
+    });
+
+    s.finish().unwrap();
 }

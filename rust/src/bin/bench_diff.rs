@@ -1,0 +1,149 @@
+//! `bench-diff` — compare a bench JSON report against a checked-in
+//! baseline and fail on throughput regressions. The CI bench job runs:
+//!
+//! ```sh
+//! cargo bench --bench bench_codec -- --quick --json bench.json
+//! cargo run --release --bin bench-diff -- BENCH_BASELINE.json bench.json
+//! ```
+//!
+//! Exit status 1 when any bench present in both files regressed by more
+//! than `--max-regress` (default 0.25 = 25%): throughput benches compare
+//! GB/s (`bytes_per_iter / mean_ns`), time-only benches compare ns/iter.
+//! Benches present in only one file are reported but never fail the run
+//! (a renamed bench should update `BENCH_BASELINE.json` in the same PR).
+
+use std::process::ExitCode;
+
+use aq_sgd::util::error::{Context, Result};
+use aq_sgd::util::json::Json;
+
+struct Entry {
+    name: String,
+    mean_ns: f64,
+    bytes_per_iter: Option<f64>,
+}
+
+fn load(path: &str) -> Result<Vec<Entry>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_array())
+        .with_context(|| format!("{path}: no \"results\" array"))?;
+    let mut out = Vec::with_capacity(results.len());
+    for (i, r) in results.iter().enumerate() {
+        let name = r
+            .get("name")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("{path}: results[{i}] has no name"))?
+            .to_string();
+        let mean_ns = r
+            .get("mean_ns")
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("{path}: results[{i}] has no mean_ns"))?;
+        let bytes_per_iter = r.get("bytes_per_iter").and_then(|v| v.as_f64());
+        out.push(Entry { name, mean_ns, bytes_per_iter });
+    }
+    Ok(out)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench-diff <baseline.json> <current.json> [--max-regress <frac>]\n\
+         exits 1 if any shared bench regressed by more than <frac> (default 0.25)"
+    );
+    std::process::exit(2)
+}
+
+fn run() -> Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut max_regress = 0.25f64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--max-regress" => {
+                let v = it.next().map(|s| s.as_str()).unwrap_or_else(|| usage());
+                max_regress = v
+                    .parse()
+                    .map_err(|_| aq_sgd::err!("bad --max-regress value {v:?}"))?;
+            }
+            "--help" | "-h" => usage(),
+            _ => paths.push(a.clone()),
+        }
+    }
+    if paths.len() != 2 {
+        usage();
+    }
+    let baseline = load(&paths[0])?;
+    let current = load(&paths[1])?;
+
+    let find = |name: &str| current.iter().find(|e| e.name == name);
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    println!(
+        "{:<44} {:>12} {:>12} {:>8}  status",
+        "bench", "baseline", "current", "delta"
+    );
+    for b in &baseline {
+        let Some(c) = find(&b.name) else {
+            println!("{:<44} {:>12} {:>12} {:>8}  MISSING in current", b.name, "-", "-", "-");
+            continue;
+        };
+        compared += 1;
+        // throughput when both sides carry payload bytes, ns otherwise;
+        // `delta` is positive when current is worse than baseline
+        let (base_s, cur_s, delta) = match (b.bytes_per_iter, c.bytes_per_iter) {
+            (Some(bb), Some(cb)) => {
+                let (bt, ct) = (bb / b.mean_ns, cb / c.mean_ns);
+                (format!("{bt:.2} GB/s"), format!("{ct:.2} GB/s"), 1.0 - ct / bt)
+            }
+            _ => (
+                format!("{:.0} ns", b.mean_ns),
+                format!("{:.0} ns", c.mean_ns),
+                c.mean_ns / b.mean_ns - 1.0,
+            ),
+        };
+        let status = if delta > max_regress {
+            regressions.push((b.name.clone(), delta));
+            "REGRESSED"
+        } else if delta < -max_regress {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!("{:<44} {:>12} {:>12} {:>7.1}%  {}", b.name, base_s, cur_s, delta * 100.0, status);
+    }
+    for c in &current {
+        if !baseline.iter().any(|b| b.name == c.name) {
+            println!("{:<44} {:>12} {:>12} {:>8}  NEW (no baseline)", c.name, "-", "-", "-");
+        }
+    }
+    println!(
+        "\ncompared {compared} benches against {} baseline entries \
+         (threshold {:.0}%)",
+        baseline.len(),
+        max_regress * 100.0
+    );
+    if regressions.is_empty() {
+        println!("no regressions beyond the threshold");
+        Ok(true)
+    } else {
+        println!("{} regression(s):", regressions.len());
+        for (name, delta) in &regressions {
+            println!("  {name}: {:.1}% worse than baseline", delta * 100.0);
+        }
+        Ok(false)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench-diff: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -14,9 +14,9 @@
 
 use std::sync::Arc;
 
-use super::frame::{Frame, FrameReader, FrameWriter, TAG_AQ};
+use super::frame::{Frame, FrameBuf, FrameReader, FrameView, TAG_AQ};
 use super::quantizer::{Rounding, UniformQuantizer};
-use super::{pack, BoundaryCodec, EncodeStats};
+use super::{encode_to_frame, pack, BoundaryCodec, EncodeStats};
 use crate::runtime::QuantRuntime;
 use crate::store::ActivationStore;
 use crate::util::error::Result;
@@ -150,6 +150,13 @@ pub struct AqCodec {
     rng: Rng,
     hlo: Option<Arc<QuantRuntime>>,
     stats: EncodeStats,
+    /// per-record scratch (message buffer / codes / delta), reused across
+    /// records and messages so the steady-state path never allocates
+    m: Vec<f32>,
+    codes: Vec<u8>,
+    delta: Vec<f32>,
+    /// whole-batch buffer replica scratch for the batch-scale frame mode
+    batch_m: Vec<f32>,
 }
 
 impl AqCodec {
@@ -171,6 +178,10 @@ impl AqCodec {
             rng: Rng::new(seed),
             hlo,
             stats: EncodeStats::default(),
+            m: Vec::new(),
+            codes: Vec::new(),
+            delta: Vec::new(),
+            batch_m: Vec::new(),
         }
     }
 
@@ -185,9 +196,9 @@ impl AqCodec {
         Ok(())
     }
 
-    fn check_header(&self, ids: &[u64], frame: &Frame) -> Result<(usize, u8)> {
-        crate::ensure!(frame.tag() == TAG_AQ, "AQ codec got frame tag {}", frame.tag());
-        let mut h = FrameReader::new(frame.header());
+    fn check_header(&self, ids: &[u64], tag: u8, header: &[u8]) -> Result<(usize, u8)> {
+        crate::ensure!(tag == TAG_AQ, "AQ codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
         let (bits, el, n_rec, mode) = (h.u8()?, h.u32()? as usize, h.u32()? as usize, h.u8()?);
         h.done()?;
         crate::ensure!(
@@ -204,34 +215,50 @@ impl AqCodec {
         Ok((n_rec, mode))
     }
 
-    /// HLO batch path: one kernel call over [B·el] with a single scale.
-    fn encode_batch_hlo(&mut self, q: &Arc<QuantRuntime>, ids: &[u64], a: &[f32]) -> Result<Frame> {
+    /// HLO batch path: one kernel call over [B·el] with a single scale,
+    /// framed directly into the caller's scratch buffer like the native
+    /// path (no intermediate owned frame).
+    fn encode_batch_hlo(
+        &mut self,
+        q: &Arc<QuantRuntime>,
+        ids: &[u64],
+        a: &[f32],
+        out: &mut FrameBuf,
+    ) -> Result<()> {
         let el = self.el;
-        let mut m = vec![0f32; a.len()];
-        let mut rec = Vec::new();
+        // assemble the batch buffer replica in the codec's scratch (the
+        // kernel's own outputs are runtime-owned allocations)
+        self.batch_m.resize(a.len(), 0.0);
         for (i, &ex) in ids.iter().enumerate() {
-            self.store.get((self.ns, ex), &mut rec);
-            m[i * el..(i + 1) * el].copy_from_slice(&rec);
+            self.store.get((self.ns, ex), &mut self.m);
+            self.batch_m[i * el..(i + 1) * el].copy_from_slice(&self.m);
         }
-        let (codes, scale, m_new) = q.aq_encode(a, &m, self.bits)?;
-        let delta: Vec<f32> = a.iter().zip(&m).map(|(x, y)| x - y).collect();
+        let (codes, scale, m_new) = q.aq_encode(a, &self.batch_m, self.bits)?;
+        let delta_abs_sum: f64 =
+            a.iter().zip(&self.batch_m).map(|(x, y)| (x - y).abs() as f64).sum();
         self.stats = EncodeStats {
-            mean_abs_delta: Some(crate::util::stats::mean_abs(&delta)),
+            mean_abs_delta: Some(delta_abs_sum / a.len() as f64),
             first_visits: 0,
         };
         for (i, &ex) in ids.iter().enumerate() {
             self.store.put((self.ns, ex), &m_new[i * el..(i + 1) * el]);
         }
-        let mut h = FrameWriter::default();
-        h.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_BATCH_SCALE);
-        let mut p = FrameWriter::with_capacity(4 + pack::packed_len(codes.len(), self.bits));
-        p.f32(scale).bytes(&pack::pack(&codes, self.bits));
-        Ok(Frame::new(TAG_AQ, h.finish(), p.finish()))
+        out.start(TAG_AQ);
+        out.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_BATCH_SCALE);
+        out.end_header();
+        out.f32(scale);
+        let packed = out.reserve_zeroed(pack::packed_len(codes.len(), self.bits));
+        pack::pack_into(&codes, self.bits, packed);
+        out.finish()
     }
 }
 
 impl BoundaryCodec for AqCodec {
     fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
         self.check_batch(ids, a.len())?;
         let el = self.el;
 
@@ -241,103 +268,131 @@ impl BoundaryCodec for AqCodec {
         let all_present = ids.iter().all(|&ex| self.store.contains((self.ns, ex)));
         if let Some(q) = self.hlo.clone() {
             if all_present && q.n_elements() == a.len() {
-                return self.encode_batch_hlo(&q, ids, a);
+                return self.encode_batch_hlo(&q, ids, a, out);
             }
         }
 
-        // native per-example path
-        let mut h = FrameWriter::default();
-        h.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_PER_EXAMPLE);
-        let mut p = FrameWriter::with_capacity(a.len()); // grows as needed
-        let mut m = Vec::new();
-        let mut codes = vec![0u8; el];
-        let mut delta = vec![0f32; el];
+        // native per-example path, built in the caller's scratch frame
+        out.start(TAG_AQ);
+        out.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_PER_EXAMPLE);
+        out.end_header();
+        self.codes.resize(el, 0);
+        self.delta.resize(el, 0.0);
         let mut delta_abs_sum = 0f64;
         let mut first_visits = 0usize;
         for (i, &ex) in ids.iter().enumerate() {
             let row = &a[i * el..(i + 1) * el];
-            if self.store.get((self.ns, ex), &mut m) {
+            if self.store.get((self.ns, ex), &mut self.m) {
                 crate::ensure!(
-                    m.len() == el,
+                    self.m.len() == el,
                     "stored buffer for example {ex} has {} elements, want {el}",
-                    m.len()
+                    self.m.len()
                 );
                 for j in 0..el {
-                    delta[j] = row[j] - m[j];
+                    self.delta[j] = row[j] - self.m[j];
                 }
-                delta_abs_sum += crate::util::stats::mean_abs(&delta) * el as f64;
-                let scale = self.quant.encode(&delta, &mut codes, &mut self.rng);
+                delta_abs_sum += crate::util::stats::mean_abs(&self.delta) * el as f64;
+                let scale = self.quant.encode(&self.delta, &mut self.codes, &mut self.rng);
                 // m += deq(codes) — both replicas run this exact op
-                self.quant.decode_add(&codes, scale, &mut m);
-                self.store.put((self.ns, ex), &m);
-                p.u8(REC_DELTA).f32(scale).bytes(&pack::pack(&codes, self.bits));
+                self.quant.decode_add(&self.codes, scale, &mut self.m);
+                self.store.put((self.ns, ex), &self.m);
+                out.u8(REC_DELTA).f32(scale);
+                let packed = out.reserve_zeroed(pack::packed_len(el, self.bits));
+                pack::pack_into(&self.codes, self.bits, packed);
             } else {
                 // first visit: full precision (Algorithm 1 line 5)
                 first_visits += 1;
                 delta_abs_sum += crate::util::stats::mean_abs(row) * el as f64;
                 self.store.put((self.ns, ex), row);
-                p.u8(REC_FULL).f32_slice(row);
+                out.u8(REC_FULL).f32_slice(row);
             }
         }
         self.stats = EncodeStats {
             mean_abs_delta: Some(delta_abs_sum / a.len() as f64),
             first_visits,
         };
-        Ok(Frame::new(TAG_AQ, h.finish(), p.finish()))
+        out.finish()
     }
 
     fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        let (n_rec, mode) = self.check_header(ids, frame)?;
+        let mut out = vec![0f32; ids.len() * self.el];
+        self.decode_into(ids, &frame.view(), &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let (n_rec, mode) = self.check_header(ids, frame.tag(), frame.header())?;
         let el = self.el;
-        let mut out = vec![0f32; n_rec * el];
+        crate::ensure!(
+            out.len() == n_rec * el,
+            "AQ frame has {n_rec} x {el} elements, boundary expects {}",
+            out.len()
+        );
         let mut p = FrameReader::new(frame.payload());
         match mode {
             MODE_BATCH_SCALE => {
                 let scale = p.f32()?;
                 let packed = p.bytes(pack::packed_len(n_rec * el, self.bits))?;
                 p.done()?;
-                let codes = pack::unpack(packed, self.bits, n_rec * el);
+                self.codes.resize(n_rec * el, 0);
+                pack::unpack_into(packed, self.bits, &mut self.codes);
                 // assemble the local buffer replica; every record must exist
-                let mut m = vec![0f32; n_rec * el];
-                let mut rec = Vec::new();
+                self.batch_m.resize(n_rec * el, 0.0);
                 for (i, &ex) in ids.iter().enumerate() {
                     crate::ensure!(
-                        self.store.get((self.ns, ex), &mut rec),
+                        self.store.get((self.ns, ex), &mut self.m),
                         "AQ delta frame for example {ex} with no message buffer"
                     );
-                    m[i * el..(i + 1) * el].copy_from_slice(&rec);
+                    crate::ensure!(
+                        self.m.len() == el,
+                        "stored buffer for example {ex} has {} elements, want {el}",
+                        self.m.len()
+                    );
+                    self.batch_m[i * el..(i + 1) * el].copy_from_slice(&self.m);
                 }
                 match &self.hlo {
-                    Some(q) if q.n_elements() == m.len() => {
-                        m = q.aq_decode(&codes, scale, &m, self.bits)?;
+                    Some(q) if q.n_elements() == self.batch_m.len() => {
+                        let v = q.aq_decode(&self.codes, scale, &self.batch_m, self.bits)?;
+                        crate::ensure!(
+                            v.len() == self.batch_m.len(),
+                            "hlo aq_decode returned {} elements for a {}-element batch",
+                            v.len(),
+                            self.batch_m.len()
+                        );
+                        self.batch_m.copy_from_slice(&v);
                     }
-                    _ => self.quant.decode_add(&codes, scale, &mut m),
+                    _ => self.quant.decode_add(&self.codes, scale, &mut self.batch_m),
                 }
                 for (i, &ex) in ids.iter().enumerate() {
-                    self.store.put((self.ns, ex), &m[i * el..(i + 1) * el]);
+                    self.store.put((self.ns, ex), &self.batch_m[i * el..(i + 1) * el]);
                 }
-                out.copy_from_slice(&m);
+                out.copy_from_slice(&self.batch_m);
             }
             MODE_PER_EXAMPLE => {
-                let mut m = Vec::new();
                 for (i, &ex) in ids.iter().enumerate() {
                     match p.u8()? {
                         REC_FULL => {
-                            let row = p.f32_vec(el)?;
-                            self.store.put((self.ns, ex), &row);
-                            out[i * el..(i + 1) * el].copy_from_slice(&row);
+                            let dst = &mut out[i * el..(i + 1) * el];
+                            p.f32_into(dst)?;
+                            self.store.put((self.ns, ex), dst);
                         }
                         REC_DELTA => {
                             let scale = p.f32()?;
                             let packed = p.bytes(pack::packed_len(el, self.bits))?;
                             crate::ensure!(
-                                self.store.get((self.ns, ex), &mut m),
+                                self.store.get((self.ns, ex), &mut self.m),
                                 "AQ delta frame for example {ex} with no message buffer"
                             );
-                            let codes = pack::unpack(packed, self.bits, el);
-                            self.quant.decode_add(&codes, scale, &mut m);
-                            self.store.put((self.ns, ex), &m);
-                            out[i * el..(i + 1) * el].copy_from_slice(&m);
+                            crate::ensure!(
+                                self.m.len() == el,
+                                "stored buffer for example {ex} has {} elements, want {el}",
+                                self.m.len()
+                            );
+                            self.codes.resize(el, 0);
+                            pack::unpack_into(packed, self.bits, &mut self.codes);
+                            self.quant.decode_add(&self.codes, scale, &mut self.m);
+                            self.store.put((self.ns, ex), &self.m);
+                            out[i * el..(i + 1) * el].copy_from_slice(&self.m);
                         }
                         kind => crate::bail!("unknown AQ record kind {kind}"),
                     }
@@ -346,7 +401,7 @@ impl BoundaryCodec for AqCodec {
             }
             other => crate::bail!("unknown AQ frame mode {other}"),
         }
-        Ok(out)
+        Ok(())
     }
 
     fn label(&self) -> String {

@@ -21,9 +21,10 @@
 //!    fixtures for `ef:directq` pin plain DirectQ images of the
 //!    compensated values.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use super::{BoundaryCodec, EncodeStats, Frame};
+use super::{encode_to_frame, BoundaryCodec, EncodeStats, Frame, FrameBuf, FrameView};
 use crate::util::error::Result;
 
 /// Encoder-side error-feedback state.
@@ -37,6 +38,10 @@ struct Feedback {
     /// Residuals keyed by record id (zero until first visit).
     residual: HashMap<u64, Vec<f32>>,
     stats: EncodeStats,
+    /// compensated-message scratch (`c = g + e`), reused across messages
+    c: Vec<f32>,
+    /// replica-reconstruction scratch (`deq`), reused across messages
+    deq: Vec<f32>,
 }
 
 /// The `ef:` wrapper. Built through the registry (`ef:q4`,
@@ -63,6 +68,8 @@ impl EfCodec {
                 el,
                 residual: HashMap::new(),
                 stats: EncodeStats::default(),
+                c: Vec::new(),
+                deq: Vec::new(),
             }),
         }
     }
@@ -84,8 +91,14 @@ impl EfCodec {
 
 impl BoundaryCodec for EfCodec {
     fn encode(&mut self, ids: &[u64], g: &[f32]) -> Result<Frame> {
-        let fb = self
-            .fb
+        encode_to_frame(self, ids, g)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], g: &[f32], out: &mut FrameBuf) -> Result<()> {
+        // split-borrow the inner encoder away from the feedback state so
+        // both can be used in one pass
+        let EfCodec { inner, fb } = self;
+        let fb = fb
             .as_mut()
             .ok_or_else(|| crate::err!("ef decoder half cannot encode (build the encoder half)"))?;
         crate::ensure!(!ids.is_empty(), "ef transfer with no record ids");
@@ -98,7 +111,8 @@ impl BoundaryCodec for EfCodec {
         );
         let el = fb.el;
         // c = g + e (residual defaults to zero on first visit)
-        let mut c = g.to_vec();
+        fb.c.clear();
+        fb.c.extend_from_slice(g);
         let mut first_visits = 0usize;
         for (i, id) in ids.iter().enumerate() {
             match fb.residual.get(id) {
@@ -108,40 +122,48 @@ impl BoundaryCodec for EfCodec {
                         "ef residual for record {id} has {} elements, want {el}",
                         e.len()
                     );
-                    for (cv, ev) in c[i * el..(i + 1) * el].iter_mut().zip(e) {
+                    for (cv, ev) in fb.c[i * el..(i + 1) * el].iter_mut().zip(e) {
                         *cv += ev;
                     }
                 }
                 None => first_visits += 1,
             }
         }
-        let frame = self.inner.encode(ids, &c)?;
+        inner.encode_into(ids, &fb.c, out)?;
         // e = c - deq, with deq read back through the receiver replica so
-        // both sides agree bit-for-bit on what crossed the wire
-        let deq = fb.replica.decode(ids, &frame)?;
-        crate::ensure!(
-            deq.len() == c.len(),
-            "ef replica decoded {} elements for a {}-element message",
-            deq.len(),
-            c.len()
-        );
+        // both sides agree bit-for-bit on what crossed the wire (the
+        // replica decode also validates the reconstruction shape)
+        fb.deq.resize(fb.c.len(), 0.0);
+        fb.replica.decode_into(ids, &out.view(), &mut fb.deq)?;
         for (i, id) in ids.iter().enumerate() {
-            let row: Vec<f32> = c[i * el..(i + 1) * el]
-                .iter()
-                .zip(&deq[i * el..(i + 1) * el])
-                .map(|(cv, dv)| cv - dv)
-                .collect();
-            fb.residual.insert(*id, row);
+            let cs = &fb.c[i * el..(i + 1) * el];
+            let ds = &fb.deq[i * el..(i + 1) * el];
+            match fb.residual.entry(*id) {
+                Entry::Occupied(mut e) => {
+                    // overwrite in place: the steady-state path keeps the
+                    // existing row allocation
+                    let row = e.get_mut();
+                    row.clear();
+                    row.extend(cs.iter().zip(ds).map(|(cv, dv)| cv - dv));
+                }
+                Entry::Vacant(v) => {
+                    v.insert(cs.iter().zip(ds).map(|(cv, dv)| cv - dv).collect());
+                }
+            }
         }
         fb.stats = EncodeStats {
-            mean_abs_delta: Some(crate::util::stats::mean_abs(&c)),
+            mean_abs_delta: Some(crate::util::stats::mean_abs(&fb.c)),
             first_visits,
         };
-        Ok(frame)
+        Ok(())
     }
 
     fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
         self.inner.decode(ids, frame)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        self.inner.decode_into(ids, frame, out)
     }
 
     fn label(&self) -> String {

@@ -78,9 +78,16 @@ pub fn encode(x: &[f32], out: &mut Vec<u8>) {
 
 pub fn decode(bytes: &[u8], out: &mut Vec<f32>) {
     out.clear();
-    out.reserve(bytes.len() / 2);
-    for c in bytes.chunks_exact(2) {
-        out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+    out.resize(bytes.len() / 2, 0.0);
+    decode_slice(bytes, out);
+}
+
+/// Decode into a caller-owned slice (`bytes.len() == 2 * out.len()`) —
+/// the allocation-free path `F16Codec::decode_into` uses.
+pub fn decode_slice(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 2 * out.len());
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+        *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
     }
 }
 

@@ -13,6 +13,19 @@
 //! arithmetically — and `from_bytes(to_bytes(f)) == f` bit-for-bit, so
 //! the in-memory fast path the trainer uses and the serialized path a
 //! real deployment would ship are interchangeable.
+//!
+//! Two shapes of the same wire image serve the two performance regimes:
+//!
+//!  * [`Frame`] — owned header/payload `Vec`s, the convenient allocating
+//!    form the trainer-level APIs hand around;
+//!  * [`FrameBuf`] (send side) and [`FrameView`] (receive side) — the
+//!    steady-state hot path. A `FrameBuf` is a reusable scratch arena a
+//!    codec's `encode_into` builds the *serialized* image in directly
+//!    (capacity is retained across messages, so a warmed endpoint
+//!    encodes without touching the allocator), and a `FrameView` borrows
+//!    tag/header/payload straight out of a received byte buffer, so
+//!    `decode_into` reads payload bytes in place. Both produce/accept
+//!    byte-identical images to `Frame` — pinned by `prop_frames.rs`.
 
 use crate::util::error::Result;
 
@@ -70,8 +83,37 @@ impl Frame {
 
     /// Parse a wire image. Malformed input (truncation, trailing bytes,
     /// oversized header) is an error, never a panic — frames arrive from
-    /// a peer.
+    /// a peer. Allocating form of [`FrameView::parse`].
     pub fn from_bytes(bytes: &[u8]) -> Result<Frame> {
+        Ok(FrameView::parse(bytes)?.to_frame())
+    }
+
+    /// Borrow this frame's parts as a [`FrameView`] (what the scratch
+    /// decode path consumes).
+    pub fn view(&self) -> FrameView<'_> {
+        FrameView { tag: self.tag, header: &self.header, payload: &self.payload }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// A borrowed parse of one serialized frame: tag/header/payload point
+/// into the receive buffer, so decoding reads payload bytes in place —
+/// no header/payload copies on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameView<'a> {
+    tag: u8,
+    header: &'a [u8],
+    payload: &'a [u8],
+}
+
+impl<'a> FrameView<'a> {
+    /// Parse a wire image without copying. The prelude's claimed
+    /// `header_len + payload_len` is validated against the actual slice
+    /// *before* any split — a short or hostile buffer (including length
+    /// sums that would overflow a 32-bit `usize`) is an `Err`, never a
+    /// panic or an oversized allocation.
+    pub fn parse(bytes: &'a [u8]) -> Result<FrameView<'a>> {
         crate::ensure!(
             bytes.len() >= FRAME_PRELUDE_BYTES,
             "frame truncated: {} bytes, need at least {FRAME_PRELUDE_BYTES}",
@@ -80,15 +122,222 @@ impl Frame {
         let tag = bytes[0];
         let header_len = u16::from_le_bytes([bytes[1], bytes[2]]) as usize;
         let payload_len = u32::from_le_bytes([bytes[3], bytes[4], bytes[5], bytes[6]]) as usize;
-        let want = FRAME_PRELUDE_BYTES + header_len + payload_len;
+        // u64 arithmetic: the claimed total cannot overflow even where
+        // usize is 32 bits, so the comparison below is always exact
+        let want = FRAME_PRELUDE_BYTES as u64 + header_len as u64 + payload_len as u64;
         crate::ensure!(
-            bytes.len() == want,
+            bytes.len() as u64 == want,
             "frame length mismatch: got {} bytes, prelude says {want}",
             bytes.len()
         );
-        let header = bytes[FRAME_PRELUDE_BYTES..FRAME_PRELUDE_BYTES + header_len].to_vec();
-        let payload = bytes[FRAME_PRELUDE_BYTES + header_len..].to_vec();
-        Ok(Frame { tag, header, payload })
+        let header = &bytes[FRAME_PRELUDE_BYTES..FRAME_PRELUDE_BYTES + header_len];
+        let payload = &bytes[FRAME_PRELUDE_BYTES + header_len..];
+        Ok(FrameView { tag, header, payload })
+    }
+
+    pub fn tag(&self) -> u8 {
+        self.tag
+    }
+
+    pub fn header(&self) -> &'a [u8] {
+        self.header
+    }
+
+    pub fn payload(&self) -> &'a [u8] {
+        self.payload
+    }
+
+    /// Bytes of the underlying wire image.
+    pub fn wire_bytes(&self) -> u64 {
+        (FRAME_PRELUDE_BYTES + self.header.len() + self.payload.len()) as u64
+    }
+
+    /// Copy out into an owned [`Frame`] (the allocating compat path).
+    pub fn to_frame(&self) -> Frame {
+        Frame { tag: self.tag, header: self.header.to_vec(), payload: self.payload.to_vec() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch arena a codec's
+/// [`encode_into`](super::BoundaryCodec::encode_into) builds the
+/// serialized wire image in directly. The buffer's capacity is retained
+/// across messages, so a warmed endpoint re-encodes without allocating
+/// (pinned by `tests/zero_alloc.rs`).
+///
+/// Build protocol (enforced by debug assertions — misuse is a codec
+/// bug, not peer input): [`start`](Self::start) → header appends →
+/// [`end_header`](Self::end_header) → payload appends →
+/// [`finish`](Self::finish) → read accessors. The image produced is
+/// byte-identical to `Frame::new(tag, header, payload).to_bytes()`.
+pub struct FrameBuf {
+    /// The full wire image: prelude + header + payload.
+    bytes: Vec<u8>,
+    header_len: usize,
+    /// 0 = header open, 1 = payload open, 2 = sealed.
+    stage: u8,
+}
+
+impl Default for FrameBuf {
+    fn default() -> Self {
+        FrameBuf::new()
+    }
+}
+
+impl FrameBuf {
+    /// A sealed empty frame (tag 0, no header, no payload); call
+    /// [`start`](Self::start) before appending.
+    pub fn new() -> Self {
+        FrameBuf { bytes: vec![0; FRAME_PRELUDE_BYTES], header_len: 0, stage: 2 }
+    }
+
+    /// Begin a new frame with `tag`, discarding any previous content
+    /// while keeping the allocation.
+    pub fn start(&mut self, tag: u8) -> &mut Self {
+        self.bytes.clear();
+        self.bytes.resize(FRAME_PRELUDE_BYTES, 0);
+        self.bytes[0] = tag;
+        self.header_len = 0;
+        self.stage = 0;
+        self
+    }
+
+    /// Close the header region; subsequent appends are payload bytes.
+    pub fn end_header(&mut self) -> &mut Self {
+        debug_assert_eq!(self.stage, 0, "end_header outside the header stage");
+        self.header_len = self.bytes.len() - FRAME_PRELUDE_BYTES;
+        self.stage = 1;
+        self
+    }
+
+    /// Seal the frame: patch the prelude's length fields. Errors if the
+    /// header or payload exceeds its length field (u16 / u32).
+    pub fn finish(&mut self) -> Result<()> {
+        debug_assert_eq!(self.stage, 1, "finish before end_header");
+        let payload_len = self.bytes.len() - FRAME_PRELUDE_BYTES - self.header_len;
+        crate::ensure!(
+            self.header_len <= u16::MAX as usize,
+            "frame header {} bytes exceeds the u16 length field",
+            self.header_len
+        );
+        crate::ensure!(
+            payload_len <= u32::MAX as usize,
+            "frame payload {payload_len} bytes exceeds the u32 length field"
+        );
+        self.bytes[1..3].copy_from_slice(&(self.header_len as u16).to_le_bytes());
+        self.bytes[3..7].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        self.stage = 2;
+        Ok(())
+    }
+
+    // ---- appends (header stage or payload stage) ----
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.reserve(4 * v.len());
+        for x in v {
+            self.bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        self.bytes.extend_from_slice(v);
+        self
+    }
+
+    /// Pre-size the underlying buffer for `additional` upcoming bytes.
+    pub fn reserve(&mut self, additional: usize) -> &mut Self {
+        self.bytes.reserve(additional);
+        self
+    }
+
+    /// Append `n` zero bytes and return the new tail as a mutable slice
+    /// — the in-place destination for `pack::pack_into`-style writers.
+    pub fn reserve_zeroed(&mut self, n: usize) -> &mut [u8] {
+        debug_assert!(self.stage < 2, "append to a sealed FrameBuf");
+        let at = self.bytes.len();
+        self.bytes.resize(at + n, 0);
+        &mut self.bytes[at..]
+    }
+
+    /// Rebuild this buffer from an owned [`Frame`] (the default
+    /// `encode_into` shim for codecs without a native scratch path).
+    pub fn copy_from_frame(&mut self, f: &Frame) -> Result<()> {
+        self.start(f.tag());
+        self.bytes(f.header());
+        self.end_header();
+        self.bytes(f.payload());
+        self.finish()
+    }
+
+    // ---- sealed accessors ----
+
+    /// The serialized wire image (identical to `to_frame().to_bytes()`).
+    pub fn as_bytes(&self) -> &[u8] {
+        debug_assert_eq!(self.stage, 2, "read from an unsealed FrameBuf");
+        &self.bytes
+    }
+
+    pub fn tag(&self) -> u8 {
+        debug_assert_eq!(self.stage, 2, "read from an unsealed FrameBuf");
+        self.bytes[0]
+    }
+
+    pub fn header(&self) -> &[u8] {
+        debug_assert_eq!(self.stage, 2, "read from an unsealed FrameBuf");
+        &self.bytes[FRAME_PRELUDE_BYTES..FRAME_PRELUDE_BYTES + self.header_len]
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        debug_assert_eq!(self.stage, 2, "read from an unsealed FrameBuf");
+        &self.bytes[FRAME_PRELUDE_BYTES + self.header_len..]
+    }
+
+    /// Bytes this message occupies on the wire (`as_bytes().len()`).
+    pub fn wire_bytes(&self) -> u64 {
+        debug_assert_eq!(self.stage, 2, "read from an unsealed FrameBuf");
+        self.bytes.len() as u64
+    }
+
+    /// Borrow the built image as a [`FrameView`] (feeds `decode_into`).
+    pub fn view(&self) -> FrameView<'_> {
+        FrameView {
+            tag: self.tag(),
+            header: self.header(),
+            payload: self.payload(),
+        }
+    }
+
+    /// Copy out into an owned [`Frame`] (the allocating compat path).
+    pub fn to_frame(&self) -> Frame {
+        Frame::new(self.tag(), self.header().to_vec(), self.payload().to_vec())
     }
 }
 
@@ -181,6 +430,16 @@ impl<'a> FrameReader<'a> {
         Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
+    /// Read `out.len()` f32 values into a caller-owned buffer (the
+    /// allocation-free twin of [`f32_vec`](Self::f32_vec)).
+    pub fn f32_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let b = self.take(4 * out.len())?;
+        for (o, c) in out.iter_mut().zip(b.chunks_exact(4)) {
+            *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
     pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
         self.take(n)
     }
@@ -240,6 +499,79 @@ mod tests {
         let mut r2 = FrameReader::new(&buf);
         assert!(r2.f32_vec(3).is_err());
         assert!(r2.done().is_err()); // unconsumed bytes
+    }
+
+    #[test]
+    fn framebuf_image_matches_frame_serialization() {
+        let f = Frame::new(TAG_TOPK, vec![8, 0, 1, 2], vec![0xCD; 23]);
+        let mut buf = FrameBuf::new();
+        buf.start(TAG_TOPK);
+        buf.bytes(f.header());
+        buf.end_header();
+        buf.bytes(f.payload());
+        buf.finish().unwrap();
+        assert_eq!(buf.as_bytes(), f.to_bytes().as_slice());
+        assert_eq!(buf.wire_bytes(), f.wire_bytes());
+        assert_eq!(buf.tag(), f.tag());
+        assert_eq!(buf.header(), f.header());
+        assert_eq!(buf.payload(), f.payload());
+        assert_eq!(buf.to_frame(), f);
+        // rebuilding from an owned frame gives the same image, and the
+        // capacity is reused (no fresh allocation needed for same sizes)
+        let mut buf2 = FrameBuf::new();
+        buf2.copy_from_frame(&f).unwrap();
+        assert_eq!(buf2.as_bytes(), buf.as_bytes());
+        // view round-trips through parse
+        let v = FrameView::parse(buf.as_bytes()).unwrap();
+        assert_eq!(v.tag(), f.tag());
+        assert_eq!(v.header(), f.header());
+        assert_eq!(v.payload(), f.payload());
+        assert_eq!(v.to_frame(), f);
+    }
+
+    #[test]
+    fn framebuf_reserve_zeroed_writes_in_place() {
+        let mut buf = FrameBuf::new();
+        buf.start(TAG_DIRECTQ);
+        buf.u8(4).u32(6).f32(1.0);
+        buf.end_header();
+        buf.reserve_zeroed(3).copy_from_slice(&[0xAA, 0xBB, 0xCC]);
+        buf.finish().unwrap();
+        assert_eq!(buf.payload(), &[0xAA, 0xBB, 0xCC]);
+        assert_eq!(buf.header().len(), 9);
+    }
+
+    #[test]
+    fn frameview_validates_lengths_before_splitting() {
+        let f = Frame::new(TAG_AQ, vec![1, 2, 3], vec![4, 5]);
+        let bytes = f.to_bytes();
+        // every strict prefix is an error, never a panic
+        for cut in 0..bytes.len() {
+            assert!(FrameView::parse(&bytes[..cut]).is_err(), "prefix {cut} parsed");
+        }
+        assert_eq!(FrameView::parse(&bytes).unwrap().to_frame(), f);
+        // a hostile prelude claiming the maximum header + payload on a
+        // short buffer: the u64 length check rejects it without overflow
+        let mut evil = vec![0u8; FRAME_PRELUDE_BYTES];
+        evil[1..3].copy_from_slice(&u16::MAX.to_le_bytes());
+        evil[3..7].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(FrameView::parse(&evil).is_err());
+        assert!(Frame::from_bytes(&evil).is_err());
+    }
+
+    #[test]
+    fn reader_f32_into_matches_f32_vec() {
+        let x = [0.25f32, -7.5, 3.0];
+        let mut w = FrameWriter::default();
+        w.f32_slice(&x);
+        let bytes = w.finish();
+        let mut out = [0f32; 3];
+        let mut r = FrameReader::new(&bytes);
+        r.f32_into(&mut out).unwrap();
+        r.done().unwrap();
+        assert_eq!(out, x);
+        let mut short = [0f32; 4];
+        assert!(FrameReader::new(&bytes).f32_into(&mut short).is_err());
     }
 
     #[test]

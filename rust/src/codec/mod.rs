@@ -44,7 +44,7 @@ pub mod tp;
 
 pub use delta::{AqCodec, AqState};
 pub use ef::EfCodec;
-pub use frame::Frame;
+pub use frame::{Frame, FrameBuf, FrameView};
 pub use quantizer::{Rounding, UniformQuantizer};
 pub use registry::{CodecSpec, SchemeSpec};
 
@@ -81,6 +81,37 @@ pub trait BoundaryCodec: Send {
     /// any codec state. Malformed frames are `Err`, never a panic.
     fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>>;
 
+    /// Scratch-buffer encode: build the *serialized* wire image directly
+    /// in `out`, reusing its allocation across messages. Produces bytes
+    /// identical to `encode(...).to_bytes()` (pinned by
+    /// `prop_frames.rs`); the registered codecs override this with
+    /// steady-state allocation-free implementations (pinned by
+    /// `tests/zero_alloc.rs`). The default shims through [`encode`].
+    ///
+    /// [`encode`]: Self::encode
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        out.copy_from_frame(&self.encode(ids, a)?)
+    }
+
+    /// Scratch-buffer decode: reconstruct into the caller-owned `out`
+    /// slice, reading header/payload bytes in place through the borrowed
+    /// [`FrameView`]. `out.len()` must be the expected activation length
+    /// (`ids.len()` records); a frame claiming any other shape is an
+    /// error. The default shims through [`decode`].
+    ///
+    /// [`decode`]: Self::decode
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let v = self.decode(ids, &frame.to_frame())?;
+        crate::ensure!(
+            v.len() == out.len(),
+            "codec decoded {} elements into a {}-element buffer",
+            v.len(),
+            out.len()
+        );
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
     /// Human-readable scheme label (also the registry spec fragment).
     fn label(&self) -> String;
 
@@ -93,6 +124,19 @@ pub trait BoundaryCodec: Send {
     fn take_stats(&mut self) -> EncodeStats {
         EncodeStats::default()
     }
+}
+
+/// Build an owned [`Frame`] through a codec's scratch path — the shim
+/// the registered codecs use to keep `encode` and `encode_into` a
+/// single implementation (the scratch one).
+pub fn encode_to_frame<C: BoundaryCodec + ?Sized>(
+    c: &mut C,
+    ids: &[u64],
+    a: &[f32],
+) -> Result<Frame> {
+    let mut buf = FrameBuf::new();
+    c.encode_into(ids, a, &mut buf)?;
+    Ok(buf.to_frame())
 }
 
 /// Bytes on the wire for `n` b-bit codes + the f32 scale header (the

@@ -11,6 +11,14 @@
 //! | f16     | 2   | n: u32                          | n × f16 LE           |
 //! | directq | 3   | bits: u8, n: u32, scale: f32    | packed codes         |
 //! | topk    | 5   | bits: u8, n: u32, k: u32, scale | k × u32 idx + codes  |
+//!
+//! All four implement the scratch hot path natively
+//! (`encode_into`/`decode_into`): frame bytes are built in the caller's
+//! [`FrameBuf`] and decoded from a borrowed [`FrameView`], with any
+//! per-message working set (quantizer codes, top-k selections) held in
+//! codec-owned scratch vectors whose capacity persists across messages —
+//! so the steady-state path never touches the allocator. The allocating
+//! `encode`/`decode` are thin wrappers over the same implementations.
 
 use std::sync::Arc;
 
@@ -18,31 +26,63 @@ use crate::runtime::QuantRuntime;
 use crate::util::error::Result;
 use crate::util::Rng;
 
-use super::frame::{Frame, FrameReader, FrameWriter, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK};
+use super::frame::{
+    FrameBuf, FrameReader, FrameView, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK,
+};
 use super::quantizer::{Rounding, UniformQuantizer};
-use super::{f16, pack, topk, BoundaryCodec};
+use super::{encode_to_frame, f16, pack, topk, BoundaryCodec, Frame};
 
 /// FP32 passthrough: the paper's no-compression baseline.
 pub struct Raw32Codec;
 
-impl BoundaryCodec for Raw32Codec {
-    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
-        let mut h = FrameWriter::default();
-        h.u32(a.len() as u32);
-        let mut p = FrameWriter::with_capacity(4 * a.len());
-        p.f32_slice(a);
-        Ok(Frame::new(TAG_RAW32, h.finish(), p.finish()))
-    }
-
-    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        crate::ensure!(frame.tag() == TAG_RAW32, "raw32 codec got frame tag {}", frame.tag());
-        let mut h = FrameReader::new(frame.header());
+impl Raw32Codec {
+    /// Validate tag + header and return the element count, with the
+    /// payload length checked *before* anything is allocated.
+    fn check(tag: u8, header: &[u8], payload: &[u8]) -> Result<usize> {
+        crate::ensure!(tag == TAG_RAW32, "raw32 codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
         let n = h.u32()? as usize;
         h.done()?;
-        let mut p = FrameReader::new(frame.payload());
-        let out = p.f32_vec(n)?;
-        p.done()?;
+        crate::ensure!(
+            payload.len() == 4 * n,
+            "raw32 frame payload {} bytes, want {}",
+            payload.len(),
+            4 * n
+        );
+        Ok(n)
+    }
+}
+
+impl BoundaryCodec for Raw32Codec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, _ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        out.start(TAG_RAW32);
+        out.u32(a.len() as u32);
+        out.end_header();
+        out.f32_slice(a);
+        out.finish()
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let n = Self::check(frame.tag(), frame.header(), frame.payload())?;
+        let mut out = vec![0f32; n];
+        self.decode_into(ids, &frame.view(), &mut out)?;
         Ok(out)
+    }
+
+    fn decode_into(&mut self, _ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let n = Self::check(frame.tag(), frame.header(), frame.payload())?;
+        crate::ensure!(
+            n == out.len(),
+            "raw32 frame has {n} elements, boundary expects {}",
+            out.len()
+        );
+        let mut p = FrameReader::new(frame.payload());
+        p.f32_into(out)?;
+        p.done()
     }
 
     fn label(&self) -> String {
@@ -53,29 +93,54 @@ impl BoundaryCodec for Raw32Codec {
 /// IEEE binary16 wire format (paper Appendix H.4).
 pub struct F16Codec;
 
-impl BoundaryCodec for F16Codec {
-    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
-        let mut h = FrameWriter::default();
-        h.u32(a.len() as u32);
-        let mut payload = Vec::new();
-        f16::encode(a, &mut payload);
-        Ok(Frame::new(TAG_F16, h.finish(), payload))
-    }
-
-    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        crate::ensure!(frame.tag() == TAG_F16, "f16 codec got frame tag {}", frame.tag());
-        let mut h = FrameReader::new(frame.header());
+impl F16Codec {
+    fn check(tag: u8, header: &[u8], payload: &[u8]) -> Result<usize> {
+        crate::ensure!(tag == TAG_F16, "f16 codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
         let n = h.u32()? as usize;
         h.done()?;
         crate::ensure!(
-            frame.payload().len() == 2 * n,
+            payload.len() == 2 * n,
             "f16 frame payload {} bytes, want {}",
-            frame.payload().len(),
+            payload.len(),
             2 * n
         );
-        let mut out = Vec::new();
-        f16::decode(frame.payload(), &mut out);
+        Ok(n)
+    }
+}
+
+impl BoundaryCodec for F16Codec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, _ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        out.start(TAG_F16);
+        out.u32(a.len() as u32);
+        out.end_header();
+        out.reserve(2 * a.len());
+        for &v in a {
+            out.u16(f16::f32_to_f16_bits(v));
+        }
+        out.finish()
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let n = Self::check(frame.tag(), frame.header(), frame.payload())?;
+        let mut out = vec![0f32; n];
+        self.decode_into(ids, &frame.view(), &mut out)?;
         Ok(out)
+    }
+
+    fn decode_into(&mut self, _ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let n = Self::check(frame.tag(), frame.header(), frame.payload())?;
+        crate::ensure!(
+            n == out.len(),
+            "f16 frame has {n} elements, boundary expects {}",
+            out.len()
+        );
+        f16::decode_slice(frame.payload(), out);
+        Ok(())
     }
 
     fn label(&self) -> String {
@@ -90,33 +155,18 @@ pub struct DirectQCodec {
     rounding: Rounding,
     rng: Rng,
     hlo: Option<Arc<QuantRuntime>>,
+    /// per-message quantizer codes, reused across messages
+    codes: Vec<u8>,
 }
 
 impl DirectQCodec {
     pub fn new(bits: u8, rounding: Rounding, seed: u64, hlo: Option<Arc<QuantRuntime>>) -> Self {
-        DirectQCodec { bits, rounding, rng: Rng::new(seed), hlo }
-    }
-}
-
-impl BoundaryCodec for DirectQCodec {
-    fn encode(&mut self, _ids: &[u64], a: &[f32]) -> Result<Frame> {
-        let (codes, scale) = match &self.hlo {
-            Some(q) if q.n_elements() == a.len() => q.dq_encode(a, self.bits)?,
-            _ => {
-                let q = UniformQuantizer::new(self.bits, self.rounding);
-                let mut codes = vec![0u8; a.len()];
-                let scale = q.encode(a, &mut codes, &mut self.rng);
-                (codes, scale)
-            }
-        };
-        let mut h = FrameWriter::default();
-        h.u8(self.bits).u32(a.len() as u32).f32(scale);
-        Ok(Frame::new(TAG_DIRECTQ, h.finish(), pack::pack(&codes, self.bits)))
+        DirectQCodec { bits, rounding, rng: Rng::new(seed), hlo, codes: Vec::new() }
     }
 
-    fn decode(&mut self, _ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        crate::ensure!(frame.tag() == TAG_DIRECTQ, "directq codec got frame tag {}", frame.tag());
-        let mut h = FrameReader::new(frame.header());
+    fn check(&self, tag: u8, header: &[u8], payload: &[u8]) -> Result<(usize, f32)> {
+        crate::ensure!(tag == TAG_DIRECTQ, "directq codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
         let (bits, n, scale) = (h.u8()?, h.u32()? as usize, h.f32()?);
         h.done()?;
         crate::ensure!(
@@ -125,21 +175,75 @@ impl BoundaryCodec for DirectQCodec {
             self.bits
         );
         crate::ensure!(
-            frame.payload().len() == pack::packed_len(n, bits),
+            payload.len() == pack::packed_len(n, bits),
             "directq frame payload {} bytes, want {}",
-            frame.payload().len(),
+            payload.len(),
             pack::packed_len(n, bits)
         );
-        let codes = pack::unpack(frame.payload(), bits, n);
-        match &self.hlo {
-            Some(q) if q.n_elements() == n => q.dq_decode(&codes, scale, bits),
+        Ok((n, scale))
+    }
+}
+
+impl BoundaryCodec for DirectQCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, _ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        let scale = match &self.hlo {
+            Some(q) if q.n_elements() == a.len() => {
+                let (codes, scale) = q.dq_encode(a, self.bits)?;
+                self.codes.clear();
+                self.codes.extend_from_slice(&codes);
+                scale
+            }
             _ => {
-                let q = UniformQuantizer::new(bits, self.rounding);
-                let mut out = vec![0f32; n];
-                q.decode(&codes, scale, &mut out);
-                Ok(out)
+                let q = UniformQuantizer::new(self.bits, self.rounding);
+                self.codes.resize(a.len(), 0);
+                q.encode(a, &mut self.codes, &mut self.rng)
+            }
+        };
+        out.start(TAG_DIRECTQ);
+        out.u8(self.bits).u32(a.len() as u32).f32(scale);
+        out.end_header();
+        let packed = out.reserve_zeroed(pack::packed_len(a.len(), self.bits));
+        pack::pack_into(&self.codes, self.bits, packed);
+        out.finish()
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let (n, _) = self.check(frame.tag(), frame.header(), frame.payload())?;
+        let mut out = vec![0f32; n];
+        self.decode_into(ids, &frame.view(), &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, _ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let (n, scale) = self.check(frame.tag(), frame.header(), frame.payload())?;
+        crate::ensure!(
+            n == out.len(),
+            "directq frame has {n} elements, boundary expects {}",
+            out.len()
+        );
+        self.codes.resize(n, 0);
+        pack::unpack_into(frame.payload(), self.bits, &mut self.codes);
+        match &self.hlo {
+            Some(q) if q.n_elements() == n => {
+                let v = q.dq_decode(&self.codes, scale, self.bits)?;
+                crate::ensure!(
+                    v.len() == out.len(),
+                    "hlo dq_decode returned {} elements for an {}-element message",
+                    v.len(),
+                    out.len()
+                );
+                out.copy_from_slice(&v);
+            }
+            _ => {
+                let q = UniformQuantizer::new(self.bits, self.rounding);
+                q.decode(&self.codes, scale, out);
             }
         }
+        Ok(())
     }
 
     fn label(&self) -> String {
@@ -157,6 +261,10 @@ pub struct TopKCodec {
     /// claim, so a malformed header cannot force a huge allocation
     el: usize,
     rng: Rng,
+    /// per-message scratch (kept indices / values / codes), reused
+    sel: Vec<u32>,
+    vals: Vec<f32>,
+    codes: Vec<u8>,
 }
 
 impl TopKCodec {
@@ -168,35 +276,17 @@ impl TopKCodec {
             quant: UniformQuantizer::new(bits, rounding),
             el,
             rng: Rng::new(seed),
+            sel: Vec::new(),
+            vals: Vec::new(),
+            codes: Vec::new(),
         }
     }
-}
 
-impl BoundaryCodec for TopKCodec {
-    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
-        crate::ensure!(
-            a.len() == ids.len() * self.el,
-            "topk message length {} != {} ids x {} elements",
-            a.len(),
-            ids.len(),
-            self.el
-        );
-        let msg = topk::encode_with(a, self.frac, &self.quant, &mut self.rng);
-        let mut h = FrameWriter::default();
-        h.u8(self.bits).u32(a.len() as u32).u32(msg.indices.len() as u32).f32(msg.scale);
-        let mut p = FrameWriter::with_capacity(
-            4 * msg.indices.len() + pack::packed_len(msg.codes.len(), self.bits),
-        );
-        for &i in &msg.indices {
-            p.u32(i);
-        }
-        p.bytes(&pack::pack(&msg.codes, self.bits));
-        Ok(Frame::new(TAG_TOPK, h.finish(), p.finish()))
-    }
-
-    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        crate::ensure!(frame.tag() == TAG_TOPK, "topk codec got frame tag {}", frame.tag());
-        let mut h = FrameReader::new(frame.header());
+    /// Validate tag + header against the configured batch shape; returns
+    /// (dense length, kept count, scale).
+    fn check(&self, ids: &[u64], tag: u8, header: &[u8]) -> Result<(usize, usize, f32)> {
+        crate::ensure!(tag == TAG_TOPK, "topk codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
         let (bits, n, k, scale) = (h.u8()?, h.u32()? as usize, h.u32()? as usize, h.f32()?);
         h.done()?;
         crate::ensure!(
@@ -212,22 +302,71 @@ impl BoundaryCodec for TopKCodec {
             self.el
         );
         crate::ensure!(k <= n, "topk frame keeps {k} of {n} entries");
-        let mut p = FrameReader::new(frame.payload());
-        let mut indices = Vec::with_capacity(k);
-        for _ in 0..k {
-            let i = p.u32()? as usize;
-            crate::ensure!(i < n, "topk index {i} out of range (n = {n})");
-            indices.push(i);
+        Ok((n, k, scale))
+    }
+}
+
+impl BoundaryCodec for TopKCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        crate::ensure!(
+            a.len() == ids.len() * self.el,
+            "topk message length {} != {} ids x {} elements",
+            a.len(),
+            ids.len(),
+            self.el
+        );
+        topk::select_topk_into(a, self.frac, &mut self.sel);
+        let k = self.sel.len();
+        self.vals.clear();
+        self.vals.extend(self.sel.iter().map(|&i| a[i as usize]));
+        self.codes.resize(k, 0);
+        let scale = self.quant.encode(&self.vals, &mut self.codes, &mut self.rng);
+        out.start(TAG_TOPK);
+        out.u8(self.bits).u32(a.len() as u32).u32(k as u32).f32(scale);
+        out.end_header();
+        out.reserve(4 * k + pack::packed_len(k, self.bits));
+        for &i in &self.sel {
+            out.u32(i);
         }
-        let codes = pack::unpack(p.bytes(pack::packed_len(k, bits))?, bits, k);
-        p.done()?;
-        let mut vals = vec![0f32; k];
-        self.quant.decode(&codes, scale, &mut vals);
-        let mut out = vec![0f32; n];
-        for (&i, &v) in indices.iter().zip(&vals) {
-            out[i] = v;
-        }
+        let packed = out.reserve_zeroed(pack::packed_len(k, self.bits));
+        pack::pack_into(&self.codes, self.bits, packed);
+        out.finish()
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; ids.len() * self.el];
+        self.decode_into(ids, &frame.view(), &mut out)?;
         Ok(out)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let (n, k, scale) = self.check(ids, frame.tag(), frame.header())?;
+        crate::ensure!(
+            n == out.len(),
+            "topk frame has {n} elements, boundary expects {}",
+            out.len()
+        );
+        let mut p = FrameReader::new(frame.payload());
+        self.sel.clear();
+        for _ in 0..k {
+            let i = p.u32()?;
+            crate::ensure!((i as usize) < n, "topk index {i} out of range (n = {n})");
+            self.sel.push(i);
+        }
+        self.codes.resize(k, 0);
+        pack::unpack_into(p.bytes(pack::packed_len(k, self.bits))?, self.bits, &mut self.codes);
+        p.done()?;
+        self.vals.resize(k, 0.0);
+        self.quant.decode(&self.codes, scale, &mut self.vals);
+        out.fill(0.0);
+        for (&i, &v) in self.sel.iter().zip(&self.vals) {
+            out[i as usize] = v;
+        }
+        Ok(())
     }
 
     fn label(&self) -> String {
@@ -298,5 +437,39 @@ mod tests {
         payload[0..4].copy_from_slice(&200u32.to_le_bytes());
         let bad = Frame::new(f.tag(), f.header().to_vec(), payload);
         assert!(dec.decode(&[0], &bad).is_err());
+    }
+
+    #[test]
+    fn scratch_path_reuses_buffers_and_matches_frames() {
+        // same seed, two encoder instances: the allocating and scratch
+        // paths must produce byte-identical images, message after message
+        let a1 = sample(64);
+        let a2: Vec<f32> = a1.iter().map(|v| v * 0.5 + 0.1).collect();
+        let mut enc_a = DirectQCodec::new(4, Rounding::Nearest, 9, None);
+        let mut enc_b = DirectQCodec::new(4, Rounding::Nearest, 9, None);
+        let mut buf = FrameBuf::new();
+        for a in [&a1, &a2] {
+            let f = enc_a.encode(&[0], a).unwrap();
+            enc_b.encode_into(&[0], a, &mut buf).unwrap();
+            assert_eq!(buf.as_bytes(), f.to_bytes().as_slice());
+            // and the scratch decode reconstructs into a caller buffer
+            let mut dec = DirectQCodec::new(4, Rounding::Nearest, 2, None);
+            let mut out = vec![0f32; a.len()];
+            dec.decode_into(&[0], &buf.view(), &mut out).unwrap();
+            assert_eq!(out, dec.decode(&[0], &f).unwrap());
+        }
+    }
+
+    #[test]
+    fn decode_into_rejects_wrong_output_shape() {
+        let a = sample(16);
+        let mut enc = Raw32Codec;
+        let mut buf = FrameBuf::new();
+        enc.encode_into(&[0], &a, &mut buf).unwrap();
+        let mut small = vec![0f32; 8];
+        assert!(Raw32Codec.decode_into(&[0], &buf.view(), &mut small).is_err());
+        let mut enc16 = F16Codec;
+        enc16.encode_into(&[0], &a, &mut buf).unwrap();
+        assert!(F16Codec.decode_into(&[0], &buf.view(), &mut small).is_err());
     }
 }

@@ -29,20 +29,30 @@ pub fn encode(x: &[f32], frac: f64, bits: u8, rng: &mut Rng) -> TopKMessage {
 /// Like [`encode`], with an explicit quantizer (rounding mode / bits come
 /// from the registry-built codec).
 pub fn encode_with(x: &[f32], frac: f64, q: &UniformQuantizer, rng: &mut Rng) -> TopKMessage {
+    let mut indices = Vec::new();
+    select_topk_into(x, frac, &mut indices);
+    let vals: Vec<f32> = indices.iter().map(|&i| x[i as usize]).collect();
+    let mut codes = vec![0u8; vals.len()];
+    let scale = q.encode(&vals, &mut codes, rng);
+    TopKMessage { indices, codes, scale, len: x.len() }
+}
+
+/// Fill `indices` with the sorted positions of the `frac`-largest-|x|
+/// entries (at least one, at most all). Reuses the caller's vector so
+/// the steady-state codec path (`TopKCodec::encode_into`) selects
+/// without allocating.
+pub fn select_topk_into(x: &[f32], frac: f64, indices: &mut Vec<u32>) {
     let k = ((x.len() as f64 * frac).ceil() as usize).clamp(1, x.len());
-    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+    indices.clear();
+    indices.extend(0..x.len() as u32);
+    indices.select_nth_unstable_by(k - 1, |&a, &b| {
         x[b as usize]
             .abs()
             .partial_cmp(&x[a as usize].abs())
             .unwrap_or(std::cmp::Ordering::Equal)
     });
-    let mut indices: Vec<u32> = idx[..k].to_vec();
+    indices.truncate(k);
     indices.sort_unstable();
-    let vals: Vec<f32> = indices.iter().map(|&i| x[i as usize]).collect();
-    let mut codes = vec![0u8; k];
-    let scale = q.encode(&vals, &mut codes, rng);
-    TopKMessage { indices, codes, scale, len: x.len() }
 }
 
 /// Reconstruct a dense vector (zeros outside the kept set).

@@ -12,7 +12,7 @@
 //! [`BackwardBoundary`], so both execution modes run the identical
 //! encode/validate/decode sequence.
 
-use crate::codec::{BoundaryCodec, Frame};
+use crate::codec::{BoundaryCodec, Frame, FrameBuf, FrameView};
 use crate::util::error::Result;
 
 /// What a transfer did: the receiver-side activation plus accounting.
@@ -45,8 +45,24 @@ impl BoundarySender {
     }
 
     /// Encode activation `a` ([B, S, D] row-major, one record per example
-    /// id) into its wire frame. Returns (frame, stats).
+    /// id) into its wire frame. Returns (frame, stats). Allocating form
+    /// of [`encode_into`](Self::encode_into).
     pub fn encode(&mut self, example_ids: &[u64], a: &[f32]) -> Result<(Frame, TransferStats)> {
+        let mut buf = FrameBuf::new();
+        let stats = self.encode_into(example_ids, a, &mut buf)?;
+        Ok((buf.to_frame(), stats))
+    }
+
+    /// Scratch-path encode: build the serialized frame in the caller's
+    /// reusable [`FrameBuf`] (steady-state allocation-free for the
+    /// registered codecs). Returns the transfer stats, whose wire bytes
+    /// are the built image's length.
+    pub fn encode_into(
+        &mut self,
+        example_ids: &[u64],
+        a: &[f32],
+        out: &mut FrameBuf,
+    ) -> Result<TransferStats> {
         crate::ensure!(
             a.len() == example_ids.len() * self.example_len,
             "boundary {}: activation length {} != {} ids x {} elements",
@@ -56,15 +72,14 @@ impl BoundarySender {
             self.example_len
         );
         let mean_abs_act = crate::util::stats::mean_abs(a);
-        let frame = self.enc.encode(example_ids, a)?;
+        self.enc.encode_into(example_ids, a, out)?;
         let es = self.enc.take_stats();
-        let stats = TransferStats {
-            wire_bytes: frame.wire_bytes(),
+        Ok(TransferStats {
+            wire_bytes: out.wire_bytes(),
             mean_abs_act,
             mean_abs_delta: es.mean_abs_delta.unwrap_or(mean_abs_act),
             first_visits: es.first_visits,
-        };
-        Ok((frame, stats))
+        })
     }
 
     /// Encoder-side persistent state (message buffers), i.e. what one
@@ -91,19 +106,43 @@ impl BoundaryReceiver {
         BoundaryReceiver { boundary_id, example_len, dec }
     }
 
+    /// Elements per example record this endpoint validates against.
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
     /// Reconstruct the activation for `example_ids` from `frame`,
     /// advancing any receiver-replica codec state.
     pub fn decode(&mut self, example_ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
-        let want = example_ids.len() * self.example_len;
-        let out = self.dec.decode(example_ids, frame)?;
+        self.decode_view(example_ids, &frame.view())
+    }
+
+    /// Like [`decode`](Self::decode), from a borrowed [`FrameView`]
+    /// (what the serialized receive path parses).
+    pub fn decode_view(&mut self, example_ids: &[u64], frame: &FrameView<'_>) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; example_ids.len() * self.example_len];
+        self.decode_into(example_ids, frame, &mut out)?;
+        Ok(out)
+    }
+
+    /// Scratch-path decode into a caller-owned buffer of the expected
+    /// activation shape (`ids × example_len`); steady-state
+    /// allocation-free for the registered codecs.
+    pub fn decode_into(
+        &mut self,
+        example_ids: &[u64],
+        frame: &FrameView<'_>,
+        out: &mut [f32],
+    ) -> Result<()> {
         crate::ensure!(
-            out.len() == want,
-            "boundary {} codec returned {} elements for a {}-element activation",
+            out.len() == example_ids.len() * self.example_len,
+            "boundary {}: decode buffer holds {} elements for {} ids x {} elements",
             self.boundary_id,
             out.len(),
-            want
+            example_ids.len(),
+            self.example_len
         );
-        Ok(out)
+        self.dec.decode_into(example_ids, frame, out)
     }
 
     /// Receiver-side persistent state (the buffer replica).
@@ -120,6 +159,9 @@ impl BoundaryReceiver {
 pub struct ForwardBoundary {
     send: BoundarySender,
     recv: BoundaryReceiver,
+    /// frame scratch reused across transfers (steady state: no frame
+    /// allocations per message)
+    buf: FrameBuf,
 }
 
 impl ForwardBoundary {
@@ -132,6 +174,7 @@ impl ForwardBoundary {
         ForwardBoundary {
             send: BoundarySender::new(boundary_id, example_len, enc),
             recv: BoundaryReceiver::new(boundary_id, example_len, dec),
+            buf: FrameBuf::new(),
         }
     }
 
@@ -140,14 +183,15 @@ impl ForwardBoundary {
     }
 
     /// Transfer activation `a` across the boundary. Returns (receiver
-    /// activation, stats).
+    /// activation, stats). Runs the scratch path end to end: encode into
+    /// the reusable frame buffer, decode in place off its view.
     pub fn transfer(
         &mut self,
         example_ids: &[u64],
         a: &[f32],
     ) -> Result<(Vec<f32>, TransferStats)> {
-        let (frame, stats) = self.send.encode(example_ids, a)?;
-        let out = self.recv.decode(example_ids, &frame)?;
+        let stats = self.send.encode_into(example_ids, a, &mut self.buf)?;
+        let out = self.recv.decode_view(example_ids, &self.buf.view())?;
         Ok((out, stats))
     }
 
@@ -175,6 +219,7 @@ impl ForwardBoundary {
 pub struct BackwardBoundary {
     send: BoundarySender,
     recv: BoundaryReceiver,
+    buf: FrameBuf,
 }
 
 impl BackwardBoundary {
@@ -186,13 +231,14 @@ impl BackwardBoundary {
         BackwardBoundary {
             send: BoundarySender::new(0, example_len, enc),
             recv: BoundaryReceiver::new(0, example_len, dec),
+            buf: FrameBuf::new(),
         }
     }
 
     /// Returns (receiver-side gradient, wire bytes).
     pub fn transfer(&mut self, example_ids: &[u64], g: &[f32]) -> Result<(Vec<f32>, u64)> {
-        let (frame, stats) = self.send.encode(example_ids, g)?;
-        let out = self.recv.decode(example_ids, &frame)?;
+        let stats = self.send.encode_into(example_ids, g, &mut self.buf)?;
+        let out = self.recv.decode_view(example_ids, &self.buf.view())?;
         Ok((out, stats.wire_bytes))
     }
 
@@ -302,6 +348,34 @@ mod tests {
         let (out, bytes) = bw.transfer(&[0], &g).unwrap();
         assert!(bytes < 4 * 100 / 2, "topk should beat fp32: {bytes}");
         assert!((out[56] + 1.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn scratch_endpoint_path_matches_the_allocating_one() {
+        // two identically-seeded boundaries: one driven through the owned
+        // Frame API, one through the FrameBuf/FrameView scratch API —
+        // frames, stats, and outputs must agree bit for bit
+        let (mut tx_a, mut rx_a) = mk_fw("aqsgd:fw2bw4", 8).into_halves();
+        let (mut tx_b, mut rx_b) = mk_fw("aqsgd:fw2bw4", 8).into_halves();
+        let mut buf = crate::codec::FrameBuf::new();
+        let mut out_b = vec![0f32; 16];
+        let mut a: Vec<f32> = (0..16).map(|i| (i as f32 * 0.4).sin()).collect();
+        for round in 0..3 {
+            let (frame, st_a) = tx_a.encode(&[0, 1], &a).unwrap();
+            let st_b = tx_b.encode_into(&[0, 1], &a, &mut buf).unwrap();
+            assert_eq!(buf.as_bytes(), frame.to_bytes().as_slice(), "round {round}");
+            assert_eq!(st_a.wire_bytes, st_b.wire_bytes);
+            assert_eq!(st_a.first_visits, st_b.first_visits);
+            let out_a = rx_a.decode(&[0, 1], &frame).unwrap();
+            rx_b.decode_into(&[0, 1], &buf.view(), &mut out_b).unwrap();
+            assert_eq!(out_a, out_b, "round {round}");
+            for v in a.iter_mut() {
+                *v += 0.01;
+            }
+        }
+        // shape mismatch on the scratch path is an error, not a panic
+        let mut small = vec![0f32; 8];
+        assert!(rx_b.decode_into(&[0, 1], &buf.view(), &mut small).is_err());
     }
 
     #[test]

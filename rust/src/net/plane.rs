@@ -5,9 +5,10 @@
 //!
 //! A [`LinkEndpointTx`]/[`LinkEndpointRx`] pair bonds one registry-built
 //! codec half to one directed [`FrameLink`]: the sender encodes into a
-//! [`Frame`], ships the serialized image, and reads its byte accounting
-//! off the real buffers; the receiver blocks on the paced link and
-//! decodes. The threaded pipeline executor runs its stage boundaries
+//! reusable [`FrameBuf`] scratch frame, ships the serialized image, and
+//! reads its byte accounting off the real buffers; the receiver blocks
+//! on the paced link and decodes in place through a borrowed
+//! [`FrameView`]. The threaded pipeline executor runs its stage boundaries
 //! over these endpoints with real channel pacing; the virtual-clock
 //! executor runs the *same* endpoints over unpaced links
 //! (`f64::INFINITY` bandwidth, zero latency — a pure FIFO), which is
@@ -27,17 +28,23 @@ use std::time::Duration;
 
 use super::{frame_link, FrameLink, FrameLinkRx};
 use crate::codec::registry::{build_mem_pair, SchemeSpec};
-use crate::codec::{BoundaryCodec, Frame, Rounding};
+use crate::codec::{BoundaryCodec, FrameBuf, FrameView, Rounding};
 use crate::coordinator::boundary::{BoundaryReceiver, BoundarySender, TransferStats};
 use crate::util::error::{Context, Result};
 
 /// Sending endpoint: codec encoder half + paced frame link + accounting.
+/// Owns a reusable [`FrameBuf`] scratch arena, so the steady-state
+/// encode+serialize path allocates only the owned byte image the channel
+/// transport requires — the codec/frame work itself is allocation-free.
 pub struct LinkEndpointTx {
     enc: BoundarySender,
     link: FrameLink,
+    buf: FrameBuf,
 }
 
-/// Receiving endpoint: paced frame link + codec decoder half.
+/// Receiving endpoint: paced frame link + codec decoder half. Received
+/// images are parsed as borrowing [`FrameView`]s, so header/payload
+/// bytes are decoded in place — no frame copies on the receive path.
 pub struct LinkEndpointRx {
     dec: BoundaryReceiver,
     link: FrameLinkRx,
@@ -55,18 +62,22 @@ pub fn link_endpoints(
 ) -> (LinkEndpointTx, LinkEndpointRx) {
     let (tx, rx) = frame_link(bandwidth_bps, latency);
     (
-        LinkEndpointTx { enc: BoundarySender::new(boundary_id, example_len, enc), link: tx },
+        LinkEndpointTx {
+            enc: BoundarySender::new(boundary_id, example_len, enc),
+            link: tx,
+            buf: FrameBuf::new(),
+        },
         LinkEndpointRx { dec: BoundaryReceiver::new(boundary_id, example_len, dec), link: rx },
     )
 }
 
 impl LinkEndpointTx {
-    /// Encode one message and ship its serialized frame. The returned
-    /// stats carry the measured wire bytes (`Frame::wire_bytes()`, which
-    /// equals the shipped image length).
+    /// Encode one message into the endpoint's scratch frame and ship its
+    /// serialized image. The returned stats carry the measured wire
+    /// bytes (the built image's length — what actually shipped).
     pub fn send(&mut self, ids: &[u64], a: &[f32]) -> Result<TransferStats> {
-        let (frame, stats) = self.enc.encode(ids, a)?;
-        self.link.send(frame.to_bytes());
+        let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
+        self.link.send(self.buf.as_bytes().to_vec());
         Ok(stats)
     }
 
@@ -74,8 +85,8 @@ impl LinkEndpointTx {
     /// image — the DP ring decodes the sender's own frame locally so
     /// every replica reconstructs the identical mean.
     pub fn send_keep(&mut self, ids: &[u64], a: &[f32]) -> Result<(TransferStats, Vec<u8>)> {
-        let (frame, stats) = self.enc.encode(ids, a)?;
-        let bytes = frame.to_bytes();
+        let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
+        let bytes = self.buf.as_bytes().to_vec();
         self.link.send(bytes.clone());
         Ok((stats, bytes))
     }
@@ -100,8 +111,16 @@ impl LinkEndpointRx {
     /// Blocking receive + decode of the next frame.
     pub fn recv(&mut self, ids: &[u64]) -> Result<Vec<f32>> {
         let bytes = self.link.recv()?;
-        let frame = Frame::from_bytes(&bytes)?;
-        self.dec.decode(ids, &frame)
+        self.dec.decode_view(ids, &FrameView::parse(&bytes)?)
+    }
+
+    /// Blocking receive + decode into a reusable caller buffer, resized
+    /// to the expected activation shape (capacity is retained across
+    /// calls — the executor's per-endpoint decode scratch).
+    pub fn recv_into(&mut self, ids: &[u64], out: &mut Vec<f32>) -> Result<()> {
+        let bytes = self.link.recv()?;
+        out.resize(ids.len() * self.dec.example_len(), 0.0);
+        self.dec.decode_into(ids, &FrameView::parse(&bytes)?, out)
     }
 
     /// Receive the raw serialized frame (the ring decodes per sender,
@@ -145,6 +164,8 @@ pub struct DpRing {
     dec: Vec<BoundaryReceiver>,
     /// frames of the current round, slotted by sender
     frames: Vec<Option<Vec<u8>>>,
+    /// per-sender dequantization scratch, reused across rounds
+    deq: Vec<f32>,
     sent_bytes: u64,
     max_frame: u64,
 }
@@ -190,10 +211,15 @@ pub fn dp_rings(
             degree,
             n,
             ids: [0],
-            tx: LinkEndpointTx { enc: BoundarySender::new(r as u32, n, enc), link },
+            tx: LinkEndpointTx {
+                enc: BoundarySender::new(r as u32, n, enc),
+                link,
+                buf: FrameBuf::new(),
+            },
             rx: edge_rx[r].take().expect("edge distributed once"),
             dec,
             frames: (0..degree).map(|_| None).collect(),
+            deq: Vec::new(),
             sent_bytes: 0,
             max_frame: 0,
         });
@@ -249,16 +275,20 @@ impl DpRing {
     }
 
     /// Step 3: decode every sender's frame in sender order and return
-    /// `(mean gradient, serialized bytes this replica shipped)`.
+    /// `(mean gradient, serialized bytes this replica shipped)`. Each
+    /// frame is parsed as a borrowing [`FrameView`] and dequantized into
+    /// the ring's reusable scratch — per-sender hop buffers are the only
+    /// per-round allocations (they are the transport's owned messages).
     pub fn finish(&mut self) -> Result<(Vec<f32>, u64)> {
         let mut acc = vec![0f32; self.n];
+        self.deq.resize(self.n, 0.0);
         for j in 0..self.degree {
             let bytes = self.frames[j]
                 .take()
                 .with_context(|| format!("dp ring finish before the frame from sender {j}"))?;
-            let frame = Frame::from_bytes(&bytes)?;
-            let deq = self.dec[j].decode(&self.ids, &frame)?;
-            for (a, d) in acc.iter_mut().zip(&deq) {
+            let view = FrameView::parse(&bytes)?;
+            self.dec[j].decode_into(&self.ids, &view, &mut self.deq)?;
+            for (a, d) in acc.iter_mut().zip(&self.deq) {
                 *a += d;
             }
         }

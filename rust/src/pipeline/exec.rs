@@ -373,18 +373,22 @@ struct StageWorker {
 
 impl StageWorker {
     /// Forward one microbatch over the already-decoded input activation
-    /// (None on stage 0, which reads its local shard). Returns the
-    /// activation to ship to stage+1 (None on the last stage).
-    fn fwd(&mut self, mb: usize, incoming: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+    /// (None on stage 0, which reads its local shard). `incoming` is a
+    /// borrowed view of the endpoint's decode scratch — the worker copies
+    /// it into its saved-activation slot. Returns the activation to ship
+    /// to stage+1 (None on the last stage).
+    fn fwd(&mut self, mb: usize, incoming: Option<&[f32]>) -> Result<Option<Vec<f32>>> {
         let x = if self.stage == 0 {
             self.inputs[mb].clone()
         } else {
-            incoming.with_context(|| {
-                format!(
-                    "replica {} stage {}: no forward activation for mb {mb}",
-                    self.replica, self.stage
-                )
-            })?
+            incoming
+                .with_context(|| {
+                    format!(
+                        "replica {} stage {}: no forward activation for mb {mb}",
+                        self.replica, self.stage
+                    )
+                })?
+                .to_vec()
         };
         let y = self.model.forward(&x);
         let out = (self.stage + 1 < self.n_stages).then(|| y.clone());
@@ -396,9 +400,10 @@ impl StageWorker {
     }
 
     /// Backward one microbatch. `incoming` is the decoded gradient from
-    /// stage+1 (None on the last stage, which starts from the loss).
-    /// Returns the gradient to ship to stage-1 (None on stage 0).
-    fn bwd(&mut self, mb: usize, incoming: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+    /// stage+1, borrowed from the endpoint's decode scratch (None on the
+    /// last stage, which starts from the loss). Returns the gradient to
+    /// ship to stage-1 (None on stage 0).
+    fn bwd(&mut self, mb: usize, incoming: Option<&[f32]>) -> Result<Option<Vec<f32>>> {
         let x = self.saved_x[mb].take().with_context(|| {
             format!(
                 "replica {} stage {}: backward before forward (mb {mb})",
@@ -431,12 +436,14 @@ impl StageWorker {
             self.loss_acc = Some(self.loss_acc.unwrap_or(0.0) + loss / (2.0 * n));
             g
         } else {
-            incoming.with_context(|| {
-                format!(
-                    "replica {} stage {}: no backward gradient for mb {mb}",
-                    self.replica, self.stage
-                )
-            })?
+            incoming
+                .with_context(|| {
+                    format!(
+                        "replica {} stage {}: no backward gradient for mb {mb}",
+                        self.replica, self.stage
+                    )
+                })?
+                .to_vec()
         };
         let dx = self.model.backward(&x, &y, &g);
         self.in_flight -= 1;
@@ -466,6 +473,12 @@ impl StageWorker {
 
 /// The CommPlane endpoints one (replica, stage) owns: boundary codec
 /// halves bonded to their links, plus the stage's DP ring endpoint.
+/// The endpoints persist across microbatches and steps, so every piece
+/// of encode/decode scratch they carry — the senders' [`FrameBuf`]
+/// arenas (inside [`LinkEndpointTx`]) and the receive-side activation
+/// buffers below — is warmed once and reused for the whole run.
+///
+/// [`FrameBuf`]: crate::codec::FrameBuf
 #[derive(Default)]
 struct StageEndpoints {
     fw_tx: Option<LinkEndpointTx>,
@@ -473,6 +486,10 @@ struct StageEndpoints {
     bw_tx: Option<LinkEndpointTx>,
     bw_rx: Option<LinkEndpointRx>,
     dp: Option<DpRing>,
+    /// decode scratch for incoming forward activations
+    fw_in: Vec<f32>,
+    /// decode scratch for incoming backward gradients
+    bw_in: Vec<f32>,
 }
 
 /// Build the per-replica per-stage workers: models (identically
@@ -600,7 +617,10 @@ fn exec_op(
     match op {
         Op::Fwd(mb) => {
             let incoming = match ep.fw_rx.as_mut() {
-                Some(rx) => Some(rx.recv(&w.ids[mb])?),
+                Some(rx) => {
+                    rx.recv_into(&w.ids[mb], &mut ep.fw_in)?;
+                    Some(ep.fw_in.as_slice())
+                }
                 None => None,
             };
             match w.fwd(mb, incoming)? {
@@ -616,7 +636,10 @@ fn exec_op(
         }
         Op::Bwd(mb) => {
             let incoming = match ep.bw_rx.as_mut() {
-                Some(rx) => Some(rx.recv(&w.ids[mb])?),
+                Some(rx) => {
+                    rx.recv_into(&w.ids[mb], &mut ep.bw_in)?;
+                    Some(ep.bw_in.as_slice())
+                }
                 None => None,
             };
             match w.bwd(mb, incoming)? {

@@ -63,7 +63,16 @@ impl ActivationStore for MemStore {
 
     fn put(&mut self, key: Key, value: &[f32]) {
         assert_eq!(value.len(), self.record_len);
-        self.map.insert(key, value.to_vec());
+        // overwrite in place on revisit: the steady-state codec path
+        // (every step after the first epoch) must not touch the allocator
+        match self.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().copy_from_slice(value);
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(value.to_vec());
+            }
+        }
     }
 
     fn contains(&self, key: Key) -> bool {
@@ -89,6 +98,9 @@ pub struct QuantizedMemStore {
     quant: UniformQuantizer,
     map: HashMap<Key, (Vec<u8>, f32)>,
     rng: Rng,
+    /// per-call code scratch, reused (steady-state puts/gets are
+    /// allocation-free like `MemStore`'s)
+    codes: Vec<u8>,
 }
 
 impl QuantizedMemStore {
@@ -98,6 +110,7 @@ impl QuantizedMemStore {
             quant: UniformQuantizer::new(bits, Rounding::Nearest),
             map: HashMap::new(),
             rng: Rng::new(0),
+            codes: Vec::new(),
         }
     }
 }
@@ -107,11 +120,11 @@ impl ActivationStore for QuantizedMemStore {
         match self.map.get(&key) {
             None => false,
             Some((packed, scale)) => {
-                let mut codes = vec![0u8; self.record_len];
-                pack::unpack_into(packed, self.quant.bits, &mut codes);
+                self.codes.resize(self.record_len, 0);
+                pack::unpack_into(packed, self.quant.bits, &mut self.codes);
                 out.clear();
                 out.resize(self.record_len, 0.0);
-                self.quant.decode(&codes, *scale, out);
+                self.quant.decode(&self.codes, *scale, out);
                 true
             }
         }
@@ -119,10 +132,18 @@ impl ActivationStore for QuantizedMemStore {
 
     fn put(&mut self, key: Key, value: &[f32]) {
         assert_eq!(value.len(), self.record_len);
-        let mut codes = vec![0u8; value.len()];
-        let scale = self.quant.encode(value, &mut codes, &mut self.rng);
-        let packed = pack::pack(&codes, self.quant.bits);
-        self.map.insert(key, (packed, scale));
+        self.codes.resize(value.len(), 0);
+        let scale = self.quant.encode(value, &mut self.codes, &mut self.rng);
+        match self.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let (packed, s) = e.get_mut();
+                pack::pack_into(&self.codes, self.quant.bits, packed);
+                *s = scale;
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert((pack::pack(&self.codes, self.quant.bits), scale));
+            }
+        }
     }
 
     fn contains(&self, key: Key) -> bool {

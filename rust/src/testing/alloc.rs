@@ -1,0 +1,75 @@
+//! Counting global allocator for the zero-allocation steady-state tests.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc`/`alloc_zeroed`/`realloc` call (and the bytes requested). A
+//! test binary opts in by registering it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: aq_sgd::testing::alloc::CountingAlloc = CountingAlloc::new();
+//! ```
+//!
+//! Registration is per *final binary*, so the accounting only exists in
+//! the test binaries that ask for it (`tests/zero_alloc.rs`) — the
+//! library, CLI, and benches keep the plain system allocator. A binary
+//! that measures deltas of [`allocation_count`] must run its probes on
+//! a single thread with no concurrent tests in the same process (give
+//! the test its own integration-test file).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation calls (alloc / alloc_zeroed / realloc) since process
+/// start, when a [`CountingAlloc`] is registered; 0 forever otherwise.
+pub fn allocation_count() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Bytes requested by those calls.
+pub fn allocated_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// System-allocator wrapper that counts allocation calls. Deallocation
+/// is intentionally not counted: the steady-state invariant under test
+/// is "no new memory requested", and frees pair with earlier allocs.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

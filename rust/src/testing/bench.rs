@@ -1,23 +1,60 @@
 //! Criterion-style micro-bench harness for the `[[bench]]` targets
 //! (harness = false). Auto-calibrates iteration counts, reports
-//! median/mean ns with throughput, and honours `AQ_BENCH_FAST=1` for
-//! smoke runs.
+//! median/mean ns with throughput, and supports two invocation modes:
+//!
+//!  * human: `cargo bench --bench bench_codec` — the classic text table;
+//!  * machine: `cargo bench --bench bench_codec -- --quick --json out.json`
+//!    — same table on stdout plus a JSON report ([`BenchSuite`]) the CI
+//!    `bench-diff` comparator gates against `BENCH_BASELINE.json`.
+//!
+//! `--quick` (or the `AQ_BENCH_FAST=1` env var) shrinks sampling for CI
+//! smoke runs; bench *names and problem sizes are identical* in both
+//! modes, so quick-mode JSON is comparable against any baseline.
+//!
+//! JSON schema (`schema: 1`):
+//!
+//! ```json
+//! {
+//!   "suite": "bench_codec", "schema": 1, "quick": true,
+//!   "results": [{
+//!     "name": "frame_encode/fp32/1MB", "mean_ns": 812345.5,
+//!     "median_ns": 810000.0, "stddev_ns": 4000.0,
+//!     "iters_per_sample": 13, "bytes_per_iter": 1048576,
+//!     "gb_per_s": 1.29
+//!   }]
+//! }
+//! ```
+//!
+//! `bytes_per_iter`/`gb_per_s` are `null` for time-only benches.
 
 use std::time::Instant;
 
-use crate::util::stats;
+use crate::util::error::{Context, Result};
+use crate::util::{json, stats};
 
 pub struct Bencher {
     pub samples: usize,
     pub min_sample_s: f64,
 }
 
+impl Bencher {
+    /// CI smoke-run sampling (what `--quick` / `AQ_BENCH_FAST=1` select).
+    pub fn quick() -> Self {
+        Bencher { samples: 5, min_sample_s: 0.01 }
+    }
+
+    /// Full local sampling.
+    pub fn full() -> Self {
+        Bencher { samples: 20, min_sample_s: 0.05 }
+    }
+}
+
 impl Default for Bencher {
     fn default() -> Self {
         if std::env::var("AQ_BENCH_FAST").is_ok() {
-            Bencher { samples: 5, min_sample_s: 0.01 }
+            Bencher::quick()
         } else {
-            Bencher { samples: 20, min_sample_s: 0.05 }
+            Bencher::full()
         }
     }
 }
@@ -28,9 +65,16 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub stddev_ns: f64,
     pub iters_per_sample: u64,
+    /// Payload bytes one iteration processes (throughput benches only).
+    pub bytes_per_iter: Option<u64>,
 }
 
 impl BenchResult {
+    /// Throughput in GB/s (bytes/ns), when this is a throughput bench.
+    pub fn gb_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.mean_ns)
+    }
+
     pub fn report(&self) {
         println!(
             "bench {:<42} {:>12.0} ns/iter (median {:>12.0}, ±{:.0})",
@@ -44,6 +88,21 @@ impl BenchResult {
             "bench {:<42} {:>12.0} ns/iter  {:>8.2} GB/s",
             self.name, self.mean_ns, gbs
         );
+    }
+
+    /// One JSON object of the `results` array.
+    fn to_json(&self) -> json::Json {
+        use json::Json;
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("mean_ns".into(), Json::Num(self.mean_ns)),
+            ("median_ns".into(), Json::Num(self.median_ns)),
+            ("stddev_ns".into(), Json::Num(self.stddev_ns)),
+            ("iters_per_sample".into(), Json::Num(self.iters_per_sample as f64)),
+            ("bytes_per_iter".into(), opt_num(self.bytes_per_iter.map(|b| b as f64))),
+            ("gb_per_s".into(), opt_num(self.gb_per_s())),
+        ])
     }
 }
 
@@ -82,7 +141,104 @@ impl Bencher {
             median_ns: stats::median(&samples),
             stddev_ns: stats::stddev(&samples),
             iters_per_sample: iters,
+            bytes_per_iter: None,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// A whole bench binary's run: argument parsing (`--quick`,
+/// `--json <path>`), result collection, human reporting, and the JSON
+/// report. Every `[[bench]]` target builds one of these in `main`.
+pub struct BenchSuite {
+    pub bencher: Bencher,
+    /// True in `--quick` / `AQ_BENCH_FAST` mode — bench mains may use
+    /// this to skip optional extras, but must keep names/sizes stable.
+    pub quick: bool,
+    suite: String,
+    json_path: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    /// Build from `std::env::args()`: `--quick` selects smoke sampling,
+    /// `--json <path>` requests a machine-readable report. Unrecognized
+    /// arguments (cargo's bench-filter positional, `--bench`) are
+    /// ignored so `cargo bench -- <args>` stays permissive.
+    pub fn from_args(suite: &str) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Self::from_arg_list(suite, &args)
+    }
+
+    /// Testable core of [`from_args`](Self::from_args).
+    pub fn from_arg_list(suite: &str, args: &[String]) -> Self {
+        let mut quick = std::env::var("AQ_BENCH_FAST").is_ok();
+        let mut json_path = None;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--json" => json_path = it.next().cloned(),
+                _ => {}
+            }
+        }
+        BenchSuite {
+            bencher: if quick { Bencher::quick() } else { Bencher::full() },
+            quick,
+            suite: suite.to_string(),
+            json_path,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one time-only bench; prints the human line and records the
+    /// result for the JSON report.
+    pub fn run(&mut self, name: &str, f: impl FnMut()) -> &BenchResult {
+        let r = self.bencher.run(name, f);
+        r.report();
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Run one throughput bench (`bytes_per_iter` payload bytes per
+    /// iteration); prints ns + GB/s and records both for the report.
+    pub fn run_throughput(
+        &mut self,
+        name: &str,
+        bytes_per_iter: u64,
+        f: impl FnMut(),
+    ) -> &BenchResult {
+        let mut r = self.bencher.run(name, f);
+        r.report_throughput(bytes_per_iter);
+        r.bytes_per_iter = Some(bytes_per_iter);
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    /// The JSON report document.
+    pub fn to_json(&self) -> json::Json {
+        use json::Json;
+        Json::Obj(vec![
+            ("suite".into(), Json::Str(self.suite.clone())),
+            ("schema".into(), Json::Num(1.0)),
+            ("quick".into(), Json::Bool(self.quick)),
+            (
+                "results".into(),
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Write the JSON report if `--json <path>` was given. Call at the
+    /// end of every bench `main` (a no-op in plain human mode).
+    pub fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.json_path {
+            std::fs::write(path, self.to_json().render() + "\n")
+                .with_context(|| format!("writing bench report to {path}"))?;
+            println!("bench report written to {path} ({} results)", self.results.len());
+        }
+        Ok(())
     }
 }
 
@@ -95,16 +251,54 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn bench_measures_something() {
-        std::env::set_var("AQ_BENCH_FAST", "1");
-        let b = Bencher::default();
+        let b = Bencher::quick();
         let mut acc = 0u64;
         let r = b.run("noop-ish", || {
             acc = black_box(acc.wrapping_add(1));
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.iters_per_sample > 100);
+    }
+
+    #[test]
+    fn suite_parses_args_and_renders_schema() {
+        let args: Vec<String> =
+            ["ignored-filter", "--quick", "--json", "/tmp/x.json", "--bench"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut s = BenchSuite::from_arg_list("unit", &args);
+        assert!(s.quick);
+        assert_eq!(s.json_path.as_deref(), Some("/tmp/x.json"));
+        assert_eq!(s.bencher.samples, Bencher::quick().samples);
+        let mut acc = 0u64;
+        s.run_throughput("t", 1024, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        s.run("u", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let doc = Json::parse(&s.to_json().render()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("unit"));
+        assert_eq!(doc.get("schema").unwrap().as_f64(), Some(1.0));
+        let results = doc.get("results").unwrap().as_array().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("t"));
+        assert_eq!(results[0].get("bytes_per_iter").unwrap().as_f64(), Some(1024.0));
+        assert!(results[0].get("gb_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(results[1].get("bytes_per_iter"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn suite_without_flags_is_full_mode_no_json() {
+        // NOTE: AQ_BENCH_FAST may be set by the environment; only assert
+        // the flag-driven parts
+        let s = BenchSuite::from_arg_list("unit", &[]);
+        assert!(s.json_path.is_none());
+        assert!(s.finish().is_ok());
     }
 }

@@ -2,6 +2,7 @@
 //! no proptest/criterion; these provide the same workflow), plus the
 //! artifact gate used by the integration tests.
 
+pub mod alloc;
 pub mod bench;
 pub mod prop;
 

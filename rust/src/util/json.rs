@@ -1,0 +1,419 @@
+//! Minimal first-party JSON (the offline build ships no serde): a
+//! recursive-descent parser into a small [`Json`] value tree plus a
+//! compact writer with correct string escaping. Object keys keep their
+//! input order (lookup is a linear scan — the machine-readable bench
+//! files this serves hold tens of entries, not millions).
+//!
+//! Used by the bench harness (`testing::bench::BenchSuite` writes
+//! `--json` reports) and the `bench-diff` regression comparator that
+//! gates CI on `BENCH_BASELINE.json`.
+
+use crate::util::error::Result;
+
+/// One parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// All JSON numbers parse as f64 (adequate for ns / byte counts well
+    /// below 2^53).
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Key/value pairs in input order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing non-whitespace is an
+    /// error, not silently ignored).
+    pub fn parse(text: &str) -> Result<Json> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        crate::ensure!(pos == b.len(), "trailing bytes at offset {pos} after JSON value");
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Compact serialization (round-trips through [`Json::parse`]).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => out.push_str(&fmt_number(*v)),
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Format a number the way the writer emits it: integers without a
+/// fraction, everything else via f64 `Display`. NaN/inf (not
+/// representable in JSON) render as null.
+fn fmt_number(v: f64) -> String {
+    if !v.is_finite() {
+        return "null".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// JSON string escape, appended to `out` with surrounding quotes.
+pub fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience: a quoted, escaped JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::new();
+    escape_into(s, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// parser
+// ---------------------------------------------------------------------------
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    crate::ensure!(*pos < b.len(), "unexpected end of JSON input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    crate::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad JSON literal at offset {pos}",
+        pos = *pos
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number bytes");
+    let v: f64 = s.parse().map_err(|_| crate::err!("bad JSON number {s:?} at offset {start}"))?;
+    Ok(Json::Num(v))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    crate::ensure!(
+        *pos < b.len() && b[*pos] == b'"',
+        "expected string at offset {pos}",
+        pos = *pos
+    );
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        crate::ensure!(*pos < b.len(), "unterminated JSON string");
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                crate::ensure!(*pos < b.len(), "unterminated JSON escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = parse_hex4(b, pos)?;
+                        // combine a surrogate pair; a lone surrogate maps
+                        // to the replacement character rather than erroring
+                        let c = if (0xD800..0xDC00).contains(&hi) {
+                            // peek the next escape without committing, so a
+                            // non-low-surrogate that follows is preserved
+                            let mut peek = *pos;
+                            let lo = if b[*pos + 1..].starts_with(b"\\u") {
+                                peek += 2;
+                                Some(parse_hex4(b, &mut peek)?)
+                            } else {
+                                None
+                            };
+                            match lo {
+                                Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                    *pos = peek;
+                                    let code =
+                                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(code).unwrap_or('\u{FFFD}')
+                                }
+                                // unpaired high surrogate: replace it and
+                                // leave whatever follows for the main loop
+                                _ => '\u{FFFD}',
+                            }
+                        } else {
+                            char::from_u32(hi).unwrap_or('\u{FFFD}')
+                        };
+                        out.push(c);
+                    }
+                    e => crate::bail!("bad JSON escape \\{} at offset {}", e as char, *pos),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 scalar (input is a &str, so bytes are
+                // valid UTF-8 by construction)
+                let rest = std::str::from_utf8(&b[*pos..]).expect("valid utf8 input");
+                let c = rest.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+/// Parse the 4 hex digits of a `\uXXXX` escape; `pos` points at the `u`
+/// on entry and at the last hex digit on exit.
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32> {
+    crate::ensure!(*pos + 4 < b.len(), "truncated \\u escape");
+    let s =
+        std::str::from_utf8(&b[*pos + 1..*pos + 5]).map_err(|_| crate::err!("bad \\u escape"))?;
+    let v = u32::from_str_radix(s, 16).map_err(|_| crate::err!("bad \\u escape {s:?}"))?;
+    *pos += 4;
+    Ok(v)
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        crate::ensure!(*pos < b.len(), "unterminated JSON array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            c => crate::bail!("expected ',' or ']' at offset {}, got {:?}", *pos, c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        crate::ensure!(
+            *pos < b.len() && b[*pos] == b':',
+            "expected ':' after object key at offset {pos}",
+            pos = *pos
+        );
+        *pos += 1;
+        fields.push((key, parse_value(b, pos)?));
+        skip_ws(b, pos);
+        crate::ensure!(*pos < b.len(), "unterminated JSON object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            c => crate::bail!("expected ',' or '}}' at offset {}, got {:?}", *pos, c as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_bench_schema() {
+        let doc = r#"{
+            "suite": "bench_codec",
+            "schema": 1,
+            "quick": true,
+            "results": [
+                {"name": "frame_encode/fp32/1MB", "mean_ns": 812345.5,
+                 "bytes_per_iter": 1048576, "gb_per_s": 1.29},
+                {"name": "pack/4bit/1M", "mean_ns": 2.0e5,
+                 "bytes_per_iter": null, "gb_per_s": null}
+            ]
+        }"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str(), Some("bench_codec"));
+        assert_eq!(v.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("quick").unwrap().as_bool(), Some(true));
+        let results = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str(),
+            Some("frame_encode/fp32/1MB")
+        );
+        assert_eq!(results[0].get("bytes_per_iter").unwrap().as_f64(), Some(1048576.0));
+        assert_eq!(results[1].get("bytes_per_iter"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("a \"quoted\"\nname\\path".into())),
+            ("n".into(), Json::Num(42.0)),
+            ("x".into(), Json::Num(1.5)),
+            ("flag".into(), Json::Bool(false)),
+            ("none".into(), Json::Null),
+            ("xs".into(), Json::Arr(vec![Json::Num(1.0), Json::Num(-2.25)])),
+        ]);
+        let text = v.render();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // integers render without a fraction
+        assert!(text.contains("\"n\":42,"), "{text}");
+    }
+
+    #[test]
+    fn malformed_documents_error_not_panic() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "tru", "1.2.3", "\"unterminated",
+            "{\"a\":1} trailing", "[1 2]", "\"\\q\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(
+            Json::parse(r#""\u0041\u00e9""#).unwrap(),
+            Json::Str("Aé".into())
+        );
+        // surrogate pair
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("😀".into())
+        );
+        // lone surrogate degrades to the replacement character
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap(), Json::Str("\u{FFFD}".into()));
+        // ... and what follows it is preserved, not swallowed — whether a
+        // plain character or a non-surrogate escape
+        assert_eq!(
+            Json::parse(r#""\ud800A""#).unwrap(),
+            Json::Str("\u{FFFD}A".into())
+        );
+        assert_eq!(
+            Json::parse(r#""\ud800\u0041""#).unwrap(),
+            Json::Str("\u{FFFD}A".into())
+        );
+    }
+}

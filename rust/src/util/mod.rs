@@ -2,6 +2,7 @@
 //! serde / clap / anyhow; everything here replaces those).
 pub mod error;
 pub mod fmt;
+pub mod json;
 pub mod kv;
 pub mod rng;
 pub mod stats;

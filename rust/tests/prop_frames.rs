@@ -2,10 +2,13 @@
 //! scheme, (1) the serialized wire path decodes bit-identically to the
 //! in-memory path, (2) wire accounting equals the actual serialized
 //! buffer lengths, (3) sender/receiver replica state stays symmetric
-//! across rounds, and (4) malformed frames are errors, never panics.
+//! across rounds, (4) malformed frames are errors, never panics, and
+//! (5) the scratch hot path (`encode_into`/`FrameView`/`decode_into`)
+//! is byte- and state-identical to the allocating path.
 
 use aq_sgd::codec::frame::{
-    Frame, FRAME_PRELUDE_BYTES, TAG_AQ, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK,
+    Frame, FrameBuf, FrameView, FRAME_PRELUDE_BYTES, TAG_AQ, TAG_DIRECTQ, TAG_F16, TAG_RAW32,
+    TAG_TOPK,
 };
 use aq_sgd::codec::registry::{build_mem_pair, example_specs, CodecSpec};
 use aq_sgd::codec::{Rounding, SchemeSpec};
@@ -171,6 +174,77 @@ fn prop_mutated_frames_error_never_panic_or_overallocate() {
                 assert_eq!(out.len(), el * n_ex, "bit flip at {pos} changed the output shape");
             }
         }
+    });
+}
+
+#[test]
+fn prop_scratch_path_bit_identical_to_allocating_path() {
+    // twin codec pairs with identical seeds: one driven through the
+    // owned-Frame API, one through FrameBuf/FrameView + decode_into.
+    // Serialized images, outputs, and replica state must agree bit for
+    // bit, round after round — the refactor is wire-invariant by
+    // construction.
+    let schemes = all_schemes();
+    Prop::check("scratch == allocating", |rng| {
+        let scheme = schemes[rng.below(schemes.len())].clone();
+        let el = len_in(rng, 1, 96);
+        let n_ex = len_in(rng, 1, 3);
+        let seed = rng.next_u64();
+        let (mut enc_a, mut dec_a) = build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap();
+        let (mut enc_b, mut dec_b) = build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap();
+        let ids: Vec<u64> = (0..n_ex as u64).collect();
+        let mut a = vec_f32(rng, el * n_ex, 1.0);
+        let mut buf = FrameBuf::new();
+        let mut out_b = vec![0f32; el * n_ex];
+        for round in 0..4 {
+            let frame = enc_a.encode(&ids, &a).unwrap();
+            enc_b.encode_into(&ids, &a, &mut buf).unwrap();
+            assert_eq!(
+                buf.as_bytes(),
+                frame.to_bytes().as_slice(),
+                "round {round}: scratch image diverged from Frame serialization"
+            );
+            assert_eq!(buf.wire_bytes(), frame.wire_bytes());
+            let out_a = dec_a.decode(&ids, &frame).unwrap();
+            let view = FrameView::parse(buf.as_bytes()).unwrap();
+            dec_b.decode_into(&ids, &view, &mut out_b).unwrap();
+            assert_eq!(out_a, out_b, "round {round}: scratch decode diverged");
+            assert_eq!(enc_a.state_bytes(), enc_b.state_bytes(), "round {round}");
+            assert_eq!(dec_a.state_bytes(), dec_b.state_bytes(), "round {round}");
+            for v in a.iter_mut() {
+                *v += 0.01 * rng.normal();
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_frameview_short_buffers_error_before_the_split() {
+    // the Frame::parse length-handling pin: the prelude's claimed
+    // lengths are validated against the actual slice before any split,
+    // so a short buffer is an Err, never a panic — on both parse paths
+    let schemes = all_schemes();
+    Prop::check("frameview short buffers", |rng| {
+        let scheme = schemes[rng.below(schemes.len())].clone();
+        let el = len_in(rng, 1, 64);
+        let (mut enc, _) = build_mem_pair(&scheme, el, Rounding::Nearest, 5).unwrap();
+        let a = vec_f32(rng, el, 1.0);
+        let bytes = enc.encode(&[0], &a).unwrap().to_bytes();
+        // any strict prefix must error (the claimed total exceeds it)
+        let cut = rng.below(bytes.len());
+        assert!(FrameView::parse(&bytes[..cut]).is_err(), "prefix {cut} parsed");
+        assert!(Frame::from_bytes(&bytes[..cut]).is_err(), "prefix {cut} parsed (owned)");
+        // a hostile prelude claiming max header + payload over a short
+        // buffer must also error (no usize overflow on any platform)
+        let mut evil = bytes[..FRAME_PRELUDE_BYTES].to_vec();
+        evil[1..3].copy_from_slice(&u16::MAX.to_le_bytes());
+        evil[3..7].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(FrameView::parse(&evil).is_err());
+        // a valid image parses identically through both paths
+        let v = FrameView::parse(&bytes).unwrap();
+        let f = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(v.to_frame(), f);
+        assert_eq!(v.wire_bytes(), f.wire_bytes());
     });
 }
 

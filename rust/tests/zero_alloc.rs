@@ -1,0 +1,73 @@
+//! The zero-allocation steady-state pin (tier-1): after warm-up, one
+//! full codec-path round — `encode_into` building the serialized frame
+//! in a reused `FrameBuf`, `FrameView::parse` borrowing it, and
+//! `decode_into` reconstructing into a caller buffer — performs ZERO
+//! heap allocations, for the paper's main schemes (fp32 baseline,
+//! AQ-SGD activations fw2/bw4, and the EF DirectQ gradient compressor).
+//!
+//! This is the mechanism behind the paper's "no additional end-to-end
+//! runtime overhead" claim (§6): encode+pack must run well above
+//! network speed, and per-message allocation/free traffic is exactly
+//! the kind of overhead gradient-compression system studies (Zhang et
+//! al.) found erasing end-to-end speedups.
+//!
+//! IMPORTANT: this file must stay a single-`#[test]` integration test.
+//! The counting allocator is process-global, so a sibling test running
+//! concurrently would perturb the measured deltas.
+
+use aq_sgd::codec::frame::{FrameBuf, FrameView};
+use aq_sgd::codec::registry::build_mem_pair;
+use aq_sgd::codec::{CodecSpec, Rounding};
+use aq_sgd::testing::alloc::{allocation_count, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_codec_path_is_allocation_free() {
+    let el = 96usize;
+    let n_ex = 4usize;
+    let ids: Vec<u64> = (0..n_ex as u64).collect();
+    for spec in ["fp32", "aqsgd:fw2bw4", "ef:directq:fw4bw4"] {
+        let cs = CodecSpec::parse(spec).unwrap();
+        for (dir, scheme) in [("fw", &cs.fw), ("bw", &cs.bw)] {
+            let (mut enc, mut dec) = build_mem_pair(scheme, el, Rounding::Nearest, 42).unwrap();
+            let mut a: Vec<f32> = (0..el * n_ex).map(|i| (i as f32 * 0.37).sin()).collect();
+            let mut buf = FrameBuf::new();
+            let mut out = vec![0f32; el * n_ex];
+
+            // warm-up: first-visit records populate buffer stores and EF
+            // residuals, scratch vectors and the frame arena reach their
+            // steady-state capacities
+            for _ in 0..4 {
+                drift(&mut a);
+                enc.encode_into(&ids, &a, &mut buf).unwrap();
+                let view = FrameView::parse(buf.as_bytes()).unwrap();
+                dec.decode_into(&ids, &view, &mut out).unwrap();
+            }
+
+            // steady state: encode + serialize-in-place + parse + decode,
+            // several rounds, zero allocator calls
+            let before = allocation_count();
+            for _ in 0..8 {
+                drift(&mut a);
+                enc.encode_into(&ids, &a, &mut buf).unwrap();
+                let view = FrameView::parse(buf.as_bytes()).unwrap();
+                dec.decode_into(&ids, &view, &mut out).unwrap();
+            }
+            let allocs = allocation_count() - before;
+            assert_eq!(
+                allocs, 0,
+                "{spec}/{dir}: {allocs} heap allocations in 8 steady-state rounds"
+            );
+        }
+    }
+}
+
+/// Small in-place drift, like a stabilizing model's activations — keeps
+/// AQ emitting delta records without touching the allocator itself.
+fn drift(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        *v += 1.0e-4;
+    }
+}
