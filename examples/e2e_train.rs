@@ -6,10 +6,11 @@
 //!     (cd python && python -m compile.aot --out-dir ../artifacts) && cargo run --release --example e2e_train
 //!
 //! Flags: --model small|e2e  --steps N  --compression SPEC  --bandwidth B
-//!        --executor threads|sim
+//!        --executor threads|events|sim  --workers N
 //!
-//! With `--executor threads` the run goes through the *real* threaded
-//! pipeline runtime (`pipeline::exec`): one worker thread per stage,
+//! With `--executor threads` (one worker thread per stage) or
+//! `--executor events` (fixed worker pool over a run queue, `--workers`)
+//! the run goes through the *real* pipeline runtime (`pipeline::exec`):
 //! serialized frames over channel links, first-party stage compute — no
 //! AOT artifacts needed — and the loss/wire trajectory is cross-checked
 //! bit-for-bit against the virtual-clock oracle.
@@ -24,14 +25,16 @@ use aq_sgd::pipeline::Executor;
 use aq_sgd::runtime::Manifest;
 use aq_sgd::util::fmt;
 
-/// The artifact-free path: threaded executor vs virtual-clock oracle.
-fn run_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
+/// The artifact-free path: real executor (threads or events) vs
+/// virtual-clock oracle.
+fn run_executor(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     let stages = cli.usize("stages", 4)?;
     let el = cli.usize("el", 64)?;
     let micro_b = cli.usize("micro-batch", 2)?;
     let steps = cfg.total_steps; // --steps (default 300) — honoured as given
     println!(
-        "e2e (threads): stages={stages} n_micro={} el={el} compression={} bandwidth={}",
+        "e2e ({}): stages={stages} n_micro={} el={el} compression={} bandwidth={}",
+        cfg.executor.label(),
         cfg.n_micro,
         cfg.compression.label(),
         fmt::bandwidth(cfg.bandwidth_bps)
@@ -56,7 +59,11 @@ fn run_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     println!("\n== summary ==");
     println!("steps            {}", real.steps.len());
     println!("final train loss {:.5}", real.steps.last().map(|r| r.loss).unwrap_or(f32::NAN));
-    println!("wall time        {} (threads + oracle)", fmt::duration_s(wall));
+    println!(
+        "wall time        {} ({} + oracle)",
+        fmt::duration_s(wall),
+        cfg.executor.label()
+    );
     println!(
         "determinism      trajectory vs virtual-clock oracle: {}",
         if identical { "bit-identical" } else { "DIVERGED (bug!)" }
@@ -78,10 +85,11 @@ fn main() -> Result<()> {
     cfg.bandwidth_bps = parse_bandwidth(&cli.str("bandwidth", "500mbps"))?;
     cfg.dataset = cli.str("dataset", "markov");
     cfg.executor = Executor::parse(&cli.str("executor", "sim"))?;
+    cfg.workers = cli.usize("workers", cfg.workers)?;
     cfg.schedule = aq_sgd::pipeline::Schedule::parse(&cli.str("schedule", "gpipe"))?;
 
-    if cfg.executor == Executor::Threads {
-        return run_threads(&cli, &cfg);
+    if cfg.executor != Executor::Sim {
+        return run_executor(&cli, &cfg);
     }
 
     let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;

@@ -10,13 +10,15 @@
 //!
 //!     cargo run --release --example table2_throughput [-- --deberta]
 //!     cargo run --release --example table2_throughput -- --executor threads
+//!     cargo run --release --example table2_throughput -- --executor events --workers 4
 //!
-//! `--executor threads` swaps the analytic sweep for the *real* threaded
-//! pipeline runtime on a scaled-down regime: worker threads exchange
+//! `--executor threads` (or `events`) swaps the analytic sweep for the
+//! *real* pipeline runtime on a scaled-down regime: workers exchange
 //! actual codec frames over bandwidth-paced channel links, and measured
 //! wall step times are printed next to the virtual-clock oracle's
 //! prediction for the same run (the Table 2 shape — FP32 collapsing with
 //! bandwidth while AQ-SGD holds — reproduced with real concurrency).
+//! `events` runs the same sweep on the fixed worker pool (`--workers`).
 
 use aq_sgd::util::error::Result;
 
@@ -43,12 +45,12 @@ fn throughput(regime: &PaperRegime, c: &CodecSpec, bandwidth_bps: f64) -> f64 {
     PipelineSim::run(&cfg).throughput(regime.n_micro, regime.micro_batch)
 }
 
-/// Scaled-down Table 2 on the real threaded runtime: 4 stages, 8
-/// microbatches of 1 x 16Ki elements (64 KB fp32 boundary messages), so
-/// a full bandwidth-ladder sweep finishes in seconds while the link
-/// pacing still dominates FP32 at the slow end.
-fn run_threads_sweep() -> Result<()> {
-    println!("Table 2 (scaled, real threaded executor): mean wall step time\n");
+/// Scaled-down Table 2 on the real runtime (threads or events): 4
+/// stages, 8 microbatches of 1 x 16Ki elements (64 KB fp32 boundary
+/// messages), so a full bandwidth-ladder sweep finishes in seconds while
+/// the link pacing still dominates FP32 at the slow end.
+fn run_real_sweep(executor: Executor, workers: usize) -> Result<()> {
+    println!("Table 2 (scaled, real {} executor): mean wall step time\n", executor.label());
     let mut t = Table::new(&["Network", "scheme", "wall step", "oracle step", "fw wire/step"]);
     for (bw, label) in PAPER_BANDWIDTHS {
         for spec in ["fp32", "aqsgd:fw4bw8", "aqsgd:fw2bw4"] {
@@ -61,7 +63,8 @@ fn run_threads_sweep() -> Result<()> {
             cfg.bandwidth_bps = bw;
             cfg.fwd_s = 0.002;
             cfg.bwd_s = 0.006;
-            let real = exec::run(&cfg, Executor::Threads)?;
+            cfg.workers = workers;
+            let real = exec::run(&cfg, executor)?;
             let oracle = exec::run(&cfg, Executor::Sim)?;
             // steady state (skip step 0: AQ's first epoch is full precision)
             let mean = |v: &[f64]| v[1..].iter().sum::<f64>() / (v.len() - 1) as f64;
@@ -83,8 +86,9 @@ fn run_threads_sweep() -> Result<()> {
 
 fn main() -> Result<()> {
     let cli = Cli::from_env();
-    if Executor::parse(&cli.str("executor", "sim"))? == Executor::Threads {
-        return run_threads_sweep();
+    let executor = Executor::parse(&cli.str("executor", "sim"))?;
+    if executor != Executor::Sim {
+        return run_real_sweep(executor, cli.usize("workers", 4)?);
     }
     // GPT2-1.5B LM regime (Table 2) by default; --deberta switches to the
     // classification regime (Table 5 left: seq 256, micro-batch 8, lighter

@@ -1,11 +1,14 @@
 //! Executor throughput: the virtual-clock numeric executor vs the real
-//! threaded runtime on the same config, across schedules and codecs.
-//! §Perf target: the threaded runtime's overhead (threads + channels +
+//! threaded runtime vs the event (worker-pool) runtime on the same
+//! config, across schedules and codecs.
+//! §Perf target: the real runtimes' overhead (threads/pool + channels +
 //! frame serialization) stays within the same order of magnitude as the
-//! single-threaded numeric path at test-sized configs.
+//! single-threaded numeric path at test-sized configs, and the event
+//! executor holds that at topologies where thread-per-stage would need
+//! an order of magnitude more OS threads.
 
 use aq_sgd::codec::CodecSpec;
-use aq_sgd::pipeline::exec::{run_threads, run_virtual, ExecConfig};
+use aq_sgd::pipeline::exec::{run_events, run_threads, run_virtual, ExecConfig};
 use aq_sgd::pipeline::Schedule;
 use aq_sgd::testing::bench::{black_box, BenchSuite};
 
@@ -24,6 +27,19 @@ fn cfg(spec: &str, schedule: Schedule) -> ExecConfig {
     c
 }
 
+/// The scale case: 64 stage tasks, where the executors' structural
+/// difference (64 OS threads vs a 4-worker pool) actually shows.
+fn large_cfg() -> ExecConfig {
+    let mut c = cfg("aqsgd:fw2bw4", Schedule::OneFOneB);
+    c.n_stages = 64;
+    c.n_micro = 2;
+    c.micro_batch = 1;
+    c.example_len = 16;
+    c.steps = 1;
+    c.workers = 4;
+    c
+}
+
 fn main() {
     let mut s = BenchSuite::from_args("bench_exec");
     for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
@@ -35,8 +51,23 @@ fn main() {
             s.run(&format!("exec/threads/{spec}/{schedule:?}"), || {
                 black_box(run_threads(&c).unwrap());
             });
+            s.run(&format!("exec/events/{spec}/{schedule:?}"), || {
+                black_box(run_events(&c).unwrap());
+            });
         }
     }
+
+    // large topology: virtual vs threads vs a 4-worker event pool
+    let lc = large_cfg();
+    s.run("exec/large64/virtual", || {
+        black_box(run_virtual(&lc).unwrap());
+    });
+    s.run("exec/large64/threads", || {
+        black_box(run_threads(&lc).unwrap());
+    });
+    s.run("exec/large64/events-w4", || {
+        black_box(run_events(&lc).unwrap());
+    });
 
     // wire volume per step at bench size, for the report's context
     let c = cfg("aqsgd:fw2bw4", Schedule::GPipe);

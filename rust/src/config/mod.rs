@@ -103,9 +103,14 @@ pub struct TrainConfig {
     pub latency_s: f64,
     pub schedule: Schedule,
     /// Pipeline runtime: `Sim` (single-threaded, virtual-clock time
-    /// accounting) or `Threads` (one worker thread per stage exchanging
-    /// serialized frames — see `pipeline::exec`).
+    /// accounting), `Threads` (one worker thread per stage exchanging
+    /// serialized frames), or `Events` (a fixed worker pool driving
+    /// ready stages off a run queue — see `pipeline::exec`).
     pub executor: Executor,
+    /// Worker-pool size for the event executor (`--workers`); ignored by
+    /// the other executors. Any pool size yields the identical numeric
+    /// trajectory — this only trades parallelism against thread count.
+    pub workers: usize,
     /// Data-parallel degree (gradient averaging across replicas).
     pub dp_degree: usize,
     /// Gradient codec for the DP ring (`--dp-codec`, same registry
@@ -140,6 +145,7 @@ impl TrainConfig {
             latency_s: 1e-4,
             schedule: Schedule::GPipe,
             executor: Executor::Sim,
+            workers: 4,
             dp_degree: 1,
             dp_codec: CodecSpec::fp32(),
             dataset: "markov".to_string(),
@@ -169,6 +175,7 @@ impl TrainConfig {
         c.latency_s = cli.f64("latency-ms", 0.1)? / 1e3;
         c.schedule = Schedule::parse(&cli.str("schedule", "gpipe"))?;
         c.executor = Executor::parse(&cli.str("executor", "sim"))?;
+        c.workers = cli.usize("workers", c.workers)?;
         c.dp_degree = cli.usize("dp", 1)?;
         c.dp_codec = match cli.flags.get("dp-codec") {
             Some(spec) => CodecSpec::parse(spec)?,
@@ -248,5 +255,11 @@ mod tests {
         assert_eq!(c.executor, Executor::Threads);
         assert_eq!(c.schedule, Schedule::OneFOneB);
         assert!(TrainConfig::from_cli(&cli("--executor gpu")).is_err());
+        let c = TrainConfig::from_cli(&cli("--executor events --workers 2")).unwrap();
+        assert_eq!(c.executor, Executor::Events);
+        assert_eq!(c.workers, 2);
+        // pool size defaults sanely when --workers is omitted
+        assert_eq!(TrainConfig::from_cli(&cli("--executor events")).unwrap().workers, 4);
+        assert!(TrainConfig::from_cli(&cli("--workers four")).is_err());
     }
 }

@@ -52,7 +52,7 @@ pub fn run_variant(cfg: TrainConfig, label: &str) -> Result<RunResult> {
 }
 
 /// Run the self-contained pipeline executor the config names
-/// (`--executor threads|sim`, see `pipeline::exec`) *and* the
+/// (`--executor threads|events|sim`, see `pipeline::exec`) *and* the
 /// virtual-clock oracle on the same shape; returns `(real, oracle)`.
 /// First-party stage compute + registry codecs, so it needs no AOT
 /// artifacts and no PJRT backend; the pipeline shape — normally dictated
@@ -79,7 +79,8 @@ pub fn run_executor_with_oracle(
 pub fn check_matches_oracle(real: &ExecTrace, oracle: &ExecTrace) -> Result<()> {
     crate::ensure!(
         real.bit_identical(oracle),
-        "threaded executor diverged from the virtual-clock oracle"
+        "{} executor diverged from the virtual-clock oracle",
+        real.executor.label()
     );
     Ok(())
 }

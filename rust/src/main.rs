@@ -35,10 +35,14 @@ train flags:
   --bandwidth B           e.g. 100mbps, 10gbps (simulated-time accounting)
   --schedule S            gpipe | 1f1b
   --executor E            sim (virtual-clock trainer, default) | threads
-                          (one worker thread per stage over channel links;
-                          self-contained — needs no artifacts)
+                          (one worker thread per stage over channel links) |
+                          events (fixed worker pool over a run queue; both
+                          self-contained — need no artifacts)
+  --workers N             worker-pool size for --executor events (default 4;
+                          any pool size gives the identical trajectory)
   --stages K --el N --micro-batch B
-                          pipeline shape for --executor threads (default 4/64/2)
+                          pipeline shape for --executor threads|events
+                          (default 4/64/2)
   --dp N                  data-parallel replicas (ring gradient exchange)
   --dp-codec SPEC         DP gradient codec, same grammar as --compression
                           (ef:directq:fw4bw4 = Fig. 5's error-compensated
@@ -54,8 +58,8 @@ train flags:
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     let cfg = TrainConfig::from_cli(cli)?;
-    if cfg.executor == aq_sgd::pipeline::Executor::Threads {
-        return cmd_train_threads(cli, &cfg);
+    if cfg.executor != aq_sgd::pipeline::Executor::Sim {
+        return cmd_train_executor(cli, &cfg);
     }
     let man = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
     let data = make_dataset(&cfg, &man)?;
@@ -87,17 +91,19 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// `--executor threads`: run the self-contained threaded pipeline
-/// (first-party stage model + registry codecs over channel links) and
-/// cross-check its loss/wire trajectory against the virtual-clock twin.
-fn cmd_train_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
+/// `--executor threads|events`: run the self-contained real-numerics
+/// pipeline (first-party stage model + registry codecs over channel
+/// links — thread-per-stage or worker-pool run queue) and cross-check
+/// its loss/wire trajectory against the virtual-clock twin.
+fn cmd_train_executor(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     let stages = cli.usize("stages", 4)?;
     let el = cli.usize("el", 64)?;
     let micro_b = cli.usize("micro-batch", 2)?;
     let steps = if cfg.total_steps == usize::MAX { 20 } else { cfg.total_steps };
     println!(
-        "executor=threads stages={stages} n_micro={} micro_batch={micro_b} el={el} \
+        "executor={} stages={stages} n_micro={} micro_batch={micro_b} el={el} \
          compression={} dp={} dp_codec={} schedule={:?} bandwidth={}",
+        cfg.executor.label(),
         cfg.n_micro,
         cfg.compression.label(),
         cfg.dp_degree,
@@ -125,8 +131,9 @@ fn cmd_train_threads(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     print!("{}", t.render());
     let identical = real.bit_identical(&oracle);
     println!(
-        "wall time {} (threads + oracle) — trajectory vs virtual-clock oracle: {}",
+        "wall time {} ({} + oracle) — trajectory vs virtual-clock oracle: {}",
         fmt::duration_s(wall),
+        cfg.executor.label(),
         if identical { "bit-identical" } else { "DIVERGED (bug!)" }
     );
     exp::check_matches_oracle(&real, &oracle)

@@ -1,4 +1,5 @@
-//! Channel-backed frame transport for the threaded pipeline executor.
+//! Channel-backed frame transport for the threaded and event pipeline
+//! executors.
 //!
 //! A [`FrameLink`] is the sending endpoint of one directed pipeline
 //! boundary (stage s → neighbour): it owns a [`RealLink`] carrying
@@ -12,15 +13,81 @@
 //! the modeled delivery instant and turns a disconnected peer (a worker
 //! thread that exited early) into a `Result` error instead of a hang or
 //! a panic.
+//!
+//! Two extensions serve the event executor and the zero-allocation pin:
+//!
+//!  * **Poll readiness** — [`FrameLinkRx::poll`] reports whether the
+//!    next frame is deliverable *now*, still in modeled flight (with its
+//!    delivery instant, so a scheduler can set a timer), absent, or the
+//!    peer is gone — without ever parking the caller. A frame pulled off
+//!    the channel by a poll is stashed, and a subsequent `recv` consumes
+//!    the stash under the exact pacing/accounting contract the blocking
+//!    path has always had.
+//!  * **Buffer recycling** — the two halves share a bounded pool of
+//!    frame buffers: [`FrameLink::send_from`] copies a borrowed byte
+//!    image into a pooled buffer instead of forcing the caller to
+//!    allocate an owned `Vec` per frame, and [`FrameLinkRx::recv_held`]
+//!    lends the received frame out while returning the previously lent
+//!    buffer to the pool. In steady state the same few buffers circulate
+//!    sender → channel → receiver → pool with zero allocator traffic
+//!    (pinned by `tests/zero_alloc.rs`).
+//!
+//! A [`Doorbell`] installed on the sending half fires after each frame
+//! is enqueued — the event executor's run queue uses it to mark the
+//! receiving task runnable instead of dedicating a blocked thread to it.
 
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use super::{RealLink, RealReceiver};
+use super::{RealLink, RealReceiver, TryRecv};
 use crate::util::error::Result;
+
+/// Callback fired by the sending half after each frame is enqueued
+/// (after the channel notify — the woken side's poll will see the
+/// frame). The event executor installs one per link to requeue the
+/// receiving task.
+pub type Doorbell = Arc<dyn Fn() + Send + Sync>;
+
+/// Readiness of a [`FrameLinkRx`], reported without parking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Poll {
+    /// The next frame has reached its modeled delivery instant; `recv`
+    /// will return it without sleeping.
+    Ready,
+    /// No frame queued (the peer has not sent yet).
+    Empty,
+    /// A frame is queued but still in modeled flight; deliverable at the
+    /// carried instant.
+    InFlight(Instant),
+    /// The peer dropped its sending half; `recv` would error.
+    Closed,
+}
+
+/// Bounded pool of recycled frame buffers shared by a link's two halves.
+type BufPool = Arc<Mutex<Vec<Vec<u8>>>>;
+
+/// Buffers retained per link; beyond this, returned buffers are freed.
+/// The executors keep at most a handful of frames in flight per link, so
+/// a small cap bounds memory without ever recycling in steady state.
+const POOL_CAP: usize = 32;
+
+fn pool_lock(pool: &BufPool) -> std::sync::MutexGuard<'_, Vec<Vec<u8>>> {
+    pool.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn recycle(pool: &BufPool, mut buf: Vec<u8>) {
+    buf.clear();
+    let mut p = pool_lock(pool);
+    if p.len() < POOL_CAP {
+        p.push(buf);
+    }
+}
 
 /// Sending half of one directed boundary link.
 pub struct FrameLink {
     link: RealLink<Vec<u8>>,
+    pool: BufPool,
+    doorbell: Option<Doorbell>,
     /// Serialized frame bytes pushed onto this link (the transport's
     /// own accounting; equals the frame-measured trajectory sums).
     pub bytes_sent: u64,
@@ -30,13 +97,29 @@ pub struct FrameLink {
 /// Receiving half of one directed boundary link.
 pub struct FrameLinkRx {
     rx: RealReceiver<Vec<u8>>,
+    pool: BufPool,
+    /// Next frame pulled off the channel by a poll but not yet consumed
+    /// by a receive.
+    stash: Option<(Instant, Vec<u8>)>,
+    /// Buffer currently lent to the caller by [`recv_held`](Self::recv_held).
+    held: Option<Vec<u8>>,
 }
 
 /// Build one directed link: (sender for the upstream stage, receiver for
 /// the downstream stage).
 pub fn frame_link(bandwidth_bps: f64, latency: Duration) -> (FrameLink, FrameLinkRx) {
     let (link, rx) = RealLink::channel(bandwidth_bps, latency);
-    (FrameLink { link, bytes_sent: 0, msgs_sent: 0 }, FrameLinkRx { rx })
+    let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+    (
+        FrameLink {
+            link,
+            pool: Arc::clone(&pool),
+            doorbell: None,
+            bytes_sent: 0,
+            msgs_sent: 0,
+        },
+        FrameLinkRx { rx, pool, stash: None, held: None },
+    )
 }
 
 impl FrameLink {
@@ -48,18 +131,87 @@ impl FrameLink {
         self.msgs_sent += 1;
         let n = bytes.len() as u64;
         self.link.send(bytes, n);
+        if let Some(bell) = &self.doorbell {
+            bell();
+        }
+    }
+
+    /// Send a borrowed frame image, copying it into a recycled buffer
+    /// from the link's pool — the allocation-free steady-state send path
+    /// (the pool refills as the receiver releases held buffers).
+    pub fn send_from(&mut self, bytes: &[u8]) {
+        let mut buf = pool_lock(&self.pool).pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(bytes);
+        self.send(buf);
+    }
+
+    /// Install the wakeup fired after each enqueued frame.
+    pub fn set_doorbell(&mut self, bell: Doorbell) {
+        self.doorbell = Some(bell);
     }
 }
 
 impl FrameLinkRx {
-    /// Blocking receive honouring the modeled delivery time. A closed
-    /// channel means the peer stage's worker exited (error or panic)
-    /// before sending — surfaced as an error so the whole pipeline
-    /// unwinds instead of deadlocking.
-    pub fn recv(&self) -> Result<Vec<u8>> {
-        self.rx
-            .recv()
-            .ok_or_else(|| crate::err!("pipeline channel closed: peer stage exited early"))
+    fn closed_err() -> crate::util::error::Error {
+        crate::err!("pipeline channel closed: peer stage exited early")
+    }
+
+    /// Non-blocking readiness probe. Pulls at most one frame off the
+    /// channel into the stash; never sleeps.
+    pub fn poll(&mut self) -> Poll {
+        if self.stash.is_none() {
+            match self.rx.try_recv() {
+                TryRecv::Msg(at, bytes) => self.stash = Some((at, bytes)),
+                TryRecv::Empty => return Poll::Empty,
+                TryRecv::Closed => return Poll::Closed,
+            }
+        }
+        let at = self.stash.as_ref().map(|&(at, _)| at).expect("stash populated above");
+        if Instant::now() >= at {
+            Poll::Ready
+        } else {
+            Poll::InFlight(at)
+        }
+    }
+
+    /// Non-blocking receive: the next frame if it has reached its
+    /// delivery instant, `None` while the link is empty or the frame is
+    /// still in modeled flight, an error once the peer is gone.
+    pub fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.poll() {
+            Poll::Ready => Ok(Some(self.stash.take().expect("polled Ready").1)),
+            Poll::Empty | Poll::InFlight(_) => Ok(None),
+            Poll::Closed => Err(Self::closed_err()),
+        }
+    }
+
+    /// Blocking receive honouring the modeled delivery time (consumes a
+    /// stashed frame first, sleeping out any residual flight time). A
+    /// closed channel means the peer stage's worker exited (error or
+    /// panic) before sending — surfaced as an error so the whole
+    /// pipeline unwinds instead of deadlocking.
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        if let Some((at, bytes)) = self.stash.take() {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+            return Ok(bytes);
+        }
+        self.rx.recv().ok_or_else(Self::closed_err)
+    }
+
+    /// Blocking receive that lends the frame until the next `recv_held`
+    /// call, recycling the previously lent buffer into the link's pool —
+    /// the sender's `send_from` picks it up, closing the
+    /// zero-allocation circulation loop.
+    pub fn recv_held(&mut self) -> Result<&[u8]> {
+        let bytes = self.recv()?;
+        if let Some(prev) = self.held.replace(bytes) {
+            recycle(&self.pool, prev);
+        }
+        Ok(self.held.as_deref().expect("held just set"))
     }
 }
 
@@ -69,7 +221,7 @@ mod tests {
 
     #[test]
     fn frames_arrive_in_order_with_byte_accounting() {
-        let (mut tx, rx) = frame_link(1e12, Duration::ZERO);
+        let (mut tx, mut rx) = frame_link(1e12, Duration::ZERO);
         tx.send(vec![1, 2, 3]);
         tx.send(vec![4, 5]);
         assert_eq!(tx.bytes_sent, 5);
@@ -80,9 +232,79 @@ mod tests {
 
     #[test]
     fn dropped_sender_is_an_error_not_a_hang() {
-        let (tx, rx) = frame_link(1e12, Duration::ZERO);
+        let (tx, mut rx) = frame_link(1e12, Duration::ZERO);
         drop(tx);
         let err = rx.recv().unwrap_err();
         assert!(err.to_string().contains("channel closed"), "{err}");
+    }
+
+    #[test]
+    fn poll_then_recv_preserves_order_and_accounting() {
+        let (mut tx, mut rx) = frame_link(1e12, Duration::ZERO);
+        assert_eq!(rx.poll(), Poll::Empty);
+        tx.send(vec![1]);
+        tx.send(vec![2]);
+        // poll stashes the head frame; recv consumes stash then channel
+        assert_eq!(rx.poll(), Poll::Ready);
+        assert_eq!(rx.recv().unwrap(), vec![1]);
+        assert_eq!(rx.recv().unwrap(), vec![2]);
+        assert_eq!(rx.poll(), Poll::Empty);
+        drop(tx);
+        assert_eq!(rx.poll(), Poll::Closed);
+    }
+
+    #[test]
+    fn poll_reports_in_flight_with_a_deadline() {
+        let (mut tx, mut rx) = frame_link(8e6, Duration::ZERO); // 1 MB/s
+        tx.send(vec![0u8; 20_000]); // 20 ms of modeled flight
+        match rx.poll() {
+            Poll::InFlight(at) => assert!(at > Instant::now()),
+            p => panic!("expected InFlight, got {p:?}"),
+        }
+        // blocking recv still honours the pacing
+        let t0 = Instant::now();
+        assert_eq!(rx.recv().unwrap().len(), 20_000);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn try_recv_skips_in_flight_frames_and_errors_when_closed() {
+        let (mut tx, mut rx) = frame_link(8e6, Duration::ZERO);
+        assert!(rx.try_recv().unwrap().is_none());
+        tx.send(vec![0u8; 20_000]);
+        assert!(rx.try_recv().unwrap().is_none(), "in-flight frame must not surface");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(rx.try_recv().unwrap().unwrap().len(), 20_000);
+        drop(tx);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn send_from_recycles_buffers_through_the_pool() {
+        let (mut tx, mut rx) = frame_link(1e12, Duration::ZERO);
+        for round in 0..5u8 {
+            tx.send_from(&[round; 16]);
+            let got = rx.recv_held().unwrap();
+            assert_eq!(got, [round; 16]);
+        }
+        assert_eq!(tx.bytes_sent, 5 * 16);
+        // the previously held buffer went back to the pool each round
+        assert!(!pool_lock(&tx.pool).is_empty());
+    }
+
+    #[test]
+    fn doorbell_fires_once_per_send() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let (mut tx, mut rx) = frame_link(1e12, Duration::ZERO);
+        let rings = Arc::new(AtomicUsize::new(0));
+        let counter = Arc::clone(&rings);
+        tx.set_doorbell(Arc::new(move || {
+            counter.fetch_add(1, Ordering::SeqCst);
+        }));
+        tx.send(vec![1]);
+        tx.send_from(&[2, 3]);
+        assert_eq!(rings.load(Ordering::SeqCst), 2);
+        assert_eq!(rx.recv().unwrap(), vec![1]);
+        assert_eq!(rx.recv().unwrap(), vec![2, 3]);
     }
 }

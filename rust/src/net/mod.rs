@@ -12,10 +12,11 @@
 pub mod channel;
 pub mod plane;
 
-pub use channel::{frame_link, FrameLink, FrameLinkRx};
+pub use channel::{frame_link, Doorbell, FrameLink, FrameLinkRx, Poll};
 pub use plane::{dp_rings, link_endpoints, DpRing, LinkEndpointRx, LinkEndpointTx};
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Standard bandwidth ladder of the paper's evaluation (bits/s).
@@ -68,9 +69,38 @@ impl Link {
     }
 }
 
-/// A message with real-time delivery semantics, for the threaded mode.
+/// Shared state of one first-party SPSC channel: a FIFO of
+/// `(deliver_at, msg)` pairs plus the sender-dropped flag. First-party
+/// (not `std::sync::mpsc`) because the receiving side needs
+/// *peek-with-deadline* semantics — the event executor polls a link for
+/// readiness without consuming or parking — and because `mpsc` allocates
+/// a node per send, which would break the zero-allocation steady-state
+/// pin at the transport boundary.
+struct ChanState<T> {
+    queue: VecDeque<(Instant, T)>,
+    closed: bool,
+}
+
+struct Chan<T> {
+    state: Mutex<ChanState<T>>,
+    cv: Condvar,
+}
+
+/// Outcome of a non-blocking channel poll.
+pub enum TryRecv<T> {
+    /// A message was dequeued; it is *deliverable* at the carried instant
+    /// (which may be in the future — the link models transmission time).
+    Msg(Instant, T),
+    /// Nothing queued, sender still alive.
+    Empty,
+    /// Nothing queued and the sender is gone.
+    Closed,
+}
+
+/// A message with real-time delivery semantics, for the threaded and
+/// event modes.
 pub struct RealLink<T> {
-    tx: mpsc::Sender<(Instant, T)>,
+    chan: Arc<Chan<T>>,
     bandwidth_bps: f64,
     latency: Duration,
     epoch: Instant,
@@ -78,21 +108,28 @@ pub struct RealLink<T> {
 }
 
 pub struct RealReceiver<T> {
-    rx: mpsc::Receiver<(Instant, T)>,
+    chan: Arc<Chan<T>>,
+}
+
+fn chan_lock<T>(c: &Chan<T>) -> std::sync::MutexGuard<'_, ChanState<T>> {
+    c.state.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 impl<T: Send> RealLink<T> {
     pub fn channel(bandwidth_bps: f64, latency: Duration) -> (RealLink<T>, RealReceiver<T>) {
-        let (tx, rx) = mpsc::channel();
+        let chan = Arc::new(Chan {
+            state: Mutex::new(ChanState { queue: VecDeque::with_capacity(16), closed: false }),
+            cv: Condvar::new(),
+        });
         (
             RealLink {
-                tx,
+                chan: Arc::clone(&chan),
                 bandwidth_bps,
                 latency,
                 epoch: Instant::now(),
                 busy_until: Duration::ZERO,
             },
-            RealReceiver { rx },
+            RealReceiver { chan },
         )
     }
 
@@ -105,22 +142,51 @@ impl<T: Send> RealLink<T> {
         let tx_t = Duration::from_secs_f64(bytes as f64 * 8.0 / self.bandwidth_bps);
         self.busy_until = start + tx_t;
         let deliver_at = self.epoch + self.busy_until + self.latency;
-        let _ = self.tx.send((deliver_at, msg));
+        let mut st = chan_lock(&self.chan);
+        st.queue.push_back((deliver_at, msg));
+        drop(st);
+        self.chan.cv.notify_one();
+    }
+}
+
+impl<T> Drop for RealLink<T> {
+    fn drop(&mut self) {
+        chan_lock(&self.chan).closed = true;
+        self.chan.cv.notify_all();
     }
 }
 
 impl<T> RealReceiver<T> {
-    /// Blocking receive honouring the modeled delivery time.
+    /// Blocking receive honouring the modeled delivery time. Messages
+    /// queued before the sender dropped are still delivered; `None` only
+    /// once the channel is both closed and drained.
     pub fn recv(&self) -> Option<T> {
-        match self.rx.recv() {
-            Err(_) => None,
-            Ok((at, msg)) => {
-                let now = Instant::now();
-                if at > now {
-                    std::thread::sleep(at - now);
-                }
-                Some(msg)
+        let mut st = chan_lock(&self.chan);
+        let (at, msg) = loop {
+            if let Some(pair) = st.queue.pop_front() {
+                break pair;
             }
+            if st.closed {
+                return None;
+            }
+            st = self.chan.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        };
+        drop(st);
+        let now = Instant::now();
+        if at > now {
+            std::thread::sleep(at - now);
+        }
+        Some(msg)
+    }
+
+    /// Non-blocking poll: dequeue the next message if one is queued
+    /// (deliverable or still in modeled flight — the instant says which).
+    pub fn try_recv(&self) -> TryRecv<T> {
+        let mut st = chan_lock(&self.chan);
+        match st.queue.pop_front() {
+            Some((at, msg)) => TryRecv::Msg(at, msg),
+            None if st.closed => TryRecv::Closed,
+            None => TryRecv::Empty,
         }
     }
 }
@@ -162,5 +228,47 @@ mod tests {
         let t2 = t0.elapsed();
         assert!(t1 >= Duration::from_millis(18), "{t1:?}");
         assert!(t2 >= Duration::from_millis(38), "{t2:?}");
+    }
+
+    #[test]
+    fn try_recv_reports_empty_message_and_closed() {
+        let (mut tx, rx) = RealLink::channel(f64::INFINITY, Duration::ZERO);
+        assert!(matches!(rx.try_recv(), TryRecv::Empty));
+        tx.send(7u32, 100);
+        match rx.try_recv() {
+            TryRecv::Msg(at, v) => {
+                assert_eq!(v, 7);
+                // unpaced link: deliverable immediately
+                assert!(at <= Instant::now());
+            }
+            _ => panic!("expected a queued message"),
+        }
+        assert!(matches!(rx.try_recv(), TryRecv::Empty));
+        drop(tx);
+        assert!(matches!(rx.try_recv(), TryRecv::Closed));
+    }
+
+    #[test]
+    fn messages_sent_before_close_still_deliver() {
+        let (mut tx, rx) = RealLink::channel(f64::INFINITY, Duration::ZERO);
+        tx.send(1u32, 10);
+        tx.send(2u32, 10);
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn try_recv_carries_the_modeled_delivery_instant() {
+        let (mut tx, rx) = RealLink::channel(8e6, Duration::ZERO); // 1 MB/s
+        tx.send(9u8, 20_000); // 20 ms of modeled flight
+        match rx.try_recv() {
+            TryRecv::Msg(at, v) => {
+                assert_eq!(v, 9);
+                assert!(at > Instant::now(), "message should still be in flight");
+            }
+            _ => panic!("message must be queued even while in flight"),
+        }
     }
 }

@@ -8,11 +8,12 @@
 //! reusable [`FrameBuf`] scratch frame, ships the serialized image, and
 //! reads its byte accounting off the real buffers; the receiver blocks
 //! on the paced link and decodes in place through a borrowed
-//! [`FrameView`]. The threaded pipeline executor runs its stage boundaries
-//! over these endpoints with real channel pacing; the virtual-clock
+//! [`FrameView`]. The threaded and event pipeline executors run their
+//! stage boundaries over these endpoints with real channel pacing (the
+//! event mode polling readiness instead of parking); the virtual-clock
 //! executor runs the *same* endpoints over unpaced links
 //! (`f64::INFINITY` bandwidth, zero latency — a pure FIFO), which is
-//! what keeps the two executors bit-identical twins: same codec objects,
+//! what keeps the executors bit-identical twins: same codec objects,
 //! same call order, only the clock differs.
 //!
 //! [`DpRing`] builds the third traffic class on the same endpoints: an
@@ -26,16 +27,17 @@
 
 use std::time::Duration;
 
-use super::{frame_link, FrameLink, FrameLinkRx};
+use super::{frame_link, Doorbell, FrameLink, FrameLinkRx, Poll};
 use crate::codec::registry::{build_mem_pair, SchemeSpec};
 use crate::codec::{BoundaryCodec, FrameBuf, FrameView, Rounding};
 use crate::coordinator::boundary::{BoundaryReceiver, BoundarySender, TransferStats};
 use crate::util::error::{Context, Result};
 
 /// Sending endpoint: codec encoder half + paced frame link + accounting.
-/// Owns a reusable [`FrameBuf`] scratch arena, so the steady-state
-/// encode+serialize path allocates only the owned byte image the channel
-/// transport requires — the codec/frame work itself is allocation-free.
+/// Owns a reusable [`FrameBuf`] scratch arena and ships its serialized
+/// image through the link's recycled buffer pool
+/// ([`FrameLink::send_from`]), so the steady-state encode+serialize+send
+/// path is allocation-free end to end.
 pub struct LinkEndpointTx {
     enc: BoundarySender,
     link: FrameLink,
@@ -77,7 +79,7 @@ impl LinkEndpointTx {
     /// bytes (the built image's length — what actually shipped).
     pub fn send(&mut self, ids: &[u64], a: &[f32]) -> Result<TransferStats> {
         let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
-        self.link.send(self.buf.as_bytes().to_vec());
+        self.link.send_from(self.buf.as_bytes());
         Ok(stats)
     }
 
@@ -87,13 +89,18 @@ impl LinkEndpointTx {
     pub fn send_keep(&mut self, ids: &[u64], a: &[f32]) -> Result<(TransferStats, Vec<u8>)> {
         let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
         let bytes = self.buf.as_bytes().to_vec();
-        self.link.send(bytes.clone());
+        self.link.send_from(&bytes);
         Ok((stats, bytes))
     }
 
     /// Ship an already-serialized frame unchanged (ring forwarding).
     pub fn forward(&mut self, bytes: Vec<u8>) {
         self.link.send(bytes);
+    }
+
+    /// Install the link's post-enqueue wakeup (see [`Doorbell`]).
+    pub fn set_doorbell(&mut self, bell: Doorbell) {
+        self.link.set_doorbell(bell);
     }
 
     /// Total serialized bytes shipped on this link.
@@ -108,24 +115,32 @@ impl LinkEndpointTx {
 }
 
 impl LinkEndpointRx {
+    /// Non-blocking readiness of the next frame (never parks — the event
+    /// executor's workers schedule on this).
+    pub fn poll(&mut self) -> Poll {
+        self.link.poll()
+    }
+
     /// Blocking receive + decode of the next frame.
     pub fn recv(&mut self, ids: &[u64]) -> Result<Vec<f32>> {
-        let bytes = self.link.recv()?;
-        self.dec.decode_view(ids, &FrameView::parse(&bytes)?)
+        let bytes = self.link.recv_held()?;
+        self.dec.decode_view(ids, &FrameView::parse(bytes)?)
     }
 
     /// Blocking receive + decode into a reusable caller buffer, resized
     /// to the expected activation shape (capacity is retained across
-    /// calls — the executor's per-endpoint decode scratch).
+    /// calls — the executor's per-endpoint decode scratch). The frame is
+    /// borrowed from the link's held buffer, which recycles through the
+    /// sender's pool: steady state touches the allocator zero times.
     pub fn recv_into(&mut self, ids: &[u64], out: &mut Vec<f32>) -> Result<()> {
-        let bytes = self.link.recv()?;
         out.resize(ids.len() * self.dec.example_len(), 0.0);
-        self.dec.decode_into(ids, &FrameView::parse(&bytes)?, out)
+        let bytes = self.link.recv_held()?;
+        self.dec.decode_into(ids, &FrameView::parse(bytes)?, out)
     }
 
     /// Receive the raw serialized frame (the ring decodes per sender,
     /// not per link).
-    pub fn recv_raw(&self) -> Result<Vec<u8>> {
+    pub fn recv_raw(&mut self) -> Result<Vec<u8>> {
         self.link.recv()
     }
 
@@ -297,6 +312,20 @@ impl DpRing {
             *a *= inv;
         }
         Ok((acc, std::mem::take(&mut self.sent_bytes)))
+    }
+
+    /// Non-blocking readiness of the next incoming ring frame. The event
+    /// executor polls this between [`hop`](Self::hop)s so a worker never
+    /// parks mid-ring; a `Ready` poll stashes the frame, making the
+    /// subsequent `hop` consume it without sleeping.
+    pub fn poll_next(&mut self) -> Poll {
+        self.rx.poll()
+    }
+
+    /// Install the outgoing edge's post-enqueue wakeup (fires toward the
+    /// successor replica, see [`Doorbell`]).
+    pub fn set_doorbell(&mut self, bell: Doorbell) {
+        self.tx.set_doorbell(bell);
     }
 
     /// Convenience for the threaded executor (each replica runs on its

@@ -20,17 +20,26 @@
 //!    `degree - 1` serialized hops, and every replica reconstructs the
 //!    bit-identical mean through per-sender decoder replicas.
 //!
-//! The two execution modes share one worker/endpoint construction:
+//! The three execution modes share one worker/endpoint construction:
 //! `run_threads` runs one thread per (replica, stage) with link pacing
-//! at the configured bandwidth/latency; `run_virtual` runs the same
-//! endpoints over unpaced links (infinite bandwidth — a pure FIFO)
-//! under [`super::step`]'s op-retirement clock, modeling the ring's
-//! serialized hops separately. Because ops retire in per-stage schedule
-//! order in both modes and every codec object sees the identical call
-//! sequence, the executors are **seed-deterministic twins**: per-step
-//! loss, per-link wire bytes, DP ring bytes, and per-replica parameter
-//! digests are bit-identical — pinned by `tests/exec_vs_sim.rs`.
+//! at the configured bandwidth/latency; `run_events` drives the same
+//! (replica, stage) tasks as resumable [`StageScript`] state machines
+//! from a run queue on a small fixed worker pool — tasks park when a
+//! link polls not-ready instead of blocking a thread, and link doorbells
+//! requeue them; `run_virtual` runs the same endpoints over unpaced
+//! links (infinite bandwidth — a pure FIFO) under [`super::step`]'s
+//! op-retirement clock, modeling the ring's serialized hops separately.
+//! Because ops retire in per-stage schedule order in every mode, links
+//! are SPSC FIFOs, and the ring decodes per *sender* (never per
+//! arrival), every codec object sees the identical call sequence no
+//! matter how tasks interleave: the executors are **seed-deterministic
+//! twins** — per-step loss, per-link wire bytes, DP ring bytes, and
+//! per-replica parameter digests are bit-identical for any worker-pool
+//! size — pinned by `tests/exec_vs_sim.rs` and `tests/prop_sched.rs`.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -38,12 +47,13 @@ use crate::codec::registry::build_mem_pair;
 use crate::codec::{CodecSpec, Rounding};
 use crate::config::TrainConfig;
 use crate::net::plane::{dp_rings, link_endpoints, DpRing, LinkEndpointRx, LinkEndpointTx};
+use crate::net::Poll;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 use super::schedule::{Op, Schedule};
 use super::sim::PipelineSim;
-use super::step::{run_step, StepConfig, StepDriver};
+use super::step::{run_step, StageEvent, StageScript, StepConfig, StepDriver};
 
 /// Which pipeline runtime executes a training run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,16 +62,21 @@ pub enum Executor {
     Sim,
     /// One worker thread per (replica, stage), frames over channel links.
     Threads,
+    /// Fixed worker pool driving ready (replica, stage) tasks from a run
+    /// queue — the scale mode (hundreds of stages on a handful of
+    /// threads).
+    Events,
 }
 
 impl Executor {
-    /// Parse an executor name ("threads" | "sim"). Trims whitespace and
-    /// matches case-insensitively, like `Schedule::parse`.
+    /// Parse an executor name ("threads" | "events" | "sim"). Trims
+    /// whitespace and matches case-insensitively, like `Schedule::parse`.
     pub fn parse(s: &str) -> Result<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "sim" => Ok(Executor::Sim),
             "threads" => Ok(Executor::Threads),
-            _ => crate::bail!("unknown executor {s:?} (threads|sim)"),
+            "events" => Ok(Executor::Events),
+            _ => crate::bail!("unknown executor {s:?} (threads|events|sim)"),
         }
     }
 
@@ -69,6 +84,7 @@ impl Executor {
         match self {
             Executor::Sim => "sim",
             Executor::Threads => "threads",
+            Executor::Events => "events",
         }
     }
 }
@@ -105,6 +121,10 @@ pub struct ExecConfig {
     /// Gradient codec for the DP ring (`--dp-codec`; `ef:directq:fw4bw4`
     /// is Fig. 5's error-compensated regime).
     pub dp_spec: CodecSpec,
+    /// Worker threads for [`Executor::Events`] (`--workers`; capped at
+    /// the task count, ignored by the other modes). Any pool size ≥ 1
+    /// produces the identical trajectory.
+    pub workers: usize,
 }
 
 impl ExecConfig {
@@ -129,6 +149,7 @@ impl ExecConfig {
             bwd_s: 0.02,
             dp_degree: 1,
             dp_spec: CodecSpec::fp32(),
+            workers: 4,
         }
     }
 
@@ -165,6 +186,7 @@ impl ExecConfig {
             bwd_s: 0.02,
             dp_degree: cfg.dp_degree,
             dp_spec: cfg.dp_codec.clone(),
+            workers: cfg.workers,
         }
     }
 }
@@ -238,6 +260,7 @@ pub fn run(cfg: &ExecConfig, executor: Executor) -> Result<ExecTrace> {
     match executor {
         Executor::Sim => run_virtual(cfg),
         Executor::Threads => run_threads(cfg),
+        Executor::Events => run_events(cfg),
     }
 }
 
@@ -860,6 +883,33 @@ struct StageReport {
     peak_in_flight: usize,
 }
 
+/// Fold per-(replica, stage) reports (indexed `replica * n_stages +
+/// stage`) into the run's trace — shared by the threaded and event
+/// modes, which only differ in *who* produced the reports.
+fn trace_from_reports(
+    executor: Executor,
+    cfg: &ExecConfig,
+    reports: Vec<StageReport>,
+) -> ExecTrace {
+    let d = cfg.dp_degree;
+    let k = cfg.n_stages;
+    let mut trace = ExecTrace {
+        executor,
+        steps: Vec::with_capacity(cfg.steps),
+        step_time_s: Vec::with_capacity(cfg.steps),
+        fw_state_bytes: reports.iter().map(|r| r.fw_state).collect(),
+        peak_in_flight: reports.iter().map(|r| r.peak_in_flight).collect(),
+    };
+    for step in 0..cfg.steps {
+        let stage_steps: Vec<Vec<StageStep>> = (0..d)
+            .map(|r| (0..k).map(|s| reports[r * k + s].per_step[step]).collect())
+            .collect();
+        trace.steps.push(assemble_record(&stage_steps));
+        trace.step_time_s.push(reports[0].wall_s[step]);
+    }
+    trace
+}
+
 /// Run the full training loop with one worker thread per (replica,
 /// stage), exchanging serialized frames over paced channel links — and,
 /// with `dp_degree > 1`, blocking ring hops between replica threads.
@@ -872,22 +922,29 @@ pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
     let mut handles = Vec::with_capacity(d * k);
     for (r, (wrow, prow)) in workers.into_iter().zip(planes.into_iter()).enumerate() {
         for (s, (mut w, mut ep)) in wrow.into_iter().zip(prow.into_iter()).enumerate() {
-            let ops = cfg.schedule.ops(s, k, cfg.n_micro);
+            let mut script = StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps);
             let steps = cfg.steps;
             let spawned = thread::Builder::new()
                 .name(format!("aq-r{r}s{s}"))
                 .spawn(move || -> Result<StageReport> {
                     let mut per_step = Vec::with_capacity(steps);
                     let mut wall_s = Vec::with_capacity(steps);
-                    for _ in 0..steps {
-                        let t0 = Instant::now();
-                        let mut acct = StageAcct::default();
-                        for &op in &ops {
-                            exec_op(&mut w, &mut ep, &mut acct, op)?;
+                    let mut acct = StageAcct::default();
+                    let mut t0 = Instant::now();
+                    loop {
+                        match script.peek() {
+                            StageEvent::Op(op) => {
+                                exec_op(&mut w, &mut ep, &mut acct, op)?;
+                            }
+                            StageEvent::CloseStep => {
+                                close_step(&mut w, &mut ep, &mut acct)?;
+                                per_step.push(w.end_step(std::mem::take(&mut acct)));
+                                wall_s.push(t0.elapsed().as_secs_f64());
+                                t0 = Instant::now();
+                            }
+                            StageEvent::Done => break,
                         }
-                        close_step(&mut w, &mut ep, &mut acct)?;
-                        per_step.push(w.end_step(acct));
-                        wall_s.push(t0.elapsed().as_secs_f64());
+                        script.advance();
                     }
                     Ok(StageReport {
                         per_step,
@@ -940,22 +997,446 @@ pub fn run_threads(cfg: &ExecConfig) -> Result<ExecTrace> {
         return Err(cascade.expect("at least one error present"));
     }
     let reports: Vec<StageReport> = results.into_iter().map(|r| r.unwrap()).collect();
+    Ok(trace_from_reports(Executor::Threads, cfg, reports))
+}
 
-    let mut trace = ExecTrace {
-        executor: Executor::Threads,
-        steps: Vec::with_capacity(cfg.steps),
-        step_time_s: Vec::with_capacity(cfg.steps),
-        fw_state_bytes: reports.iter().map(|r| r.fw_state).collect(),
-        peak_in_flight: reports.iter().map(|r| r.peak_in_flight).collect(),
-    };
-    for step in 0..cfg.steps {
-        let stage_steps: Vec<Vec<StageStep>> = (0..d)
-            .map(|r| (0..k).map(|s| reports[r * k + s].per_step[step]).collect())
-            .collect();
-        trace.steps.push(assemble_record(&stage_steps));
-        trace.step_time_s.push(reports[0].wall_s[step]);
+// ---------------------------------------------------------------------------
+// Event-driven mode: fixed worker pool over a run queue
+// ---------------------------------------------------------------------------
+//
+// Thread-per-stage burns `degree x stages` OS threads, most of them
+// parked in a blocking `recv` — fatal at the topologies the slow-network
+// tables are about. Here every (replica, stage) is a task: a
+// `StageScript` cursor plus its worker/endpoints. A worker pops a task
+// off the run queue and retires its events until the next one would
+// block on a link (`Poll::Empty` / `Poll::InFlight`), then parks it. A
+// doorbell on every link's sending half requeues the receiving task, and
+// in-flight frames (queued but still inside their modeled transmission
+// window) park with a deadline a worker's timed condvar wait promotes.
+//
+// Determinism: a task's events retire in script order, links are SPSC
+// FIFOs, and the DP ring decodes per *sender* — so no matter which
+// worker runs a task or how tasks interleave, every codec object sees
+// the same call sequence as under the other executors. The pool size can
+// change only *when* work happens, never *what* it computes.
+
+/// Task scheduling states (one atomic per task).
+const T_IDLE: u8 = 0; // parked, waiting for a doorbell/timer
+const T_QUEUED: u8 = 1; // on the ready queue
+const T_RUNNING: u8 = 2; // owned by a worker
+const T_DIRTY: u8 = 3; // doorbell rang while running: requeue on release
+const T_DONE: u8 = 4; // script finished; doorbells are no-ops
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// What a task run returned: park (optionally with a pacing deadline) or
+/// retire the task.
+enum TaskAdvance {
+    Pending(Option<Instant>),
+    Finished,
+}
+
+/// One (replica, stage) as a resumable state machine: compute + endpoints
+/// + script cursor + the per-step records it accumulates. `ring_hop`
+/// carries the mid-close position — the ring's `degree - 1` hops are
+/// each a potential park point.
+struct EventTask {
+    w: StageWorker,
+    ep: StageEndpoints,
+    script: StageScript,
+    acct: StageAcct,
+    /// `Some(h)`: step close in progress, next ring hop to receive is
+    /// `h` (`h == degree` means all hops done — finish and apply).
+    ring_hop: Option<usize>,
+    per_step: Vec<StageStep>,
+    wall_s: Vec<f64>,
+    step_t0: Instant,
+}
+
+impl EventTask {
+    fn close_record(&mut self) {
+        self.per_step.push(self.w.end_step(std::mem::take(&mut self.acct)));
+        self.wall_s.push(self.step_t0.elapsed().as_secs_f64());
+        self.step_t0 = Instant::now();
+        self.script.advance();
     }
-    Ok(trace)
+
+    fn poll_input(&mut self, op: Op) -> Poll {
+        let rx = match op {
+            Op::Fwd(_) => self.ep.fw_rx.as_mut(),
+            Op::Bwd(_) => self.ep.bw_rx.as_mut(),
+        };
+        // no endpoint = local input (stage 0 fwd / loss-head bwd)
+        rx.map_or(Poll::Ready, |rx| rx.poll())
+    }
+
+    /// Retire events until the next one would park on a link. Every
+    /// receive is poll-gated, so this never sleeps in a blocking recv —
+    /// the stash a `Ready` poll fills makes the subsequent recv
+    /// immediate (and pacing is already honoured by the poll's deadline).
+    fn run(&mut self) -> Result<TaskAdvance> {
+        loop {
+            if let Some(hop) = self.ring_hop {
+                let ring = self.ep.dp.as_mut().context("ring close without a dp ring")?;
+                if hop < ring.degree {
+                    match ring.poll_next() {
+                        Poll::Ready => {
+                            ring.hop(hop)?;
+                            self.ring_hop = Some(hop + 1);
+                        }
+                        Poll::Empty => return Ok(TaskAdvance::Pending(None)),
+                        Poll::InFlight(at) => return Ok(TaskAdvance::Pending(Some(at))),
+                        Poll::Closed => {
+                            crate::bail!("pipeline channel closed: ring peer exited early")
+                        }
+                    }
+                    continue;
+                }
+                let (mean, sent) = ring.finish()?;
+                self.acct.dp_wire += sent;
+                self.w.apply_grad(&mean);
+                self.ring_hop = None;
+                self.close_record();
+                continue;
+            }
+            match self.script.peek() {
+                StageEvent::Op(op) => match self.poll_input(op) {
+                    Poll::Ready => {
+                        exec_op(&mut self.w, &mut self.ep, &mut self.acct, op)?;
+                        self.script.advance();
+                    }
+                    Poll::Empty => return Ok(TaskAdvance::Pending(None)),
+                    Poll::InFlight(at) => return Ok(TaskAdvance::Pending(Some(at))),
+                    Poll::Closed => {
+                        crate::bail!("pipeline channel closed: peer stage exited early")
+                    }
+                },
+                StageEvent::CloseStep => {
+                    if self.ep.dp.is_some() {
+                        // enter the resumable ring close: send own frame,
+                        // then poll through the hops (the record is
+                        // written when the ring finishes)
+                        let g = self.w.take_step_grad();
+                        let ring = self.ep.dp.as_mut().expect("checked dp above");
+                        ring.send_own(&g)?;
+                        self.ring_hop = Some(1);
+                    } else {
+                        close_step(&mut self.w, &mut self.ep, &mut self.acct)?;
+                        self.close_record();
+                    }
+                }
+                StageEvent::Done => return Ok(TaskAdvance::Finished),
+            }
+        }
+    }
+
+    fn into_report(self) -> StageReport {
+        StageReport {
+            per_step: self.per_step,
+            wall_s: self.wall_s,
+            fw_state: (
+                self.ep.fw_tx.as_ref().map_or(0, |h| h.state_bytes()),
+                self.ep.fw_rx.as_ref().map_or(0, |h| h.state_bytes()),
+            ),
+            peak_in_flight: self.w.peak_in_flight,
+        }
+    }
+}
+
+/// The run queue and its bookkeeping, under one mutex.
+struct EventQueue {
+    ready: VecDeque<usize>,
+    /// `(deadline, task)` for frames still inside their modeled
+    /// transmission window; a worker promotes due entries. Stale entries
+    /// (task already requeued by a doorbell) are harmless — promotion is
+    /// a state-gated wake, not a direct push.
+    timers: Vec<(Instant, usize)>,
+    /// Tasks currently owned by a worker.
+    running: usize,
+    /// Tasks not yet `Finished`.
+    live: usize,
+    /// First error any worker hit; everyone drains out once set.
+    error: Option<crate::util::error::Error>,
+}
+
+struct EventSched {
+    state: Vec<AtomicU8>,
+    q: Mutex<EventQueue>,
+    cv: Condvar,
+}
+
+impl EventSched {
+    /// Make task `t` runnable. Must hold the queue lock (all DIRTY
+    /// transitions happen under it, which is what makes the
+    /// release-path CAS below race-free).
+    fn wake_locked(&self, q: &mut EventQueue, t: usize) {
+        loop {
+            match self.state[t].compare_exchange(
+                T_IDLE,
+                T_QUEUED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    q.ready.push_back(t);
+                    self.cv.notify_one();
+                    return;
+                }
+                Err(T_RUNNING) => {
+                    if self.state[t]
+                        .compare_exchange(T_RUNNING, T_DIRTY, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        return; // the releasing worker will requeue it
+                    }
+                    // raced with the release path: retry from the top
+                }
+                Err(_) => return, // QUEUED / DIRTY / DONE: nothing to do
+            }
+        }
+    }
+
+    /// Doorbell entry point (called from inside a sender's `run`).
+    fn wake(&self, t: usize) {
+        let mut q = lock(&self.q);
+        self.wake_locked(&mut q, t);
+    }
+
+    fn abort(&self, e: crate::util::error::Error) {
+        let mut q = lock(&self.q);
+        if q.error.is_none() {
+            q.error = Some(e);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Flags a worker panic to the scheduler so the siblings drain instead
+/// of waiting forever (disarmed by `mem::forget` on the normal path).
+struct PanicSignal<'a> {
+    sched: &'a EventSched,
+}
+
+impl Drop for PanicSignal<'_> {
+    fn drop(&mut self) {
+        self.sched.abort(crate::err!("event executor worker panicked"));
+    }
+}
+
+/// One pool worker: pop ready tasks, run them to their next park point,
+/// release. Exits when every task finished or any error/panic surfaced.
+fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
+    loop {
+        // -- acquire a ready task ------------------------------------
+        let t = {
+            let mut q = lock(&sched.q);
+            loop {
+                if q.error.is_some() || q.live == 0 {
+                    return;
+                }
+                let now = Instant::now();
+                let mut i = 0;
+                while i < q.timers.len() {
+                    if q.timers[i].0 <= now {
+                        let (_, due) = q.timers.swap_remove(i);
+                        sched.wake_locked(&mut q, due);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if let Some(t) = q.ready.pop_front() {
+                    q.running += 1;
+                    break t;
+                }
+                if q.running == 0 && q.timers.is_empty() {
+                    // nothing runnable, nothing running that could send,
+                    // no frame in flight: a genuine stall (a schedule
+                    // dependency bug) — error out instead of hanging.
+                    // Sound because doorbells fire inside the sender's
+                    // run(), i.e. while it still counts as running.
+                    q.error = Some(crate::err!(
+                        "event executor stalled: {} tasks parked with no frames in flight",
+                        q.live
+                    ));
+                    sched.cv.notify_all();
+                    return;
+                }
+                let next_deadline = q.timers.iter().map(|&(at, _)| at).min();
+                q = match next_deadline {
+                    Some(at) => {
+                        let wait = at.saturating_duration_since(now);
+                        sched.cv.wait_timeout(q, wait).unwrap_or_else(|p| p.into_inner()).0
+                    }
+                    None => sched.cv.wait(q).unwrap_or_else(|p| p.into_inner()),
+                };
+            }
+        };
+
+        // -- run it (queue lock dropped) -----------------------------
+        sched.state[t].store(T_RUNNING, Ordering::Release);
+        let advance = {
+            let guard = PanicSignal { sched };
+            let r = lock(&tasks[t]).run();
+            std::mem::forget(guard);
+            r
+        };
+
+        // -- release -------------------------------------------------
+        let mut q = lock(&sched.q);
+        q.running -= 1;
+        match advance {
+            Err(e) => {
+                if q.error.is_none() {
+                    q.error = Some(e);
+                }
+                sched.cv.notify_all();
+                return;
+            }
+            Ok(TaskAdvance::Finished) => {
+                sched.state[t].store(T_DONE, Ordering::Release);
+                q.live -= 1;
+                if q.live == 0 {
+                    sched.cv.notify_all();
+                }
+            }
+            // park or, if a doorbell rang mid-run (DIRTY), requeue. Both
+            // CASes happen under the queue lock, same as every wake —
+            // exactly one of them wins.
+            Ok(TaskAdvance::Pending(deadline)) => loop {
+                if sched.state[t]
+                    .compare_exchange(T_RUNNING, T_IDLE, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    if let Some(at) = deadline {
+                        q.timers.push((at, t));
+                        // a sleeping sibling may need the new, earlier
+                        // deadline
+                        sched.cv.notify_one();
+                    }
+                    break;
+                }
+                if sched.state[t]
+                    .compare_exchange(T_DIRTY, T_QUEUED, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    q.ready.push_back(t);
+                    sched.cv.notify_one();
+                    break;
+                }
+            },
+        }
+        drop(q);
+    }
+}
+
+/// Run the full training loop on a fixed pool of `cfg.workers` threads
+/// driving every (replica, stage) task from a shared run queue —
+/// bit-identical to the other executors at any pool size, but with a
+/// thread count independent of the topology (a 64-stage pipeline runs
+/// fine on 4 workers; thread-per-stage would need 64+).
+pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
+    crate::ensure!(cfg.workers >= 1, "event executor needs at least one worker");
+    let workers = build_workers(cfg)?;
+    let mut planes = build_planes(cfg, cfg.bandwidth_bps, Duration::from_secs_f64(cfg.latency_s))?;
+    let d = cfg.dp_degree;
+    let k = cfg.n_stages;
+    let n_tasks = d * k;
+
+    let sched = Arc::new(EventSched {
+        // every task starts queued: stage 0 can run immediately, the
+        // rest park themselves on their first not-ready poll
+        state: (0..n_tasks).map(|_| AtomicU8::new(T_QUEUED)).collect(),
+        q: Mutex::new(EventQueue {
+            ready: (0..n_tasks).collect(),
+            timers: Vec::new(),
+            running: 0,
+            live: n_tasks,
+            error: None,
+        }),
+        cv: Condvar::new(),
+    });
+
+    // doorbells: every link's sending half wakes the task owning the
+    // receiving half — fw to stage s+1, bw to stage s-1, ring edge to
+    // the successor replica's same stage
+    for (r, plane) in planes.iter_mut().enumerate() {
+        for (s, ep) in plane.iter_mut().enumerate() {
+            if let Some(tx) = ep.fw_tx.as_mut() {
+                let sc = Arc::clone(&sched);
+                let t = r * k + s + 1;
+                tx.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+            if let Some(tx) = ep.bw_tx.as_mut() {
+                let sc = Arc::clone(&sched);
+                let t = r * k + s - 1;
+                tx.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+            if let Some(ring) = ep.dp.as_mut() {
+                let sc = Arc::clone(&sched);
+                let t = ((r + 1) % d) * k + s;
+                ring.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+        }
+    }
+
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for (wrow, prow) in workers.into_iter().zip(planes) {
+        for (s, (w, ep)) in wrow.into_iter().zip(prow).enumerate() {
+            tasks.push(Mutex::new(EventTask {
+                w,
+                ep,
+                script: StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps),
+                acct: StageAcct::default(),
+                ring_hop: None,
+                per_step: Vec::with_capacity(cfg.steps),
+                wall_s: Vec::with_capacity(cfg.steps),
+                step_t0: Instant::now(),
+            }));
+        }
+    }
+    let tasks = Arc::new(tasks);
+
+    let pool = cfg.workers.min(n_tasks);
+    let mut handles = Vec::with_capacity(pool);
+    for i in 0..pool {
+        let sched = Arc::clone(&sched);
+        let tasks = Arc::clone(&tasks);
+        let spawned = thread::Builder::new()
+            .name(format!("aq-ev{i}"))
+            .spawn(move || event_worker(&sched, &tasks));
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                let err = crate::err!("failed to spawn event worker {i}: {e}");
+                sched.abort(crate::err!("spawn failure, draining pool"));
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(err);
+            }
+        }
+    }
+    let mut panicked = false;
+    for h in handles {
+        panicked |= h.join().is_err();
+    }
+    {
+        let mut q = lock(&sched.q);
+        if let Some(e) = q.error.take() {
+            return Err(e);
+        }
+        crate::ensure!(!panicked, "event worker thread panicked");
+        crate::ensure!(q.live == 0, "event executor exited with {} unfinished tasks", q.live);
+    }
+    let tasks = Arc::try_unwrap(tasks)
+        .map_err(|_| crate::err!("event task pool still shared after join"))?;
+    let reports: Vec<StageReport> = tasks
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()).into_report())
+        .collect();
+    Ok(trace_from_reports(Executor::Events, cfg, reports))
 }
 
 #[cfg(test)]
@@ -966,8 +1447,77 @@ mod tests {
     fn executor_parse_trims_and_ignores_case() {
         assert_eq!(Executor::parse(" Threads ").unwrap(), Executor::Threads);
         assert_eq!(Executor::parse("SIM").unwrap(), Executor::Sim);
+        assert_eq!(Executor::parse(" Events\n").unwrap(), Executor::Events);
+        assert_eq!(Executor::parse("EVENTS").unwrap(), Executor::Events);
+        assert_eq!(Executor::Events.label(), "events");
+    }
+
+    #[test]
+    fn executor_parse_rejection_lists_every_mode() {
+        // the rejection message is user-facing: it must advertise the
+        // full set of accepted names, like Schedule::parse does
         let err = Executor::parse("gpu").unwrap_err().to_string();
-        assert!(err.contains("threads|sim"), "{err}");
+        assert!(err.contains("gpu"), "{err}");
+        assert!(err.contains("threads|events|sim"), "{err}");
+    }
+
+    #[test]
+    fn event_executor_runs_without_dp() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.steps = 3;
+        cfg.workers = 2;
+        let v = run_virtual(&cfg).unwrap();
+        let e = run_events(&cfg).unwrap();
+        assert!(e.bit_identical(&v), "events diverged from the oracle");
+        assert_eq!(e.executor, Executor::Events);
+        assert_eq!(e.fw_state_bytes, v.fw_state_bytes);
+    }
+
+    #[test]
+    fn event_executor_matches_oracle_with_dp_ring() {
+        let mut cfg = ExecConfig::small(CodecSpec::aqsgd(2, 4));
+        cfg.n_stages = 2;
+        cfg.dp_degree = 2;
+        cfg.dp_spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+        cfg.steps = 3;
+        cfg.workers = 3;
+        let v = run_virtual(&cfg).unwrap();
+        let e = run_events(&cfg).unwrap();
+        assert!(e.bit_identical(&v), "events+dp diverged from the oracle");
+        assert!(e.steps.iter().all(|r| r.dp_wire_bytes.iter().all(|&b| b > 0)));
+    }
+
+    #[test]
+    fn event_executor_single_worker_single_stage() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_stages = 1;
+        cfg.steps = 2;
+        cfg.workers = 1;
+        let v = run_virtual(&cfg).unwrap();
+        let e = run_events(&cfg).unwrap();
+        assert!(e.bit_identical(&v));
+    }
+
+    #[test]
+    fn event_executor_rejects_a_zero_worker_pool() {
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.workers = 0;
+        let err = run_events(&cfg).unwrap_err().to_string();
+        assert!(err.contains("at least one worker"), "{err}");
+    }
+
+    #[test]
+    fn event_executor_paces_links_like_threads() {
+        // finite bandwidth: in-flight frames park tasks on timers; the
+        // trajectory still matches the oracle and the run takes at least
+        // the serialized wire time of the slowest link
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_micro = 2;
+        cfg.steps = 2;
+        cfg.bandwidth_bps = 40e6; // ~5 MB/s: mb frames ~ 0.1 ms each
+        let v = run_virtual(&cfg).unwrap();
+        let e = run_events(&cfg).unwrap();
+        assert!(e.bit_identical(&v), "paced events diverged from the oracle");
     }
 
     #[test]

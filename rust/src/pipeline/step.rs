@@ -13,10 +13,14 @@
 //!
 //! The invariant that makes the sharing sound: ops retire **in each
 //! stage's schedule order** (`op_idx[s]` only advances), exactly the
-//! order a per-stage worker thread executes them. A driver that carries
-//! per-stage state therefore sees the identical call sequence under this
-//! core and under `exec::run_threads`, which is what the
-//! `tests/exec_vs_sim.rs` determinism harness pins.
+//! order a per-stage worker thread ([`exec::run_threads`]) or a
+//! run-queue task ([`exec::run_events`], resuming a [`StageScript`]
+//! cursor) executes them. A driver that carries per-stage state
+//! therefore sees the identical call sequence under every executor,
+//! which is what the `tests/exec_vs_sim.rs` determinism harness pins.
+//!
+//! [`exec::run_threads`]: super::exec::run_threads
+//! [`exec::run_events`]: super::exec::run_events
 
 use super::schedule::{Op, Schedule};
 use crate::net::Link;
@@ -33,6 +37,75 @@ pub struct StepConfig {
     pub link_bandwidths: Option<Vec<f64>>,
     pub latency_s: f64,
     pub schedule: Schedule,
+}
+
+/// The next event in a stage's multi-step script.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageEvent {
+    /// Execute this schedule op (in per-stage schedule order).
+    Op(Op),
+    /// All of the current step's ops retired: exchange/apply the step
+    /// gradient and record the step.
+    CloseStep,
+    /// Every step retired.
+    Done,
+}
+
+/// One (replica, stage)'s resumable position in its op script across
+/// the whole run — the retirement core every executor drives:
+///
+///  * the threaded mode walks it with blocking receives,
+///  * the event mode walks it as far as link readiness allows, parks,
+///    and resumes exactly where it stopped,
+///  * the virtual clock retires the same per-stage order through
+///    [`run_step`]'s dependency engine.
+///
+/// Ops always retire in schedule order (`advance` only moves forward),
+/// which is the invariant that keeps every executor's per-codec-object
+/// call sequence — and therefore its numeric trajectory — bit-identical
+/// to the oracle's (pinned by `tests/exec_vs_sim.rs`).
+#[derive(Clone, Debug)]
+pub struct StageScript {
+    ops: Vec<Op>,
+    steps: usize,
+    step: usize,
+    idx: usize,
+}
+
+impl StageScript {
+    /// A script running `ops` once per step for `steps` steps.
+    pub fn new(ops: Vec<Op>, steps: usize) -> Self {
+        StageScript { ops, steps, step: 0, idx: 0 }
+    }
+
+    /// The next event. Stable until [`advance`](Self::advance) is called.
+    pub fn peek(&self) -> StageEvent {
+        if self.step >= self.steps {
+            StageEvent::Done
+        } else if self.idx < self.ops.len() {
+            StageEvent::Op(self.ops[self.idx])
+        } else {
+            StageEvent::CloseStep
+        }
+    }
+
+    /// Retire the current event (a no-op once `Done`).
+    pub fn advance(&mut self) {
+        if self.step >= self.steps {
+            return;
+        }
+        if self.idx < self.ops.len() {
+            self.idx += 1;
+        } else {
+            self.idx = 0;
+            self.step += 1;
+        }
+    }
+
+    /// The optimizer step the cursor is currently inside.
+    pub fn step(&self) -> usize {
+        self.step
+    }
 }
 
 /// What executes when an op retires. `exec` runs the op's work and
@@ -206,6 +279,35 @@ mod tests {
         let t = run_step(&cfg(k, m, Schedule::OneFOneB), &mut d).unwrap();
         assert_eq!(t.fw_link_bytes, vec![4000, 4000]);
         assert_eq!(t.bw_link_bytes, vec![4000, 4000]);
+    }
+
+    #[test]
+    fn stage_script_walks_ops_then_close_per_step() {
+        let ops = vec![Op::Fwd(0), Op::Bwd(0)];
+        let mut sc = StageScript::new(ops.clone(), 2);
+        for step in 0..2 {
+            assert_eq!(sc.step(), step);
+            for &op in &ops {
+                assert_eq!(sc.peek(), StageEvent::Op(op));
+                sc.advance();
+            }
+            assert_eq!(sc.peek(), StageEvent::CloseStep);
+            sc.advance();
+        }
+        assert_eq!(sc.peek(), StageEvent::Done);
+        sc.advance(); // no-op past the end
+        assert_eq!(sc.peek(), StageEvent::Done);
+        assert_eq!(sc.step(), 2);
+    }
+
+    #[test]
+    fn empty_op_list_still_closes_each_step() {
+        // a 1-stage 0-micro script cannot occur, but the cursor's
+        // contract should not depend on that
+        let mut sc = StageScript::new(Vec::new(), 1);
+        assert_eq!(sc.peek(), StageEvent::CloseStep);
+        sc.advance();
+        assert_eq!(sc.peek(), StageEvent::Done);
     }
 
     #[test]

@@ -1,16 +1,17 @@
-//! The determinism contract between the two pipeline runtimes: for the
-//! same config and seed, the threaded executor (worker threads + channel
-//! links + serialized frames) and the single-threaded virtual-clock
-//! executor produce **bit-identical** per-step loss, per-link wire-byte,
-//! DP-ring, and replica-digest trajectories, across both schedules and
-//! the paper's codec spectrum — including the Fig. 5 end-to-end cell
-//! where activations *and* data-parallel model gradients are compressed.
-//! This is what turns `pipeline::sim` into a verified oracle: every
-//! throughput table the simulator produces is backed by a runtime whose
-//! numerics provably match it.
+//! The determinism contract between the pipeline runtimes: for the same
+//! config and seed, the threaded executor (one worker thread per stage),
+//! the event executor (fixed worker pool over a run queue), and the
+//! single-threaded virtual-clock executor produce **bit-identical**
+//! per-step loss, per-link wire-byte, DP-ring, and replica-digest
+//! trajectories, across both schedules and the paper's codec spectrum —
+//! including the Fig. 5 end-to-end cell where activations *and*
+//! data-parallel model gradients are compressed. This is what turns
+//! `pipeline::sim` into a verified oracle: every throughput table the
+//! simulator produces is backed by runtimes whose numerics provably
+//! match it.
 
 use aq_sgd::codec::CodecSpec;
-use aq_sgd::pipeline::exec::{run_threads, run_virtual, ExecConfig, ExecTrace};
+use aq_sgd::pipeline::exec::{run_events, run_threads, run_virtual, ExecConfig, ExecTrace};
 use aq_sgd::pipeline::Schedule;
 
 const SPECS: [&str; 3] = ["fp32", "aqsgd:fw2bw4", "hybrid:aq2/topk0.2@8"];
@@ -79,6 +80,58 @@ fn threads_match_sim_across_schedules_and_codecs() {
             }
         }
     }
+}
+
+#[test]
+fn events_match_sim_across_schedules_and_codecs() {
+    // the event executor against the same oracle grid as the threaded
+    // one — a 4-worker pool driving 4 stage tasks off the run queue
+    for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
+        for spec in SPECS {
+            let c = cfg(spec, schedule, 7);
+            let sim = run_virtual(&c).expect("virtual run");
+            let ev = run_events(&c).expect("event run");
+            assert_identical(&sim, &ev, &format!("events {spec}/{schedule:?}"));
+        }
+    }
+}
+
+#[test]
+fn events_match_sim_in_the_end_to_end_compressed_cell() {
+    // Fig. 5 cell on the worker pool: aqsgd:fw2bw4 activations +
+    // ef:directq:fw4bw4 DP gradients, dp degree 2 — 6 stage tasks (2
+    // replicas x 3 stages) on a deliberately undersized 2-worker pool,
+    // so tasks park mid-step (including mid-ring-exchange) and resume
+    for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
+        let mut c = e2e_cfg(schedule, 13);
+        c.workers = 2;
+        let sim = run_virtual(&c).expect("virtual e2e run");
+        let ev = run_events(&c).expect("event e2e run");
+        assert_identical(&sim, &ev, &format!("events e2e/{schedule:?}"));
+        for rec in &ev.steps {
+            assert!(rec.dp_wire_bytes.iter().all(|&b| b > 0));
+        }
+    }
+}
+
+#[test]
+fn large_topology_runs_on_a_small_worker_pool() {
+    // the scale pin: 64 stage tasks on a 4-worker pool. Thread-per-stage
+    // would need 64 OS threads here; the event executor completes the
+    // same bit-identical trajectory with 4, parking and resuming tasks
+    // as frames arrive.
+    let mut c = cfg("aqsgd:fw2bw4", Schedule::OneFOneB, 17);
+    c.n_stages = 64;
+    c.n_micro = 2;
+    c.micro_batch = 1;
+    c.example_len = 8;
+    c.steps = 2;
+    c.workers = 4;
+    let sim = run_virtual(&c).expect("virtual 64-stage run");
+    let ev = run_events(&c).expect("event 64-stage run");
+    assert_identical(&sim, &ev, "events 64 stages / 4 workers");
+    assert!(ev.steps.iter().all(|r| r.loss.is_finite()));
+    assert_eq!(ev.steps.last().unwrap().fw_wire_bytes.len(), 63);
 }
 
 #[test]

@@ -1,7 +1,10 @@
 //! Property tests over the pipeline schedule and the virtual-time
 //! simulator: completeness, dependency-validity, physical lower bounds,
-//! and monotonicity in bandwidth / message size / compute.
+//! and monotonicity in bandwidth / message size / compute — plus the
+//! event executor's pool-size independence (any worker count, same bits).
 
+use aq_sgd::codec::CodecSpec;
+use aq_sgd::pipeline::exec::{run_events, run_virtual, ExecConfig};
 use aq_sgd::pipeline::{Op, PipelineSim, Schedule, SimConfig, StageTimes};
 use aq_sgd::testing::prop::{len_in, Prop};
 
@@ -197,6 +200,62 @@ fn prop_sim_deterministic() {
         let b = PipelineSim::run(&cfg).step_time_s;
         assert_eq!(a, b);
     });
+}
+
+/// A small but fully-loaded event-executor cell: 3 stages x 2 replicas
+/// (6 tasks), compressed activations, error-compensated DP ring.
+fn events_cfg(schedule: Schedule) -> ExecConfig {
+    let mut c = ExecConfig::small(CodecSpec::aqsgd(2, 4));
+    c.schedule = schedule;
+    c.seed = 23;
+    c.n_stages = 3;
+    c.n_micro = 4;
+    c.micro_batch = 2;
+    c.example_len = 32;
+    c.steps = 3;
+    c.dp_degree = 2;
+    c.dp_spec = CodecSpec::parse("ef:directq:fw4bw4").unwrap();
+    c
+}
+
+#[test]
+fn pool_size_cannot_reach_the_numerics() {
+    // the event executor's core claim: the worker-pool size is a pure
+    // throughput knob. Sweep pools from fully serialized (1 worker for
+    // 6 tasks) to one-worker-per-task and beyond; every trace must be
+    // bit-identical to the one virtual-clock oracle.
+    for schedule in [Schedule::GPipe, Schedule::OneFOneB] {
+        let base = events_cfg(schedule);
+        let oracle = run_virtual(&base).expect("oracle run");
+        let n_tasks = base.n_stages * base.dp_degree;
+        for workers in [1, 2, base.n_stages, n_tasks, n_tasks + 3] {
+            let mut c = base.clone();
+            c.workers = workers;
+            let ev = run_events(&c)
+                .unwrap_or_else(|e| panic!("{schedule:?} pool={workers}: {e}"));
+            assert!(
+                ev.bit_identical(&oracle),
+                "{schedule:?}: pool of {workers} diverged from the oracle"
+            );
+            assert_eq!(
+                ev.fw_state_bytes, oracle.fw_state_bytes,
+                "{schedule:?}: pool of {workers} left different codec state"
+            );
+        }
+    }
+}
+
+#[test]
+fn run_events_is_deterministic_across_repeated_runs() {
+    // run-twice determinism on a contended pool: 2 workers x 6 tasks,
+    // so the OS-level interleaving genuinely differs between runs while
+    // the trajectory (losses, wire bytes, digests, codec state) may not
+    let mut c = events_cfg(Schedule::OneFOneB);
+    c.workers = 2;
+    let a = run_events(&c).expect("first event run");
+    let b = run_events(&c).expect("second event run");
+    assert!(a.bit_identical(&b), "event executor not deterministic across runs");
+    assert_eq!(a.fw_state_bytes, b.fw_state_bytes);
 }
 
 #[test]

@@ -4,6 +4,9 @@
 //! `decode_into` reconstructing into a caller buffer — performs ZERO
 //! heap allocations, for the paper's main schemes (fp32 baseline,
 //! AQ-SGD activations fw2/bw4, and the EF DirectQ gradient compressor).
+//! A second phase pins the same property through the executors' *link*
+//! path (`send_from` out of the endpoint frame buffer, pooled wire
+//! buffers, `recv_held` + `decode_into` on the far side).
 //!
 //! This is the mechanism behind the paper's "no additional end-to-end
 //! runtime overhead" claim (§6): encode+pack must run well above
@@ -15,9 +18,12 @@
 //! The counting allocator is process-global, so a sibling test running
 //! concurrently would perturb the measured deltas.
 
+use std::time::Duration;
+
 use aq_sgd::codec::frame::{FrameBuf, FrameView};
 use aq_sgd::codec::registry::build_mem_pair;
 use aq_sgd::codec::{CodecSpec, Rounding};
+use aq_sgd::net::link_endpoints;
 use aq_sgd::testing::alloc::{allocation_count, CountingAlloc};
 
 #[global_allocator]
@@ -61,6 +67,41 @@ fn steady_state_codec_path_is_allocation_free() {
                 "{spec}/{dir}: {allocs} heap allocations in 8 steady-state rounds"
             );
         }
+    }
+
+    // Phase 2: the same pin through the *link* path the threaded and
+    // event executors use — encode into the endpoint's frame buffer,
+    // `send_from` borrowing it (the wire copy comes from the link's
+    // buffer pool), `recv_held` lending the frame back and recycling the
+    // previous one, `decode_into` a reused output buffer. One full
+    // transport round, zero allocator calls after warm-up.
+    for spec in ["fp32", "aqsgd:fw2bw4", "ef:directq:fw4bw4"] {
+        let cs = CodecSpec::parse(spec).unwrap();
+        let (enc, dec) = build_mem_pair(&cs.fw, el, Rounding::Nearest, 42).unwrap();
+        // unpaced link: instant delivery, no residual sleeps in the test
+        let (mut tx, mut rx) = link_endpoints(0, el, enc, dec, f64::INFINITY, Duration::ZERO);
+        let mut a: Vec<f32> = (0..el * n_ex).map(|i| (i as f32 * 0.59).cos()).collect();
+        let mut out = Vec::new();
+
+        // warm-up: buffer stores, the link's buffer pool, and the decode
+        // scratch all reach steady-state capacity
+        for _ in 0..4 {
+            drift(&mut a);
+            tx.send(&ids, &a).unwrap();
+            rx.recv_into(&ids, &mut out).unwrap();
+        }
+
+        let before = allocation_count();
+        for _ in 0..8 {
+            drift(&mut a);
+            tx.send(&ids, &a).unwrap();
+            rx.recv_into(&ids, &mut out).unwrap();
+        }
+        let allocs = allocation_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "{spec}/link: {allocs} heap allocations in 8 steady-state link rounds"
+        );
     }
 }
 
