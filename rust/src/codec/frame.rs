@@ -39,6 +39,10 @@ pub const TAG_F16: u8 = 2;
 pub const TAG_DIRECTQ: u8 = 3;
 pub const TAG_AQ: u8 = 4;
 pub const TAG_TOPK: u8 = 5;
+/// Session-layer handshake frame (`net::session`), not a codec format:
+/// carries (version, link kind, peer coordinates) in the header and the
+/// canonical config summary in the payload.
+pub const TAG_HELLO: u8 = 6;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {

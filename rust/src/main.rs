@@ -1,15 +1,20 @@
 //! `aq-sgd` launcher: train / evaluate / inspect over the AOT artifacts.
 //!
 //! Subcommands:
-//!   train       run a training job (see --help for flags)
-//!   info        print a model manifest summary
-//!   throughput  one-off pipeline-throughput simulation
+//!   train        run a training job (see --help for flags)
+//!   info         print a model manifest summary
+//!   throughput   one-off pipeline-throughput simulation
+//!   serve-stage  run one (replica, stage) as this OS process over TCP
 //!
 //! Examples:
 //!   aq-sgd train --model tiny --compression aqsgd:fw2bw4 --epochs 4 \
 //!                --bandwidth 100mbps --dataset markov
 //!   aq-sgd info --model small
 //!   aq-sgd throughput --stages 8 --micro 32 --bandwidth 100mbps
+//!   aq-sgd serve-stage --role stage:0 --peers 127.0.0.1:7101,127.0.0.1:7102 \
+//!                      --stages 2 --compression aqsgd:fw2bw4 --steps 3
+
+use std::time::Duration;
 
 use aq_sgd::util::error::Result;
 
@@ -18,11 +23,13 @@ use aq_sgd::config::{parse_bandwidth, Cli, TrainConfig};
 use aq_sgd::coordinator::Trainer;
 use aq_sgd::exp::{self, make_dataset};
 use aq_sgd::metrics::Table;
-use aq_sgd::pipeline::{PipelineSim, SimConfig};
+use aq_sgd::net::session::TopologyPlan;
+use aq_sgd::net::tcp::LinkShape;
+use aq_sgd::pipeline::{serve_stage, ExecConfig, PipelineSim, ServeOpts, SimConfig};
 use aq_sgd::runtime::Manifest;
 use aq_sgd::util::fmt;
 
-const HELP: &str = "aq-sgd <train|info|throughput> [--key value ...]
+const HELP: &str = "aq-sgd <train|info|throughput|serve-stage> [--key value ...]
 
 train flags:
   --model NAME            artifacts/<NAME> (default tiny)
@@ -54,6 +61,28 @@ train flags:
   --stochastic            stochastic (unbiased) rounding
   --eval-every N          eval cadence
   --csv PATH              write the loss trace
+
+serve-stage flags (plus the train job flags: --compression, --dp,
+--dp-codec, --schedule, --seed, --steps, --n-micro, --lr, --stages,
+--el, --micro-batch):
+  --role stage:<i>        which pipeline stage this process runs
+  --replica R             which data-parallel replica (default 0)
+  --peers A,B,...         listen addresses of every (replica, stage)
+                          process, flattened replica-major (replica 0
+                          stages 0..k, then replica 1, ...)
+  --shape-rate B          token-bucket bandwidth cap per socket
+                          (e.g. 100mbps; default unshaped)
+  --shape-latency-ms F    injected delivery latency per frame
+  --shape-jitter-ms F     extra uniform-random delay in [0, F) —
+                          monotone, never reorders
+  --shape-seed N          jitter rng seed (default 0x5EED)
+  --shape-chunk N         cap bytes per read/write syscall (forces
+                          partial I/O; 0 = unforced)
+  --stall-timeout-ms N    give up when no frame arrives for N ms
+                          (default 5000)
+  --connect-timeout-ms N  outbound connect retry budget (default 10000)
+  --skip-oracle           skip the local virtual-clock bit-identity
+                          check after the run
 ";
 
 fn cmd_train(cli: &Cli) -> Result<()> {
@@ -139,6 +168,90 @@ fn cmd_train_executor(cli: &Cli, cfg: &TrainConfig) -> Result<()> {
     exp::check_matches_oracle(&real, &oracle)
 }
 
+/// `serve-stage`: run one (replica, stage) of a multi-process job as
+/// this OS process over real TCP sockets, then verify the trajectory
+/// bit-identical to the local virtual-clock oracle (unless
+/// --skip-oracle). Every process of the job must be launched with the
+/// same job flags and the same --peers list; they find each other, shake
+/// hands (rejecting config mismatches), train, and exit.
+fn cmd_serve_stage(cli: &Cli) -> Result<()> {
+    let cfg = TrainConfig::from_cli(cli)?;
+    let stages = cli.usize("stages", 4)?;
+    let el = cli.usize("el", 64)?;
+    let micro_b = cli.usize("micro-batch", 2)?;
+    let steps = if cfg.total_steps == usize::MAX { 4 } else { cfg.total_steps };
+    let ecfg = ExecConfig::from_train(&cfg, stages, micro_b, el, steps);
+
+    let role = cli.str("role", "");
+    let stage = role
+        .strip_prefix("stage:")
+        .and_then(|i| i.parse::<usize>().ok())
+        .ok_or_else(|| aq_sgd::err!("--role must be stage:<i>, got {role:?}"))?;
+    let replica = cli.usize("replica", 0)?;
+    let peers = cli.str("peers", "");
+    aq_sgd::ensure!(
+        !peers.is_empty(),
+        "--peers is required: comma-separated listen addresses for all {} processes",
+        stages * ecfg.dp_degree
+    );
+    let plan = TopologyPlan::parse(&peers, stages, ecfg.dp_degree)?;
+
+    let mut shape = LinkShape::default();
+    if let Some(v) = cli.flags.get("shape-rate") {
+        shape.rate_bps = Some(parse_bandwidth(v)?);
+    }
+    shape.latency = Duration::from_secs_f64(cli.f64("shape-latency-ms", 0.0)? / 1e3);
+    shape.jitter = Duration::from_secs_f64(cli.f64("shape-jitter-ms", 0.0)? / 1e3);
+    shape.jitter_seed = cli.usize("shape-seed", 0x5EED)? as u64;
+    let chunk = cli.usize("shape-chunk", 0)?;
+    if chunk > 0 {
+        shape.max_io_chunk = Some(chunk);
+    }
+
+    let connect = Duration::from_millis(cli.usize("connect-timeout-ms", 10_000)? as u64);
+    let opts = ServeOpts {
+        replica,
+        stage,
+        plan,
+        shape,
+        stall_timeout: Duration::from_millis(cli.usize("stall-timeout-ms", 5_000)? as u64),
+        connect_timeout: connect,
+        handshake_timeout: connect,
+        check_oracle: !cli.bool("skip-oracle"),
+    };
+    println!(
+        "serve-stage replica={replica} stage={stage}/{stages} dp={} compression={} \
+         dp_codec={} schedule={:?} steps={steps}",
+        ecfg.dp_degree,
+        ecfg.spec.label(),
+        ecfg.dp_spec.label(),
+        ecfg.schedule,
+    );
+    let summary = serve_stage(&ecfg, &opts)?;
+
+    let mut t = Table::new(&["step", "loss", "fw wire", "bw wire", "dp wire", "digest", "wall"]);
+    for (i, rec) in summary.per_step.iter().enumerate() {
+        t.row(vec![
+            format!("{i}"),
+            rec.loss.map_or_else(|| "-".into(), |l| format!("{l:.5}")),
+            fmt::bytes(rec.fw_wire),
+            fmt::bytes(rec.bw_wire),
+            fmt::bytes(rec.dp_wire),
+            format!("{:016x}", rec.digest),
+            fmt::duration_s(summary.wall_s[i]),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "SERVE-OK replica={} stage={} steps={} oracle={}",
+        summary.replica,
+        summary.stage,
+        summary.per_step.len(),
+        if summary.oracle_checked { "bit-identical" } else { "skipped" }
+    );
+    Ok(())
+}
+
 fn cmd_info(cli: &Cli) -> Result<()> {
     let model = cli.str("model", "tiny");
     let man = Manifest::load(&cli.str("artifacts", "artifacts"), &model)?;
@@ -197,6 +310,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&cli),
         Some("info") => cmd_info(&cli),
         Some("throughput") => cmd_throughput(&cli),
+        Some("serve-stage") => cmd_serve_stage(&cli),
         _ => {
             print!("{HELP}");
             Ok(())

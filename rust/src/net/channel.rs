@@ -39,7 +39,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::{RealLink, RealReceiver, TryRecv};
+use super::{FrameRx, FrameTx, RealLink, RealReceiver, TryRecv};
 use crate::util::error::Result;
 
 /// Callback fired by the sending half after each frame is enqueued
@@ -149,6 +149,52 @@ impl FrameLink {
     /// Install the wakeup fired after each enqueued frame.
     pub fn set_doorbell(&mut self, bell: Doorbell) {
         self.doorbell = Some(bell);
+    }
+}
+
+impl FrameTx for FrameLink {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        FrameLink::send(self, frame);
+        Ok(())
+    }
+
+    fn send_from(&mut self, frame: &[u8]) -> Result<()> {
+        FrameLink::send_from(self, frame);
+        Ok(())
+    }
+
+    fn set_doorbell(&mut self, bell: Doorbell) {
+        FrameLink::set_doorbell(self, bell);
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        self.msgs_sent
+    }
+}
+
+impl FrameRx for FrameLinkRx {
+    fn poll(&mut self) -> Poll {
+        FrameLinkRx::poll(self)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        FrameLinkRx::try_recv(self)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        FrameLinkRx::recv(self)
+    }
+
+    fn recv_held(&mut self) -> Result<&[u8]> {
+        FrameLinkRx::recv_held(self)
+    }
+
+    fn set_doorbell(&mut self, bell: Doorbell) {
+        self.rx.set_doorbell(bell);
     }
 }
 

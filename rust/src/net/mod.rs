@@ -7,17 +7,69 @@
 //! x scheme x schedule) cell of Tables 2/3/5 in milliseconds.
 //!
 //! A real-sleep mode (`RealLink`) exists for the threaded integration test
-//! so the event model is cross-checked against wall-clock behaviour.
+//! so the event model is cross-checked against wall-clock behaviour, and a
+//! real TCP transport ([`tcp`]) + peer handshake layer ([`session`]) run
+//! the same frame traffic between separate OS processes.
 
 pub mod channel;
 pub mod plane;
+pub mod session;
+pub mod tcp;
 
 pub use channel::{frame_link, Doorbell, FrameLink, FrameLinkRx, Poll};
 pub use plane::{dp_rings, link_endpoints, DpRing, LinkEndpointRx, LinkEndpointTx};
+pub use session::TopologyPlan;
+pub use tcp::{IoDriver, LinkShape, TcpFrameRx, TcpFrameTx};
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::error::Result;
+
+/// Sending half of a frame transport. Implemented by the in-process
+/// [`FrameLink`] (paced SPSC channel) and the socket-backed
+/// [`TcpFrameTx`]; the pipeline endpoints hold `Box<dyn FrameTx>` so the
+/// same executor state machines run over either.
+///
+/// Byte accounting is part of the contract: `bytes_sent` counts exactly
+/// the frame images handed to `send`/`send_from` — transport framing
+/// overhead (e.g. the TCP length prefix) is excluded, so in-process and
+/// socket runs report identical per-link wire bytes.
+pub trait FrameTx: Send {
+    /// Queue one encoded frame. The call never blocks on the network;
+    /// `Err` means the transport is dead (peer closed or I/O error).
+    fn send(&mut self, frame: Vec<u8>) -> Result<()>;
+    /// Like [`send`](Self::send), from a borrowed image (the transport
+    /// copies into a recycled buffer where it can).
+    fn send_from(&mut self, frame: &[u8]) -> Result<()>;
+    /// Install the wakeup hook fired after every accepted send.
+    fn set_doorbell(&mut self, bell: Doorbell);
+    /// Total frame bytes accepted so far (excluding transport framing).
+    fn bytes_sent(&self) -> u64;
+    /// Total frames accepted so far.
+    fn msgs_sent(&self) -> u64;
+}
+
+/// Receiving half of a frame transport, with the poll/doorbell readiness
+/// contract the event executor runs on: `poll` never blocks or consumes,
+/// `recv`/`recv_held` block honouring modeled delivery time, and the
+/// doorbell fires when a new frame becomes available (or the peer goes
+/// away), so a parked task gets rescheduled.
+pub trait FrameRx: Send {
+    /// Non-blocking, non-consuming readiness probe.
+    fn poll(&mut self) -> Poll;
+    /// Non-blocking dequeue of a *deliverable* frame; `Ok(None)` when
+    /// nothing is ready yet, `Err` once the link is closed and drained.
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
+    /// Blocking receive; `Err` once the link is closed and drained.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Blocking receive into a transport-held buffer, for decode paths
+    /// that only need to view the frame.
+    fn recv_held(&mut self) -> Result<&[u8]>;
+    /// Install the wakeup hook fired on frame arrival and on close.
+    fn set_doorbell(&mut self, bell: Doorbell);
+}
 
 /// Standard bandwidth ladder of the paper's evaluation (bits/s).
 pub const PAPER_BANDWIDTHS: [(f64, &str); 5] = [
@@ -79,6 +131,10 @@ impl Link {
 struct ChanState<T> {
     queue: VecDeque<(Instant, T)>,
     closed: bool,
+    /// Receiver-installed wakeup hook, fired (outside the lock) after a
+    /// push and on close — the rx half of the doorbell contract, so a
+    /// parked event task learns a channel frame landed.
+    bell: Option<Doorbell>,
 }
 
 struct Chan<T> {
@@ -118,7 +174,11 @@ fn chan_lock<T>(c: &Chan<T>) -> std::sync::MutexGuard<'_, ChanState<T>> {
 impl<T: Send> RealLink<T> {
     pub fn channel(bandwidth_bps: f64, latency: Duration) -> (RealLink<T>, RealReceiver<T>) {
         let chan = Arc::new(Chan {
-            state: Mutex::new(ChanState { queue: VecDeque::with_capacity(16), closed: false }),
+            state: Mutex::new(ChanState {
+                queue: VecDeque::with_capacity(16),
+                closed: false,
+                bell: None,
+            }),
             cv: Condvar::new(),
         });
         (
@@ -144,19 +204,35 @@ impl<T: Send> RealLink<T> {
         let deliver_at = self.epoch + self.busy_until + self.latency;
         let mut st = chan_lock(&self.chan);
         st.queue.push_back((deliver_at, msg));
+        let bell = st.bell.clone();
         drop(st);
         self.chan.cv.notify_one();
+        if let Some(b) = bell {
+            b();
+        }
     }
 }
 
 impl<T> Drop for RealLink<T> {
     fn drop(&mut self) {
-        chan_lock(&self.chan).closed = true;
+        let mut st = chan_lock(&self.chan);
+        st.closed = true;
+        let bell = st.bell.clone();
+        drop(st);
         self.chan.cv.notify_all();
+        if let Some(b) = bell {
+            b();
+        }
     }
 }
 
 impl<T> RealReceiver<T> {
+    /// Install the receive-side doorbell, fired after every push into the
+    /// channel and when the sender drops.
+    pub fn set_doorbell(&mut self, bell: Doorbell) {
+        chan_lock(&self.chan).bell = Some(bell);
+    }
+
     /// Blocking receive honouring the modeled delivery time. Messages
     /// queued before the sender dropped are still delivered; `None` only
     /// once the channel is both closed and drained.
@@ -257,6 +333,22 @@ mod tests {
         assert_eq!(rx.recv(), Some(1));
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn receiver_doorbell_fires_on_send_and_close() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let (mut tx, mut rx) = RealLink::channel(f64::INFINITY, Duration::ZERO);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        rx.set_doorbell(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        tx.send(1u32, 10);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        drop(tx);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(rx.recv(), Some(1));
     }
 
     #[test]

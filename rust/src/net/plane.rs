@@ -27,33 +27,62 @@
 
 use std::time::Duration;
 
-use super::{frame_link, Doorbell, FrameLink, FrameLinkRx, Poll};
+use super::{frame_link, Doorbell, FrameLink, FrameLinkRx, FrameRx, FrameTx, Poll};
 use crate::codec::registry::{build_mem_pair, SchemeSpec};
 use crate::codec::{BoundaryCodec, FrameBuf, FrameView, Rounding};
 use crate::coordinator::boundary::{BoundaryReceiver, BoundarySender, TransferStats};
 use crate::util::error::{Context, Result};
 
-/// Sending endpoint: codec encoder half + paced frame link + accounting.
+/// Sending endpoint: codec encoder half + frame transport + accounting.
 /// Owns a reusable [`FrameBuf`] scratch arena and ships its serialized
-/// image through the link's recycled buffer pool
-/// ([`FrameLink::send_from`]), so the steady-state encode+serialize+send
-/// path is allocation-free end to end.
+/// image through the transport (`send_from` recycles buffers on the
+/// in-process links), so the steady-state encode+serialize+send path is
+/// allocation-free end to end. The transport is a boxed [`FrameTx`]:
+/// the same endpoint runs over an in-process channel or a TCP socket.
 pub struct LinkEndpointTx {
     enc: BoundarySender,
-    link: FrameLink,
+    link: Box<dyn FrameTx>,
     buf: FrameBuf,
 }
 
-/// Receiving endpoint: paced frame link + codec decoder half. Received
+/// Receiving endpoint: frame transport + codec decoder half. Received
 /// images are parsed as borrowing [`FrameView`]s, so header/payload
 /// bytes are decoded in place — no frame copies on the receive path.
 pub struct LinkEndpointRx {
     dec: BoundaryReceiver,
-    link: FrameLinkRx,
+    link: Box<dyn FrameRx>,
 }
 
-/// Bond a codec pair to a fresh directed link. `bandwidth_bps` may be
-/// `f64::INFINITY` (the virtual-clock executor's unpaced FIFO mode).
+/// Bond a codec encoder half to the sending side of an existing
+/// transport link.
+pub fn link_endpoint_tx(
+    boundary_id: u32,
+    example_len: usize,
+    enc: Box<dyn BoundaryCodec>,
+    link: Box<dyn FrameTx>,
+) -> LinkEndpointTx {
+    LinkEndpointTx {
+        enc: BoundarySender::new(boundary_id, example_len, enc),
+        link,
+        buf: FrameBuf::new(),
+    }
+}
+
+/// Bond a codec decoder half to the receiving side of an existing
+/// transport link.
+pub fn link_endpoint_rx(
+    boundary_id: u32,
+    example_len: usize,
+    dec: Box<dyn BoundaryCodec>,
+    link: Box<dyn FrameRx>,
+) -> LinkEndpointRx {
+    LinkEndpointRx { dec: BoundaryReceiver::new(boundary_id, example_len, dec), link }
+}
+
+/// Bond a codec pair to a fresh in-process directed link. `bandwidth_bps`
+/// may be `f64::INFINITY` (the virtual-clock executor's unpaced FIFO
+/// mode). Multi-process runs build each side separately over socket
+/// transports via [`link_endpoint_tx`]/[`link_endpoint_rx`].
 pub fn link_endpoints(
     boundary_id: u32,
     example_len: usize,
@@ -64,12 +93,8 @@ pub fn link_endpoints(
 ) -> (LinkEndpointTx, LinkEndpointRx) {
     let (tx, rx) = frame_link(bandwidth_bps, latency);
     (
-        LinkEndpointTx {
-            enc: BoundarySender::new(boundary_id, example_len, enc),
-            link: tx,
-            buf: FrameBuf::new(),
-        },
-        LinkEndpointRx { dec: BoundaryReceiver::new(boundary_id, example_len, dec), link: rx },
+        link_endpoint_tx(boundary_id, example_len, enc, Box::new(tx)),
+        link_endpoint_rx(boundary_id, example_len, dec, Box::new(rx)),
     )
 }
 
@@ -79,7 +104,7 @@ impl LinkEndpointTx {
     /// bytes (the built image's length — what actually shipped).
     pub fn send(&mut self, ids: &[u64], a: &[f32]) -> Result<TransferStats> {
         let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
-        self.link.send_from(self.buf.as_bytes());
+        self.link.send_from(self.buf.as_bytes())?;
         Ok(stats)
     }
 
@@ -89,13 +114,13 @@ impl LinkEndpointTx {
     pub fn send_keep(&mut self, ids: &[u64], a: &[f32]) -> Result<(TransferStats, Vec<u8>)> {
         let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
         let bytes = self.buf.as_bytes().to_vec();
-        self.link.send_from(&bytes);
+        self.link.send_from(&bytes)?;
         Ok((stats, bytes))
     }
 
     /// Ship an already-serialized frame unchanged (ring forwarding).
-    pub fn forward(&mut self, bytes: Vec<u8>) {
-        self.link.send(bytes);
+    pub fn forward(&mut self, bytes: Vec<u8>) -> Result<()> {
+        self.link.send(bytes)
     }
 
     /// Install the link's post-enqueue wakeup (see [`Doorbell`]).
@@ -105,7 +130,7 @@ impl LinkEndpointTx {
 
     /// Total serialized bytes shipped on this link.
     pub fn bytes_sent(&self) -> u64 {
-        self.link.bytes_sent
+        self.link.bytes_sent()
     }
 
     /// Encoder-side persistent codec state (message buffers etc.).
@@ -144,6 +169,13 @@ impl LinkEndpointRx {
         self.link.recv()
     }
 
+    /// Install a wakeup fired when a frame lands on this endpoint's
+    /// receiving side (socket transports ring it from the I/O driver;
+    /// in-process links ring it from the sender).
+    pub fn set_doorbell(&mut self, bell: Doorbell) {
+        self.link.set_doorbell(bell);
+    }
+
     /// Decoder-side persistent codec state (the buffer replica).
     pub fn state_bytes(&self) -> u64 {
         self.dec.state_bytes()
@@ -174,7 +206,7 @@ pub struct DpRing {
     /// own EF/codec encoder bonded to the outgoing ring edge
     tx: LinkEndpointTx,
     /// incoming ring edge, raw (decode happens per sender)
-    rx: FrameLinkRx,
+    rx: Box<dyn FrameRx>,
     /// per-sender decoder replicas (index = originating replica)
     dec: Vec<BoundaryReceiver>,
     /// frames of the current round, slotted by sender
@@ -203,7 +235,6 @@ pub fn dp_rings(
 ) -> Result<Vec<DpRing>> {
     crate::ensure!(degree >= 1, "dp ring needs at least one replica");
     crate::ensure!(n >= 1, "dp ring needs a non-empty gradient");
-    let sender_seed = |j: usize| seed ^ (0xD9D9_0000 | j as u64);
     // directed ring edges j -> (j+1) % degree
     let mut edge_tx: Vec<Option<FrameLink>> = (0..degree).map(|_| None).collect();
     let mut edge_rx: Vec<Option<FrameLinkRx>> = (0..degree).map(|_| None).collect();
@@ -214,32 +245,66 @@ pub fn dp_rings(
     }
     let mut rings = Vec::with_capacity(degree);
     for r in 0..degree {
-        let enc = build_mem_pair(scheme, n, rounding, sender_seed(r))?.0;
-        let mut dec = Vec::with_capacity(degree);
-        for j in 0..degree {
-            let half = build_mem_pair(scheme, n, rounding, sender_seed(j))?.1;
-            dec.push(BoundaryReceiver::new(j as u32, n, half));
-        }
-        let link = edge_tx[r].take().expect("edge distributed once");
-        rings.push(DpRing {
-            replica: r,
+        let tx = edge_tx[r].take().expect("edge distributed once");
+        let rx = edge_rx[r].take().expect("edge distributed once");
+        rings.push(dp_ring_endpoint(
+            scheme,
             degree,
+            r,
             n,
-            ids: [0],
-            tx: LinkEndpointTx {
-                enc: BoundarySender::new(r as u32, n, enc),
-                link,
-                buf: FrameBuf::new(),
-            },
-            rx: edge_rx[r].take().expect("edge distributed once"),
-            dec,
-            frames: (0..degree).map(|_| None).collect(),
-            deq: Vec::new(),
-            sent_bytes: 0,
-            max_frame: 0,
-        });
+            rounding,
+            seed,
+            (Box::new(tx), Box::new(rx)),
+        )?);
     }
     Ok(rings)
+}
+
+/// Build ONE replica's ring endpoint over caller-provided transport
+/// halves — the multi-process path, where each OS process owns exactly
+/// its own endpoint and the edges are TCP sockets. Codec construction
+/// (one registry build per sender, seeded by sender index) is identical
+/// to [`dp_rings`], so a socket-backed replica stays in bit-lockstep
+/// with in-process ones.
+pub fn dp_ring_endpoint(
+    scheme: &SchemeSpec,
+    degree: usize,
+    replica: usize,
+    n: usize,
+    rounding: Rounding,
+    seed: u64,
+    links: (Box<dyn FrameTx>, Box<dyn FrameRx>),
+) -> Result<DpRing> {
+    crate::ensure!(degree >= 1, "dp ring needs at least one replica");
+    crate::ensure!(
+        replica < degree,
+        "dp ring replica {replica} out of range for degree {degree}"
+    );
+    crate::ensure!(n >= 1, "dp ring needs a non-empty gradient");
+    let sender_seed = |j: usize| seed ^ (0xD9D9_0000 | j as u64);
+    let enc = build_mem_pair(scheme, n, rounding, sender_seed(replica))?.0;
+    let mut dec = Vec::with_capacity(degree);
+    for j in 0..degree {
+        let half = build_mem_pair(scheme, n, rounding, sender_seed(j))?.1;
+        dec.push(BoundaryReceiver::new(j as u32, n, half));
+    }
+    Ok(DpRing {
+        replica,
+        degree,
+        n,
+        ids: [0],
+        tx: LinkEndpointTx {
+            enc: BoundarySender::new(replica as u32, n, enc),
+            link: links.0,
+            buf: FrameBuf::new(),
+        },
+        rx: links.1,
+        dec,
+        frames: (0..degree).map(|_| None).collect(),
+        deq: Vec::new(),
+        sent_bytes: 0,
+        max_frame: 0,
+    })
 }
 
 impl DpRing {
@@ -279,7 +344,7 @@ impl DpRing {
             // not yet at the origin's predecessor: keep it moving
             self.sent_bytes += bytes.len() as u64;
             self.max_frame = self.max_frame.max(bytes.len() as u64);
-            self.tx.forward(bytes.clone());
+            self.tx.forward(bytes.clone())?;
         }
         crate::ensure!(
             self.frames[origin].replace(bytes).is_none(),
@@ -326,6 +391,13 @@ impl DpRing {
     /// successor replica, see [`Doorbell`]).
     pub fn set_doorbell(&mut self, bell: Doorbell) {
         self.tx.set_doorbell(bell);
+    }
+
+    /// Install a wakeup on the *incoming* ring edge — the multi-process
+    /// path, where frame arrival is signalled by the local I/O driver
+    /// rather than by an in-process sender.
+    pub fn set_rx_doorbell(&mut self, bell: Doorbell) {
+        self.rx.set_doorbell(bell);
     }
 
     /// Convenience for the threaded executor (each replica runs on its

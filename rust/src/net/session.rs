@@ -1,0 +1,541 @@
+//! Peer/session layer over the TCP transport: who listens where, who
+//! connects to whom, and the handshake that proves both ends are running
+//! the same job before any training frame moves.
+//!
+//! A [`TopologyPlan`] maps every (replica, stage) cell of the pipeline
+//! grid to one listen address; each directed link has a canonical
+//! initiator (the **sender** connects): forward activations connect
+//! downstream, backward gradients connect upstream, and the DP ring
+//! connects to the next replica of the same stage. [`establish`] brings
+//! one process's links up in a deadlock-free order — bind, connect all
+//! outbound with retry, send hellos *without waiting*, then accept and
+//! answer the expected inbound set — so every process can run the same
+//! code concurrently.
+//!
+//! The hello is a [`TAG_HELLO`] frame: header = (protocol version, link
+//! kind, from-(replica,stage), to-(replica,stage)), payload = the
+//! canonical config summary (codec specs, schedule, topology, seed). A
+//! version or summary mismatch is answered with a reject frame carrying
+//! the reason, and surfaces as a descriptive `Err` on both ends —
+//! never as two processes silently training different jobs.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::tcp::{IoDriver, LinkShape, TcpFrameRx, TcpFrameTx};
+use crate::codec::frame::{Frame, FrameReader, FrameView, FrameWriter, TAG_HELLO};
+use crate::util::error::{Context, Result};
+
+/// Session protocol version; bumped on any wire or handshake change.
+pub const SESSION_VERSION: u32 = 1;
+
+/// Cap on a handshake frame — hellos are small; anything bigger is a
+/// confused or hostile peer.
+const HELLO_MAX_BYTES: usize = 1 << 16;
+
+/// Poll cadence while retrying connects / waiting on accepts.
+const RETRY_WAIT: Duration = Duration::from_millis(25);
+
+const KIND_FW: u8 = 0;
+const KIND_BW: u8 = 1;
+const KIND_RING: u8 = 2;
+const KIND_REJECT: u8 = 255;
+
+/// Which traffic class a link carries (one socket per class/direction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Forward activations, stage s → s+1.
+    Fw,
+    /// Backward gradients, stage s → s-1.
+    Bw,
+    /// DP all-gather ring hop, replica r → (r+1) % d.
+    Ring,
+}
+
+impl LinkKind {
+    fn code(self) -> u8 {
+        match self {
+            LinkKind::Fw => KIND_FW,
+            LinkKind::Bw => KIND_BW,
+            LinkKind::Ring => KIND_RING,
+        }
+    }
+
+    fn parse(code: u8) -> Result<Self> {
+        match code {
+            KIND_FW => Ok(LinkKind::Fw),
+            KIND_BW => Ok(LinkKind::Bw),
+            KIND_RING => Ok(LinkKind::Ring),
+            other => Err(crate::err!("unknown link kind {other} in hello frame")),
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            LinkKind::Fw => "forward",
+            LinkKind::Bw => "backward",
+            LinkKind::Ring => "dp-ring",
+        }
+    }
+}
+
+/// Where every (replica, stage) process listens. Addresses are flattened
+/// replica-major: index `replica * n_stages + stage`.
+#[derive(Clone, Debug)]
+pub struct TopologyPlan {
+    pub n_stages: usize,
+    pub dp_degree: usize,
+    addrs: Vec<String>,
+}
+
+impl TopologyPlan {
+    pub fn new(n_stages: usize, dp_degree: usize, addrs: Vec<String>) -> Result<Self> {
+        crate::ensure!(n_stages >= 1 && dp_degree >= 1, "topology needs at least one process");
+        crate::ensure!(
+            addrs.len() == n_stages * dp_degree,
+            "topology wants {} addresses ({} replicas x {} stages), got {}",
+            n_stages * dp_degree,
+            dp_degree,
+            n_stages,
+            addrs.len()
+        );
+        Ok(TopologyPlan { n_stages, dp_degree, addrs })
+    }
+
+    /// Parse the `--peers` list: comma-separated `host:port`, flattened
+    /// replica-major (replica 0 stages 0..k, then replica 1, ...).
+    pub fn parse(peers: &str, n_stages: usize, dp_degree: usize) -> Result<Self> {
+        let addrs: Vec<String> = peers
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        Self::new(n_stages, dp_degree, addrs)
+    }
+
+    /// Listen address of the (replica, stage) process.
+    pub fn addr(&self, replica: usize, stage: usize) -> &str {
+        &self.addrs[replica * self.n_stages + stage]
+    }
+}
+
+/// Timeouts + shaping for one process's link bring-up.
+#[derive(Clone, Debug)]
+pub struct SessionOpts {
+    /// Applied to every registered data socket.
+    pub shape: LinkShape,
+    /// How long outbound connects retry before giving up (peers may not
+    /// have bound yet — a retry loop is part of the protocol).
+    pub connect_timeout: Duration,
+    /// Read/write timeout on the blocking handshake exchanges, and the
+    /// extra budget for inbound peers to show up.
+    pub handshake_timeout: Duration,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            shape: LinkShape::default(),
+            connect_timeout: Duration::from_secs(10),
+            handshake_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One process's established, driver-registered link set. `None` where
+/// the topology has no such link (edge stages, dp_degree 1).
+pub struct StageSockets {
+    pub fw_in: Option<TcpFrameRx>,
+    pub fw_out: Option<TcpFrameTx>,
+    pub bw_in: Option<TcpFrameRx>,
+    pub bw_out: Option<TcpFrameTx>,
+    pub ring_in: Option<TcpFrameRx>,
+    pub ring_out: Option<TcpFrameTx>,
+    /// Keep alive for the duration of the run; dropping it flushes and
+    /// joins the I/O thread.
+    pub driver: IoDriver,
+}
+
+struct Hello {
+    kind: LinkKind,
+    from: (usize, usize),
+    to: (usize, usize),
+    summary: String,
+}
+
+enum HelloMsg {
+    Hello(Hello),
+    Reject(String),
+}
+
+fn hello_bytes(kind: LinkKind, from: (usize, usize), to: (usize, usize), summary: &str) -> Vec<u8> {
+    let mut h = FrameWriter::with_capacity(21);
+    h.u32(SESSION_VERSION)
+        .u8(kind.code())
+        .u32(from.0 as u32)
+        .u32(from.1 as u32)
+        .u32(to.0 as u32)
+        .u32(to.1 as u32);
+    Frame::new(TAG_HELLO, h.finish(), summary.as_bytes().to_vec()).to_bytes()
+}
+
+fn reject_bytes(reason: &str) -> Vec<u8> {
+    let mut h = FrameWriter::with_capacity(21);
+    h.u32(SESSION_VERSION).u8(KIND_REJECT).u32(0).u32(0).u32(0).u32(0);
+    Frame::new(TAG_HELLO, h.finish(), reason.as_bytes().to_vec()).to_bytes()
+}
+
+fn decode_hello(bytes: &[u8]) -> Result<HelloMsg> {
+    let v = FrameView::parse(bytes)?;
+    crate::ensure!(
+        v.tag() == TAG_HELLO,
+        "handshake expected a hello frame, got tag {}",
+        v.tag()
+    );
+    let mut r = FrameReader::new(v.header());
+    let version = r.u32()?;
+    let kind = r.u8()?;
+    let from = (r.u32()? as usize, r.u32()? as usize);
+    let to = (r.u32()? as usize, r.u32()? as usize);
+    r.done()?;
+    let text = String::from_utf8_lossy(v.payload()).into_owned();
+    if kind == KIND_REJECT {
+        return Ok(HelloMsg::Reject(text));
+    }
+    crate::ensure!(
+        version == SESSION_VERSION,
+        "session version mismatch: peer speaks v{version}, this build speaks v{SESSION_VERSION}"
+    );
+    Ok(HelloMsg::Hello(Hello { kind: LinkKind::parse(kind)?, from, to, summary: text }))
+}
+
+/// Blocking length-prefixed frame write (handshake phase only — data
+/// sockets go through the non-blocking driver).
+fn write_frame(sock: &mut TcpStream, bytes: &[u8]) -> Result<()> {
+    sock.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    sock.write_all(bytes)?;
+    sock.flush()?;
+    Ok(())
+}
+
+/// Blocking length-prefixed frame read with a hard size cap.
+fn read_frame(sock: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut prefix = [0u8; 4];
+    sock.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    crate::ensure!(
+        (7..=HELLO_MAX_BYTES).contains(&len),
+        "handshake frame length {len} out of range"
+    );
+    let mut buf = vec![0u8; len];
+    sock.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(crate::err!("connect to {addr} timed out: {e}"));
+                }
+                std::thread::sleep(RETRY_WAIT);
+            }
+        }
+    }
+}
+
+/// The links this process initiates (it is the data sender) and the
+/// links it expects inbound (it is the data receiver), as
+/// `(kind, peer (replica, stage))` pairs.
+fn link_sets(
+    plan: &TopologyPlan,
+    replica: usize,
+    stage: usize,
+) -> (Vec<(LinkKind, (usize, usize))>, Vec<(LinkKind, (usize, usize))>) {
+    let (k, d) = (plan.n_stages, plan.dp_degree);
+    let mut outbound = Vec::new();
+    let mut expect = Vec::new();
+    if stage + 1 < k {
+        outbound.push((LinkKind::Fw, (replica, stage + 1)));
+        expect.push((LinkKind::Bw, (replica, stage + 1)));
+    }
+    if stage > 0 {
+        outbound.push((LinkKind::Bw, (replica, stage - 1)));
+        expect.push((LinkKind::Fw, (replica, stage - 1)));
+    }
+    if d > 1 {
+        outbound.push((LinkKind::Ring, ((replica + 1) % d, stage)));
+        expect.push((LinkKind::Ring, ((replica + d - 1) % d, stage)));
+    }
+    (outbound, expect)
+}
+
+/// Bring up every link of the (replica, stage) process: bind its listen
+/// address, connect + hello all outbound links, accept + validate +
+/// answer the expected inbound set, then read the outbound replies and
+/// register every socket with one I/O driver.
+///
+/// `summary` is the canonical config fingerprint (codec specs, schedule,
+/// topology, seed); any disagreement between two peers fails the
+/// handshake on both ends with the reason in the error chain.
+pub fn establish(
+    plan: &TopologyPlan,
+    replica: usize,
+    stage: usize,
+    summary: &str,
+    opts: &SessionOpts,
+) -> Result<StageSockets> {
+    let (k, d) = (plan.n_stages, plan.dp_degree);
+    crate::ensure!(replica < d, "replica {replica} out of range (dp degree {d})");
+    crate::ensure!(stage < k, "stage {stage} out of range ({k} stages)");
+    let me = (replica, stage);
+    let (outbound, expect) = link_sets(plan, replica, stage);
+
+    let listener = TcpListener::bind(plan.addr(replica, stage))
+        .with_context(|| format!("binding listen address {}", plan.addr(replica, stage)))?;
+    listener.set_nonblocking(true)?;
+
+    // Phase 1: connect all outbound links (peers may bind later — retry
+    // until the deadline) and send hellos WITHOUT waiting for replies;
+    // waiting here would deadlock two peers connecting to each other.
+    let connect_deadline = Instant::now() + opts.connect_timeout;
+    let mut out_socks = Vec::with_capacity(outbound.len());
+    for &(kind, to) in &outbound {
+        let mut sock = connect_retry(plan.addr(to.0, to.1), connect_deadline)
+            .with_context(|| {
+                format!("connecting the {} link to replica {} stage {}", kind.label(), to.0, to.1)
+            })?;
+        sock.set_nodelay(true).ok();
+        sock.set_read_timeout(Some(opts.handshake_timeout))?;
+        sock.set_write_timeout(Some(opts.handshake_timeout))?;
+        write_frame(&mut sock, &hello_bytes(kind, me, to, summary))
+            .with_context(|| format!("sending hello on the {} link", kind.label()))?;
+        out_socks.push(sock);
+    }
+
+    // Phase 2: accept the expected inbound set, validating each hello
+    // against (version, kind, peer coordinates, config summary) and
+    // answering with our own hello — or a reject carrying the reason.
+    let accept_deadline = Instant::now() + opts.connect_timeout + opts.handshake_timeout;
+    let mut inbound: Vec<Option<TcpStream>> = expect.iter().map(|_| None).collect();
+    while inbound.iter().any(Option::is_none) {
+        let (mut sock, peer_addr) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let have = inbound.iter().filter(|s| s.is_some()).count();
+                crate::ensure!(
+                    Instant::now() < accept_deadline,
+                    "timed out waiting for inbound links: {have} of {} connected",
+                    expect.len()
+                );
+                std::thread::sleep(RETRY_WAIT);
+                continue;
+            }
+            Err(e) => return Err(crate::err!("accepting an inbound link failed: {e}")),
+        };
+        sock.set_nodelay(true).ok();
+        sock.set_read_timeout(Some(opts.handshake_timeout))?;
+        sock.set_write_timeout(Some(opts.handshake_timeout))?;
+        let hello = match decode_hello(&read_frame(&mut sock).context("reading inbound hello")?)? {
+            HelloMsg::Hello(h) => h,
+            HelloMsg::Reject(reason) => {
+                crate::bail!("peer at {peer_addr} rejected the session: {reason}")
+            }
+        };
+        if hello.summary != summary {
+            let reason = format!(
+                "config mismatch: this process runs [{summary}], peer replica {} stage {} \
+                 runs [{}]",
+                hello.from.0, hello.from.1, hello.summary
+            );
+            let _ = write_frame(&mut sock, &reject_bytes(&reason));
+            crate::bail!("{reason}");
+        }
+        let slot = expect
+            .iter()
+            .position(|&(kind, from)| hello.to == me && hello.kind == kind && hello.from == from);
+        match slot {
+            Some(i) if inbound[i].is_none() => {
+                write_frame(&mut sock, &hello_bytes(hello.kind, me, hello.from, summary))
+                    .context("answering inbound hello")?;
+                inbound[i] = Some(sock);
+            }
+            _ => {
+                let reason = format!(
+                    "unexpected {} link from replica {} stage {} to replica {} stage {}",
+                    hello.kind.label(),
+                    hello.from.0,
+                    hello.from.1,
+                    hello.to.0,
+                    hello.to.1
+                );
+                let _ = write_frame(&mut sock, &reject_bytes(&reason));
+                crate::bail!("{reason}");
+            }
+        }
+    }
+
+    // Phase 3: collect the replies to our outbound hellos.
+    for (sock, &(kind, to)) in out_socks.iter_mut().zip(&outbound) {
+        let reply = decode_hello(
+            &read_frame(sock)
+                .with_context(|| format!("reading hello reply on the {} link", kind.label()))?,
+        )?;
+        match reply {
+            HelloMsg::Hello(h) => {
+                crate::ensure!(
+                    h.kind == kind && h.from == to && h.to == me,
+                    "hello reply on the {} link came from replica {} stage {}, expected \
+                     replica {} stage {}",
+                    kind.label(),
+                    h.from.0,
+                    h.from.1,
+                    to.0,
+                    to.1
+                );
+                crate::ensure!(
+                    h.summary == summary,
+                    "config mismatch on the {} link: this process runs [{summary}], peer \
+                     runs [{}]",
+                    kind.label(),
+                    h.summary
+                );
+            }
+            HelloMsg::Reject(reason) => {
+                crate::bail!(
+                    "peer replica {} stage {} rejected the {} link: {reason}",
+                    to.0,
+                    to.1,
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    // Phase 4: hand every socket to one I/O driver. Each data link is
+    // simplex: the initiator keeps the tx half, the acceptor keeps rx.
+    let driver = IoDriver::new();
+    let mut socks = StageSockets {
+        fw_in: None,
+        fw_out: None,
+        bw_in: None,
+        bw_out: None,
+        ring_in: None,
+        ring_out: None,
+        driver,
+    };
+    for (sock, &(kind, _)) in out_socks.into_iter().zip(&outbound) {
+        let (tx, _rx) = socks.driver.register(sock, opts.shape.clone())?;
+        match kind {
+            LinkKind::Fw => socks.fw_out = Some(tx),
+            LinkKind::Bw => socks.bw_out = Some(tx),
+            LinkKind::Ring => socks.ring_out = Some(tx),
+        }
+    }
+    for (sock, &(kind, _)) in inbound.into_iter().zip(&expect) {
+        let sock = sock.expect("accept loop filled every slot");
+        let (_tx, rx) = socks.driver.register(sock, opts.shape.clone())?;
+        match kind {
+            LinkKind::Fw => socks.fw_in = Some(rx),
+            LinkKind::Bw => socks.bw_in = Some(rx),
+            LinkKind::Ring => socks.ring_in = Some(rx),
+        }
+    }
+    Ok(socks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{FrameRx, FrameTx};
+    use std::net::TcpListener;
+
+    fn free_addrs(n: usize) -> Vec<String> {
+        let holds: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind")).collect();
+        holds
+            .iter()
+            .map(|l| format!("127.0.0.1:{}", l.local_addr().expect("addr").port()))
+            .collect()
+    }
+
+    #[test]
+    fn plan_parses_and_indexes_replica_major() {
+        let p = TopologyPlan::parse("a:1, b:2,c:3,d:4", 2, 2).expect("parse");
+        assert_eq!(p.addr(0, 0), "a:1");
+        assert_eq!(p.addr(0, 1), "b:2");
+        assert_eq!(p.addr(1, 0), "c:3");
+        assert_eq!(p.addr(1, 1), "d:4");
+        assert!(TopologyPlan::parse("a:1,b:2", 3, 1).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrips_and_rejects_bad_version() {
+        let b = hello_bytes(LinkKind::Ring, (1, 2), (0, 2), "spec=x");
+        match decode_hello(&b).expect("decode") {
+            HelloMsg::Hello(h) => {
+                assert_eq!(h.kind, LinkKind::Ring);
+                assert_eq!(h.from, (1, 2));
+                assert_eq!(h.to, (0, 2));
+                assert_eq!(h.summary, "spec=x");
+            }
+            HelloMsg::Reject(r) => panic!("unexpected reject: {r}"),
+        }
+        match decode_hello(&reject_bytes("nope")).expect("decode reject") {
+            HelloMsg::Reject(r) => assert_eq!(r, "nope"),
+            HelloMsg::Hello(_) => panic!("expected reject"),
+        }
+        // corrupt the version field: must be a descriptive error
+        let mut bad = hello_bytes(LinkKind::Fw, (0, 0), (0, 1), "s");
+        bad[7] ^= 0x40; // first header byte (version lo) lives after the prelude
+        let err = decode_hello(&bad).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn two_stage_session_establishes_and_moves_frames() {
+        let plan = TopologyPlan::new(2, 1, free_addrs(2)).expect("plan");
+        let p0 = plan.clone();
+        let p1 = plan.clone();
+        let t0 = std::thread::spawn(move || {
+            establish(&p0, 0, 0, "job", &SessionOpts::default()).expect("stage 0 establish")
+        });
+        let t1 = std::thread::spawn(move || {
+            establish(&p1, 0, 1, "job", &SessionOpts::default()).expect("stage 1 establish")
+        });
+        let mut s0 = t0.join().expect("stage 0 thread");
+        let mut s1 = t1.join().expect("stage 1 thread");
+        // stage 0: fw out + bw in; stage 1: fw in + bw out
+        let frame = Frame::new(TAG_HELLO, vec![1], vec![2, 3]).to_bytes();
+        s0.fw_out.as_mut().expect("fw_out").send(frame.clone()).expect("send fw");
+        assert_eq!(s1.fw_in.as_mut().expect("fw_in").recv().expect("recv fw"), frame);
+        s1.bw_out.as_mut().expect("bw_out").send(frame.clone()).expect("send bw");
+        assert_eq!(s0.bw_in.as_mut().expect("bw_in").recv().expect("recv bw"), frame);
+        assert!(s0.ring_out.is_none() && s0.ring_in.is_none());
+    }
+
+    #[test]
+    fn config_mismatch_fails_both_sides_with_the_reason() {
+        let plan = TopologyPlan::new(2, 1, free_addrs(2)).expect("plan");
+        let p0 = plan.clone();
+        let p1 = plan.clone();
+        let short = SessionOpts {
+            connect_timeout: Duration::from_secs(5),
+            handshake_timeout: Duration::from_secs(5),
+            ..SessionOpts::default()
+        };
+        let o0 = short.clone();
+        let o1 = short;
+        let t0 = std::thread::spawn(move || establish(&p0, 0, 0, "job-a", &o0).err());
+        let t1 = std::thread::spawn(move || establish(&p1, 0, 1, "job-b", &o1).err());
+        let e0 = t0.join().expect("stage 0 thread");
+        let e1 = t1.join().expect("stage 1 thread");
+        for (who, e) in [("stage 0", e0), ("stage 1", e1)] {
+            let e = e.unwrap_or_else(|| panic!("{who} should have failed"));
+            assert!(e.to_string().contains("config mismatch"), "{who}: {e}");
+        }
+    }
+}

@@ -358,14 +358,21 @@ struct StageAcct {
     dp_wire: u64,
 }
 
-/// Per-step record one stage hands back at step close.
+/// Per-step record one stage hands back at step close. Public because
+/// the multi-process serve path (`pipeline::serve`, the `serve-stage`
+/// CLI) reports and oracle-checks exactly these per-stage values.
 #[derive(Clone, Copy, Debug, Default)]
-struct StageStep {
-    loss: Option<f32>,
-    fw_wire: u64,
-    bw_wire: u64,
-    dp_wire: u64,
-    digest: u64,
+pub struct StageStep {
+    /// Mean microbatch loss (loss-head stage only; `None` elsewhere).
+    pub loss: Option<f32>,
+    /// Serialized forward-activation bytes this stage shipped.
+    pub fw_wire: u64,
+    /// Serialized backward-gradient bytes this stage shipped.
+    pub bw_wire: u64,
+    /// Serialized DP ring bytes this stage shipped.
+    pub dp_wire: u64,
+    /// FNV-1a over the stage's post-update parameter bits.
+    pub digest: u64,
 }
 
 /// One pipeline stage's compute: its model, local data shard, and the
@@ -373,7 +380,7 @@ struct StageStep {
 /// transport live in the stage's [`StageEndpoints`] — the worker only
 /// sees decoded activations, which is what lets both execution modes
 /// (and the virtual/threaded transports) share this one type.
-struct StageWorker {
+pub(crate) struct StageWorker {
     replica: usize,
     stage: usize,
     n_stages: usize,
@@ -503,23 +510,23 @@ impl StageWorker {
 ///
 /// [`FrameBuf`]: crate::codec::FrameBuf
 #[derive(Default)]
-struct StageEndpoints {
-    fw_tx: Option<LinkEndpointTx>,
-    fw_rx: Option<LinkEndpointRx>,
-    bw_tx: Option<LinkEndpointTx>,
-    bw_rx: Option<LinkEndpointRx>,
-    dp: Option<DpRing>,
+pub(crate) struct StageEndpoints {
+    pub(crate) fw_tx: Option<LinkEndpointTx>,
+    pub(crate) fw_rx: Option<LinkEndpointRx>,
+    pub(crate) bw_tx: Option<LinkEndpointTx>,
+    pub(crate) bw_rx: Option<LinkEndpointRx>,
+    pub(crate) dp: Option<DpRing>,
     /// decode scratch for incoming forward activations
-    fw_in: Vec<f32>,
+    pub(crate) fw_in: Vec<f32>,
     /// decode scratch for incoming backward gradients
-    bw_in: Vec<f32>,
+    pub(crate) bw_in: Vec<f32>,
 }
 
 /// Build the per-replica per-stage workers: models (identically
 /// initialized across replicas — the synchronized-update premise), data
 /// shards (disjoint per replica), and bookkeeping. Both execution modes
 /// start from this one function.
-fn build_workers(cfg: &ExecConfig) -> Result<Vec<Vec<StageWorker>>> {
+pub(crate) fn build_workers(cfg: &ExecConfig) -> Result<Vec<Vec<StageWorker>>> {
     crate::ensure!(cfg.n_stages >= 1, "executor needs at least one stage");
     crate::ensure!(cfg.n_micro >= 1, "executor needs at least one microbatch");
     crate::ensure!(
@@ -578,6 +585,33 @@ fn build_workers(cfg: &ExecConfig) -> Result<Vec<Vec<StageWorker>>> {
     Ok(workers)
 }
 
+/// Base of replica `r`'s boundary-codec seed namespace. Extracted so the
+/// multi-process serve path seeds its socket-backed endpoints exactly
+/// like the in-process executors seed theirs — the precondition for
+/// bit-identity across process boundaries.
+pub(crate) fn replica_plane_seed(cfg: &ExecConfig, r: usize) -> u64 {
+    // same seed namespaces the trainer uses, offset per replica; the
+    // run seed folds in so changing it re-randomizes stochastic
+    // rounding everywhere at once
+    cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add((r as u64) << 32)
+}
+
+/// Seed of forward boundary `b`'s codec pair within a replica namespace.
+pub(crate) fn fw_boundary_seed(base: u64, b: usize) -> u64 {
+    base.wrapping_add(0xB0D1 + b as u64)
+}
+
+/// Seed of backward boundary `b`'s codec pair within a replica namespace.
+pub(crate) fn bw_boundary_seed(base: u64, b: usize) -> u64 {
+    base.wrapping_add(0xBACC + b as u64)
+}
+
+/// Seed of stage `s`'s DP ring (shared by all replicas — each sender's
+/// encoder/decoder replicas derive from it by sender index).
+pub(crate) fn ring_stage_seed(cfg: &ExecConfig, s: usize) -> u64 {
+    cfg.seed.wrapping_mul(0x9E37_79B9) ^ (0xDD00 + ((s as u64) << 8))
+}
+
 /// Build every CommPlane endpoint: boundary codec pairs per replica
 /// (sender/receiver halves sharing only their construction seed, never
 /// state) and the per-stage DP rings. The two execution modes differ
@@ -595,17 +629,14 @@ fn build_planes(
     let mut planes: Vec<Vec<StageEndpoints>> =
         (0..d).map(|_| (0..k).map(|_| StageEndpoints::default()).collect()).collect();
     for (r, plane) in planes.iter_mut().enumerate() {
-        // same seed namespaces the trainer uses, offset per replica; the
-        // run seed folds in so changing it re-randomizes stochastic
-        // rounding everywhere at once
-        let base = cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add((r as u64) << 32);
+        let base = replica_plane_seed(cfg, r);
         for b in 0..k.saturating_sub(1) {
-            let seed = base.wrapping_add(0xB0D1 + b as u64);
+            let seed = fw_boundary_seed(base, b);
             let (enc, dec) = build_mem_pair(&cfg.spec.fw, el, cfg.rounding, seed)?;
             let (tx, rx) = link_endpoints(b as u32, el, enc, dec, bandwidth_bps, latency);
             plane[b].fw_tx = Some(tx);
             plane[b + 1].fw_rx = Some(rx);
-            let seed = base.wrapping_add(0xBACC + b as u64);
+            let seed = bw_boundary_seed(base, b);
             let (enc, dec) = build_mem_pair(&cfg.spec.bw, el, cfg.rounding, seed)?;
             let (tx, rx) = link_endpoints(b as u32, el, enc, dec, bandwidth_bps, latency);
             plane[b + 1].bw_tx = Some(tx);
@@ -615,7 +646,7 @@ fn build_planes(
     if d > 1 {
         let grad_len = 2 * el; // flat [dw, db]
         for s in 0..k {
-            let seed = cfg.seed.wrapping_mul(0x9E37_79B9) ^ (0xDD00 + ((s as u64) << 8));
+            let seed = ring_stage_seed(cfg, s);
             let rings =
                 dp_rings(&cfg.dp_spec.fw, d, grad_len, cfg.rounding, seed, bandwidth_bps, latency)?;
             for (r, ring) in rings.into_iter().enumerate() {
@@ -761,8 +792,20 @@ impl StepDriver for VirtualDriver<'_> {
     }
 }
 
+/// Per-(step, replica, stage) records of one oracle run, indexed
+/// `[step][replica][stage]` — what a multi-process peer compares its own
+/// `(replica, stage)` column against to prove bit-identity.
+pub type StepDetail = Vec<Vec<Vec<StageStep>>>;
+
 /// Run the full training loop single-threaded under the virtual clock.
 pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
+    run_virtual_detailed(cfg).map(|(trace, _)| trace)
+}
+
+/// Like [`run_virtual`], but also return the per-(step, replica, stage)
+/// record grid the trace was assembled from. The serve path's oracle
+/// check reads one (replica, stage) column out of it.
+pub fn run_virtual_detailed(cfg: &ExecConfig) -> Result<(ExecTrace, StepDetail)> {
     let mut workers = build_workers(cfg)?;
     let mut planes = build_planes(cfg, f64::INFINITY, Duration::ZERO)?;
     let d = cfg.dp_degree;
@@ -782,6 +825,7 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
         fw_state_bytes: Vec::new(),
         peak_in_flight: Vec::new(),
     };
+    let mut detail: StepDetail = Vec::with_capacity(cfg.steps);
     for _ in 0..cfg.steps {
         let mut acct: Vec<Vec<StageAcct>> = vec![vec![StageAcct::default(); k]; d];
         // replicas run concurrently in a deployment; under the virtual
@@ -854,6 +898,7 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
             })
             .collect();
         trace.steps.push(assemble_record(&stage_steps));
+        detail.push(stage_steps);
     }
     trace.fw_state_bytes = planes
         .iter()
@@ -868,7 +913,7 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
         .collect();
     trace.peak_in_flight =
         workers.iter().flat_map(|row| row.iter().map(|w| w.peak_in_flight)).collect();
-    Ok(trace)
+    Ok((trace, detail))
 }
 
 // ---------------------------------------------------------------------------
@@ -876,11 +921,11 @@ pub fn run_virtual(cfg: &ExecConfig) -> Result<ExecTrace> {
 // ---------------------------------------------------------------------------
 
 /// What one (replica, stage) worker thread hands back at join.
-struct StageReport {
-    per_step: Vec<StageStep>,
-    wall_s: Vec<f64>,
-    fw_state: (u64, u64),
-    peak_in_flight: usize,
+pub(crate) struct StageReport {
+    pub(crate) per_step: Vec<StageStep>,
+    pub(crate) wall_s: Vec<f64>,
+    pub(crate) fw_state: (u64, u64),
+    pub(crate) peak_in_flight: usize,
 }
 
 /// Fold per-(replica, stage) reports (indexed `replica * n_stages +
@@ -1042,9 +1087,9 @@ enum TaskAdvance {
 /// + script cursor + the per-step records it accumulates. `ring_hop`
 /// carries the mid-close position — the ring's `degree - 1` hops are
 /// each a potential park point.
-struct EventTask {
+pub(crate) struct EventTask {
     w: StageWorker,
-    ep: StageEndpoints,
+    pub(crate) ep: StageEndpoints,
     script: StageScript,
     acct: StageAcct,
     /// `Some(h)`: step close in progress, next ring hop to receive is
@@ -1056,6 +1101,24 @@ struct EventTask {
 }
 
 impl EventTask {
+    pub(crate) fn new(
+        w: StageWorker,
+        ep: StageEndpoints,
+        script: StageScript,
+        steps: usize,
+    ) -> Self {
+        EventTask {
+            w,
+            ep,
+            script,
+            acct: StageAcct::default(),
+            ring_hop: None,
+            per_step: Vec::with_capacity(steps),
+            wall_s: Vec::with_capacity(steps),
+            step_t0: Instant::now(),
+        }
+    }
+
     fn close_record(&mut self) {
         self.per_step.push(self.w.end_step(std::mem::take(&mut self.acct)));
         self.wall_s.push(self.step_t0.elapsed().as_secs_f64());
@@ -1159,12 +1222,24 @@ struct EventQueue {
     live: usize,
     /// First error any worker hit; everyone drains out once set.
     error: Option<crate::util::error::Error>,
+    /// Bumped on every ready-queue push. Starvation detection compares
+    /// snapshots of this: progress moved means a frame arrived (or a
+    /// timer fired) since the snapshot, so the pool is not stalled.
+    progress: u64,
 }
 
-struct EventSched {
+pub(crate) struct EventSched {
     state: Vec<AtomicU8>,
     q: Mutex<EventQueue>,
     cv: Condvar,
+    /// `None` (in-process executors): an empty queue with nothing
+    /// running and no timers is a schedule bug — error instantly, every
+    /// frame source lives in this process. `Some(dt)` (socket-backed
+    /// serve mode): frames arrive from *other processes*, so an idle
+    /// pool is normal — only error after `dt` passes with no arrival,
+    /// which distinguishes "frame still crossing the wire" from "peer
+    /// gone without closing the socket".
+    stall_timeout: Option<Duration>,
 }
 
 impl EventSched {
@@ -1181,6 +1256,7 @@ impl EventSched {
             ) {
                 Ok(_) => {
                     q.ready.push_back(t);
+                    q.progress = q.progress.wrapping_add(1);
                     self.cv.notify_one();
                     return;
                 }
@@ -1198,8 +1274,10 @@ impl EventSched {
         }
     }
 
-    /// Doorbell entry point (called from inside a sender's `run`).
-    fn wake(&self, t: usize) {
+    /// Doorbell entry point — called from inside a sender's `run` by the
+    /// in-process executors, or from the I/O driver thread when a frame
+    /// lands on a socket.
+    pub(crate) fn wake(&self, t: usize) {
         let mut q = lock(&self.q);
         self.wake_locked(&mut q, t);
     }
@@ -1232,6 +1310,9 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
         // -- acquire a ready task ------------------------------------
         let t = {
             let mut q = lock(&sched.q);
+            // starvation tracker: (progress snapshot, give-up deadline),
+            // armed only while the queue is starved under Some(stall_timeout)
+            let mut starve: Option<(u64, Instant)> = None;
             loop {
                 if q.error.is_some() || q.live == 0 {
                     return;
@@ -1250,20 +1331,59 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
                     q.running += 1;
                     break t;
                 }
+                let mut starve_deadline = None;
                 if q.running == 0 && q.timers.is_empty() {
                     // nothing runnable, nothing running that could send,
-                    // no frame in flight: a genuine stall (a schedule
-                    // dependency bug) — error out instead of hanging.
-                    // Sound because doorbells fire inside the sender's
-                    // run(), i.e. while it still counts as running.
-                    q.error = Some(crate::err!(
-                        "event executor stalled: {} tasks parked with no frames in flight",
-                        q.live
-                    ));
-                    sched.cv.notify_all();
-                    return;
+                    // no modeled frame in flight
+                    match sched.stall_timeout {
+                        None => {
+                            // in-process: every frame source lives here
+                            // (doorbells fire inside a sender's run(),
+                            // i.e. while it still counts as running), so
+                            // this is a genuine schedule dependency bug —
+                            // error out instead of hanging
+                            q.error = Some(crate::err!(
+                                "event executor stalled: {} tasks parked with no frames in flight",
+                                q.live
+                            ));
+                            sched.cv.notify_all();
+                            return;
+                        }
+                        Some(dt) => {
+                            // socket-backed: an idle pool waiting on the
+                            // wire is normal — only give up after dt with
+                            // no arrival (arrivals bump q.progress)
+                            match starve {
+                                Some((seen, deadline)) if seen == q.progress => {
+                                    if now >= deadline {
+                                        q.error = Some(crate::err!(
+                                            "event executor stalled: {} tasks parked and no \
+                                             frame arrived within {:.1}s — remote peer gone?",
+                                            q.live,
+                                            dt.as_secs_f64()
+                                        ));
+                                        sched.cv.notify_all();
+                                        return;
+                                    }
+                                    starve_deadline = Some(deadline);
+                                }
+                                _ => {
+                                    let deadline = now + dt;
+                                    starve = Some((q.progress, deadline));
+                                    starve_deadline = Some(deadline);
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    starve = None;
                 }
-                let next_deadline = q.timers.iter().map(|&(at, _)| at).min();
+                let next_deadline = q
+                    .timers
+                    .iter()
+                    .map(|&(at, _)| at)
+                    .chain(starve_deadline)
+                    .min();
                 q = match next_deadline {
                     Some(at) => {
                         let wait = at.saturating_duration_since(now);
@@ -1322,6 +1442,7 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
                     .is_ok()
                 {
                     q.ready.push_back(t);
+                    q.progress = q.progress.wrapping_add(1);
                     sched.cv.notify_one();
                     break;
                 }
@@ -1331,18 +1452,22 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
     }
 }
 
-/// Run the full training loop on a fixed pool of `cfg.workers` threads
-/// driving every (replica, stage) task from a shared run queue —
-/// bit-identical to the other executors at any pool size, but with a
-/// thread count independent of the topology (a 64-stage pipeline runs
-/// fine on 4 workers; thread-per-stage would need 64+).
-pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
-    crate::ensure!(cfg.workers >= 1, "event executor needs at least one worker");
-    let workers = build_workers(cfg)?;
-    let mut planes = build_planes(cfg, cfg.bandwidth_bps, Duration::from_secs_f64(cfg.latency_s))?;
-    let d = cfg.dp_degree;
-    let k = cfg.n_stages;
-    let n_tasks = d * k;
+/// Spin up a worker pool, drive `tasks` to completion, and hand back
+/// their reports in task order. `install` runs after the scheduler
+/// exists but before any worker starts — it is where the caller wires
+/// doorbells (in-process: sender halves waking the receiving task;
+/// serve mode: socket receive halves waking the one local task).
+/// `stall_timeout` selects the starvation policy (see [`EventSched`]).
+pub(crate) fn run_event_pool(
+    tasks: Vec<EventTask>,
+    pool: usize,
+    stall_timeout: Option<Duration>,
+    install: impl FnOnce(&Arc<EventSched>, &mut [EventTask]),
+) -> Result<Vec<StageReport>> {
+    crate::ensure!(pool >= 1, "event executor needs at least one worker");
+    let n_tasks = tasks.len();
+    crate::ensure!(n_tasks >= 1, "event executor needs at least one task");
+    let mut tasks = tasks;
 
     let sched = Arc::new(EventSched {
         // every task starts queued: stage 0 can run immediately, the
@@ -1354,51 +1479,17 @@ pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
             running: 0,
             live: n_tasks,
             error: None,
+            progress: 0,
         }),
         cv: Condvar::new(),
+        stall_timeout,
     });
 
-    // doorbells: every link's sending half wakes the task owning the
-    // receiving half — fw to stage s+1, bw to stage s-1, ring edge to
-    // the successor replica's same stage
-    for (r, plane) in planes.iter_mut().enumerate() {
-        for (s, ep) in plane.iter_mut().enumerate() {
-            if let Some(tx) = ep.fw_tx.as_mut() {
-                let sc = Arc::clone(&sched);
-                let t = r * k + s + 1;
-                tx.set_doorbell(Arc::new(move || sc.wake(t)));
-            }
-            if let Some(tx) = ep.bw_tx.as_mut() {
-                let sc = Arc::clone(&sched);
-                let t = r * k + s - 1;
-                tx.set_doorbell(Arc::new(move || sc.wake(t)));
-            }
-            if let Some(ring) = ep.dp.as_mut() {
-                let sc = Arc::clone(&sched);
-                let t = ((r + 1) % d) * k + s;
-                ring.set_doorbell(Arc::new(move || sc.wake(t)));
-            }
-        }
-    }
+    install(&sched, &mut tasks);
+    let tasks: Arc<Vec<Mutex<EventTask>>> =
+        Arc::new(tasks.into_iter().map(Mutex::new).collect());
 
-    let mut tasks = Vec::with_capacity(n_tasks);
-    for (wrow, prow) in workers.into_iter().zip(planes) {
-        for (s, (w, ep)) in wrow.into_iter().zip(prow).enumerate() {
-            tasks.push(Mutex::new(EventTask {
-                w,
-                ep,
-                script: StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps),
-                acct: StageAcct::default(),
-                ring_hop: None,
-                per_step: Vec::with_capacity(cfg.steps),
-                wall_s: Vec::with_capacity(cfg.steps),
-                step_t0: Instant::now(),
-            }));
-        }
-    }
-    let tasks = Arc::new(tasks);
-
-    let pool = cfg.workers.min(n_tasks);
+    let pool = pool.min(n_tasks);
     let mut handles = Vec::with_capacity(pool);
     for i in 0..pool {
         let sched = Arc::clone(&sched);
@@ -1432,10 +1523,55 @@ pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
     }
     let tasks = Arc::try_unwrap(tasks)
         .map_err(|_| crate::err!("event task pool still shared after join"))?;
-    let reports: Vec<StageReport> = tasks
+    Ok(tasks
         .into_iter()
         .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()).into_report())
-        .collect();
+        .collect())
+}
+
+/// Run the full training loop on a fixed pool of `cfg.workers` threads
+/// driving every (replica, stage) task from a shared run queue —
+/// bit-identical to the other executors at any pool size, but with a
+/// thread count independent of the topology (a 64-stage pipeline runs
+/// fine on 4 workers; thread-per-stage would need 64+).
+pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
+    crate::ensure!(cfg.workers >= 1, "event executor needs at least one worker");
+    let workers = build_workers(cfg)?;
+    let planes = build_planes(cfg, cfg.bandwidth_bps, Duration::from_secs_f64(cfg.latency_s))?;
+    let d = cfg.dp_degree;
+    let k = cfg.n_stages;
+
+    let mut tasks = Vec::with_capacity(d * k);
+    for (wrow, prow) in workers.into_iter().zip(planes) {
+        for (s, (w, ep)) in wrow.into_iter().zip(prow).enumerate() {
+            let script = StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps);
+            tasks.push(EventTask::new(w, ep, script, cfg.steps));
+        }
+    }
+
+    let reports = run_event_pool(tasks, cfg.workers, None, |sched, tasks| {
+        // doorbells: every link's sending half wakes the task owning the
+        // receiving half — fw to stage s+1, bw to stage s-1, ring edge to
+        // the successor replica's same stage
+        for (i, task) in tasks.iter_mut().enumerate() {
+            let (r, s) = (i / k, i % k);
+            if let Some(tx) = task.ep.fw_tx.as_mut() {
+                let sc = Arc::clone(sched);
+                let t = r * k + s + 1;
+                tx.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+            if let Some(tx) = task.ep.bw_tx.as_mut() {
+                let sc = Arc::clone(sched);
+                let t = r * k + s - 1;
+                tx.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+            if let Some(ring) = task.ep.dp.as_mut() {
+                let sc = Arc::clone(sched);
+                let t = ((r + 1) % d) * k + s;
+                ring.set_doorbell(Arc::new(move || sc.wake(t)));
+            }
+        }
+    })?;
     Ok(trace_from_reports(Executor::Events, cfg, reports))
 }
 
@@ -1603,6 +1739,60 @@ mod tests {
             assert!(rec.dp_wire_bytes.iter().all(|&b| b > 0), "step {i}: {rec:?}");
         }
         assert!(t.steps.iter().all(|r| r.loss.is_finite()));
+    }
+
+    /// Build a stage-1 task whose only input is the given receive half —
+    /// the harness for the starvation-policy tests below.
+    fn lonely_stage1_task(cfg: &ExecConfig, rx: LinkEndpointRx) -> EventTask {
+        let workers = build_workers(cfg).unwrap();
+        let w = workers.into_iter().next().unwrap().into_iter().nth(1).unwrap();
+        let ep = StageEndpoints { fw_rx: Some(rx), ..Default::default() };
+        let script = StageScript::new(cfg.schedule.ops(1, 2, cfg.n_micro), cfg.steps);
+        EventTask::new(w, ep, script, cfg.steps)
+    }
+
+    #[test]
+    fn stall_timeout_distinguishes_waiting_from_stuck() {
+        // a live sender that never sends: under the serve-mode policy the
+        // pool waits out the timeout, then errors descriptively instead
+        // of hanging (the in-process policy would error instantly, which
+        // is wrong when frames come from another OS process)
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_stages = 2;
+        cfg.steps = 1;
+        let (enc, dec) =
+            build_mem_pair(&cfg.spec.fw, cfg.example_len, cfg.rounding, 1).unwrap();
+        let (_tx, rx) =
+            link_endpoints(0, cfg.example_len, enc, dec, f64::INFINITY, Duration::ZERO);
+        let task = lonely_stage1_task(&cfg, rx);
+        let t0 = Instant::now();
+        let err = run_event_pool(vec![task], 1, Some(Duration::from_millis(150)), |_, _| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no frame arrived"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(150), "gave up before the deadline");
+    }
+
+    #[test]
+    fn dropped_sender_surfaces_closed_not_a_stall_timeout() {
+        // peer gone (sender dropped): the task's poll sees Closed and the
+        // run errors immediately with the channel-closed cause — it must
+        // NOT sit out the (long) stall timeout first
+        let mut cfg = ExecConfig::small(CodecSpec::fp32());
+        cfg.n_stages = 2;
+        cfg.steps = 1;
+        let (enc, dec) =
+            build_mem_pair(&cfg.spec.fw, cfg.example_len, cfg.rounding, 1).unwrap();
+        let (tx, rx) =
+            link_endpoints(0, cfg.example_len, enc, dec, f64::INFINITY, Duration::ZERO);
+        drop(tx);
+        let task = lonely_stage1_task(&cfg, rx);
+        let t0 = Instant::now();
+        let err = run_event_pool(vec![task], 1, Some(Duration::from_secs(30)), |_, _| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline channel closed"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(10), "waited out the stall timeout");
     }
 
     #[test]

@@ -6,10 +6,12 @@
 
 pub mod exec;
 pub mod schedule;
+pub mod serve;
 pub mod sim;
 pub mod step;
 
 pub use exec::{ExecConfig, ExecTrace, Executor, StepRecord};
 pub use schedule::{Op, Schedule};
+pub use serve::{serve_stage, ServeOpts, ServeSummary};
 pub use sim::{PipelineSim, SimConfig, SimResult, StageTimes};
 pub use step::{run_step, StepConfig, StepDriver, StepTiming};

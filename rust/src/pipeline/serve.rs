@@ -1,0 +1,280 @@
+//! Multi-process serving: one (replica, stage) of the pipeline grid as
+//! its own OS process, exchanging serialized frames over real TCP
+//! sockets — the `aq-sgd serve-stage` CLI mode.
+//!
+//! The process brings up its links through `net::session` (handshake
+//! with config-fingerprint validation), bonds the same registry-built
+//! codec halves the in-process executors would build — same seeds, same
+//! construction order, via the helpers `exec` exports — to the socket
+//! transports, and drives its one `EventTask` on the shared
+//! event-executor machinery (`run_event_pool`) with socket doorbells
+//! fired by the I/O driver thread.
+//!
+//! **Determinism contract.** A TCP connection is FIFO, per-stage ops
+//! retire in schedule order, and the ring decodes per sender — exactly
+//! the properties that make the in-process executors bit-identical
+//! twins. So a multi-process run is bit-identical to the virtual-clock
+//! oracle too: per-step loss bits, per-link wire bytes (the length
+//! prefix is transport framing and is *not* accounted), codec state,
+//! and parameter digests. Link shaping (bandwidth caps, latency,
+//! jitter, forced partial reads) changes only *when* frames arrive,
+//! never their bytes or order. Each process re-runs the virtual-clock
+//! oracle locally after its run and verifies its own (replica, stage)
+//! column unless told not to.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::registry::build_mem_pair;
+use crate::net::plane::{dp_ring_endpoint, link_endpoint_rx, link_endpoint_tx};
+use crate::net::session::{establish, SessionOpts, StageSockets, TopologyPlan};
+use crate::net::tcp::LinkShape;
+use crate::util::error::Result;
+
+use super::exec::{
+    build_workers, bw_boundary_seed, fw_boundary_seed, replica_plane_seed, ring_stage_seed,
+    run_event_pool, run_virtual_detailed, EventTask, ExecConfig, StageEndpoints, StageStep,
+};
+use super::step::StageScript;
+
+/// Canonical config fingerprint exchanged in the session handshake: two
+/// peers whose summaries differ are running different jobs and must not
+/// train together. Everything that affects the trajectory is in here
+/// (the learning rate as raw f32 bits — text formatting must not make
+/// two unequal configs look equal).
+pub fn config_summary(cfg: &ExecConfig) -> String {
+    format!(
+        "k={} m={} bsz={} el={} spec={} round={:?} sched={:?} seed={} steps={} lr={:08x} \
+         dp={} dpspec={}",
+        cfg.n_stages,
+        cfg.n_micro,
+        cfg.micro_batch,
+        cfg.example_len,
+        cfg.spec.label(),
+        cfg.rounding,
+        cfg.schedule,
+        cfg.seed,
+        cfg.steps,
+        cfg.lr.to_bits(),
+        cfg.dp_degree,
+        cfg.dp_spec.label(),
+    )
+}
+
+/// Where this process sits in the grid and how its links behave.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub replica: usize,
+    pub stage: usize,
+    /// Listen/connect addresses for every (replica, stage) process.
+    pub plan: TopologyPlan,
+    /// Shaping applied to every data socket (token-bucket bandwidth,
+    /// injected latency/jitter, forced partial I/O).
+    pub shape: LinkShape,
+    /// How long the event pool waits with no arriving frame before
+    /// declaring the remote peers gone (see `EventSched`).
+    pub stall_timeout: Duration,
+    pub connect_timeout: Duration,
+    pub handshake_timeout: Duration,
+    /// Re-run the virtual-clock oracle locally after the run and verify
+    /// this process's (replica, stage) column bit-for-bit.
+    pub check_oracle: bool,
+}
+
+/// What one serve-stage process reports at exit.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub replica: usize,
+    pub stage: usize,
+    /// This stage's per-step records (loss on the loss head, wire bytes,
+    /// post-update parameter digest).
+    pub per_step: Vec<StageStep>,
+    /// Measured wall time per step.
+    pub wall_s: Vec<f64>,
+    /// (fw encoder, fw decoder) resident codec state after the run.
+    pub fw_state: (u64, u64),
+    pub oracle_checked: bool,
+}
+
+/// First field where two per-step records disagree, described.
+fn step_divergence(got: &StageStep, want: &StageStep) -> Option<String> {
+    if got.loss.map(f32::to_bits) != want.loss.map(f32::to_bits) {
+        return Some(format!("loss {:?} vs oracle {:?}", got.loss, want.loss));
+    }
+    if got.fw_wire != want.fw_wire {
+        return Some(format!("fw wire bytes {} vs oracle {}", got.fw_wire, want.fw_wire));
+    }
+    if got.bw_wire != want.bw_wire {
+        return Some(format!("bw wire bytes {} vs oracle {}", got.bw_wire, want.bw_wire));
+    }
+    if got.dp_wire != want.dp_wire {
+        return Some(format!("dp wire bytes {} vs oracle {}", got.dp_wire, want.dp_wire));
+    }
+    if got.digest != want.digest {
+        return Some(format!(
+            "parameter digest {:016x} vs oracle {:016x}",
+            got.digest, want.digest
+        ));
+    }
+    None
+}
+
+/// Run one (replica, stage) of the job as this OS process: establish the
+/// sessioned TCP links, drive the stage's event task to completion, and
+/// (by default) prove the result bit-identical to the virtual-clock
+/// oracle.
+pub fn serve_stage(cfg: &ExecConfig, opts: &ServeOpts) -> Result<ServeSummary> {
+    let (k, d) = (cfg.n_stages, cfg.dp_degree);
+    let (r, s) = (opts.replica, opts.stage);
+    crate::ensure!(
+        opts.plan.n_stages == k && opts.plan.dp_degree == d,
+        "topology plan is {} replicas x {} stages but the job is {} x {}",
+        opts.plan.dp_degree,
+        opts.plan.n_stages,
+        d,
+        k
+    );
+
+    let summary = config_summary(cfg);
+    let session = SessionOpts {
+        shape: opts.shape.clone(),
+        connect_timeout: opts.connect_timeout,
+        handshake_timeout: opts.handshake_timeout,
+    };
+    let StageSockets {
+        fw_in: sock_fw_in,
+        fw_out: sock_fw_out,
+        bw_in: sock_bw_in,
+        bw_out: sock_bw_out,
+        ring_in: sock_ring_in,
+        ring_out: sock_ring_out,
+        driver,
+    } = establish(&opts.plan, r, s, &summary, &session)?;
+
+    // This process's worker — carved out of the same full-grid
+    // construction the in-process executors use, so data shards, ids,
+    // and model init are bit-identical.
+    let w = build_workers(cfg)?
+        .into_iter()
+        .nth(r)
+        .expect("replica bounds checked by establish")
+        .into_iter()
+        .nth(s)
+        .expect("stage bounds checked by establish");
+
+    // Endpoints: same boundary ids and codec seeds as build_planes, each
+    // half bonded to its socket transport. Forward boundary b sits
+    // between stages b and b+1; backward traffic reuses b's id.
+    let el = cfg.example_len;
+    let base = replica_plane_seed(cfg, r);
+    let fw_tx = sock_fw_out
+        .map(|link| -> Result<_> {
+            let enc = build_mem_pair(&cfg.spec.fw, el, cfg.rounding, fw_boundary_seed(base, s))?.0;
+            Ok(link_endpoint_tx(s as u32, el, enc, Box::new(link)))
+        })
+        .transpose()?;
+    let fw_rx = sock_fw_in
+        .map(|link| -> Result<_> {
+            let seed = fw_boundary_seed(base, s - 1);
+            let dec = build_mem_pair(&cfg.spec.fw, el, cfg.rounding, seed)?.1;
+            Ok(link_endpoint_rx((s - 1) as u32, el, dec, Box::new(link)))
+        })
+        .transpose()?;
+    let bw_tx = sock_bw_out
+        .map(|link| -> Result<_> {
+            let seed = bw_boundary_seed(base, s - 1);
+            let enc = build_mem_pair(&cfg.spec.bw, el, cfg.rounding, seed)?.0;
+            Ok(link_endpoint_tx((s - 1) as u32, el, enc, Box::new(link)))
+        })
+        .transpose()?;
+    let bw_rx = sock_bw_in
+        .map(|link| -> Result<_> {
+            let dec = build_mem_pair(&cfg.spec.bw, el, cfg.rounding, bw_boundary_seed(base, s))?.1;
+            Ok(link_endpoint_rx(s as u32, el, dec, Box::new(link)))
+        })
+        .transpose()?;
+    let dp = match (sock_ring_out, sock_ring_in) {
+        (Some(tx), Some(rx)) => Some(dp_ring_endpoint(
+            &cfg.dp_spec.fw,
+            d,
+            r,
+            2 * el, // flat [dw, db]
+            cfg.rounding,
+            ring_stage_seed(cfg, s),
+            (Box::new(tx), Box::new(rx)),
+        )?),
+        (None, None) => None,
+        _ => crate::bail!("internal error: dp ring socket halves out of sync"),
+    };
+    let ep = StageEndpoints {
+        fw_tx,
+        fw_rx,
+        bw_tx,
+        bw_rx,
+        dp,
+        fw_in: Vec::new(),
+        bw_in: Vec::new(),
+    };
+
+    let script = StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps);
+    let task = EventTask::new(w, ep, script, cfg.steps);
+    let reports = run_event_pool(vec![task], 1, Some(opts.stall_timeout), |sched, tasks| {
+        // socket doorbells: the I/O driver thread rings these when a
+        // frame finishes reassembly (or the peer closes) — all three
+        // wake the one local task
+        let t = &mut tasks[0];
+        if let Some(rx) = t.ep.fw_rx.as_mut() {
+            let sc = Arc::clone(sched);
+            rx.set_doorbell(Arc::new(move || sc.wake(0)));
+        }
+        if let Some(rx) = t.ep.bw_rx.as_mut() {
+            let sc = Arc::clone(sched);
+            rx.set_doorbell(Arc::new(move || sc.wake(0)));
+        }
+        if let Some(ring) = t.ep.dp.as_mut() {
+            let sc = Arc::clone(sched);
+            ring.set_rx_doorbell(Arc::new(move || sc.wake(0)));
+        }
+    })?;
+    // Endpoint drop marked the tx halves closed; joining the driver
+    // flushes their tails to the peers (bounded by its flush deadline)
+    // before we report success.
+    drop(driver);
+    let report = reports.into_iter().next().expect("one task, one report");
+
+    let mut oracle_checked = false;
+    if opts.check_oracle {
+        let (trace, detail) = run_virtual_detailed(cfg)?;
+        crate::ensure!(
+            report.per_step.len() == detail.len(),
+            "ran {} steps, oracle ran {}",
+            report.per_step.len(),
+            detail.len()
+        );
+        for (step, (got, row)) in report.per_step.iter().zip(&detail).enumerate() {
+            if let Some(why) = step_divergence(got, &row[r][s]) {
+                crate::bail!(
+                    "replica {r} stage {s} diverged from the virtual-clock oracle at step \
+                     {step}: {why}"
+                );
+            }
+        }
+        let want_state = trace.fw_state_bytes[r * k + s];
+        crate::ensure!(
+            report.fw_state == want_state,
+            "replica {r} stage {s} codec state {:?} != oracle {:?}",
+            report.fw_state,
+            want_state
+        );
+        oracle_checked = true;
+    }
+
+    Ok(ServeSummary {
+        replica: r,
+        stage: s,
+        per_step: report.per_step,
+        wall_s: report.wall_s,
+        fw_state: report.fw_state,
+        oracle_checked,
+    })
+}

@@ -1,0 +1,324 @@
+//! Multi-process integration: `aq-sgd serve-stage` over real loopback
+//! TCP sockets. Each test launches one OS process per (replica, stage),
+//! points them at each other with `--peers`, and checks the contract the
+//! transport promises: every process's trajectory is bit-identical to
+//! the virtual-clock oracle (each process verifies its own column and
+//! prints SERVE-OK), link shaping changes timing but never bits, config
+//! mismatches are rejected at the handshake, and a killed peer or a
+//! closed socket surfaces as a descriptive error on the survivors —
+//! never a hang.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use aq_sgd::config::{Cli, TrainConfig};
+use aq_sgd::net::session::{establish, SessionOpts, TopologyPlan};
+use aq_sgd::net::FrameRx;
+use aq_sgd::pipeline::serve::config_summary;
+use aq_sgd::pipeline::ExecConfig;
+
+const BIN: &str = env!("CARGO_BIN_EXE_aq-sgd");
+
+/// Grab `n` distinct free loopback addresses. The probe listeners are
+/// dropped before the stage processes bind; on loopback in a test
+/// process the reuse window is benign.
+fn free_addrs(n: usize) -> Vec<String> {
+    let socks: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    socks.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+}
+
+/// `[("k", "v"), ...]` -> `["--k", "v", ...]`.
+fn flags(pairs: &[(&str, &str)]) -> Vec<String> {
+    pairs.iter().flat_map(|(k, v)| [format!("--{k}"), v.to_string()]).collect()
+}
+
+fn spawn_stage(common: &[String], peers: &str, replica: usize, stage: usize) -> Child {
+    Command::new(BIN)
+        .arg("serve-stage")
+        .args(["--role", &format!("stage:{stage}")])
+        .args(["--replica", &replica.to_string()])
+        .args(["--peers", peers])
+        .args(common)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve-stage")
+}
+
+struct Done {
+    replica: usize,
+    stage: usize,
+    code: Option<i32>,
+    stdout: String,
+    stderr: String,
+}
+
+impl Done {
+    fn assert_serve_ok(&self) {
+        assert_eq!(
+            self.code,
+            Some(0),
+            "replica {} stage {} failed\nstdout:\n{}\nstderr:\n{}",
+            self.replica,
+            self.stage,
+            self.stdout,
+            self.stderr
+        );
+        let want = format!("SERVE-OK replica={} stage={}", self.replica, self.stage);
+        assert!(
+            self.stdout.contains(&want),
+            "replica {} stage {} printed no {want:?}:\n{}",
+            self.replica,
+            self.stage,
+            self.stdout
+        );
+        assert!(
+            self.stdout.contains("oracle=bit-identical"),
+            "replica {} stage {} skipped the oracle check:\n{}",
+            self.replica,
+            self.stage,
+            self.stdout
+        );
+    }
+
+    fn assert_failed_with(&self, keywords: &[&str]) {
+        assert_ne!(
+            self.code,
+            Some(0),
+            "replica {} stage {} exited clean after its peer went away\nstdout:\n{}",
+            self.replica,
+            self.stage,
+            self.stdout
+        );
+        let err = self.stderr.to_lowercase();
+        assert!(
+            keywords.iter().any(|k| err.contains(k)),
+            "replica {} stage {} stderr has none of {keywords:?}:\n{}",
+            self.replica,
+            self.stage,
+            self.stderr
+        );
+    }
+}
+
+/// Poll every child to completion (or kill the stragglers at the
+/// deadline and fail with their stderr) and collect outputs.
+fn wait_all(mut procs: Vec<(usize, usize, Child)>, deadline: Duration) -> Vec<Done> {
+    let t0 = Instant::now();
+    let mut timed_out = false;
+    while !procs.iter_mut().all(|(_, _, c)| c.try_wait().unwrap().is_some()) {
+        if t0.elapsed() > deadline {
+            timed_out = true;
+            for (_, _, c) in procs.iter_mut() {
+                c.kill().ok();
+            }
+            break;
+        }
+        thread::sleep(Duration::from_millis(25));
+    }
+    let done: Vec<Done> = procs
+        .into_iter()
+        .map(|(replica, stage, c)| {
+            let out = c.wait_with_output().expect("collect child output");
+            Done {
+                replica,
+                stage,
+                code: out.status.code(),
+                stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+                stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+            }
+        })
+        .collect();
+    if timed_out {
+        let mut dump = String::new();
+        for d in &done {
+            dump.push_str(&format!(
+                "replica {} stage {}: code {:?}\nstderr:\n{}\n",
+                d.replica, d.stage, d.code, d.stderr
+            ));
+        }
+        panic!("grid did not finish within {deadline:?}\n{dump}");
+    }
+    done
+}
+
+/// Launch the full (dp x stages) grid over fresh loopback ports and wait.
+fn run_grid(common: &[String], stages: usize, dp: usize, deadline: Duration) -> Vec<Done> {
+    let peers = free_addrs(stages * dp).join(",");
+    let procs: Vec<(usize, usize, Child)> = (0..dp)
+        .flat_map(|r| (0..stages).map(move |s| (r, s)))
+        .map(|(r, s)| (r, s, spawn_stage(common, &peers, r, s)))
+        .collect();
+    wait_all(procs, deadline)
+}
+
+#[test]
+fn two_process_loopback_smoke() {
+    let common = flags(&[
+        ("compression", "aqsgd:fw2bw4"),
+        ("schedule", "gpipe"),
+        ("stages", "2"),
+        ("el", "32"),
+        ("n-micro", "2"),
+        ("micro-batch", "2"),
+        ("steps", "3"),
+        ("seed", "7"),
+    ]);
+    for d in run_grid(&common, 2, 1, Duration::from_secs(60)) {
+        d.assert_serve_ok();
+    }
+}
+
+/// The acceptance grid from the issue: 2 replicas x 4 stages, AQ-SGD
+/// activations + error-compensated DP gradients, every one of the 8
+/// processes bit-identical to the virtual-clock oracle.
+#[test]
+fn acceptance_two_replicas_four_stages_bit_identical() {
+    let common = flags(&[
+        ("compression", "aqsgd:fw2bw4"),
+        ("dp", "2"),
+        ("dp-codec", "ef:directq:fw4bw4"),
+        ("schedule", "gpipe"),
+        ("stages", "4"),
+        ("el", "32"),
+        ("n-micro", "4"),
+        ("micro-batch", "2"),
+        ("steps", "3"),
+        ("seed", "7"),
+    ]);
+    for d in run_grid(&common, 4, 2, Duration::from_secs(120)) {
+        d.assert_serve_ok();
+    }
+}
+
+/// Shaping (bandwidth cap + latency + jitter + forced 3-byte syscalls)
+/// may change when frames arrive, never their bytes: the oracle check
+/// still passes on every process.
+#[test]
+fn shaped_links_change_timing_never_bits() {
+    let common = flags(&[
+        ("compression", "aqsgd:fw2bw4"),
+        ("schedule", "gpipe"),
+        ("stages", "2"),
+        ("el", "32"),
+        ("n-micro", "2"),
+        ("micro-batch", "2"),
+        ("steps", "3"),
+        ("seed", "7"),
+        ("shape-rate", "200mbps"),
+        ("shape-latency-ms", "2"),
+        ("shape-jitter-ms", "1"),
+        ("shape-chunk", "3"),
+    ]);
+    for d in run_grid(&common, 2, 1, Duration::from_secs(60)) {
+        d.assert_serve_ok();
+    }
+}
+
+/// SIGKILL one stage of a running 3-stage job: both survivors must exit
+/// nonzero with a descriptive network error (closed link, tcp error, or
+/// the stall deadline), never hang.
+#[test]
+fn chaos_killing_a_stage_fails_survivors_cleanly() {
+    let peers = free_addrs(3).join(",");
+    let common = flags(&[
+        ("compression", "aqsgd:fw2bw4"),
+        ("schedule", "gpipe"),
+        ("stages", "3"),
+        ("el", "32"),
+        ("n-micro", "2"),
+        ("micro-batch", "2"),
+        ("steps", "500"),
+        ("seed", "7"),
+        ("shape-latency-ms", "10"),
+        ("stall-timeout-ms", "4000"),
+        ("skip-oracle", "true"),
+    ]);
+    let mut procs: Vec<(usize, usize, Child)> =
+        (0..3).map(|s| (0, s, spawn_stage(&common, &peers, 0, s))).collect();
+    // let the grid hand-shake and get a few steps deep, then pull the
+    // middle stage out from under it
+    thread::sleep(Duration::from_millis(1500));
+    let (_, _, mut victim) = procs.remove(1);
+    victim.kill().expect("kill stage 1");
+    victim.wait().expect("reap stage 1");
+    for d in wait_all(procs, Duration::from_secs(30)) {
+        d.assert_failed_with(&["closed", "stall", "tcp", "reset", "broken", "connection"]);
+    }
+}
+
+/// Close a socket mid-step (deterministically, from inside the test):
+/// the test process impersonates stage 1 — real handshake via
+/// `net::session` — receives the first forward frame, then drops every
+/// socket. Stage 0 must error out with a closed-link message, not hang
+/// until the stall deadline either.
+#[test]
+fn chaos_closing_a_socket_mid_step_errors_cleanly() {
+    let addrs = free_addrs(2);
+    let peers = addrs.join(",");
+    let job = flags(&[
+        ("compression", "aqsgd:fw2bw4"),
+        ("schedule", "gpipe"),
+        ("stages", "2"),
+        ("el", "32"),
+        ("n-micro", "2"),
+        ("micro-batch", "2"),
+        ("steps", "5"),
+        ("seed", "7"),
+    ]);
+    let mut extra = job.clone();
+    extra.extend(flags(&[("skip-oracle", "true"), ("stall-timeout-ms", "20000")]));
+    let child = spawn_stage(&extra, &peers, 0, 0);
+
+    // build the identical config fingerprint the child computes from the
+    // same flags, so the handshake accepts us as (replica 0, stage 1)
+    let cli = Cli::parse_args(job.iter().cloned());
+    let tcfg = TrainConfig::from_cli(&cli).unwrap();
+    let ecfg = ExecConfig::from_train(&tcfg, 2, 2, 32, 5);
+    let plan = TopologyPlan::parse(&peers, 2, 1).unwrap();
+    let mut socks =
+        establish(&plan, 0, 1, &config_summary(&ecfg), &SessionOpts::default()).unwrap();
+    let first = socks.fw_in.as_mut().expect("stage 1 has a fw inbound link").recv().unwrap();
+    assert!(!first.is_empty(), "empty forward frame");
+    drop(socks); // closes fw rx and bw tx mid-step
+
+    let done = wait_all(vec![(0, 0, child)], Duration::from_secs(30));
+    // well under the 20s stall deadline: closure is detected as Closed,
+    // not waited out
+    done[0].assert_failed_with(&["closed", "tcp", "reset", "broken", "connection"]);
+}
+
+/// Two processes launched with different --compression must refuse to
+/// train together: the handshake rejects the session on both sides.
+#[test]
+fn config_mismatch_is_rejected_at_handshake() {
+    let peers = free_addrs(2).join(",");
+    let base = [
+        ("schedule", "gpipe"),
+        ("stages", "2"),
+        ("el", "32"),
+        ("n-micro", "2"),
+        ("micro-batch", "2"),
+        ("steps", "2"),
+        ("seed", "7"),
+    ];
+    let mut a = flags(&base);
+    a.extend(flags(&[("compression", "aqsgd:fw2bw4")]));
+    let mut b = flags(&base);
+    b.extend(flags(&[("compression", "fp32")]));
+    let pa = spawn_stage(&a, &peers, 0, 0);
+    let pb = spawn_stage(&b, &peers, 0, 1);
+    let done = wait_all(vec![(0, 0, pa), (0, 1, pb)], Duration::from_secs(30));
+    for d in &done {
+        d.assert_failed_with(&["mismatch", "rejected", "closed", "reset"]);
+    }
+    assert!(
+        done.iter().any(|d| d.stderr.to_lowercase().contains("mismatch")),
+        "neither process reported the config mismatch:\n{}\n{}",
+        done[0].stderr,
+        done[1].stderr
+    );
+}

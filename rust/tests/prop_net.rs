@@ -1,8 +1,14 @@
-//! Property tests over the network link model: FIFO ordering, bandwidth
-//! conservation, latency additivity.
+//! Property tests over the network link model (FIFO ordering, bandwidth
+//! conservation, latency additivity) and the TCP frame reassembler
+//! (arbitrary segmentation is lossless; corrupted or hostile length
+//! fields are errors, never panics or unbounded allocations).
 
+use aq_sgd::codec::frame::FRAME_PRELUDE_BYTES;
+use aq_sgd::codec::registry::{build_mem_pair, example_specs, CodecSpec};
+use aq_sgd::codec::{Rounding, SchemeSpec};
+use aq_sgd::net::tcp::{FrameAssembler, DEFAULT_MAX_FRAME, LEN_PREFIX_BYTES};
 use aq_sgd::net::Link;
-use aq_sgd::testing::prop::{len_in, Prop};
+use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
 
 #[test]
 fn prop_fifo_arrivals_monotone() {
@@ -57,6 +63,120 @@ fn prop_latency_additive_not_serializing() {
             d2 = no_lat.transmit(0.0, bytes);
         }
         assert!((d1 - d2 - lat).abs() < 1e-9, "{d1} {d2} {lat}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// FrameAssembler: the TCP length-prefixed reassembly layer
+
+/// All distinct direction schemes reachable from the example spec list —
+/// every registered frame tag gets fuzzed through the assembler.
+fn all_schemes() -> Vec<SchemeSpec> {
+    let mut out: Vec<SchemeSpec> = Vec::new();
+    for s in example_specs() {
+        let spec = CodecSpec::parse(s).unwrap();
+        for scheme in [spec.fw, spec.bw] {
+            if !out.contains(&scheme) {
+                out.push(scheme);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_assembler_reassembles_any_segmentation() {
+    // a random multi-frame stream fed in arbitrary segments (1-byte
+    // dribbles, split preludes, coalesced frames) pops the exact frame
+    // images, in order, with nothing left buffered
+    let schemes = all_schemes();
+    Prop::check("assembler segmentation", |rng| {
+        let n_frames = len_in(rng, 1, 8);
+        let mut stream: Vec<u8> = Vec::new();
+        let mut want: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..n_frames {
+            let scheme = schemes[rng.below(schemes.len())].clone();
+            let el = len_in(rng, 1, 64);
+            let seed = rng.next_u64();
+            let (mut enc, _) = build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap();
+            let a = vec_f32(rng, el, 1.0);
+            let bytes = enc.encode(&[0], &a).unwrap().to_bytes();
+            stream.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            stream.extend_from_slice(&bytes);
+            want.push(bytes);
+        }
+        let mut asm = FrameAssembler::new(DEFAULT_MAX_FRAME);
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut i = 0;
+        while i < stream.len() {
+            let n = 1 + rng.below(stream.len() - i).min(53);
+            asm.push(&stream[i..i + n]).unwrap();
+            i += n;
+            assert!(asm.buffered() <= i, "assembler buffered beyond what it was fed");
+            while let Some(f) = asm.pop() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, want, "reassembled frames diverged from the originals");
+        assert!(!asm.has_partial(), "clean stream left partial bytes behind");
+    });
+}
+
+#[test]
+fn prop_assembler_corrupt_length_fields_error_never_panic() {
+    // flip one length-bearing byte of a valid stream — the 4-byte prefix
+    // or the prelude's header_len/payload_len — and feed it in random
+    // segments: the prefix/prelude cross-check must surface an Err (never
+    // a panic), no frame may pop, and buffering stays bounded by input
+    let schemes = all_schemes();
+    Prop::check("assembler corruption", |rng| {
+        let scheme = schemes[rng.below(schemes.len())].clone();
+        let el = len_in(rng, 1, 64);
+        let (mut enc, _) = build_mem_pair(&scheme, el, Rounding::Nearest, 11).unwrap();
+        let a = vec_f32(rng, el, 1.0);
+        let bytes = enc.encode(&[0], &a).unwrap().to_bytes();
+        let mut stream = (bytes.len() as u32).to_le_bytes().to_vec();
+        stream.extend_from_slice(&bytes);
+        // prefix bytes 0..4; header_len at 5..7, payload_len at 7..11
+        // (offset 4 is the tag byte — not a length field)
+        const LEN_OFFSETS: [usize; 10] = [0, 1, 2, 3, 5, 6, 7, 8, 9, 10];
+        let pos = LEN_OFFSETS[rng.below(LEN_OFFSETS.len())];
+        stream[pos] = stream[pos].wrapping_add(1 + rng.below(255) as u8);
+        let mut asm = FrameAssembler::new(DEFAULT_MAX_FRAME);
+        let mut errored = false;
+        let mut i = 0;
+        while i < stream.len() {
+            let n = 1 + rng.below(stream.len() - i).min(7);
+            let r = asm.push(&stream[i..i + n]);
+            i += n;
+            assert!(asm.buffered() <= i, "corrupt prefix made the assembler over-allocate");
+            if r.is_err() {
+                errored = true;
+                break;
+            }
+        }
+        assert!(errored, "corrupted byte {pos} produced no error");
+        assert!(asm.pop().is_none(), "corrupted stream still yielded a frame");
+    });
+}
+
+#[test]
+fn prop_assembler_hostile_prefix_errors_before_allocating() {
+    // a length prefix above the frame cap (or below the prelude floor)
+    // dies on the 4 prefix bytes alone — the assembler never commits to
+    // buffering the claimed length
+    Prop::check("assembler size cap", |rng| {
+        let cap = 64 + rng.below(4096);
+        let mut asm = FrameAssembler::new(cap);
+        let claim = cap as u32 + 1 + rng.below(1 << 20) as u32;
+        let err = asm.push(&claim.to_le_bytes()).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        assert!(asm.buffered() <= LEN_PREFIX_BYTES, "assembler allocated for a hostile prefix");
+
+        let mut asm = FrameAssembler::new(cap);
+        let tiny = rng.below(FRAME_PRELUDE_BYTES) as u32;
+        let err = asm.push(&tiny.to_le_bytes()).unwrap_err();
+        assert!(err.to_string().contains("shorter"), "{err}");
     });
 }
 
