@@ -1,7 +1,10 @@
 //! Codec micro-benchmarks: the L3 hot path. A boundary message for the
 //! paper regime is 1.6M elements; the coordinator must encode+pack well
 //! above network speed so compression never becomes the bottleneck
-//! (§Perf target: >= 1 GB/s per core on the frame encode path).
+//! (§Perf target: the fused quantize+pack kernels run multi-GB/s per
+//! core — toward memory bandwidth, not the old >= 1 GB/s floor — and
+//! the `quantize_pack_par` rows scale further across a worker pool with
+//! bit-identical output at any worker count).
 //!
 //! This is the suite `BENCH_BASELINE.json` pins: run with
 //! `-- --quick --json bench.json` for the machine-readable report the
@@ -10,6 +13,7 @@
 
 use aq_sgd::codec::delta::AqState;
 use aq_sgd::codec::frame::{FrameBuf, FrameView};
+use aq_sgd::codec::par::Workers;
 use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
 use aq_sgd::codec::registry::{build_mem_pair, SchemeSpec};
 use aq_sgd::codec::{f16, pack, topk};
@@ -33,6 +37,44 @@ fn main() {
                 black_box(q.encode(&x, &mut codes, &mut rng));
             });
         }
+    }
+
+    // fused quantize+pack (no u8 staging buffer) — the hot path the
+    // DirectQ / AQ / EF codecs actually run per message
+    for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+        for bits in [2u8, 4, 8] {
+            let q = UniformQuantizer::new(bits, rounding);
+            let pool = Workers::seq();
+            let mut packed = vec![0u8; pack::packed_len(n, bits)];
+            let name = format!("quantize_pack_fused/{bits}bit/{rounding:?}/1M");
+            s.run_throughput(&name, bytes, || {
+                black_box(q.encode_packed_into(&x, &mut packed, &mut rng, &pool).unwrap());
+            });
+        }
+    }
+
+    // fused unpack+dequantize
+    {
+        let q = UniformQuantizer::new(4, Rounding::Nearest);
+        let pool = Workers::seq();
+        let mut packed = vec![0u8; pack::packed_len(n, 4)];
+        let scale = q.encode_packed_into(&x, &mut packed, &mut rng, &pool).unwrap();
+        let mut out = vec![0f32; n];
+        s.run_throughput("dequantize_fused/4bit/1M", bytes, || {
+            q.decode_packed(&packed, scale, &mut out, &pool);
+            black_box(&out);
+        });
+    }
+
+    // deterministic parallel fused encode: identical bytes at every
+    // worker count, throughput scales with the pool
+    for w in [1usize, 2, 4] {
+        let q = UniformQuantizer::new(4, Rounding::Nearest);
+        let pool = Workers::new(w);
+        let mut packed = vec![0u8; pack::packed_len(n, 4)];
+        s.run_throughput(&format!("quantize_pack_par/4bit/1M/w{w}"), bytes, || {
+            black_box(q.encode_packed_into(&x, &mut packed, &mut rng, &pool).unwrap());
+        });
     }
 
     // dequantize

@@ -15,6 +15,7 @@
 use std::sync::Arc;
 
 use super::frame::{Frame, FrameBuf, FrameReader, FrameView, TAG_AQ};
+use super::par::Workers;
 use super::quantizer::{Rounding, UniformQuantizer};
 use super::{encode_to_frame, pack, BoundaryCodec, EncodeStats};
 use crate::runtime::QuantRuntime;
@@ -157,6 +158,7 @@ pub struct AqCodec {
     delta: Vec<f32>,
     /// whole-batch buffer replica scratch for the batch-scale frame mode
     batch_m: Vec<f32>,
+    workers: Workers,
 }
 
 impl AqCodec {
@@ -182,6 +184,7 @@ impl AqCodec {
             codes: Vec::new(),
             delta: Vec::new(),
             batch_m: Vec::new(),
+            workers: Workers::seq(),
         }
     }
 
@@ -276,7 +279,6 @@ impl BoundaryCodec for AqCodec {
         out.start(TAG_AQ);
         out.u8(self.bits).u32(el as u32).u32(ids.len() as u32).u8(MODE_PER_EXAMPLE);
         out.end_header();
-        self.codes.resize(el, 0);
         self.delta.resize(el, 0.0);
         let mut delta_abs_sum = 0f64;
         let mut first_visits = 0usize;
@@ -292,15 +294,21 @@ impl BoundaryCodec for AqCodec {
                     self.delta[j] = row[j] - self.m[j];
                 }
                 delta_abs_sum += crate::util::stats::mean_abs(&self.delta) * el as f64;
-                let scale = self.quant.encode(&self.delta, &mut self.codes, &mut self.rng);
-                // m += deq(codes) — both replicas run this exact op
-                self.quant.decode_add(&self.codes, scale, &mut self.m);
-                self.store.put((self.ns, ex), &self.m);
+                // fused path: validate finiteness (a NaN activation makes
+                // the delta NaN), then quantize the delta straight into
+                // the packed payload — no u8 staging buffer
+                let scale = UniformQuantizer::checked_scale(&self.delta)?;
                 out.u8(REC_DELTA).f32(scale);
                 let packed = out.reserve_zeroed(pack::packed_len(el, self.bits));
-                pack::pack_into(&self.codes, self.bits, packed);
+                let pool = self.workers;
+                let q = self.quant;
+                q.encode_packed_with_scale(&self.delta, scale, packed, &mut self.rng, &pool);
+                // m += deq(packed) — both replicas run this exact op
+                self.quant.decode_packed_add(packed, scale, &mut self.m, &pool);
+                self.store.put((self.ns, ex), &self.m);
             } else {
-                // first visit: full precision (Algorithm 1 line 5)
+                // first visit: full precision (Algorithm 1 line 5;
+                // lossless, so non-finite values pass through unchanged)
                 first_visits += 1;
                 delta_abs_sum += crate::util::stats::mean_abs(row) * el as f64;
                 self.store.put((self.ns, ex), row);
@@ -334,8 +342,6 @@ impl BoundaryCodec for AqCodec {
                 let scale = p.f32()?;
                 let packed = p.bytes(pack::packed_len(n_rec * el, self.bits))?;
                 p.done()?;
-                self.codes.resize(n_rec * el, 0);
-                pack::unpack_into(packed, self.bits, &mut self.codes);
                 // assemble the local buffer replica; every record must exist
                 self.batch_m.resize(n_rec * el, 0.0);
                 for (i, &ex) in ids.iter().enumerate() {
@@ -352,6 +358,8 @@ impl BoundaryCodec for AqCodec {
                 }
                 match &self.hlo {
                     Some(q) if q.n_elements() == self.batch_m.len() => {
+                        self.codes.resize(n_rec * el, 0);
+                        pack::unpack_into(packed, self.bits, &mut self.codes);
                         let v = q.aq_decode(&self.codes, scale, &self.batch_m, self.bits)?;
                         crate::ensure!(
                             v.len() == self.batch_m.len(),
@@ -361,7 +369,11 @@ impl BoundaryCodec for AqCodec {
                         );
                         self.batch_m.copy_from_slice(&v);
                     }
-                    _ => self.quant.decode_add(&self.codes, scale, &mut self.batch_m),
+                    _ => {
+                        // fused unpack + buffer advance, chunked
+                        let pool = self.workers;
+                        self.quant.decode_packed_add(packed, scale, &mut self.batch_m, &pool);
+                    }
                 }
                 for (i, &ex) in ids.iter().enumerate() {
                     self.store.put((self.ns, ex), &self.batch_m[i * el..(i + 1) * el]);
@@ -388,9 +400,8 @@ impl BoundaryCodec for AqCodec {
                                 "stored buffer for example {ex} has {} elements, want {el}",
                                 self.m.len()
                             );
-                            self.codes.resize(el, 0);
-                            pack::unpack_into(packed, self.bits, &mut self.codes);
-                            self.quant.decode_add(&self.codes, scale, &mut self.m);
+                            let pool = self.workers;
+                            self.quant.decode_packed_add(packed, scale, &mut self.m, &pool);
                             self.store.put((self.ns, ex), &self.m);
                             out[i * el..(i + 1) * el].copy_from_slice(&self.m);
                         }
@@ -414,6 +425,10 @@ impl BoundaryCodec for AqCodec {
 
     fn take_stats(&mut self) -> EncodeStats {
         std::mem::take(&mut self.stats)
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.workers = Workers::new(threads);
     }
 }
 

@@ -182,6 +182,17 @@ impl BoundaryCodec for EfCodec {
     fn take_stats(&mut self) -> EncodeStats {
         self.fb.as_mut().map(|fb| std::mem::take(&mut fb.stats)).unwrap_or_default()
     }
+
+    /// Forward the worker-count knob to the inner codec — and to the
+    /// receiver-decoder replica, which must run the exact same kernels
+    /// (bytes are worker-count independent, so symmetry is about code
+    /// paths, not correctness of the residuals).
+    fn set_workers(&mut self, threads: usize) {
+        self.inner.set_workers(threads);
+        if let Some(fb) = &mut self.fb {
+            fb.replica.set_workers(threads);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -35,6 +35,7 @@ pub mod ef;
 pub mod f16;
 pub mod frame;
 pub mod pack;
+pub mod par;
 pub mod quantizer;
 pub mod registry;
 pub mod schemes;
@@ -45,6 +46,7 @@ pub mod tp;
 pub use delta::{AqCodec, AqState};
 pub use ef::EfCodec;
 pub use frame::{Frame, FrameBuf, FrameView};
+pub use par::Workers;
 pub use quantizer::{Rounding, UniformQuantizer};
 pub use registry::{CodecSpec, SchemeSpec};
 
@@ -124,6 +126,12 @@ pub trait BoundaryCodec: Send {
     fn take_stats(&mut self) -> EncodeStats {
         EncodeStats::default()
     }
+
+    /// Worker count for chunked encode/decode kernels on large tensors
+    /// (see [`par::Workers`]). Bytes are bit-identical at any count —
+    /// this is purely a throughput knob, so the default for codecs
+    /// without a parallel path is a no-op.
+    fn set_workers(&mut self, _threads: usize) {}
 }
 
 /// Build an owned [`Frame`] through a codec's scratch path — the shim

@@ -2,62 +2,102 @@
 //!
 //! This is what actually puts `fw2 bw4`-style messages on the simulated
 //! network: `n` codes of `bits` bits occupy `ceil(n*bits/8)` bytes. The
-//! packer is branch-free per code and is one of the L3 hot paths (see
-//! EXPERIMENTS.md §Perf).
+//! hot paths assemble whole `u64` words — 8 codes per word for the
+//! generic widths, 16/32/64 codes per word for the 4/2/1-bit fast paths
+//! — instead of shifting byte-at-a-time, which is what lets the
+//! autovectorizer keep up with memory bandwidth (see EXPERIMENTS.md
+//! §Perf). The byte-serial scalar forms are retained as
+//! [`pack_scalar`] / [`unpack_scalar`]: they are the reference the
+//! kernel property tests (`tests/prop_kernels.rs`) pin the word-based
+//! implementations against, bit for bit.
+//!
+//! Robustness contract (release builds included):
+//!  * every code is masked to its low `bits` bits before entering the
+//!    accumulator, so an out-of-range code can never corrupt the bits of
+//!    its neighbors in the packed stream;
+//!  * [`packed_len`] saturates instead of wrapping, so a hostile
+//!    header-claimed `n` near `usize::MAX / 8` yields a huge length that
+//!    fails the frame-level payload checks rather than under-computing a
+//!    buffer size.
 
 /// Packed length in bytes for `n` codes of `bits` bits.
+///
+/// Uses saturating arithmetic: for hostile `n` where `n * bits` would
+/// overflow `usize`, the result saturates near `usize::MAX / 8` instead
+/// of wrapping small, so callers comparing it against a real payload
+/// length reject the frame cleanly.
 #[inline]
 pub fn packed_len(n: usize, bits: u8) -> usize {
-    (n * bits as usize + 7) / 8
+    n.saturating_mul(bits as usize).saturating_add(7) / 8
 }
 
-/// Pack `codes` (each < 2^bits) into `out`; `out` must have
-/// `packed_len(codes.len(), bits)` bytes.
+/// Pack `codes` into `out`; `out` must have `packed_len(codes.len(),
+/// bits)` bytes. Each code is masked to its low `bits` bits — values
+/// `>= 2^bits` lose their high bits but cannot bleed into neighbors.
 pub fn pack_into(codes: &[u8], bits: u8, out: &mut [u8]) {
-    debug_assert!(bits >= 1 && bits <= 8);
+    debug_assert!((1..=8).contains(&bits));
     debug_assert_eq!(out.len(), packed_len(codes.len(), bits));
-    // §Perf fast paths: the paper's bit widths are mostly 2/4/8; direct
-    // byte assembly beats the generic shift-accumulator ~3x.
+    // §Perf fast paths: the paper's bit widths are mostly 2/4/8; whole-
+    // word assembly beats the byte-serial accumulator ~4x and the old
+    // byte-pair assembly ~2x.
     match bits {
-        8 => {
-            out.copy_from_slice(codes);
-            return;
-        }
-        4 => {
-            let mut it = codes.chunks_exact(2);
-            for (o, c) in out.iter_mut().zip(&mut it) {
-                *o = c[0] | (c[1] << 4);
-            }
-            if let [last] = it.remainder() {
-                out[codes.len() / 2] = *last;
-            }
-            return;
-        }
-        2 => {
-            let mut it = codes.chunks_exact(4);
-            for (o, c) in out.iter_mut().zip(&mut it) {
-                *o = c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6);
-            }
-            let rem = it.remainder();
-            if !rem.is_empty() {
-                let mut acc = 0u8;
-                for (j, &c) in rem.iter().enumerate() {
-                    acc |= c << (2 * j);
-                }
-                out[codes.len() / 4] = acc;
-            }
-            return;
-        }
-        _ => {}
+        8 => out.copy_from_slice(codes),
+        4 => pack_words::<16, 4>(codes, out),
+        2 => pack_words::<32, 2>(codes, out),
+        1 => pack_words::<64, 1>(codes, out),
+        _ => pack_words_generic(codes, bits, out),
     }
-    out.fill(0);
+}
+
+/// Whole-word fast path: `LANES` codes of `BITS` bits fill one `u64`
+/// (LANES * BITS == 64), written out as 8 little-endian bytes.
+fn pack_words<const LANES: usize, const BITS: usize>(codes: &[u8], out: &mut [u8]) {
+    let mask = (1u64 << BITS) - 1;
+    let full = codes.len() / LANES;
+    let (body, tail) = codes.split_at(full * LANES);
+    let (out_body, out_tail) = out.split_at_mut(full * 8);
+    for (o, c) in out_body.chunks_exact_mut(8).zip(body.chunks_exact(LANES)) {
+        let mut w = 0u64;
+        for (j, &cj) in c.iter().enumerate() {
+            w |= ((cj as u64) & mask) << (j * BITS);
+        }
+        o.copy_from_slice(&w.to_le_bytes());
+    }
+    pack_scalar(tail, BITS as u8, out_tail);
+}
+
+/// Generic word path (3/5/6/7 bits): 8 codes of `bits` bits fill
+/// exactly `bits` output bytes, so every block stays byte-aligned.
+fn pack_words_generic(codes: &[u8], bits: u8, out: &mut [u8]) {
+    let b = bits as usize;
+    let mask = (1u64 << b) - 1;
+    let full = codes.len() / 8;
+    let (body, tail) = codes.split_at(full * 8);
+    let (out_body, out_tail) = out.split_at_mut(full * b);
+    for (o, c) in out_body.chunks_exact_mut(b).zip(body.chunks_exact(8)) {
+        let mut w = 0u64;
+        for (j, &cj) in c.iter().enumerate() {
+            w |= ((cj as u64) & mask) << (j * b);
+        }
+        o.copy_from_slice(&w.to_le_bytes()[..b]);
+    }
+    pack_scalar(tail, bits, out_tail);
+}
+
+/// Byte-serial reference packer (any `bits` 1..=8). Overwrites all of
+/// `out`, which must be `packed_len(codes.len(), bits)` bytes. Retained
+/// as the property-test reference for the word-based paths; also the
+/// tail handler for partial blocks.
+pub fn pack_scalar(codes: &[u8], bits: u8, out: &mut [u8]) {
+    debug_assert!((1..=8).contains(&bits));
+    debug_assert_eq!(out.len(), packed_len(codes.len(), bits));
     let bits = bits as usize;
+    let mask = ((1u16 << bits) - 1) as u32;
     let mut acc: u32 = 0;
     let mut acc_bits = 0usize;
     let mut o = 0usize;
     for &c in codes {
-        debug_assert!((c as u32) < (1u32 << bits));
-        acc |= (c as u32) << acc_bits;
+        acc |= (c as u32 & mask) << acc_bits;
         acc_bits += bits;
         while acc_bits >= 8 {
             out[o] = (acc & 0xFF) as u8;
@@ -71,6 +111,7 @@ pub fn pack_into(codes: &[u8], bits: u8, out: &mut [u8]) {
     }
 }
 
+/// Pack into a fresh buffer (allocating convenience form).
 pub fn pack(codes: &[u8], bits: u8) -> Vec<u8> {
     let mut out = vec![0u8; packed_len(codes.len(), bits)];
     pack_into(codes, bits, &mut out);
@@ -79,48 +120,56 @@ pub fn pack(codes: &[u8], bits: u8) -> Vec<u8> {
 
 /// Unpack `n` codes of `bits` bits from `bytes` into `out` (length n).
 pub fn unpack_into(bytes: &[u8], bits: u8, out: &mut [u8]) {
-    debug_assert!(bits >= 1 && bits <= 8);
+    debug_assert!((1..=8).contains(&bits));
     debug_assert!(bytes.len() >= packed_len(out.len(), bits));
     match bits {
-        8 => {
-            out.copy_from_slice(&bytes[..out.len()]);
-            return;
-        }
-        4 => {
-            let n_pairs = out.len() / 2;
-            let mut it = out.chunks_exact_mut(2);
-            for (o, &b) in (&mut it).zip(bytes) {
-                o[0] = b & 0x0F;
-                o[1] = b >> 4;
-            }
-            let rem = it.into_remainder();
-            if let [last] = rem {
-                *last = bytes[n_pairs] & 0x0F;
-            }
-            return;
-        }
-        2 => {
-            let n_quads = out.len() / 4;
-            let mut it = out.chunks_exact_mut(4);
-            for (o, &b) in (&mut it).zip(bytes) {
-                o[0] = b & 0x03;
-                o[1] = (b >> 2) & 0x03;
-                o[2] = (b >> 4) & 0x03;
-                o[3] = b >> 6;
-            }
-            let rem = it.into_remainder();
-            if !rem.is_empty() {
-                let b = bytes[n_quads];
-                for (j, o) in rem.iter_mut().enumerate() {
-                    *o = (b >> (2 * j)) & 0x03;
-                }
-            }
-            return;
-        }
-        _ => {}
+        8 => out.copy_from_slice(&bytes[..out.len()]),
+        4 => unpack_words::<16, 4>(bytes, out),
+        2 => unpack_words::<32, 2>(bytes, out),
+        1 => unpack_words::<64, 1>(bytes, out),
+        _ => unpack_words_generic(bytes, bits, out),
     }
+}
+
+/// Whole-word unpack fast path (LANES * BITS == 64).
+fn unpack_words<const LANES: usize, const BITS: usize>(bytes: &[u8], out: &mut [u8]) {
+    let mask = (1u64 << BITS) - 1;
+    let full = out.len() / LANES;
+    let (body, tail) = out.split_at_mut(full * LANES);
+    for (o, b) in body.chunks_exact_mut(LANES).zip(bytes.chunks_exact(8)) {
+        let w = u64::from_le_bytes(b.try_into().unwrap());
+        for (j, oj) in o.iter_mut().enumerate() {
+            *oj = ((w >> (j * BITS)) & mask) as u8;
+        }
+    }
+    unpack_scalar(&bytes[full * 8..], BITS as u8, tail);
+}
+
+/// Generic word unpack (3/5/6/7 bits): `bits` bytes -> 8 codes.
+fn unpack_words_generic(bytes: &[u8], bits: u8, out: &mut [u8]) {
+    let b = bits as usize;
+    let mask = (1u64 << b) - 1;
+    let full = out.len() / 8;
+    let (body, tail) = out.split_at_mut(full * 8);
+    for (o, bs) in body.chunks_exact_mut(8).zip(bytes.chunks_exact(b)) {
+        let mut wb = [0u8; 8];
+        wb[..b].copy_from_slice(bs);
+        let w = u64::from_le_bytes(wb);
+        for (j, oj) in o.iter_mut().enumerate() {
+            *oj = ((w >> (j * b)) & mask) as u8;
+        }
+    }
+    unpack_scalar(&bytes[full * b..], bits, tail);
+}
+
+/// Byte-serial reference unpacker (any `bits` 1..=8): the property-test
+/// reference for the word-based paths, and the partial-block tail
+/// handler. Reads `packed_len(out.len(), bits)` bytes from `bytes`.
+pub fn unpack_scalar(bytes: &[u8], bits: u8, out: &mut [u8]) {
+    debug_assert!((1..=8).contains(&bits));
+    debug_assert!(bytes.len() >= packed_len(out.len(), bits));
     let bits = bits as usize;
-    let mask = ((1u32 << bits) - 1) as u32;
+    let mask = ((1u16 << bits) - 1) as u32;
     let mut acc: u32 = 0;
     let mut acc_bits = 0usize;
     let mut i = 0usize;
@@ -136,6 +185,7 @@ pub fn unpack_into(bytes: &[u8], bits: u8, out: &mut [u8]) {
     }
 }
 
+/// Unpack into a fresh buffer (allocating convenience form).
 pub fn unpack(bytes: &[u8], bits: u8, n: usize) -> Vec<u8> {
     let mut out = vec![0u8; n];
     unpack_into(bytes, bits, &mut out);
@@ -163,6 +213,26 @@ mod tests {
     }
 
     #[test]
+    fn word_paths_match_scalar_reference() {
+        let mut rng = Rng::new(23);
+        for bits in 1..=8u8 {
+            for n in [0usize, 1, 7, 9, 15, 16, 17, 63, 64, 65, 509] {
+                let codes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let mut fast = vec![0u8; packed_len(n, bits)];
+                let mut slow = vec![0u8; packed_len(n, bits)];
+                pack_into(&codes, bits, &mut fast);
+                pack_scalar(&codes, bits, &mut slow);
+                assert_eq!(fast, slow, "pack bits={bits} n={n}");
+                let mut out_fast = vec![0u8; n];
+                let mut out_slow = vec![0u8; n];
+                unpack_into(&fast, bits, &mut out_fast);
+                unpack_scalar(&fast, bits, &mut out_slow);
+                assert_eq!(out_fast, out_slow, "unpack bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn density_is_tight() {
         assert_eq!(packed_len(8, 1), 1);
         assert_eq!(packed_len(8, 2), 2);
@@ -172,11 +242,43 @@ mod tests {
     }
 
     #[test]
+    fn packed_len_saturates_on_hostile_lengths() {
+        // a header-claimed n near usize::MAX must not wrap to a tiny
+        // buffer length (the old `(n * bits + 7) / 8` wrapped for
+        // n >= usize::MAX / bits); saturation keeps the result huge so
+        // payload-length checks fail the frame cleanly
+        for bits in 1..=8u8 {
+            let hostile = usize::MAX / 2 + 3;
+            assert!(packed_len(hostile, bits) >= hostile / 8, "bits={bits} wrapped");
+            assert!(packed_len(usize::MAX, bits) >= usize::MAX / 8, "bits={bits} wrapped");
+        }
+        // small lengths are exact (saturation is invisible in range)
+        assert_eq!(packed_len(9, 3), 4);
+    }
+
+    #[test]
     fn max_codes_survive() {
         for bits in 1..=8u8 {
             let max = ((1u16 << bits) - 1) as u8;
             let codes = vec![max; 33];
             assert_eq!(unpack(&pack(&codes, bits), bits, 33), codes);
+        }
+    }
+
+    #[test]
+    fn out_of_range_codes_cannot_bleed_into_neighbors() {
+        // runs identically in debug and release (the CI release-asserts
+        // job): codes with garbage high bits pack exactly like their
+        // masked values, so neighbors always round-trip unharmed
+        let mut rng = Rng::new(99);
+        for bits in 1..=7u8 {
+            let mask = ((1u16 << bits) - 1) as u8;
+            for n in [1usize, 7, 9, 64, 257] {
+                let dirty: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let clean: Vec<u8> = dirty.iter().map(|&c| c & mask).collect();
+                assert_eq!(pack(&dirty, bits), pack(&clean, bits), "bits={bits} n={n}");
+                assert_eq!(unpack(&pack(&dirty, bits), bits, n), clean, "bits={bits} n={n}");
+            }
         }
     }
 }

@@ -1,0 +1,160 @@
+//! First-party deterministic worker pool for chunked codec kernels.
+//!
+//! Large tensors are split into fixed [`CHUNK`]-element chunks; chunk
+//! `i` always covers the same input/output ranges no matter how many
+//! workers run, and each chunk's stochastic-rounding RNG stream is
+//! derived from the message seed and the chunk index alone
+//! (`UniformQuantizer::chunk_rng`). Workers only change *who* computes
+//! a chunk, never *what* — encoded bytes are bit-identical at any
+//! thread count, which is what keeps the executor-vs-simulator oracle
+//! and the golden frame pins valid when parallel encode is on.
+//!
+//! No rayon: the crate stays zero-dependency. `std::thread::scope`
+//! spawns short-lived workers only when a tensor spans multiple chunks
+//! *and* the pool was configured with >1 thread; the small-message
+//! steady state (`tests/zero_alloc.rs`) stays on the inline sequential
+//! path with no spawn and no allocation.
+
+/// Elements per parallel chunk. A multiple of 8, so chunk boundaries
+/// are byte-aligned in the packed stream for every bit width 1..=8 and
+/// chunks can pack into disjoint byte ranges independently.
+pub const CHUNK: usize = 4096;
+
+/// A worker-count policy for chunked kernels. `Copy` and cheap: it
+/// holds no threads — workers are scoped per call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Workers {
+    threads: usize,
+}
+
+impl Workers {
+    /// Pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Sequential policy: everything runs inline on the caller.
+    pub fn seq() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk_index, a_chunk, b_chunk)` over paired chunkings of
+    /// `a` (read) and `b` (written): chunk `i` covers
+    /// `a[i*a_chunk .. (i+1)*a_chunk]` and `b[i*b_chunk ..
+    /// (i+1)*b_chunk]` (last chunks may be short). The chunk->range
+    /// mapping is fixed; worker count only changes scheduling, so any
+    /// deterministic per-chunk `f` yields identical buffers at any
+    /// thread count. Requires `ceil(a.len()/a_chunk) ==
+    /// ceil(b.len()/b_chunk)` chunks.
+    pub fn for_chunks2<A, B, F>(&self, a: &[A], b: &mut [B], a_chunk: usize, b_chunk: usize, f: F)
+    where
+        A: Sync,
+        B: Send,
+        F: Fn(usize, &[A], &mut [B]) + Sync,
+    {
+        debug_assert!(a_chunk > 0 && b_chunk > 0);
+        let n_chunks = (a.len() + a_chunk - 1) / a_chunk;
+        debug_assert_eq!(n_chunks, (b.len() + b_chunk - 1) / b_chunk);
+        if n_chunks <= 1 || self.threads <= 1 {
+            // inline sequential path: no spawn, no alloc (the steady
+            // state for per-example message buffers)
+            let mut rest = &mut b[..];
+            for (i, ac) in a.chunks(a_chunk).enumerate() {
+                let take = b_chunk.min(rest.len());
+                let (bc, tail) = rest.split_at_mut(take);
+                f(i, ac, bc);
+                rest = tail;
+            }
+            return;
+        }
+        let w = self.threads.min(n_chunks);
+        let per = (n_chunks + w - 1) / w; // whole chunks per worker, contiguous runs
+        let f = &f;
+        std::thread::scope(|scope| {
+            let mut rest_a = a;
+            let mut rest_b = &mut b[..];
+            for wi in 0..w {
+                let lo = wi * per;
+                let hi = (lo + per).min(n_chunks);
+                if lo >= hi {
+                    break;
+                }
+                let take_a = ((hi - lo) * a_chunk).min(rest_a.len());
+                let take_b = ((hi - lo) * b_chunk).min(rest_b.len());
+                let (run_a, ta) = rest_a.split_at(take_a);
+                let (run_b, tb) = rest_b.split_at_mut(take_b);
+                rest_a = ta;
+                rest_b = tb;
+                scope.spawn(move || {
+                    let mut rb = run_b;
+                    for (j, ac) in run_a.chunks(a_chunk).enumerate() {
+                        let take = b_chunk.min(rb.len());
+                        let (bc, tail) = rb.split_at_mut(take);
+                        f(lo + j, ac, bc);
+                        rb = tail;
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Default for Workers {
+    fn default() -> Self {
+        Self::seq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // per-chunk kernel: stamps (chunk index, lane, sum of inputs) so any
+    // chunk->range mismatch or double-write is visible in the output
+    fn stamp(i: usize, ac: &[u32], bc: &mut [u64]) {
+        let sum: u64 = ac.iter().map(|&v| v as u64).sum();
+        for (j, bj) in bc.iter_mut().enumerate() {
+            *bj = ((i as u64) << 32) ^ (sum + j as u64);
+        }
+    }
+
+    #[test]
+    fn chunk_map_is_worker_count_independent() {
+        // symmetric chunking (b mirrors a), assorted tails around the
+        // chunk boundary, worker counts past the chunk count
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 100] {
+            let a: Vec<u32> = (0..n as u32).collect();
+            let mut want = vec![0u64; n];
+            Workers::seq().for_chunks2(&a, &mut want, 8, 8, stamp);
+            for threads in 2..=5 {
+                let mut b = vec![0u64; n];
+                Workers::new(threads).for_chunks2(&a, &mut b, 8, 8, stamp);
+                assert_eq!(b, want, "n={n} threads={threads}");
+            }
+        }
+        // asymmetric chunking (packed output: 4 b-slots per 8 a-elems),
+        // exact multiples so chunk counts line up
+        for n in [0usize, 8, 64, 128] {
+            let a: Vec<u32> = (0..n as u32).collect();
+            let mut want = vec![0u64; n / 2];
+            Workers::seq().for_chunks2(&a, &mut want, 8, 4, stamp);
+            for threads in 2..=5 {
+                let mut b = vec![0u64; n / 2];
+                Workers::new(threads).for_chunks2(&a, &mut b, 8, 4, stamp);
+                assert_eq!(b, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn seq_is_default_and_clamped() {
+        assert_eq!(Workers::default(), Workers::seq());
+        assert_eq!(Workers::new(0).threads(), 1);
+        assert_eq!(Workers::new(4).threads(), 4);
+    }
+}

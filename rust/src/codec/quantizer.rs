@@ -2,7 +2,23 @@
 //! (`python/compile/kernels/quant.py`), used by the native boundary codec,
 //! the data-parallel gradient compressor, and the low-precision message
 //! store. Codes fit in `u8` (bits <= 8 everywhere in the paper).
+//!
+//! Two kernel tiers:
+//!  * the original split path (`encode` -> `u8` codes -> `pack`),
+//!    retained as API and as the bit-exact reference the fused kernels
+//!    are property-tested against;
+//!  * the fused path ([`UniformQuantizer::encode_packed_into`] /
+//!    [`UniformQuantizer::decode_packed`]) that quantizes straight into
+//!    the packed byte stream, 8 elements per `u64` word, with no `u8`
+//!    staging buffer — and runs chunked across a [`Workers`] pool for
+//!    large tensors. Stochastic rounding stays bit-reproducible at any
+//!    worker count: each encode draws one message seed from the codec
+//!    RNG and chunk `i` uses the derived stream
+//!    [`UniformQuantizer::chunk_rng`]`(msg_seed, i)`.
 
+use super::pack;
+use super::par::{Workers, CHUNK};
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// Rounding mode: `Nearest` is deterministic round-to-nearest (offset
@@ -106,6 +122,209 @@ impl UniformQuantizer {
             Rounding::Stochastic => step,
         }
     }
+
+    /// Validating scale: bit-identical to [`UniformQuantizer::scale`]
+    /// for finite inputs, `Err` if any element is NaN or ±Inf.
+    ///
+    /// The fold maxes the sign-cleared bit patterns: for non-negative
+    /// IEEE-754 floats the integer order of the bits matches the float
+    /// order, so the max pattern *is* the max-abs value — and NaN/Inf
+    /// patterns (`>= 0x7f80_0000`) sort above every finite one, which
+    /// is what catches the old silent-swallow bug (`max` skips NaN,
+    /// then `NaN.clamp(..) as u8` quantized it to code 0 with no
+    /// signal).
+    pub fn checked_scale(x: &[f32]) -> Result<f32> {
+        let mbits = x.iter().fold(0u32, |m, &v| m.max(v.to_bits() & 0x7fff_ffff));
+        if mbits >= 0x7f80_0000 {
+            // cold path: find the first offender for the message
+            let (i, v) = x
+                .iter()
+                .enumerate()
+                .find(|(_, v)| !v.is_finite())
+                .map(|(i, &v)| (i, v))
+                .unwrap_or((0, f32::NAN));
+            crate::bail!("non-finite activation at index {i} ({v}): refusing to quantize");
+        }
+        Ok(f32::from_bits(mbits).max(1e-12))
+    }
+
+    /// Per-chunk RNG stream for deterministic parallel stochastic
+    /// rounding: depends only on the message seed and the chunk index,
+    /// never on which worker runs the chunk.
+    pub fn chunk_rng(msg_seed: u64, chunk: usize) -> Rng {
+        Rng::new(msg_seed ^ (chunk as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Fused quantize+pack: validates finiteness, computes the scale,
+    /// and writes codes straight into the packed byte stream (no `u8`
+    /// staging buffer). `packed` must be `pack::packed_len(x.len(),
+    /// self.bits)` bytes. Returns the scale.
+    pub fn encode_packed_into(
+        &self,
+        x: &[f32],
+        packed: &mut [u8],
+        rng: &mut Rng,
+        pool: &Workers,
+    ) -> Result<f32> {
+        let scale = Self::checked_scale(x)?;
+        self.encode_packed_with_scale(x, scale, packed, rng, pool);
+        Ok(scale)
+    }
+
+    /// Fused quantize+pack with a caller-supplied scale. Chunked across
+    /// `pool`; bytes are identical at any worker count. For Stochastic
+    /// rounding this draws exactly one `u64` message seed from `rng`
+    /// (regardless of length or worker count); Nearest draws nothing.
+    /// Callers wanting the non-finite check go through
+    /// [`UniformQuantizer::encode_packed_into`] or
+    /// [`UniformQuantizer::checked_scale`].
+    pub fn encode_packed_with_scale(
+        &self,
+        x: &[f32],
+        scale: f32,
+        packed: &mut [u8],
+        rng: &mut Rng,
+        pool: &Workers,
+    ) {
+        debug_assert_eq!(packed.len(), pack::packed_len(x.len(), self.bits));
+        let levels = self.levels();
+        let k = 0.5 * levels / scale;
+        // CHUNK is a multiple of 8, so each chunk owns a disjoint
+        // byte-aligned span of the packed stream at every bit width
+        let b_chunk = CHUNK * self.bits as usize / 8;
+        match self.rounding {
+            Rounding::Nearest => {
+                let c0 = 0.5 * levels + 0.5;
+                pool.for_chunks2(x, packed, CHUNK, b_chunk, |_, xc, pc| {
+                    self.encode_pack_chunk_nearest(xc, k, c0, pc);
+                });
+            }
+            Rounding::Stochastic => {
+                let msg_seed = rng.next_u64();
+                let c0 = 0.5 * levels;
+                pool.for_chunks2(x, packed, CHUNK, b_chunk, |i, xc, pc| {
+                    let mut crng = Self::chunk_rng(msg_seed, i);
+                    self.encode_pack_chunk_stochastic(xc, k, c0, &mut crng, pc);
+                });
+            }
+        }
+    }
+
+    /// Fused unpack+dequantize into `out` (overwrites), chunked across
+    /// `pool`. Reads `pack::packed_len(out.len(), self.bits)` bytes.
+    pub fn decode_packed(&self, packed: &[u8], scale: f32, out: &mut [f32], pool: &Workers) {
+        self.decode_packed_impl::<false>(packed, scale, out, pool);
+    }
+
+    /// Fused unpack+dequantize that *adds* into `out` (the AQ
+    /// buffer-advance step), chunked across `pool`.
+    pub fn decode_packed_add(&self, packed: &[u8], scale: f32, out: &mut [f32], pool: &Workers) {
+        self.decode_packed_impl::<true>(packed, scale, out, pool);
+    }
+
+    fn decode_packed_impl<const ADD: bool>(
+        &self,
+        packed: &[u8],
+        scale: f32,
+        out: &mut [f32],
+        pool: &Workers,
+    ) {
+        let plen = pack::packed_len(out.len(), self.bits);
+        debug_assert!(packed.len() >= plen);
+        let packed = &packed[..plen];
+        let k = 2.0 * scale / self.levels();
+        let b_chunk = CHUNK * self.bits as usize / 8;
+        pool.for_chunks2(packed, out, b_chunk, CHUNK, |_, pc, oc| {
+            self.decode_unpack_chunk::<ADD>(pc, k, scale, oc);
+        });
+    }
+
+    /// One chunk of the fused Nearest kernel: 8 elements quantized into
+    /// one `u64` word, `bits` bytes written per word. Bit-identical to
+    /// `encode_with_scale` + `pack` (the clamp pins values into
+    /// `[0, levels]`, where `as u64` == `as u8` widened).
+    fn encode_pack_chunk_nearest(&self, xc: &[f32], k: f32, c0: f32, out: &mut [u8]) {
+        let b = self.bits as usize;
+        let levels = self.levels();
+        let full = xc.len() / 8;
+        let (body, tail) = xc.split_at(full * 8);
+        let (out_body, out_tail) = out.split_at_mut(full * b);
+        for (o, xs) in out_body.chunks_exact_mut(b).zip(body.chunks_exact(8)) {
+            let mut w = 0u64;
+            for (j, &v) in xs.iter().enumerate() {
+                w |= ((v * k + c0).clamp(0.0, levels) as u64) << (j * b);
+            }
+            o.copy_from_slice(&w.to_le_bytes()[..b]);
+        }
+        let mut codes = [0u8; 8];
+        for (cj, &v) in codes.iter_mut().zip(tail) {
+            *cj = (v * k + c0).clamp(0.0, levels) as u8;
+        }
+        pack::pack_scalar(&codes[..tail.len()], self.bits, out_tail);
+    }
+
+    /// One chunk of the fused Stochastic kernel; `rng` is the chunk's
+    /// derived stream and is consumed in element order, exactly like
+    /// `encode_with_scale` over the same chunk.
+    fn encode_pack_chunk_stochastic(
+        &self,
+        xc: &[f32],
+        k: f32,
+        c0: f32,
+        rng: &mut Rng,
+        out: &mut [u8],
+    ) {
+        let b = self.bits as usize;
+        let levels = self.levels();
+        let full = xc.len() / 8;
+        let (body, tail) = xc.split_at(full * 8);
+        let (out_body, out_tail) = out.split_at_mut(full * b);
+        for (o, xs) in out_body.chunks_exact_mut(b).zip(body.chunks_exact(8)) {
+            let mut w = 0u64;
+            for (j, &v) in xs.iter().enumerate() {
+                w |= ((v * k + c0 + rng.next_f32()).clamp(0.0, levels) as u64) << (j * b);
+            }
+            o.copy_from_slice(&w.to_le_bytes()[..b]);
+        }
+        let mut codes = [0u8; 8];
+        for (cj, &v) in codes.iter_mut().zip(tail) {
+            *cj = (v * k + c0 + rng.next_f32()).clamp(0.0, levels) as u8;
+        }
+        pack::pack_scalar(&codes[..tail.len()], self.bits, out_tail);
+    }
+
+    /// One chunk of the fused decode kernel (shared overwrite/add
+    /// form): loads one little-endian word per 8 codes, dequantizes in
+    /// lane order.
+    fn decode_unpack_chunk<const ADD: bool>(&self, pc: &[u8], k: f32, scale: f32, oc: &mut [f32]) {
+        let b = self.bits as usize;
+        let mask = (1u64 << b) - 1;
+        let full = oc.len() / 8;
+        let (body, tail) = oc.split_at_mut(full * 8);
+        for (os, bs) in body.chunks_exact_mut(8).zip(pc.chunks_exact(b)) {
+            let mut wb = [0u8; 8];
+            wb[..b].copy_from_slice(bs);
+            let w = u64::from_le_bytes(wb);
+            for (j, o) in os.iter_mut().enumerate() {
+                let v = ((w >> (j * b)) & mask) as u8 as f32 * k - scale;
+                if ADD {
+                    *o += v;
+                } else {
+                    *o = v;
+                }
+            }
+        }
+        let mut codes = [0u8; 8];
+        pack::unpack_scalar(&pc[full * b..], self.bits, &mut codes[..tail.len()]);
+        for (o, &c) in tail.iter_mut().zip(&codes) {
+            let v = c as f32 * k - scale;
+            if ADD {
+                *o += v;
+            } else {
+                *o = v;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +395,47 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(bias <= 2.0 * se * (x.len() as f64).sqrt(), "bias {bias} se {se}");
+    }
+
+    #[test]
+    fn checked_scale_matches_scale_bit_exactly_on_finite() {
+        let mut r = rng();
+        for n in [1usize, 7, 64, 4097] {
+            let x: Vec<f32> = (0..n).map(|_| r.normal() * 10.0).collect();
+            assert_eq!(
+                UniformQuantizer::checked_scale(&x).unwrap().to_bits(),
+                UniformQuantizer::scale(&x).to_bits(),
+                "n={n}"
+            );
+        }
+        // -0.0 and the epsilon floor behave identically too
+        for x in [&[0.0f32, -0.0][..], &[]] {
+            assert_eq!(
+                UniformQuantizer::checked_scale(x).unwrap().to_bits(),
+                UniformQuantizer::scale(x).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_error_in_both_rounding_modes() {
+        for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut x = vec![0.5f32; 64];
+                x[17] = bad;
+                let q = UniformQuantizer::new(4, rounding);
+                let mut packed = vec![0u8; pack::packed_len(x.len(), 4)];
+                let err = q
+                    .encode_packed_into(&x, &mut packed, &mut rng(), &Workers::seq())
+                    .unwrap_err()
+                    .to_string();
+                assert!(err.contains("non-finite"), "{rounding:?} {bad}: {err}");
+                assert!(err.contains("17"), "offending index missing: {err}");
+            }
+        }
+        // checked_scale alone flags it as well (used by validating callers)
+        assert!(UniformQuantizer::checked_scale(&[1.0, f32::NAN]).is_err());
+        assert!(UniformQuantizer::checked_scale(&[f32::INFINITY]).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::util::Rng;
 use super::frame::{
     FrameBuf, FrameReader, FrameView, TAG_DIRECTQ, TAG_F16, TAG_RAW32, TAG_TOPK,
 };
+use super::par::Workers;
 use super::quantizer::{Rounding, UniformQuantizer};
 use super::{encode_to_frame, f16, pack, topk, BoundaryCodec, Frame};
 
@@ -155,13 +156,22 @@ pub struct DirectQCodec {
     rounding: Rounding,
     rng: Rng,
     hlo: Option<Arc<QuantRuntime>>,
-    /// per-message quantizer codes, reused across messages
+    /// per-message quantizer codes for the HLO arms (the native path is
+    /// fused and never stages codes), reused across messages
     codes: Vec<u8>,
+    workers: Workers,
 }
 
 impl DirectQCodec {
     pub fn new(bits: u8, rounding: Rounding, seed: u64, hlo: Option<Arc<QuantRuntime>>) -> Self {
-        DirectQCodec { bits, rounding, rng: Rng::new(seed), hlo, codes: Vec::new() }
+        DirectQCodec {
+            bits,
+            rounding,
+            rng: Rng::new(seed),
+            hlo,
+            codes: Vec::new(),
+            workers: Workers::seq(),
+        }
     }
 
     fn check(&self, tag: u8, header: &[u8], payload: &[u8]) -> Result<(usize, f32)> {
@@ -190,24 +200,28 @@ impl BoundaryCodec for DirectQCodec {
     }
 
     fn encode_into(&mut self, _ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
-        let scale = match &self.hlo {
-            Some(q) if q.n_elements() == a.len() => {
+        if let Some(q) = &self.hlo {
+            if q.n_elements() == a.len() {
                 let (codes, scale) = q.dq_encode(a, self.bits)?;
                 self.codes.clear();
                 self.codes.extend_from_slice(&codes);
-                scale
+                out.start(TAG_DIRECTQ);
+                out.u8(self.bits).u32(a.len() as u32).f32(scale);
+                out.end_header();
+                let packed = out.reserve_zeroed(pack::packed_len(a.len(), self.bits));
+                pack::pack_into(&self.codes, self.bits, packed);
+                return out.finish();
             }
-            _ => {
-                let q = UniformQuantizer::new(self.bits, self.rounding);
-                self.codes.resize(a.len(), 0);
-                q.encode(a, &mut self.codes, &mut self.rng)
-            }
-        };
+        }
+        // native fused path: validate finiteness, then quantize straight
+        // into the packed payload — no u8 staging buffer
+        let q = UniformQuantizer::new(self.bits, self.rounding);
+        let scale = UniformQuantizer::checked_scale(a)?;
         out.start(TAG_DIRECTQ);
         out.u8(self.bits).u32(a.len() as u32).f32(scale);
         out.end_header();
         let packed = out.reserve_zeroed(pack::packed_len(a.len(), self.bits));
-        pack::pack_into(&self.codes, self.bits, packed);
+        q.encode_packed_with_scale(a, scale, packed, &mut self.rng, &self.workers);
         out.finish()
     }
 
@@ -225,10 +239,10 @@ impl BoundaryCodec for DirectQCodec {
             "directq frame has {n} elements, boundary expects {}",
             out.len()
         );
-        self.codes.resize(n, 0);
-        pack::unpack_into(frame.payload(), self.bits, &mut self.codes);
         match &self.hlo {
             Some(q) if q.n_elements() == n => {
+                self.codes.resize(n, 0);
+                pack::unpack_into(frame.payload(), self.bits, &mut self.codes);
                 let v = q.dq_decode(&self.codes, scale, self.bits)?;
                 crate::ensure!(
                     v.len() == out.len(),
@@ -239,8 +253,9 @@ impl BoundaryCodec for DirectQCodec {
                 out.copy_from_slice(&v);
             }
             _ => {
+                // fused unpack+dequantize, chunked across the pool
                 let q = UniformQuantizer::new(self.bits, self.rounding);
-                q.decode(&self.codes, scale, out);
+                q.decode_packed(frame.payload(), scale, out, &self.workers);
             }
         }
         Ok(())
@@ -248,6 +263,10 @@ impl BoundaryCodec for DirectQCodec {
 
     fn label(&self) -> String {
         format!("q{}", self.bits)
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.workers = Workers::new(threads);
     }
 }
 
@@ -261,10 +280,11 @@ pub struct TopKCodec {
     /// claim, so a malformed header cannot force a huge allocation
     el: usize,
     rng: Rng,
-    /// per-message scratch (kept indices / values / codes), reused
+    /// per-message scratch (kept indices / values), reused; codes go
+    /// straight to/from the packed payload via the fused kernels
     sel: Vec<u32>,
     vals: Vec<f32>,
-    codes: Vec<u8>,
+    workers: Workers,
 }
 
 impl TopKCodec {
@@ -278,7 +298,7 @@ impl TopKCodec {
             rng: Rng::new(seed),
             sel: Vec::new(),
             vals: Vec::new(),
-            codes: Vec::new(),
+            workers: Workers::seq(),
         }
     }
 
@@ -319,12 +339,14 @@ impl BoundaryCodec for TopKCodec {
             ids.len(),
             self.el
         );
+        // a NaN/Inf activation must error here, not vanish inside the
+        // magnitude select (NaN compares false) and decode as garbage
+        UniformQuantizer::checked_scale(a)?;
         topk::select_topk_into(a, self.frac, &mut self.sel);
         let k = self.sel.len();
         self.vals.clear();
         self.vals.extend(self.sel.iter().map(|&i| a[i as usize]));
-        self.codes.resize(k, 0);
-        let scale = self.quant.encode(&self.vals, &mut self.codes, &mut self.rng);
+        let scale = UniformQuantizer::scale(&self.vals);
         out.start(TAG_TOPK);
         out.u8(self.bits).u32(a.len() as u32).u32(k as u32).f32(scale);
         out.end_header();
@@ -333,7 +355,8 @@ impl BoundaryCodec for TopKCodec {
             out.u32(i);
         }
         let packed = out.reserve_zeroed(pack::packed_len(k, self.bits));
-        pack::pack_into(&self.codes, self.bits, packed);
+        let pool = self.workers;
+        self.quant.encode_packed_with_scale(&self.vals, scale, packed, &mut self.rng, &pool);
         out.finish()
     }
 
@@ -357,11 +380,10 @@ impl BoundaryCodec for TopKCodec {
             crate::ensure!((i as usize) < n, "topk index {i} out of range (n = {n})");
             self.sel.push(i);
         }
-        self.codes.resize(k, 0);
-        pack::unpack_into(p.bytes(pack::packed_len(k, self.bits))?, self.bits, &mut self.codes);
+        let packed = p.bytes(pack::packed_len(k, self.bits))?;
         p.done()?;
         self.vals.resize(k, 0.0);
-        self.quant.decode(&self.codes, scale, &mut self.vals);
+        self.quant.decode_packed(packed, scale, &mut self.vals, &self.workers);
         out.fill(0.0);
         for (&i, &v) in self.sel.iter().zip(&self.vals) {
             out[i as usize] = v;
@@ -371,6 +393,10 @@ impl BoundaryCodec for TopKCodec {
 
     fn label(&self) -> String {
         format!("topk{}@{}", self.frac, self.bits)
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.workers = Workers::new(threads);
     }
 }
 

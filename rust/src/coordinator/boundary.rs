@@ -91,6 +91,12 @@ impl BoundarySender {
     pub fn label(&self) -> String {
         self.enc.label()
     }
+
+    /// Worker count for the codec's chunked kernels on large messages
+    /// (throughput only — frame bytes are identical at any count).
+    pub fn set_workers(&mut self, threads: usize) {
+        self.enc.set_workers(threads);
+    }
 }
 
 /// Decoder endpoint of one directed boundary: reconstructs the
@@ -149,6 +155,12 @@ impl BoundaryReceiver {
     pub fn state_bytes(&self) -> u64 {
         self.dec.state_bytes()
     }
+
+    /// Worker count for the codec's chunked kernels on large messages
+    /// (throughput only — reconstruction is identical at any count).
+    pub fn set_workers(&mut self, threads: usize) {
+        self.dec.set_workers(threads);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -204,6 +216,12 @@ impl ForwardBoundary {
         self.send.label()
     }
 
+    /// Worker count for both halves' chunked codec kernels.
+    pub fn set_workers(&mut self, threads: usize) {
+        self.send.set_workers(threads);
+        self.recv.set_workers(threads);
+    }
+
     /// Split into the two endpoint halves (threaded deployment: the
     /// sender half moves to stage `s`'s thread, the receiver half to
     /// stage `s+1`'s).
@@ -240,6 +258,12 @@ impl BackwardBoundary {
         let stats = self.send.encode_into(example_ids, g, &mut self.buf)?;
         let out = self.recv.decode_view(example_ids, &self.buf.view())?;
         Ok((out, stats.wire_bytes))
+    }
+
+    /// Worker count for both halves' chunked codec kernels.
+    pub fn set_workers(&mut self, threads: usize) {
+        self.send.set_workers(threads);
+        self.recv.set_workers(threads);
     }
 
     pub fn into_halves(self) -> (BoundarySender, BoundaryReceiver) {

@@ -137,6 +137,11 @@ impl LinkEndpointTx {
     pub fn state_bytes(&self) -> u64 {
         self.enc.state_bytes()
     }
+
+    /// Worker count for the codec's chunked kernels on large messages.
+    pub fn set_workers(&mut self, threads: usize) {
+        self.enc.set_workers(threads);
+    }
 }
 
 impl LinkEndpointRx {
@@ -179,6 +184,11 @@ impl LinkEndpointRx {
     /// Decoder-side persistent codec state (the buffer replica).
     pub fn state_bytes(&self) -> u64 {
         self.dec.state_bytes()
+    }
+
+    /// Worker count for the codec's chunked kernels on large messages.
+    pub fn set_workers(&mut self, threads: usize) {
+        self.dec.set_workers(threads);
     }
 }
 
@@ -419,6 +429,16 @@ impl DpRing {
     /// Encoder-side persistent codec state.
     pub fn state_bytes(&self) -> u64 {
         self.tx.state_bytes()
+    }
+
+    /// Worker count for the chunked codec kernels, applied to the
+    /// encoder and every per-sender decoder replica (gradient vectors
+    /// are the largest messages on the plane).
+    pub fn set_workers(&mut self, threads: usize) {
+        self.tx.set_workers(threads);
+        for d in &mut self.dec {
+            d.set_workers(threads);
+        }
     }
 }
 

@@ -249,6 +249,32 @@ fn prop_frameview_short_buffers_error_before_the_split() {
 }
 
 #[test]
+fn prop_hostile_element_count_claims_error_cleanly() {
+    // a frame whose header claims n = u32::MAX codes: `packed_len`
+    // saturates instead of wrapping (the old `(n * bits + 7) / 8`
+    // wrapped small on 32-bit targets), so the expected payload length
+    // stays huge and the payload check rejects the frame — an Err, not
+    // a panic or an under-sized read
+    Prop::check("hostile header n", |rng| {
+        let el = len_in(rng, 1, 64);
+        let bits = 1 + rng.below(8) as u8;
+        let scheme = SchemeSpec::DirectQ { bits };
+        let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 7).unwrap();
+        let a = vec_f32(rng, el, 1.0);
+        let frame = enc.encode(&[0], &a).unwrap();
+        // directq header layout: bits u8 | n u32 | scale f32
+        let mut header = frame.header().to_vec();
+        header[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+        let evil = Frame::new(frame.tag(), header, frame.payload().to_vec());
+        let err = dec.decode(&[0], &evil).unwrap_err();
+        assert!(err.to_string().contains("payload"), "{err}");
+        // the untouched frame still decodes: the corruption above, not
+        // collateral state damage, is what the Err was about
+        assert_eq!(dec.decode(&[0], &frame).unwrap().len(), el);
+    });
+}
+
+#[test]
 fn prop_aq_delta_for_unknown_example_errors() {
     Prop::check("aq delta without buffer", |rng| {
         let el = len_in(rng, 1, 64);

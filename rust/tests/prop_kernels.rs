@@ -1,0 +1,228 @@
+//! Property tests pinning the word-based / fused / parallel codec
+//! kernels bit-identical to the retained byte-serial scalar reference
+//! (`pack::pack_scalar` / `pack::unpack_scalar` and the split
+//! `encode` -> codes -> `pack` path):
+//!
+//!  * `pack_into` / `unpack_into` == the scalar packer, every bit width;
+//!  * the fused `encode_packed_with_scale` == quantize-then-pack, same
+//!    packed bytes and the same master-RNG consumption (Stochastic
+//!    draws exactly one message seed; Nearest draws nothing);
+//!  * `decode_packed` / `decode_packed_add` == unpack-then-dequantize,
+//!    bit for bit;
+//!  * all of the above at 1..=4 worker threads — the deterministic
+//!    chunk map makes the packed stream worker-count independent, which
+//!    the frame-level test at the bottom re-checks through the real
+//!    codecs (`q*`, `aq*`, `ef:*`, `topk*`) round after round.
+
+use aq_sgd::codec::pack;
+use aq_sgd::codec::par::{Workers, CHUNK};
+use aq_sgd::codec::quantizer::{Rounding, UniformQuantizer};
+use aq_sgd::codec::registry::{build_mem_pair, SchemeSpec};
+use aq_sgd::testing::prop::{len_in, vec_f32, Prop};
+use aq_sgd::util::Rng;
+
+/// The chunked scalar reference for the fused encode path: quantize via
+/// the split-path `encode_with_scale`, pack via the byte-serial
+/// `pack_scalar`, chunk by chunk in the same order the fused kernels
+/// claim. For Stochastic it mirrors the documented RNG contract: one
+/// message seed drawn from the master stream, chunk `i` consuming the
+/// derived `chunk_rng(msg_seed, i)` in element order.
+fn reference_encode_packed(q: &UniformQuantizer, x: &[f32], scale: f32, rng: &mut Rng) -> Vec<u8> {
+    let mut packed = vec![0u8; pack::packed_len(x.len(), q.bits)];
+    let b_chunk = CHUNK * q.bits as usize / 8;
+    match q.rounding {
+        Rounding::Nearest => {
+            let mut codes = vec![0u8; x.len()];
+            q.encode_with_scale(x, scale, &mut codes, rng); // Nearest draws nothing
+            pack::pack_scalar(&codes, q.bits, &mut packed);
+        }
+        Rounding::Stochastic => {
+            let msg_seed = rng.next_u64();
+            for (i, (xc, pc)) in x.chunks(CHUNK).zip(packed.chunks_mut(b_chunk)).enumerate() {
+                let mut crng = UniformQuantizer::chunk_rng(msg_seed, i);
+                let mut codes = vec![0u8; xc.len()];
+                q.encode_with_scale(xc, scale, &mut codes, &mut crng);
+                pack::pack_scalar(&codes, q.bits, pc);
+            }
+        }
+    }
+    packed
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// One full fused-vs-reference check: packed bytes, RNG consumption,
+/// and both decode forms, at the given worker count.
+fn check_fused(bits: u8, rounding: Rounding, x: &[f32], workers: usize, seed: u64) {
+    let ctx = format!("bits={bits} {rounding:?} n={} w={workers}", x.len());
+    let q = UniformQuantizer::new(bits, rounding);
+    let scale = UniformQuantizer::checked_scale(x).unwrap();
+    let pool = Workers::new(workers);
+
+    let mut rng_fused = Rng::new(seed);
+    let mut rng_ref = rng_fused.clone();
+    let mut packed = vec![0u8; pack::packed_len(x.len(), bits)];
+    q.encode_packed_with_scale(x, scale, &mut packed, &mut rng_fused, &pool);
+    let expect = reference_encode_packed(&q, x, scale, &mut rng_ref);
+    assert_eq!(packed, expect, "{ctx}: fused packed bytes diverged from scalar reference");
+    // same master-RNG consumption: the streams stay in lockstep after
+    // the encode, so codecs interleaving other draws stay reproducible
+    assert_eq!(rng_fused.next_u64(), rng_ref.next_u64(), "{ctx}: RNG consumption diverged");
+
+    // fused decode == scalar unpack + split-path dequantize
+    let mut codes = vec![0u8; x.len()];
+    pack::unpack_scalar(&packed, bits, &mut codes);
+    let mut out_ref = vec![0f32; x.len()];
+    q.decode(&codes, scale, &mut out_ref);
+    let mut out = vec![0f32; x.len()];
+    q.decode_packed(&packed, scale, &mut out, &pool);
+    assert_eq!(bits_of(&out), bits_of(&out_ref), "{ctx}: decode_packed diverged");
+
+    // and the accumulating form (the AQ buffer advance)
+    let base: Vec<f32> = (0..x.len()).map(|i| (i as f32) * 0.25 - 1.0).collect();
+    let mut acc = base.clone();
+    let mut acc_ref = base;
+    q.decode_packed_add(&packed, scale, &mut acc, &pool);
+    q.decode_add(&codes, scale, &mut acc_ref);
+    assert_eq!(bits_of(&acc), bits_of(&acc_ref), "{ctx}: decode_packed_add diverged");
+}
+
+#[test]
+fn fused_kernels_match_scalar_reference_exhaustively() {
+    // every bit width x odd tails around the word and chunk boundaries
+    // x both roundings x 1..=4 workers
+    let mut rng = Rng::new(0x5EED);
+    let lens = [0usize, 1, 7, 9, 64, CHUNK - 1, CHUNK, CHUNK + 9, 2 * CHUNK + 7];
+    for &n in &lens {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() * 2.0).collect();
+        for bits in 1..=8u8 {
+            for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+                for workers in 1..=4usize {
+                    check_fused(bits, rounding, &x, workers, 0xFEED ^ n as u64);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fused_kernels_match_reference_on_random_shapes() {
+    Prop::check("fused == scalar reference", |rng| {
+        let n = len_in(rng, 1, 2 * CHUNK + 17);
+        let bits = 1 + rng.below(8) as u8;
+        let workers = 1 + rng.below(4);
+        let rounding =
+            if rng.below(2) == 0 { Rounding::Nearest } else { Rounding::Stochastic };
+        let x = vec_f32(rng, n, 3.0);
+        check_fused(bits, rounding, &x, workers, rng.next_u64());
+    });
+}
+
+#[test]
+fn prop_word_packers_match_scalar_reference() {
+    Prop::check("pack_into == pack_scalar", |rng| {
+        let bits = 1 + rng.below(8) as u8;
+        let n = len_in(rng, 0, 3 * 64 + 9);
+        // dirty high bits on purpose: the word paths must mask exactly
+        // like the scalar reference does
+        let codes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let mut fast = vec![0u8; pack::packed_len(n, bits)];
+        let mut slow = vec![0u8; pack::packed_len(n, bits)];
+        pack::pack_into(&codes, bits, &mut fast);
+        pack::pack_scalar(&codes, bits, &mut slow);
+        assert_eq!(fast, slow, "pack bits={bits} n={n}");
+        let mut out_fast = vec![0u8; n];
+        let mut out_slow = vec![0u8; n];
+        pack::unpack_into(&fast, bits, &mut out_fast);
+        pack::unpack_scalar(&slow, bits, &mut out_slow);
+        assert_eq!(out_fast, out_slow, "unpack bits={bits} n={n}");
+    });
+}
+
+#[test]
+fn frames_are_identical_at_any_worker_count() {
+    // the codec-level restatement of the determinism contract: the same
+    // seeded pair produces byte-identical frames and bit-identical
+    // reconstructions whether the kernels run sequentially or chunked
+    // across a pool — including Stochastic rounding, where the one
+    // message-seed draw per encode is what makes this hold. el spans
+    // multiple chunks so the parallel path actually engages.
+    let el = CHUNK + 37;
+    for spec in ["q4", "aq2", "ef:q3", "topk0.2@4"] {
+        let scheme = SchemeSpec::parse(spec).unwrap();
+        for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+            let mut baseline: Option<Vec<Vec<u8>>> = None;
+            for w in 1..=4usize {
+                let (mut enc, mut dec) = build_mem_pair(&scheme, el, rounding, 77).unwrap();
+                enc.set_workers(w);
+                dec.set_workers(w);
+                let mut a: Vec<f32> = (0..el).map(|i| ((i as f32) * 0.37).sin()).collect();
+                let mut record: Vec<Vec<u8>> = Vec::new();
+                for round in 0..3 {
+                    let frame = enc.encode(&[0], &a).unwrap();
+                    let out = dec.decode(&[0], &frame).unwrap();
+                    record.push(frame.to_bytes());
+                    record.push(out.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect());
+                    for (i, v) in a.iter_mut().enumerate() {
+                        *v += 0.01 * (((round * el + i) as f32) * 0.11).cos();
+                    }
+                }
+                match &baseline {
+                    None => baseline = Some(record),
+                    Some(b) => {
+                        assert_eq!(b, &record, "{spec} {rounding:?}: w={w} diverged from w=1");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_encode_rejects_non_finite_activations() {
+    // the silent-swallow bugfix at the codec level: a NaN/Inf activation
+    // used to quantize to code 0 (max-abs skips NaN) and decode as a
+    // plausible value; now every quantizing scheme refuses the message
+    let el = 64;
+    for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut a = vec![0.25f32; el];
+            a[11] = bad;
+            for spec in ["q4", "topk0.2@8", "ef:q4"] {
+                let scheme = SchemeSpec::parse(spec).unwrap();
+                let (mut enc, _) = build_mem_pair(&scheme, el, rounding, 3).unwrap();
+                let err = enc.encode(&[0], &a).unwrap_err().to_string();
+                assert!(err.contains("non-finite"), "{spec} {rounding:?} {bad}: {err}");
+            }
+            // AQ's first visit is lossless full precision (Algorithm 1
+            // line 5) and passes anything through; the quantized delta
+            // path on revisit must reject
+            let scheme = SchemeSpec::parse("aq4").unwrap();
+            let (mut enc, mut dec) = build_mem_pair(&scheme, el, rounding, 3).unwrap();
+            let finite = vec![0.25f32; el];
+            let warm = enc.encode(&[0], &finite).unwrap();
+            dec.decode(&[0], &warm).unwrap();
+            let err = enc.encode(&[0], &a).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "aq4 {rounding:?} {bad}: {err}");
+        }
+    }
+}
+
+#[test]
+fn lossless_schemes_still_pass_non_finite_through() {
+    // fp32/fp16 carry no quantizer and stay passthrough: debugging a
+    // NaN blow-up with compression off must show the real values
+    let el = 16;
+    let mut a = vec![1.0f32; el];
+    a[3] = f32::NAN;
+    a[7] = f32::INFINITY;
+    let (mut enc, mut dec) =
+        build_mem_pair(&SchemeSpec::Raw32, el, Rounding::Nearest, 1).unwrap();
+    let out = dec.decode(&[0], &enc.encode(&[0], &a).unwrap()).unwrap();
+    assert_eq!(bits_of(&out), bits_of(&a), "fp32 must be bit-lossless, non-finite included");
+    let (mut enc, mut dec) = build_mem_pair(&SchemeSpec::F16, el, Rounding::Nearest, 1).unwrap();
+    let out = dec.decode(&[0], &enc.encode(&[0], &a).unwrap()).unwrap();
+    assert!(out[3].is_nan() && out[7] == f32::INFINITY, "f16 lost the non-finite values");
+}
