@@ -1,0 +1,61 @@
+//! Serving front-end macro-bench: one in-process `run_serve` fleet
+//! (256 sessions x 4 requests, mixed inference + fine-tune, 2 shared
+//! server stages, cross-session batching on) measured once, then the
+//! operator-facing numbers — p50/p99 per-request round-trip latency and
+//! aggregate per-row cost — recorded as time-only results. Unlike the
+//! micro suites these are not resampled closures: the fleet run IS the
+//! sample, and `BenchSuite::record` folds its observations into the
+//! same schema-1 JSON the CI `bench-diff` gate consumes. §Perf target:
+//! the session layer must not hide the compression wins — per-row cost
+//! stays microseconds-scale while a 100 mbps link would spend
+//! milliseconds per uncompressed row.
+//!
+//! Names and the fleet size are identical in `--quick` and full mode
+//! (one macro run either way), so quick-mode JSON is comparable against
+//! `BENCH_BASELINE_SERVE.json`.
+
+use std::time::Duration;
+
+use aq_sgd::serve::batch::BatchCfg;
+use aq_sgd::serve::{run_serve, ServeConfig};
+use aq_sgd::testing::bench::BenchSuite;
+
+fn main() {
+    let mut s = BenchSuite::from_args("bench_serve");
+
+    let cfg = ServeConfig {
+        sessions: 256,
+        server_stages: 2,
+        example_len: 8,
+        shard: 2,
+        epochs: 2,
+        infer_every: 4,
+        batch: BatchCfg { rows: 16, max_wait: Duration::from_micros(200) },
+        workers: 4,
+        ..ServeConfig::default()
+    };
+    let report = run_serve(&cfg).expect("serve bench fleet");
+
+    // A shed or rejected fleet would report flattering latencies for
+    // less work; the bench is only meaningful at full service.
+    assert_eq!(report.rejected_sessions(), 0, "bench fleet must be fully admitted");
+    assert_eq!(report.shed_total(), 0, "bench fleet must not be shed");
+    let expect_rows = (cfg.sessions * cfg.shard * cfg.epochs) as u64;
+    assert_eq!(report.replied_rows(), expect_rows, "every request must be replied");
+
+    let p50 = report.latency_ns_percentile(0.50).expect("p50");
+    let p99 = report.latency_ns_percentile(0.99).expect("p99");
+    s.record("serve/256x4/latency_p50", p50 as f64);
+    s.record("serve/256x4/latency_p99", p99 as f64);
+    s.record("serve/256x4/ns_per_row", report.wall_s * 1e9 / expect_rows as f64);
+    println!(
+        "bench serve fleet: {} rows in {:.3} s ({:.0} rows/s, {} batches, {} padded rows)",
+        expect_rows,
+        report.wall_s,
+        report.rows_per_s(),
+        report.gateway.batches,
+        report.gateway.padded_rows
+    );
+
+    s.finish().unwrap();
+}

@@ -43,6 +43,11 @@ pub const TAG_TOPK: u8 = 5;
 /// carries (version, link kind, peer coordinates) in the header and the
 /// canonical config summary in the payload.
 pub const TAG_HELLO: u8 = 6;
+/// Serving-session envelope (`crate::serve`), not a codec format: the
+/// header carries (kind, session, seq, example id, flags) and the
+/// payload wraps an inner codec frame — many sessions multiplex one
+/// transport, and this tag is how the demux tells them apart.
+pub const TAG_SESSION: u8 = 7;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {

@@ -25,55 +25,87 @@ impl Default for GenerateCfg {
     }
 }
 
+/// Write one prompt's sliding decode window into a `seq`-long token row:
+/// the last `seq` context tokens, left-padded with the first context
+/// token when the context is still short. Pure, allocation-free — the
+/// per-token hot path of generation.
+fn write_window(ctx: &[i32], row: &mut [i32]) {
+    let seq = row.len();
+    if ctx.len() >= seq {
+        row.copy_from_slice(&ctx[ctx.len() - seq..]);
+    } else {
+        let pad = seq - ctx.len();
+        row[..pad].fill(ctx[0]);
+        row[pad..].copy_from_slice(ctx);
+    }
+}
+
 impl Trainer {
     /// Generate a continuation of `prompt` (token ids). Returns only the
     /// newly generated tokens.
     pub fn generate(&self, prompt: &[i32], gcfg: &GenerateCfg) -> Result<Vec<i32>> {
+        let mut outs = self.generate_many(&[prompt], gcfg)?;
+        Ok(outs.pop().expect("one prompt in, one continuation out"))
+    }
+
+    /// Generate continuations for up to `micro_batch` prompts in one
+    /// pass, one prompt per batch row, decoding in lockstep — the
+    /// artifacts are fixed-shape, so `n` prompts cost the same pipeline
+    /// forwards as one. The token buffer is allocated once: padding rows
+    /// (`n..b`) are written once up front and per decode step only the
+    /// `n` live windows are rewritten in place (per-row logits depend
+    /// only on that row, so stale padding never leaks into an answer).
+    pub fn generate_many(&self, prompts: &[&[i32]], gcfg: &GenerateCfg) -> Result<Vec<Vec<i32>>> {
         crate::ensure!(self.man.task()? == "lm", "generation needs an LM model");
         let seq = self.man.seq()?;
         let b = self.man.micro_batch()?;
         let vocab = self.man.vocab()?;
-        crate::ensure!(!prompt.is_empty(), "empty prompt");
+        let n = prompts.len();
+        crate::ensure!(n >= 1, "no prompts");
+        crate::ensure!(n <= b, "{n} prompts but the artifact batches {b} rows");
+        for p in prompts {
+            crate::ensure!(!p.is_empty(), "empty prompt");
+        }
         let mut rng = Rng::new(gcfg.seed);
 
-        let mut ctx: Vec<i32> = prompt.to_vec();
-        let mut out = Vec::with_capacity(gcfg.max_new_tokens);
+        let mut ctxs: Vec<Vec<i32>> = prompts.iter().map(|p| p.to_vec()).collect();
+        let mut outs: Vec<Vec<i32>> =
+            (0..n).map(|_| Vec::with_capacity(gcfg.max_new_tokens)).collect();
+        let mut tokens = vec![0i32; b * seq];
+        for r in n..b {
+            tokens[r * seq..(r + 1) * seq].fill(prompts[0][0]);
+        }
+        // the logits position to read: last filled slot of each window
+        let pos = seq - 1;
         for _ in 0..gcfg.max_new_tokens {
-            // sliding window, left-padded with the first prompt token
-            let window: Vec<i32> = if ctx.len() >= seq {
-                ctx[ctx.len() - seq..].to_vec()
-            } else {
-                let mut w = vec![ctx[0]; seq - ctx.len()];
-                w.extend_from_slice(&ctx);
-                w
-            };
-            // the logits position to read: last filled slot
-            let pos = seq - 1;
-            // batch: row 0 = window, rows 1.. replicate (shape padding)
-            let mut tokens = Vec::with_capacity(b * seq);
-            for _ in 0..b {
-                tokens.extend_from_slice(&window);
+            for (r, ctx) in ctxs.iter().enumerate() {
+                write_window(ctx, &mut tokens[r * seq..(r + 1) * seq]);
             }
             let logits = self.pipeline_logits(&tokens)?;
-            // row 0, position `pos`
-            let row = &logits[pos * vocab..(pos + 1) * vocab];
-            let next = if gcfg.temperature <= 0.0 {
-                argmax(row)
-            } else {
-                sample(row, gcfg.temperature, &mut rng)
-            };
-            out.push(next as i32);
-            ctx.push(next as i32);
+            crate::ensure!(
+                logits.len() >= b * seq * vocab,
+                "logits artifact returned {} values, expected {}",
+                logits.len(),
+                b * seq * vocab
+            );
+            for (r, ctx) in ctxs.iter_mut().enumerate() {
+                let at = (r * seq + pos) * vocab;
+                let row = &logits[at..at + vocab];
+                let next = if gcfg.temperature <= 0.0 {
+                    argmax(row)
+                } else {
+                    sample(row, gcfg.temperature, &mut rng)
+                };
+                outs[r].push(next as i32);
+                ctx.push(next as i32);
+            }
         }
-        Ok(out)
+        Ok(outs)
     }
 
-    /// Full-pipeline forward to logits (row-major [B, S, V]; returns
-    /// row 0 = [S, V]).
+    /// Full-pipeline forward to logits, row-major `[B, S, V]`.
     fn pipeline_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
         let k = self.n_stages();
-        let seq = self.man.seq()?;
-        let vocab = self.man.vocab()?;
         let mut x: Vec<f32> = Vec::new();
         for s in 0..k - 1 {
             x = if s == 0 {
@@ -82,12 +114,11 @@ impl Trainer {
                 self.stage(s).forward(&crate::runtime::StageInput::Hidden(&x))?
             };
         }
-        let logits = if k == 1 {
-            self.stage(0).logits(&crate::runtime::StageInput::Tokens(tokens))?
+        if k == 1 {
+            self.stage(0).logits(&crate::runtime::StageInput::Tokens(tokens))
         } else {
-            self.stage(k - 1).logits(&crate::runtime::StageInput::Hidden(&x))?
-        };
-        Ok(logits[..seq * vocab].to_vec())
+            self.stage(k - 1).logits(&crate::runtime::StageInput::Hidden(&x))
+        }
     }
 }
 
@@ -153,6 +184,24 @@ mod tests {
             }
         }
         assert!(hits > 95);
+    }
+
+    #[test]
+    fn write_window_takes_the_context_tail() {
+        let mut row = [0i32; 4];
+        write_window(&[1, 2, 3, 4, 5, 6], &mut row);
+        assert_eq!(row, [3, 4, 5, 6]);
+        write_window(&[7, 8, 9, 10], &mut row);
+        assert_eq!(row, [7, 8, 9, 10], "exact fit copies verbatim");
+    }
+
+    #[test]
+    fn write_window_left_pads_short_contexts() {
+        let mut row = [0i32; 5];
+        write_window(&[42, 43], &mut row);
+        assert_eq!(row, [42, 42, 42, 42, 43], "pad with the first token");
+        write_window(&[9], &mut row);
+        assert_eq!(row, [9, 9, 9, 9, 9]);
     }
 
     #[test]

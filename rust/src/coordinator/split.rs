@@ -27,7 +27,12 @@ pub struct SplitRound {
 
 pub struct SplitLearning {
     pub trainer: Trainer,
-    shards: Vec<Dataset>,
+    /// The undivided training split; clients hold index views into it.
+    train: Dataset,
+    /// Per-client shards as indices into `train` — a view, not a copy,
+    /// so N clients over an M-example corpus cost M resident examples,
+    /// not ~2M (message buffers still key on the globally-unique ids).
+    shards: Vec<Vec<usize>>,
     eval: Dataset,
     local_epochs: usize,
 }
@@ -42,32 +47,25 @@ impl SplitLearning {
         local_epochs: usize,
     ) -> Result<Self> {
         let (train, eval) = data.split_eval(0.15);
-        let idxs = dirichlet_split(&train, n_clients, alpha, cfg.seed + 17);
-        let shards: Vec<Dataset> = idxs
-            .into_iter()
-            .map(|ix| Dataset {
-                examples: ix.iter().map(|&i| train.examples[i].clone()).collect(),
-                task: train.task,
-            })
-            .collect();
+        let shards = dirichlet_split(&train, n_clients, alpha, cfg.seed + 17);
         // sequential local training: one microbatch per step keeps even
         // tiny shards trainable
         cfg.n_micro = 1;
         cfg.epochs = local_epochs;
         let trainer = Trainer::new(cfg)?;
-        Ok(SplitLearning { trainer, shards, eval, local_epochs })
+        Ok(SplitLearning { trainer, train, shards, eval, local_epochs })
     }
 
     /// One communication round: every client trains `local_epochs` on its
     /// shard (sequentially, like the paper's protocol).
     pub fn round(&mut self, round: usize) -> Result<SplitRound> {
         let micro_b = self.trainer.man.micro_batch()?;
-        for shard in &self.shards {
-            if shard.len() < micro_b {
+        for c in 0..self.shards.len() {
+            if self.shards[c].len() < micro_b {
                 continue; // client with too little data sits the round out
             }
             self.trainer.cfg.epochs = self.local_epochs;
-            self.trainer.train(shard, None)?;
+            self.trainer.train_subset(&self.train, &self.shards[c], None)?;
         }
         let eval_loss = self.trainer.eval(&self.eval)?;
         Ok(SplitRound {

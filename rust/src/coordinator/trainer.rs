@@ -412,20 +412,40 @@ impl Trainer {
         train_data: &Dataset,
         eval_data: Option<&Dataset>,
     ) -> Result<TrainStats> {
+        let all: Vec<usize> = (0..train_data.len()).collect();
+        self.train_subset(train_data, &all, eval_data)
+    }
+
+    /// Train on an index view into `train_data` — the shard path (split
+    /// learning, federated rounds) where many clients hold slices of one
+    /// parent dataset. Only the listed rows are sampled; nothing is
+    /// cloned out of the parent.
+    pub fn train_subset(
+        &mut self,
+        train_data: &Dataset,
+        subset: &[usize],
+        eval_data: Option<&Dataset>,
+    ) -> Result<TrainStats> {
         crate::ensure!(
             (train_data.task == Task::Lm) == (self.man.task()? == "lm"),
             "dataset task does not match model task"
         );
+        if let Some(&bad) = subset.iter().find(|&&i| i >= train_data.len()) {
+            crate::bail!(
+                "subset index {bad} out of range for a {}-example dataset",
+                train_data.len()
+            );
+        }
         let micro_b = self.man.micro_batch()?;
         let shard_examples = self.cfg.n_micro * micro_b;
         let total_needed = shard_examples * self.cfg.dp_degree;
         crate::ensure!(
-            train_data.len() >= total_needed,
+            subset.len() >= total_needed,
             "dataset too small: {} examples < {total_needed} per step",
-            train_data.len()
+            subset.len()
         );
-        let mut sampler = EpochSampler::new(
-            train_data.len(),
+        let mut sampler = EpochSampler::subset(
+            subset.to_vec(),
             micro_b,
             self.cfg.seed,
             self.cfg.shuffle_every_epoch,

@@ -35,8 +35,21 @@ impl EpochSampler {
         seed: u64,
         shuffle_every_epoch: bool,
     ) -> Self {
+        Self::subset((0..n_examples).collect(), micro_batch, seed, shuffle_every_epoch)
+    }
+
+    /// Sample only the given example indices of a (larger) parent
+    /// dataset — a shard held as an index view, no example cloning. The
+    /// caller passes the *parent* to [`epoch_batches`](Self::epoch_batches);
+    /// only the listed rows are ever visited.
+    pub fn subset(
+        indices: Vec<usize>,
+        micro_batch: usize,
+        seed: u64,
+        shuffle_every_epoch: bool,
+    ) -> Self {
         let mut rng = Rng::new(seed);
-        let mut order: Vec<usize> = (0..n_examples).collect();
+        let mut order = indices;
         rng.shuffle(&mut order);
         EpochSampler { order, micro_batch, shuffle_every_epoch, rng, epoch: 0 }
     }
@@ -108,6 +121,19 @@ mod tests {
             s2.epoch_batches(&d).iter().flat_map(|b| b.example_ids.clone()).collect();
         assert_eq!(f1, e1); // same seed, same first epoch
         assert_ne!(f1, f2);
+    }
+
+    #[test]
+    fn subset_visits_only_its_indices() {
+        let d = markov_corpus(64, 16, 40, 1);
+        let view: Vec<usize> = vec![3, 9, 11, 20, 21, 22, 30, 35];
+        let mut s = EpochSampler::subset(view.clone(), 4, 5, true);
+        let batches = s.epoch_batches(&d);
+        assert_eq!(batches.len(), 2, "8 indices at micro-batch 4");
+        let mut seen: Vec<u64> = batches.iter().flat_map(|b| b.example_ids.clone()).collect();
+        seen.sort_unstable();
+        // markov_corpus ids equal positions, so the view maps through
+        assert_eq!(seen, view.iter().map(|&i| i as u64).collect::<Vec<_>>());
     }
 
     #[test]

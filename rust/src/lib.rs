@@ -18,6 +18,7 @@ pub mod net;
 pub mod optim;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod testing;
 pub mod util;

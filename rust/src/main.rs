@@ -5,6 +5,8 @@
 //!   info         print a model manifest summary
 //!   throughput   one-off pipeline-throughput simulation
 //!   serve-stage  run one (replica, stage) as this OS process over TCP
+//!   serve        session-multiplexed serving front end (split
+//!                inference / fine-tune fleet over compressed links)
 //!
 //! Examples:
 //!   aq-sgd train --model tiny --compression aqsgd:fw2bw4 --epochs 4 \
@@ -13,6 +15,7 @@
 //!   aq-sgd throughput --stages 8 --micro 32 --bandwidth 100mbps
 //!   aq-sgd serve-stage --role stage:0 --peers 127.0.0.1:7101,127.0.0.1:7102 \
 //!                      --stages 2 --compression aqsgd:fw2bw4 --steps 3
+//!   aq-sgd serve --sessions 1000 --batch-rows 32 --bandwidth 100mbps
 
 use std::time::Duration;
 
@@ -29,7 +32,7 @@ use aq_sgd::pipeline::{serve_stage, ExecConfig, PipelineSim, ServeOpts, SimConfi
 use aq_sgd::runtime::Manifest;
 use aq_sgd::util::fmt;
 
-const HELP: &str = "aq-sgd <train|info|throughput|serve-stage> [--key value ...]
+const HELP: &str = "aq-sgd <train|info|throughput|serve-stage|serve> [--key value ...]
 
 train flags:
   --model NAME            artifacts/<NAME> (default tiny)
@@ -83,6 +86,32 @@ serve-stage flags (plus the train job flags: --compression, --dp,
   --connect-timeout-ms N  outbound connect retry budget (default 10000)
   --skip-oracle           skip the local virtual-clock bit-identity
                           check after the run
+
+serve flags:
+  --sessions N            concurrent client sessions (default 64)
+  --stages K              frozen server stages behind the gateway (default 2)
+  --el N                  activation row width (default 8)
+  --compression SPEC      boundary codec (default aqsgd:fw2bw4)
+  --shard N --epochs N    per-session workload: N examples x N passes
+  --infer-every N         every Nth session runs split inference instead
+                          of fine-tuning (0 = all fine-tune; default 4)
+  --batch-rows N          rows per shared microbatch (default 8)
+  --batch-wait-us N       max wait before a short batch flushes (default 200)
+  --max-sessions N        admission: concurrent-session cap (default 4096)
+  --open-rate F           admission: session opens/s refill rate
+  --open-burst F          admission: open token-bucket capacity
+  --queue-depth N         shed requests past this many queued rows
+  --workers N             event-pool worker threads (default 4)
+  --bandwidth B --latency-ms F
+                          pacing of the client links (default 1gbps, 0.05)
+  --seed N --lr F         fleet seed / client cut-layer step size
+  --nearest               nearest rounding (default stochastic)
+  --listen ADDR --conns N serve over TCP: accept N client processes
+  --connect ADDR --session-base N
+                          client process: run sessions base..base+N
+  --stall-timeout-ms N    abort when idle this long (default: instant
+                          stall detection in-process, 30000 over TCP)
+  --expect-no-rejects     exit non-zero if admission refused anything
 ";
 
 fn cmd_train(cli: &Cli) -> Result<()> {
@@ -252,6 +281,123 @@ fn cmd_serve_stage(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: the session-multiplexed serving front end — thousands of
+/// split-inference / split-fine-tune clients over compressed links
+/// against one shared set of frozen stages. In-process by default
+/// (clients are event tasks in this process); `--listen`/`--connect`
+/// split server and client fleets across OS processes over TCP.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use aq_sgd::serve::admission::AdmissionCfg;
+    use aq_sgd::serve::batch::BatchCfg;
+    use aq_sgd::serve::{
+        run_serve, run_serve_connect, run_serve_listen, serve_summary, ServeConfig,
+    };
+
+    let d = ServeConfig::default();
+    let stall_ms = cli.usize("stall-timeout-ms", 0)?;
+    let cfg = ServeConfig {
+        sessions: cli.usize("sessions", d.sessions)?,
+        server_stages: cli.usize("stages", d.server_stages)?,
+        example_len: cli.usize("el", d.example_len)?,
+        spec: CodecSpec::parse(&cli.str("compression", "aqsgd:fw2bw4"))?,
+        rounding: if cli.bool("nearest") {
+            aq_sgd::codec::Rounding::Nearest
+        } else {
+            aq_sgd::codec::Rounding::Stochastic
+        },
+        seed: cli.usize("seed", 7)? as u64,
+        lr: cli.f64("lr", f64::from(d.lr))? as f32,
+        shard: cli.usize("shard", d.shard)?,
+        epochs: cli.usize("epochs", d.epochs)?,
+        infer_every: cli.usize("infer-every", d.infer_every)?,
+        batch: BatchCfg {
+            rows: cli.usize("batch-rows", d.batch.rows)?,
+            max_wait: Duration::from_micros(cli.usize("batch-wait-us", 200)? as u64),
+        },
+        admission: AdmissionCfg {
+            max_sessions: cli.usize("max-sessions", d.admission.max_sessions)?,
+            open_rate: cli.f64("open-rate", d.admission.open_rate)?,
+            open_burst: cli.f64("open-burst", d.admission.open_burst)?,
+            queue_depth: cli.usize("queue-depth", d.admission.queue_depth)?,
+        },
+        workers: cli.usize("workers", d.workers)?,
+        bandwidth_bps: match cli.flags.get("bandwidth") {
+            Some(v) => parse_bandwidth(v)?,
+            None => d.bandwidth_bps,
+        },
+        latency: Duration::from_secs_f64(cli.f64("latency-ms", 0.05)? / 1e3),
+        stall_timeout: (stall_ms > 0).then(|| Duration::from_millis(stall_ms as u64)),
+    };
+    println!(
+        "{} sessions={} infer_every={} batch={}rows/{:?} bandwidth={} workers={}",
+        serve_summary(&cfg),
+        cfg.sessions,
+        cfg.infer_every,
+        cfg.batch.rows,
+        cfg.batch.max_wait,
+        fmt::bandwidth(cfg.bandwidth_bps),
+        cfg.workers,
+    );
+
+    let report = if let Some(addr) = cli.flags.get("listen") {
+        run_serve_listen(&cfg, addr, cli.usize("conns", 1)?)?
+    } else if let Some(addr) = cli.flags.get("connect") {
+        run_serve_connect(&cfg, addr, cli.usize("session-base", 0)? as u32)?
+    } else {
+        run_serve(&cfg)?
+    };
+
+    let served = report.sessions.iter().filter(|s| s.rejected.is_none()).count();
+    println!(
+        "gateway: batches={} rows={} padded={} shed={} rejected_opens={} peak_sessions={}",
+        report.gateway.batches,
+        report.gateway.rows,
+        report.gateway.padded_rows,
+        report.gateway.shed_requests,
+        report.gateway.rejected_opens,
+        report.gateway.peak_sessions,
+    );
+    if let (Some(p50), Some(p99)) =
+        (report.latency_ns_percentile(0.5), report.latency_ns_percentile(0.99))
+    {
+        println!(
+            "latency p50={:.1}us p99={:.1}us  throughput={:.0} rows/s  wall={}",
+            p50 as f64 / 1e3,
+            p99 as f64 / 1e3,
+            report.rows_per_s(),
+            fmt::duration_s(report.wall_s),
+        );
+    }
+    let finals: Vec<f32> = report
+        .sessions
+        .iter()
+        .filter_map(|s| s.losses.last().copied())
+        .collect();
+    if !finals.is_empty() {
+        let mean = finals.iter().map(|&v| f64::from(v)).sum::<f64>() / finals.len() as f64;
+        println!("fine-tune: {} sessions, mean final loss {mean:.4}", finals.len());
+    }
+    if cli.bool("expect-no-rejects") {
+        let client_rejects = report.rejected_sessions();
+        let shed = report.shed_total() + report.gateway.shed_requests;
+        aq_sgd::ensure!(
+            client_rejects == 0 && report.gateway.rejected_opens == 0 && shed == 0,
+            "admission gate fired under nominal load: {client_rejects} rejected sessions, \
+             {} rejected opens, {shed} shed requests",
+            report.gateway.rejected_opens
+        );
+        println!("no-rejects assertion passed");
+    }
+    println!(
+        "SERVE-OK sessions={} served={} replied_rows={} gateway_rows={}",
+        report.sessions.len(),
+        served,
+        report.replied_rows(),
+        report.gateway.rows,
+    );
+    Ok(())
+}
+
 fn cmd_info(cli: &Cli) -> Result<()> {
     let model = cli.str("model", "tiny");
     let man = Manifest::load(&cli.str("artifacts", "artifacts"), &model)?;
@@ -311,6 +457,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&cli),
         Some("throughput") => cmd_throughput(&cli),
         Some("serve-stage") => cmd_serve_stage(&cli),
+        Some("serve") => cmd_serve(&cli),
         _ => {
             print!("{HELP}");
             Ok(())

@@ -193,6 +193,76 @@ impl LinkEndpointRx {
 }
 
 // ---------------------------------------------------------------------------
+// Per-session endpoints (the serving front end)
+// ---------------------------------------------------------------------------
+
+/// Link-free encoding endpoint for session-multiplexed transports: the
+/// codec half + scratch frame of a [`LinkEndpointTx`] without an owned
+/// link. The serving front end (`crate::serve`) runs many sessions over
+/// one shared transport, so frames carry a session tag and the caller
+/// routes the bytes — what stays strictly per session is the codec
+/// replica in here (AQ message buffers, EF residuals, quantizer state),
+/// which is exactly the isolation the `SessionTable` keys on.
+pub struct SessionEndpointTx {
+    enc: BoundarySender,
+    buf: FrameBuf,
+}
+
+/// Link-free decoding endpoint: the receiver-side codec replica of a
+/// session boundary, fed frame bytes by whoever demultiplexed them.
+pub struct SessionEndpointRx {
+    dec: BoundaryReceiver,
+}
+
+/// Build the encoder half of a per-session boundary endpoint.
+pub fn session_endpoint_tx(
+    boundary_id: u32,
+    example_len: usize,
+    enc: Box<dyn BoundaryCodec>,
+) -> SessionEndpointTx {
+    SessionEndpointTx {
+        enc: BoundarySender::new(boundary_id, example_len, enc),
+        buf: FrameBuf::new(),
+    }
+}
+
+/// Build the decoder half of a per-session boundary endpoint.
+pub fn session_endpoint_rx(
+    boundary_id: u32,
+    example_len: usize,
+    dec: Box<dyn BoundaryCodec>,
+) -> SessionEndpointRx {
+    SessionEndpointRx { dec: BoundaryReceiver::new(boundary_id, example_len, dec) }
+}
+
+impl SessionEndpointTx {
+    /// Encode one message into the endpoint's scratch frame and hand the
+    /// serialized image back for the caller to route (borrow — copy it
+    /// into the envelope before the next encode).
+    pub fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<(TransferStats, &[u8])> {
+        let stats = self.enc.encode_into(ids, a, &mut self.buf)?;
+        Ok((stats, self.buf.as_bytes()))
+    }
+
+    /// Encoder-side persistent codec state (message buffers etc.).
+    pub fn state_bytes(&self) -> u64 {
+        self.enc.state_bytes()
+    }
+}
+
+impl SessionEndpointRx {
+    /// Decode one serialized frame image for the given example ids.
+    pub fn decode(&mut self, ids: &[u64], bytes: &[u8]) -> Result<Vec<f32>> {
+        self.dec.decode_view(ids, &FrameView::parse(bytes)?)
+    }
+
+    /// Decoder-side persistent codec state (the buffer replica).
+    pub fn state_bytes(&self) -> u64 {
+        self.dec.state_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 /// One replica's endpoint of a per-stage gradient all-gather ring.
 ///

@@ -181,9 +181,50 @@ fn hello_bytes(kind: LinkKind, from: (usize, usize), to: (usize, usize), summary
 }
 
 fn reject_bytes(reason: &str) -> Vec<u8> {
+    reject_session_bytes(0, 0, reason)
+}
+
+/// Session-scoped reject: same `TAG_HELLO`/`KIND_REJECT` wire shape as
+/// the grid handshake's reject, with the from-fields carrying which
+/// (session, request seq) is refused instead of grid coordinates. The
+/// serving front end's admission gate sheds load with exactly these
+/// frames, so a refused client gets a descriptive reason over the same
+/// machinery a config-mismatched training peer would.
+pub fn reject_session_bytes(session: u32, seq: u32, reason: &str) -> Vec<u8> {
     let mut h = FrameWriter::with_capacity(21);
-    h.u32(SESSION_VERSION).u8(KIND_REJECT).u32(0).u32(0).u32(0).u32(0);
+    h.u32(SESSION_VERSION).u8(KIND_REJECT).u32(session).u32(seq).u32(0).u32(0);
     Frame::new(TAG_HELLO, h.finish(), reason.as_bytes().to_vec()).to_bytes()
+}
+
+/// A parsed session-scoped reject frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionReject {
+    pub session: u32,
+    pub seq: u32,
+    pub reason: String,
+}
+
+/// Parse a frame as a session-scoped reject. `Ok(None)` when the frame
+/// is a hello (or some other kind) rather than a reject; `Err` only on
+/// malformed bytes.
+pub fn decode_session_reject(bytes: &[u8]) -> Result<Option<SessionReject>> {
+    let v = FrameView::parse(bytes)?;
+    if v.tag() != TAG_HELLO {
+        return Ok(None);
+    }
+    let mut r = FrameReader::new(v.header());
+    let _version = r.u32()?;
+    let kind = r.u8()?;
+    if kind != KIND_REJECT {
+        return Ok(None);
+    }
+    let session = r.u32()?;
+    let seq = r.u32()?;
+    Ok(Some(SessionReject {
+        session,
+        seq,
+        reason: String::from_utf8_lossy(v.payload()).into_owned(),
+    }))
 }
 
 fn decode_hello(bytes: &[u8]) -> Result<HelloMsg> {
@@ -493,6 +534,21 @@ mod tests {
         bad[7] ^= 0x40; // first header byte (version lo) lives after the prelude
         let err = decode_hello(&bad).unwrap_err();
         assert!(err.to_string().contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn session_scoped_reject_roundtrips_and_back_compat() {
+        let b = reject_session_bytes(42, 7, "queue full");
+        let r = decode_session_reject(&b).expect("parse").expect("is a reject");
+        assert_eq!(r, SessionReject { session: 42, seq: 7, reason: "queue full".into() });
+        // the grid handshake still reads it as a plain reject
+        match decode_hello(&b).expect("decode") {
+            HelloMsg::Reject(reason) => assert_eq!(reason, "queue full"),
+            HelloMsg::Hello(_) => panic!("expected reject"),
+        }
+        // a hello is not a reject — and not an error either
+        let hello = hello_bytes(LinkKind::Fw, (0, 0), (0, 1), "s");
+        assert!(decode_session_reject(&hello).expect("parse").is_none());
     }
 
     #[test]

@@ -273,7 +273,7 @@ pub fn run(cfg: &ExecConfig, executor: Executor) -> Result<ExecTrace> {
 /// sequential f32 loops, identical on every host), rich enough that
 /// parameters drift step to step — which is what gives AC-SGD's delta
 /// codec and the EF gradient compressor a real signal to work with.
-struct ToyStage {
+pub(crate) struct ToyStage {
     el: usize,
     w: Vec<f32>,
     b: Vec<f32>,
@@ -282,14 +282,14 @@ struct ToyStage {
 }
 
 impl ToyStage {
-    fn new(el: usize, seed: u64) -> Self {
+    pub(crate) fn new(el: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let w = (0..el).map(|_| 0.8 + 0.2 * rng.normal()).collect();
         let b = (0..el).map(|_| 0.05 * rng.normal()).collect();
         ToyStage { el, w, b, dw: vec![0.0; el], db: vec![0.0; el] }
     }
 
-    fn forward(&self, x: &[f32]) -> Vec<f32> {
+    pub(crate) fn forward(&self, x: &[f32]) -> Vec<f32> {
         let el = self.el;
         x.iter()
             .enumerate()
@@ -298,7 +298,7 @@ impl ToyStage {
     }
 
     /// Accumulate parameter gradients; return the input gradient.
-    fn backward(&mut self, x: &[f32], y: &[f32], g: &[f32]) -> Vec<f32> {
+    pub(crate) fn backward(&mut self, x: &[f32], y: &[f32], g: &[f32]) -> Vec<f32> {
         let el = self.el;
         let mut dx = vec![0f32; x.len()];
         for i in 0..x.len() {
@@ -313,7 +313,7 @@ impl ToyStage {
 
     /// The microbatch-mean step gradient as one flat `[dw, db]` vector —
     /// what crosses the DP ring. Resets the accumulators.
-    fn take_step_grad(&mut self, inv_micro: f32) -> Vec<f32> {
+    pub(crate) fn take_step_grad(&mut self, inv_micro: f32) -> Vec<f32> {
         let mut g = Vec::with_capacity(2 * self.el);
         g.extend(self.dw.iter().map(|v| v * inv_micro));
         g.extend(self.db.iter().map(|v| v * inv_micro));
@@ -327,7 +327,7 @@ impl ToyStage {
     }
 
     /// SGD step over a flat `[dw, db]` gradient (local or ring-mean).
-    fn apply_grad(&mut self, lr: f32, g: &[f32]) {
+    pub(crate) fn apply_grad(&mut self, lr: f32, g: &[f32]) {
         debug_assert_eq!(g.len(), 2 * self.el);
         for j in 0..self.el {
             self.w[j] -= lr * g[j];
@@ -335,8 +335,22 @@ impl ToyStage {
         }
     }
 
+    /// Input gradient only, parameters untouched — the frozen-backbone
+    /// backward the serving front end runs on its shared stages (no
+    /// server-side update, so every session sees identical stage bits
+    /// regardless of what other sessions do).
+    pub(crate) fn grad_input(&self, y: &[f32], g: &[f32]) -> Vec<f32> {
+        let el = self.el;
+        let mut dx = vec![0f32; y.len()];
+        for i in 0..y.len() {
+            let t = g[i] * (1.0 - y[i] * y[i]);
+            dx[i] = t * self.w[i % el];
+        }
+        dx
+    }
+
     /// FNV-1a over the parameter bits — the replica-equality probe.
-    fn digest(&self) -> u64 {
+    pub(crate) fn digest(&self) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
         for v in self.w.iter().chain(&self.b) {
             h ^= v.to_bits() as u64;
@@ -1078,9 +1092,24 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 /// What a task run returned: park (optionally with a pacing deadline) or
 /// retire the task.
-enum TaskAdvance {
+pub(crate) enum TaskAdvance {
     Pending(Option<Instant>),
     Finished,
+}
+
+/// A resumable state machine the event pool can drive: advance until the
+/// next park point (a link with nothing deliverable) or completion.
+/// [`EventTask`] is the pipeline-training instance; the serving front
+/// end (`crate::serve`) runs its session/stage tasks through the same
+/// pool, scheduler, and doorbell protocol via this trait.
+pub(crate) trait PoolTask: Send {
+    fn advance(&mut self) -> Result<TaskAdvance>;
+}
+
+impl PoolTask for EventTask {
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        self.run()
+    }
 }
 
 /// One (replica, stage) as a resumable state machine: compute + endpoints
@@ -1195,7 +1224,7 @@ impl EventTask {
         }
     }
 
-    fn into_report(self) -> StageReport {
+    pub(crate) fn into_report(self) -> StageReport {
         StageReport {
             per_step: self.per_step,
             wall_s: self.wall_s,
@@ -1305,7 +1334,7 @@ impl Drop for PanicSignal<'_> {
 
 /// One pool worker: pop ready tasks, run them to their next park point,
 /// release. Exits when every task finished or any error/panic surfaced.
-fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
+fn event_worker<T: PoolTask>(sched: &EventSched, tasks: &[Mutex<T>]) {
     loop {
         // -- acquire a ready task ------------------------------------
         let t = {
@@ -1398,7 +1427,7 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
         sched.state[t].store(T_RUNNING, Ordering::Release);
         let advance = {
             let guard = PanicSignal { sched };
-            let r = lock(&tasks[t]).run();
+            let r = lock(&tasks[t]).advance();
             std::mem::forget(guard);
             r
         };
@@ -1452,18 +1481,19 @@ fn event_worker(sched: &EventSched, tasks: &[Mutex<EventTask>]) {
     }
 }
 
-/// Spin up a worker pool, drive `tasks` to completion, and hand back
-/// their reports in task order. `install` runs after the scheduler
-/// exists but before any worker starts — it is where the caller wires
-/// doorbells (in-process: sender halves waking the receiving task;
-/// serve mode: socket receive halves waking the one local task).
-/// `stall_timeout` selects the starvation policy (see [`EventSched`]).
-pub(crate) fn run_event_pool(
-    tasks: Vec<EventTask>,
+/// Spin up a worker pool, drive `tasks` to completion, and hand the
+/// finished tasks back in task order (callers extract their own report
+/// type). `install` runs after the scheduler exists but before any
+/// worker starts — it is where the caller wires doorbells (in-process:
+/// sender halves waking the receiving task; serve mode: socket receive
+/// halves waking the one local task). `stall_timeout` selects the
+/// starvation policy (see [`EventSched`]).
+pub(crate) fn run_event_pool<T: PoolTask + 'static>(
+    tasks: Vec<T>,
     pool: usize,
     stall_timeout: Option<Duration>,
-    install: impl FnOnce(&Arc<EventSched>, &mut [EventTask]),
-) -> Result<Vec<StageReport>> {
+    install: impl FnOnce(&Arc<EventSched>, &mut [T]),
+) -> Result<Vec<T>> {
     crate::ensure!(pool >= 1, "event executor needs at least one worker");
     let n_tasks = tasks.len();
     crate::ensure!(n_tasks >= 1, "event executor needs at least one task");
@@ -1486,8 +1516,7 @@ pub(crate) fn run_event_pool(
     });
 
     install(&sched, &mut tasks);
-    let tasks: Arc<Vec<Mutex<EventTask>>> =
-        Arc::new(tasks.into_iter().map(Mutex::new).collect());
+    let tasks: Arc<Vec<Mutex<T>>> = Arc::new(tasks.into_iter().map(Mutex::new).collect());
 
     let pool = pool.min(n_tasks);
     let mut handles = Vec::with_capacity(pool);
@@ -1525,7 +1554,7 @@ pub(crate) fn run_event_pool(
         .map_err(|_| crate::err!("event task pool still shared after join"))?;
     Ok(tasks
         .into_iter()
-        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()).into_report())
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
         .collect())
 }
 
@@ -1549,7 +1578,7 @@ pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
         }
     }
 
-    let reports = run_event_pool(tasks, cfg.workers, None, |sched, tasks| {
+    let done = run_event_pool(tasks, cfg.workers, None, |sched, tasks| {
         // doorbells: every link's sending half wakes the task owning the
         // receiving half — fw to stage s+1, bw to stage s-1, ring edge to
         // the successor replica's same stage
@@ -1572,6 +1601,7 @@ pub fn run_events(cfg: &ExecConfig) -> Result<ExecTrace> {
             }
         }
     })?;
+    let reports = done.into_iter().map(EventTask::into_report).collect();
     Ok(trace_from_reports(Executor::Events, cfg, reports))
 }
 

@@ -218,7 +218,7 @@ pub fn serve_stage(cfg: &ExecConfig, opts: &ServeOpts) -> Result<ServeSummary> {
 
     let script = StageScript::new(cfg.schedule.ops(s, k, cfg.n_micro), cfg.steps);
     let task = EventTask::new(w, ep, script, cfg.steps);
-    let reports = run_event_pool(vec![task], 1, Some(opts.stall_timeout), |sched, tasks| {
+    let done = run_event_pool(vec![task], 1, Some(opts.stall_timeout), |sched, tasks| {
         // socket doorbells: the I/O driver thread rings these when a
         // frame finishes reassembly (or the peer closes) — all three
         // wake the one local task
@@ -239,8 +239,8 @@ pub fn serve_stage(cfg: &ExecConfig, opts: &ServeOpts) -> Result<ServeSummary> {
     // Endpoint drop marked the tx halves closed; joining the driver
     // flushes their tails to the peers (bounded by its flush deadline)
     // before we report success.
+    let report = done.into_iter().next().expect("one task, one report").into_report();
     drop(driver);
-    let report = reports.into_iter().next().expect("one task, one report");
 
     let mut oracle_checked = false;
     if opts.check_oracle {

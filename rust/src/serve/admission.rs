@@ -1,0 +1,154 @@
+//! Admission control for the serving front end: a token-bucket rate
+//! limit + hard cap on concurrent sessions, and a queue-depth shed for
+//! requests once the batcher backs up. Refusals are *descriptive* — the
+//! returned reason ships to the client in a session-scoped reject frame
+//! (`net::session::reject_session_bytes`), never as a silent drop.
+//!
+//! A shed request is safe by construction: it is refused *before* the
+//! server-side codec replica decodes the frame, and the client
+//! retransmits the cached bytes — so sender and receiver buffer state
+//! never desynchronize (the replica-symmetry invariant of Algorithm 2).
+
+use std::time::Instant;
+
+/// Knobs. Defaults are deliberately permissive: a modest fleet (the CI
+/// smoke runs 64 sessions, the acceptance test 1000) must see zero
+/// false rejects without tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionCfg {
+    /// Hard cap on concurrently open sessions.
+    pub max_sessions: usize,
+    /// Token-bucket refill rate for session opens, tokens per second.
+    pub open_rate: f64,
+    /// Token-bucket capacity (burst of opens admitted from a full
+    /// bucket).
+    pub open_burst: f64,
+    /// Shed incoming requests once this many rows wait in the batcher.
+    pub queue_depth: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        AdmissionCfg {
+            max_sessions: 4096,
+            open_rate: 1e6,
+            open_burst: 4096.0,
+            queue_depth: 8192,
+        }
+    }
+}
+
+/// The gate itself. Time is passed in (never read from a clock inside),
+/// so tests drive it with synthetic instants.
+pub struct Admission {
+    cfg: AdmissionCfg,
+    tokens: f64,
+    last: Option<Instant>,
+    /// Sessions refused at open (cap or rate).
+    pub rejected_opens: u64,
+    /// Requests shed on queue depth.
+    pub shed_requests: u64,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionCfg) -> Self {
+        Admission { cfg, tokens: cfg.open_burst, last: None, rejected_opens: 0, shed_requests: 0 }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        if let Some(last) = self.last {
+            let dt = now.saturating_duration_since(last).as_secs_f64();
+            self.tokens = (self.tokens + dt * self.cfg.open_rate).min(self.cfg.open_burst);
+        }
+        self.last = Some(now);
+    }
+
+    /// May a new session open, given `live` already in the table?
+    /// `None` = admitted (one token consumed); `Some(reason)` = refused.
+    pub fn admit_open(&mut self, now: Instant, live: usize) -> Option<String> {
+        if live >= self.cfg.max_sessions {
+            self.rejected_opens += 1;
+            return Some(format!(
+                "session table full: {live} live sessions (cap {})",
+                self.cfg.max_sessions
+            ));
+        }
+        self.refill(now);
+        if self.tokens < 1.0 {
+            self.rejected_opens += 1;
+            return Some(format!(
+                "session open rate exceeded: {:.1} opens/s sustained, burst {}",
+                self.cfg.open_rate, self.cfg.open_burst
+            ));
+        }
+        self.tokens -= 1.0;
+        None
+    }
+
+    /// May a request enter the batcher, given its current depth?
+    pub fn admit_request(&mut self, depth: usize) -> Option<String> {
+        if depth >= self.cfg.queue_depth {
+            self.shed_requests += 1;
+            return Some(format!(
+                "server overloaded: {depth} rows queued (shed threshold {})",
+                self.cfg.queue_depth
+            ));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn session_cap_refuses_with_the_cap_in_the_reason() {
+        let mut a = Admission::new(AdmissionCfg { max_sessions: 2, ..AdmissionCfg::default() });
+        let t0 = Instant::now();
+        assert!(a.admit_open(t0, 0).is_none());
+        assert!(a.admit_open(t0, 1).is_none());
+        let why = a.admit_open(t0, 2).expect("over cap");
+        assert!(why.contains("cap 2"), "{why}");
+        assert_eq!(a.rejected_opens, 1);
+    }
+
+    #[test]
+    fn token_bucket_drains_and_refills() {
+        let mut a = Admission::new(AdmissionCfg {
+            open_rate: 10.0,
+            open_burst: 2.0,
+            ..AdmissionCfg::default()
+        });
+        let t0 = Instant::now();
+        assert!(a.admit_open(t0, 0).is_none());
+        assert!(a.admit_open(t0, 0).is_none());
+        let why = a.admit_open(t0, 0).expect("bucket empty");
+        assert!(why.contains("rate exceeded"), "{why}");
+        // 150 ms at 10 tokens/s = 1.5 tokens: one more open fits
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(a.admit_open(t1, 0).is_none());
+        assert!(a.admit_open(t1, 0).is_some());
+        assert_eq!(a.rejected_opens, 2);
+    }
+
+    #[test]
+    fn queue_depth_sheds_requests() {
+        let mut a = Admission::new(AdmissionCfg { queue_depth: 4, ..AdmissionCfg::default() });
+        assert!(a.admit_request(3).is_none());
+        let why = a.admit_request(4).expect("at threshold");
+        assert!(why.contains("4 rows queued"), "{why}");
+        assert_eq!(a.shed_requests, 1);
+    }
+
+    #[test]
+    fn defaults_admit_a_thousand_session_fleet_instantly() {
+        let mut a = Admission::new(AdmissionCfg::default());
+        let t0 = Instant::now();
+        for live in 0..1000 {
+            assert!(a.admit_open(t0, live).is_none(), "false reject at {live}");
+        }
+        assert_eq!(a.rejected_opens, 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Cross-session request batching: decoded rows from *distinct*
+//! sessions coalesce into fixed-row shared microbatches so the server's
+//! stages run once per batch instead of once per request. A batch is
+//! emitted the moment it fills, or when the oldest waiting row hits the
+//! max-wait deadline (latency floor under light load); short batches are
+//! padded by the caller with inert rows.
+//!
+//! Batching never touches numerics: stage compute is row-wise, rows are
+//! session-tagged with globally-unique example ids, and codec state
+//! lives per session in the [`SessionTable`](super::table::SessionTable)
+//! — so which rows share a batch changes only *when* work happens,
+//! never what any session computes (pinned by `tests/prop_serve.rs`).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One decoded request waiting for a batch slot.
+pub struct PendingRow {
+    pub session: u32,
+    pub seq: u32,
+    pub example: u64,
+    pub finetune: bool,
+    /// Decoded cut activation, `example_len` long.
+    pub x: Vec<f32>,
+    /// Target row (`example_len` long) for fine-tune rows; empty for
+    /// inference rows.
+    pub target: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Fixed rows per emitted microbatch.
+    pub rows: usize,
+    /// Emit a partial batch once the oldest row has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg { rows: 8, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// FIFO of ready rows + the emit policy.
+pub struct Batcher {
+    cfg: BatchCfg,
+    q: VecDeque<PendingRow>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchCfg) -> Self {
+        Batcher { cfg, q: VecDeque::new() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cfg.rows
+    }
+
+    pub fn push(&mut self, row: PendingRow) {
+        self.q.push_back(row);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// When the oldest waiting row must go out even in a short batch.
+    /// `None` while the queue is empty.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.q.front().map(|r| r.enqueued + self.cfg.max_wait)
+    }
+
+    /// Should a batch be emitted now? Full batch, or deadline hit.
+    pub fn ready(&self, now: Instant) -> bool {
+        self.q.len() >= self.cfg.rows || self.deadline().is_some_and(|at| now >= at)
+    }
+
+    /// Pop up to one batch worth of rows, FIFO (the caller pads short
+    /// batches). Empty vec only if called while empty.
+    pub fn take(&mut self) -> Vec<PendingRow> {
+        let n = self.q.len().min(self.cfg.rows);
+        self.q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(session: u32, at: Instant) -> PendingRow {
+        PendingRow {
+            session,
+            seq: 1,
+            example: session as u64,
+            finetune: true,
+            x: vec![0.0; 4],
+            target: vec![0.0; 4],
+            enqueued: at,
+        }
+    }
+
+    #[test]
+    fn full_batch_is_ready_immediately() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(BatchCfg { rows: 2, max_wait: Duration::from_secs(3600) });
+        b.push(row(1, t0));
+        assert!(!b.ready(t0), "one row of two, fresh: must wait");
+        b.push(row(2, t0));
+        assert!(b.ready(t0), "full batch: ready regardless of deadline");
+        let got = b.take();
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].session, got[1].session), (1, 2), "FIFO order");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_a_short_batch() {
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(BatchCfg { rows: 8, max_wait: wait });
+        b.push(row(3, t0));
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        assert!(!b.ready(t0 + wait / 2));
+        assert!(b.ready(t0 + wait), "deadline hit: short batch goes out");
+        assert_eq!(b.take().len(), 1);
+        assert_eq!(b.deadline(), None, "empty queue has no deadline");
+    }
+
+    #[test]
+    fn take_caps_at_one_batch_and_keeps_the_rest() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(BatchCfg { rows: 2, max_wait: Duration::ZERO });
+        for s in 0..5 {
+            b.push(row(s, t0));
+        }
+        assert_eq!(b.take().len(), 2);
+        assert_eq!(b.depth(), 3, "remaining rows stay queued");
+        assert_eq!(b.take().len(), 2);
+        assert_eq!(b.take().len(), 1);
+    }
+}

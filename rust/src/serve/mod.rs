@@ -1,0 +1,1529 @@
+//! Session-multiplexed serving front end: many concurrent clients drive
+//! split-inference and split-fine-tune sessions against ONE shared set
+//! of frozen server pipeline stages, over compressed links.
+//!
+//! Layout (every box is one event task on the PR-6 worker pool):
+//!
+//! ```text
+//!  client 0 ─┐                         ┌─ stage 1 ─ … ─ stage k (head)
+//!  client 1 ─┤ shared ingress          │     ▲ fwd batches   │ bwd
+//!     ⋮      ├───────────────▶ gateway ┘     └───────────────┘
+//!  client n ─┘   per-client    │  session table · admission · batcher
+//!      ▲         reply links   │
+//!      └───────────────────────┘
+//! ```
+//!
+//! * The **gateway** owns the [`SessionTable`] (per-(session, boundary)
+//!   codec replicas — never shared across clients), the [`Admission`]
+//!   gate, and the [`Batcher`] that coalesces decoded rows from distinct
+//!   sessions into fixed-size microbatches for the stages.
+//! * **Server stages** are frozen `ToyStage`s: forward + `grad_input`
+//!   only, no parameter updates — one client's traffic cannot move the
+//!   model another client sees.
+//! * **Clients** are closed-loop: own trainable cut layer + private
+//!   shard; fine-tune sessions upload cut activations and apply the
+//!   returned cut gradient locally, inference sessions digest head rows.
+//!
+//! **Per-session bit-identity.** A session's numerics depend only on
+//! (config, session id): stage compute is elementwise per row, AQ frames
+//! carry one scale per example record, codec replicas are per-session,
+//! server stages are frozen, padding rows never touch codecs, and a shed
+//! request is refused *before* the server replica decodes it (the client
+//! retransmits the cached bytes). So any interleaving of sessions —
+//! alone, batched with strangers, shed and resent — produces the same
+//! loss bits, parameter digest, and codec state per session. Pinned by
+//! `tests/prop_serve.rs`.
+
+pub mod admission;
+pub mod batch;
+pub mod table;
+pub mod wire;
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::codec::registry::CodecSpec;
+use crate::codec::Rounding;
+use crate::net::channel::frame_link;
+use crate::net::plane::{SessionEndpointRx, SessionEndpointTx};
+use crate::net::tcp::LinkShape;
+use crate::net::{Doorbell, FrameLink, FrameRx, FrameTx, IoDriver, Poll, RealLink, RealReceiver, TryRecv};
+use crate::pipeline::exec::{run_event_pool, PoolTask, TaskAdvance, ToyStage};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+use admission::{Admission, AdmissionCfg};
+use batch::{BatchCfg, Batcher, PendingRow};
+use table::{client_endpoints, session_cut_seed, session_data_seed, SessionTable};
+use wire::{
+    env_bytes, EnvHead, Envelope, ServeMsg, ENV_ACCEPT, ENV_CLOSE, ENV_CLOSED, ENV_OPEN, ENV_REP,
+    ENV_REQ, FLAG_FINETUNE,
+};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+
+/// One serving run: fleet shape, codec, knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Concurrent client sessions (each is one event task).
+    pub sessions: usize,
+    /// Frozen server stages after the client-held cut layer.
+    pub server_stages: usize,
+    /// Elements per activation row (the boundary width).
+    pub example_len: usize,
+    pub spec: CodecSpec,
+    pub rounding: Rounding,
+    pub seed: u64,
+    /// Client-side cut-layer SGD step per reply.
+    pub lr: f32,
+    /// Examples in each session's private shard.
+    pub shard: usize,
+    /// Passes over the shard (>= 2 exercises the AQ delta path).
+    pub epochs: usize,
+    /// Every Nth session runs split inference instead of fine-tuning
+    /// (0 = every session fine-tunes).
+    pub infer_every: usize,
+    pub batch: BatchCfg,
+    pub admission: AdmissionCfg,
+    /// Event-pool worker threads.
+    pub workers: usize,
+    /// Pacing of the client⇄gateway links.
+    pub bandwidth_bps: f64,
+    pub latency: Duration,
+    /// `None` for in-process runs (a stalled pool is a bug); `Some` when
+    /// frames arrive from other processes over sockets.
+    pub stall_timeout: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            sessions: 64,
+            server_stages: 2,
+            example_len: 8,
+            spec: CodecSpec::aqsgd(2, 4),
+            rounding: Rounding::Stochastic,
+            seed: 7,
+            lr: 0.05,
+            shard: 4,
+            epochs: 2,
+            infer_every: 4,
+            batch: BatchCfg::default(),
+            admission: AdmissionCfg::default(),
+            workers: 4,
+            bandwidth_bps: 1e9,
+            latency: Duration::from_micros(50),
+            stall_timeout: None,
+        }
+    }
+}
+
+/// Config fingerprint a client presents at `ENV_OPEN`: everything that
+/// must agree for the two ends' codec replicas and stage math to match.
+/// Mismatch ⇒ descriptive reject. Learning rate as raw bits — text
+/// formatting must not make two unequal configs look equal.
+pub fn serve_summary(cfg: &ServeConfig) -> String {
+    format!(
+        "serve k={} el={} spec={} round={:?} seed={} lr={:08x} shard={} epochs={}",
+        cfg.server_stages,
+        cfg.example_len,
+        cfg.spec.label(),
+        cfg.rounding,
+        cfg.seed,
+        cfg.lr.to_bits(),
+        cfg.shard,
+        cfg.epochs,
+    )
+}
+
+fn is_infer(cfg: &ServeConfig, session: u32) -> bool {
+    cfg.infer_every > 0 && (session as usize) % cfg.infer_every == 0
+}
+
+/// Seed of frozen server stage `s` — depends on config alone, never on
+/// the session fleet, so every client sees the same model.
+fn server_stage_seed(seed: u64, s: usize) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9) ^ (0x5EA7_0000 + ((s as u64) << 8))
+}
+
+fn validate(cfg: &ServeConfig) -> Result<()> {
+    crate::ensure!(cfg.server_stages >= 1, "serve needs at least one server stage");
+    crate::ensure!(cfg.example_len >= 1, "serve needs a non-empty activation row");
+    crate::ensure!(cfg.shard >= 1 && cfg.epochs >= 1, "serve sessions need work to do");
+    crate::ensure!(cfg.batch.rows >= 1, "serve batcher needs at least one row per batch");
+    crate::ensure!(cfg.workers >= 1, "serve needs at least one pool worker");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Inter-stage batch messages (typed channel, unpaced: stages share the
+// server host; the modeled slow network is the client links)
+
+#[derive(Clone, Copy, Debug, Default)]
+struct RowMeta {
+    session: u32,
+    seq: u32,
+    example: u64,
+    finetune: bool,
+    pad: bool,
+}
+
+#[derive(Debug, Default)]
+struct BatchMsg {
+    id: u64,
+    rows: Vec<RowMeta>,
+    /// fwd: stage input activations `[b*el]`; bwd: grad wrt stage input.
+    data: Vec<f32>,
+    /// fwd only: target rows `[b*el]` (zeros for inference/pad rows).
+    targets: Vec<f32>,
+    /// bwd only: per-row loss (0 for inference/pad rows).
+    losses: Vec<f32>,
+    /// bwd only: head-stage outputs `[b*el]` (inference replies).
+    head: Vec<f32>,
+    /// Last message of the run: relayed down the chain and bounced back,
+    /// retiring each stage in order.
+    shutdown: bool,
+}
+
+fn unpaced<T>() -> (RealLink<T>, RealReceiver<T>) {
+    RealLink::channel(f64::INFINITY, Duration::ZERO)
+}
+
+fn earlier(a: Option<Instant>, b: Instant) -> Option<Instant> {
+    Some(a.map_or(b, |a| a.min(b)))
+}
+
+// ---------------------------------------------------------------------------
+// Server stage task (frozen)
+
+struct StageTask {
+    stage: ToyStage,
+    head: bool,
+    el: usize,
+    fwd_in: RealReceiver<BatchMsg>,
+    /// `None` on the head stage.
+    fwd_out: Option<RealLink<BatchMsg>>,
+    /// `None` on the head stage (it originates the bwd direction).
+    bwd_in: Option<RealReceiver<BatchMsg>>,
+    bwd_out: RealLink<BatchMsg>,
+    /// Saved forward outputs per batch, FIFO — the fwd and bwd chains
+    /// are FIFO links, so batches retire in emission order.
+    saved: VecDeque<(u64, Vec<f32>)>,
+    fwd_done: bool,
+    finished: bool,
+}
+
+impl StageTask {
+    fn on_fwd(&mut self, m: BatchMsg) -> Result<()> {
+        if m.shutdown {
+            match &mut self.fwd_out {
+                Some(out) => {
+                    out.send(m, 0);
+                    self.fwd_done = true;
+                }
+                None => {
+                    // head: bounce the shutdown into the bwd chain
+                    self.bwd_out.send(m, 0);
+                    self.finished = true;
+                }
+            }
+            return Ok(());
+        }
+        let y = self.stage.forward(&m.data);
+        match &mut self.fwd_out {
+            Some(out) => {
+                self.saved.push_back((m.id, y.clone()));
+                out.send(BatchMsg { data: y, ..m }, 0);
+            }
+            None => {
+                // head: per-row MSE loss + cut-direction gradient for
+                // fine-tune rows; inference and pad rows get zeros (and a
+                // zero gradient contributes nothing anywhere)
+                let el = self.el;
+                let mut losses = vec![0f32; m.rows.len()];
+                let mut g = vec![0f32; y.len()];
+                for (r, meta) in m.rows.iter().enumerate() {
+                    if meta.pad || !meta.finetune {
+                        continue;
+                    }
+                    let o = r * el;
+                    let mut acc = 0f32;
+                    for i in 0..el {
+                        let d = y[o + i] - m.targets[o + i];
+                        acc += d * d;
+                        g[o + i] = 2.0 * d / el as f32;
+                    }
+                    losses[r] = acc / el as f32;
+                }
+                let dx = self.stage.grad_input(&y, &g);
+                self.bwd_out.send(
+                    BatchMsg {
+                        id: m.id,
+                        rows: m.rows,
+                        data: dx,
+                        targets: Vec::new(),
+                        losses,
+                        head: y,
+                        shutdown: false,
+                    },
+                    0,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn on_bwd(&mut self, m: BatchMsg) -> Result<()> {
+        if m.shutdown {
+            crate::ensure!(self.fwd_done, "serve stage: bwd shutdown before fwd shutdown");
+            self.bwd_out.send(m, 0);
+            self.finished = true;
+            return Ok(());
+        }
+        let (id, y) = self
+            .saved
+            .pop_front()
+            .ok_or_else(|| crate::err!("serve stage: gradient for a batch never forwarded"))?;
+        crate::ensure!(id == m.id, "serve stage: batch retirement out of order ({id} vs {})", m.id);
+        let dx = self.stage.grad_input(&y, &m.data);
+        self.bwd_out.send(BatchMsg { data: dx, ..m }, 0);
+        Ok(())
+    }
+
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        loop {
+            let mut progress = false;
+            if !self.fwd_done && !self.finished {
+                match self.fwd_in.try_recv() {
+                    TryRecv::Msg(_, m) => {
+                        self.on_fwd(m)?;
+                        progress = true;
+                    }
+                    TryRecv::Empty => {}
+                    TryRecv::Closed => {
+                        crate::bail!("serve stage: upstream closed before shutdown")
+                    }
+                }
+            }
+            if !self.finished {
+                if let Some(bwd_in) = &self.bwd_in {
+                    match bwd_in.try_recv() {
+                        TryRecv::Msg(_, m) => {
+                            self.on_bwd(m)?;
+                            progress = true;
+                        }
+                        TryRecv::Empty => {}
+                        TryRecv::Closed => {
+                            crate::bail!("serve stage: downstream closed before shutdown")
+                        }
+                    }
+                }
+            }
+            if self.finished {
+                return Ok(TaskAdvance::Finished);
+            }
+            if !progress {
+                return Ok(TaskAdvance::Pending(None));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gateway task
+
+/// Aggregate front-end counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayStats {
+    pub batches: u64,
+    /// Real rows batched (excludes padding).
+    pub rows: u64,
+    pub padded_rows: u64,
+    pub shed_requests: u64,
+    pub rejected_opens: u64,
+    /// Opens refused on config-fingerprint mismatch.
+    pub config_rejects: u64,
+    /// High-water mark of concurrently open sessions.
+    pub peak_sessions: usize,
+}
+
+struct GatewayTask {
+    el: usize,
+    summary: String,
+    ingress: Vec<Box<dyn FrameRx>>,
+    ingress_closed: Vec<bool>,
+    reply: Vec<Box<dyn FrameTx>>,
+    /// session id -> reply index. Prefilled in-process; learned from the
+    /// originating connection at `ENV_OPEN` in socket mode.
+    route: HashMap<u32, usize>,
+    learn_route: bool,
+    table: SessionTable,
+    admission: Admission,
+    batcher: Batcher,
+    fwd_out: RealLink<BatchMsg>,
+    grad_in: RealReceiver<BatchMsg>,
+    expected_opens: usize,
+    opens_seen: usize,
+    accepted: usize,
+    closed: usize,
+    /// Decoded rows admitted but not yet replied (queued or in stages).
+    in_flight: usize,
+    next_batch: u64,
+    shutdown_sent: bool,
+    finished: bool,
+    stats: GatewayStats,
+}
+
+impl GatewayTask {
+    fn send_to(&mut self, idx: usize, frame: Vec<u8>) -> Result<()> {
+        self.reply[idx].send(frame)
+    }
+
+    fn reply_idx(&self, session: u32) -> Result<usize> {
+        self.route
+            .get(&session)
+            .copied()
+            .ok_or_else(|| crate::err!("no reply route for session {session}"))
+    }
+
+    fn on_open(&mut self, ingress_idx: usize, e: Envelope<'_>) -> Result<()> {
+        self.opens_seen += 1;
+        if self.learn_route {
+            self.route.insert(e.session, ingress_idx);
+        }
+        let idx = self.reply_idx(e.session)?;
+        let got = String::from_utf8_lossy(e.payload).into_owned();
+        if got != self.summary {
+            self.stats.config_rejects += 1;
+            let frame = crate::net::session::reject_session_bytes(
+                e.session,
+                0,
+                &format!("config mismatch: client ran {got:?}, server runs {:?}", self.summary),
+            );
+            return self.send_to(idx, frame);
+        }
+        if let Some(reason) = self.admission.admit_open(Instant::now(), self.table.len()) {
+            let frame = crate::net::session::reject_session_bytes(e.session, 0, &reason);
+            return self.send_to(idx, frame);
+        }
+        self.table.open(e.session, e.flags & FLAG_FINETUNE != 0)?;
+        self.accepted += 1;
+        let head = EnvHead { kind: ENV_ACCEPT, session: e.session, ..EnvHead::default() };
+        self.send_to(idx, env_bytes(&head, &[]))
+    }
+
+    fn on_req(&mut self, e: Envelope<'_>) -> Result<()> {
+        let idx = self.reply_idx(e.session)?;
+        crate::ensure!(e.seq > 0, "serve request with handshake seq 0");
+        // Shed BEFORE the session's decoder replica sees the frame: the
+        // client's encoder already advanced, so it retransmits the same
+        // bytes and both replicas stay in sync.
+        if let Some(reason) = self.admission.admit_request(self.batcher.depth()) {
+            let frame = crate::net::session::reject_session_bytes(e.session, e.seq, &reason);
+            return self.send_to(idx, frame);
+        }
+        let el = self.el;
+        let n_t = e.aux as usize;
+        crate::ensure!(
+            e.payload.len() >= 4 * n_t,
+            "serve request payload shorter than its {n_t} declared targets"
+        );
+        let entry = self
+            .table
+            .get_mut(e.session)
+            .ok_or_else(|| crate::err!("request for session {} which is not open", e.session))?;
+        if entry.finetune {
+            crate::ensure!(n_t == el, "fine-tune request carries {n_t} targets, expected {el}");
+        } else {
+            crate::ensure!(n_t == 0, "inference request carries {n_t} targets");
+        }
+        let mut target = vec![0f32; el];
+        for (i, chunk) in e.payload[..4 * n_t].chunks_exact(4).enumerate() {
+            target[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let x = entry.fw.decode(&[e.example], &e.payload[4 * n_t..])?;
+        let finetune = entry.finetune;
+        self.batcher.push(PendingRow {
+            session: e.session,
+            seq: e.seq,
+            example: e.example,
+            finetune,
+            x,
+            target,
+            enqueued: Instant::now(),
+        });
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    fn on_close(&mut self, e: Envelope<'_>) -> Result<()> {
+        let idx = self.reply_idx(e.session)?;
+        let entry = self
+            .table
+            .close(e.session)
+            .ok_or_else(|| crate::err!("close for session {} which is not open", e.session))?;
+        self.closed += 1;
+        let head = EnvHead { kind: ENV_CLOSED, session: e.session, seq: e.seq, ..EnvHead::default() };
+        let payload = wire::closed_payload(entry.fw.state_bytes(), entry.bw.state_bytes());
+        self.send_to(idx, env_bytes(&head, &payload))
+    }
+
+    fn handle(&mut self, ingress_idx: usize, bytes: &[u8]) -> Result<()> {
+        match wire::parse(bytes)? {
+            ServeMsg::Reject(r) => {
+                crate::bail!("gateway received a reject frame for session {}", r.session)
+            }
+            ServeMsg::Env(e) => match e.kind {
+                ENV_OPEN => self.on_open(ingress_idx, e),
+                ENV_REQ => self.on_req(e),
+                ENV_CLOSE => self.on_close(e),
+                k => crate::bail!("unexpected serve envelope kind {k} at the gateway"),
+            },
+        }
+    }
+
+    fn emit_batch(&mut self) {
+        let b = self.batcher.rows();
+        let el = self.el;
+        let rows = self.batcher.take();
+        let mut meta = Vec::with_capacity(b);
+        let mut data = vec![0f32; b * el];
+        let mut targets = vec![0f32; b * el];
+        for (r, row) in rows.iter().enumerate() {
+            meta.push(RowMeta {
+                session: row.session,
+                seq: row.seq,
+                example: row.example,
+                finetune: row.finetune,
+                pad: false,
+            });
+            data[r * el..(r + 1) * el].copy_from_slice(&row.x);
+            targets[r * el..(r + 1) * el].copy_from_slice(&row.target);
+        }
+        self.stats.rows += rows.len() as u64;
+        self.stats.padded_rows += (b - rows.len()) as u64;
+        self.stats.batches += 1;
+        for _ in rows.len()..b {
+            meta.push(RowMeta { pad: true, ..RowMeta::default() });
+        }
+        let id = self.next_batch;
+        self.next_batch += 1;
+        self.fwd_out.send(
+            BatchMsg {
+                id,
+                rows: meta,
+                data,
+                targets,
+                losses: Vec::new(),
+                head: Vec::new(),
+                shutdown: false,
+            },
+            0,
+        );
+    }
+
+    fn finish_batch(&mut self, m: BatchMsg) -> Result<()> {
+        let el = self.el;
+        for (r, meta) in m.rows.iter().enumerate() {
+            if meta.pad {
+                continue;
+            }
+            let o = r * el;
+            let payload = {
+                let entry = self.table.get_mut(meta.session).ok_or_else(|| {
+                    crate::err!("session {} closed with requests in flight", meta.session)
+                })?;
+                let row = if meta.finetune { &m.data[o..o + el] } else { &m.head[o..o + el] };
+                let (_, bytes) = entry.bw.encode(&[meta.example], row)?;
+                entry.requests += 1;
+                bytes.to_vec()
+            };
+            let head = EnvHead {
+                kind: ENV_REP,
+                session: meta.session,
+                seq: meta.seq,
+                example: meta.example,
+                flags: if meta.finetune { FLAG_FINETUNE } else { 0 },
+                loss: m.losses[r],
+                aux: 0,
+            };
+            let idx = self.reply_idx(meta.session)?;
+            self.send_to(idx, env_bytes(&head, &payload))?;
+            self.in_flight -= 1;
+        }
+        Ok(())
+    }
+
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        loop {
+            let mut progress = false;
+            let mut deadline: Option<Instant> = None;
+            // 1. retire batches coming back from the head
+            loop {
+                match self.grad_in.try_recv() {
+                    TryRecv::Msg(_, m) => {
+                        if m.shutdown {
+                            self.finished = true;
+                        } else {
+                            self.finish_batch(m)?;
+                        }
+                        progress = true;
+                    }
+                    TryRecv::Empty => break,
+                    TryRecv::Closed => crate::bail!("serve gateway: stage chain closed early"),
+                }
+            }
+            if self.finished {
+                self.stats.shed_requests = self.admission.shed_requests;
+                self.stats.rejected_opens = self.admission.rejected_opens;
+                self.stats.peak_sessions = self.table.peak;
+                return Ok(TaskAdvance::Finished);
+            }
+            // 2. drain client frames
+            for i in 0..self.ingress.len() {
+                if self.ingress_closed[i] {
+                    continue;
+                }
+                loop {
+                    match self.ingress[i].poll() {
+                        Poll::Ready => {
+                            if let Some(bytes) = self.ingress[i].try_recv()? {
+                                self.handle(i, &bytes)?;
+                                progress = true;
+                            }
+                        }
+                        Poll::Empty => break,
+                        Poll::InFlight(at) => {
+                            deadline = earlier(deadline, at);
+                            break;
+                        }
+                        // a peer that closed after its sessions finished
+                        // is fine; if sessions are still outstanding the
+                        // stall detector reports the hang
+                        Poll::Closed => {
+                            self.ingress_closed[i] = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // 3. emit every batch that is due
+            let now = Instant::now();
+            while !self.batcher.is_empty() && self.batcher.ready(now) {
+                self.emit_batch();
+                progress = true;
+            }
+            // 4. all sessions done and nothing in flight: retire the run
+            if !self.shutdown_sent
+                && self.opens_seen == self.expected_opens
+                && self.closed == self.accepted
+                && self.in_flight == 0
+                && self.batcher.is_empty()
+            {
+                let id = self.next_batch;
+                self.fwd_out.send(BatchMsg { id, shutdown: true, ..BatchMsg::default() }, 0);
+                self.shutdown_sent = true;
+                continue;
+            }
+            if !progress {
+                if let Some(at) = self.batcher.deadline() {
+                    deadline = earlier(deadline, at);
+                }
+                return Ok(TaskAdvance::Pending(deadline));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client session task
+
+/// Everything one session observed, for reports and bit-identity tests.
+#[derive(Clone, Debug)]
+pub struct SessionRecord {
+    pub session: u32,
+    pub finetune: bool,
+    /// Per-request head loss (fine-tune sessions; empty for inference).
+    pub losses: Vec<f32>,
+    /// Request→reply round-trip per request, wall nanoseconds.
+    pub latencies_ns: Vec<u64>,
+    /// Requests shed by admission and retransmitted.
+    pub shed: u64,
+    /// `Some(reason)` if the session itself was refused at open.
+    pub rejected: Option<String>,
+    /// (fw encoder, bw decoder) resident codec state at close.
+    pub client_state: (u64, u64),
+    /// (fw decoder, bw encoder) resident state the server reported.
+    pub server_state: (u64, u64),
+    /// Cut-layer parameter digest at close.
+    pub digest: u64,
+    /// FNV over decoded head rows (inference sessions).
+    pub infer_digest: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv1a(h: u64, bits: u32) -> u64 {
+    (h ^ bits as u64).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ClientState {
+    Opening,
+    AwaitAccept,
+    Running,
+    AwaitClosed,
+    Done,
+}
+
+struct PendingReq {
+    bytes: Vec<u8>,
+    x_idx: usize,
+    y0: Vec<f32>,
+    example: u64,
+    seq: u32,
+    sent: Instant,
+}
+
+struct ClientTask {
+    session: u32,
+    finetune: bool,
+    summary: String,
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
+    fw: SessionEndpointTx,
+    bw: SessionEndpointRx,
+    cut: ToyStage,
+    data: Vec<Vec<f32>>,
+    targets: Vec<Vec<f32>>,
+    lr: f32,
+    total: usize,
+    next: usize,
+    seq: u32,
+    state: ClientState,
+    pending: Option<PendingReq>,
+    rec: SessionRecord,
+}
+
+impl ClientTask {
+    fn send_next(&mut self) -> Result<()> {
+        if self.next == self.total {
+            self.seq += 1;
+            let head =
+                EnvHead { kind: ENV_CLOSE, session: self.session, seq: self.seq, ..EnvHead::default() };
+            self.tx.send(env_bytes(&head, &[]))?;
+            self.state = ClientState::AwaitClosed;
+            return Ok(());
+        }
+        let idx = self.next % self.data.len();
+        let y0 = self.cut.forward(&self.data[idx]);
+        let example = ((self.session as u64 + 1) << 32) | idx as u64;
+        self.seq += 1;
+        let codec = {
+            let (_, bytes) = self.fw.encode(&[example], &y0)?;
+            bytes.to_vec()
+        };
+        let (payload, aux) = if self.finetune {
+            let t = &self.targets[idx];
+            let mut p = Vec::with_capacity(4 * t.len() + codec.len());
+            for v in t {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            p.extend_from_slice(&codec);
+            (p, t.len() as u32)
+        } else {
+            (codec, 0)
+        };
+        let head = EnvHead {
+            kind: ENV_REQ,
+            session: self.session,
+            seq: self.seq,
+            example,
+            flags: if self.finetune { FLAG_FINETUNE } else { 0 },
+            loss: 0.0,
+            aux,
+        };
+        let bytes = env_bytes(&head, &payload);
+        self.tx.send_from(&bytes)?;
+        self.pending = Some(PendingReq {
+            bytes,
+            x_idx: idx,
+            y0,
+            example,
+            seq: self.seq,
+            sent: Instant::now(),
+        });
+        self.next += 1;
+        Ok(())
+    }
+
+    fn on_rep(&mut self, e: Envelope<'_>) -> Result<()> {
+        let p = self
+            .pending
+            .take()
+            .ok_or_else(|| crate::err!("session {}: reply with no request in flight", self.session))?;
+        crate::ensure!(
+            e.seq == p.seq && e.example == p.example,
+            "session {}: reply for seq {} example {:#x}, expected seq {} example {:#x}",
+            self.session,
+            e.seq,
+            e.example,
+            p.seq,
+            p.example
+        );
+        self.rec.latencies_ns.push(p.sent.elapsed().as_nanos() as u64);
+        let row = self.bw.decode(&[p.example], e.payload)?;
+        if self.finetune {
+            self.cut.backward(&self.data[p.x_idx], &p.y0, &row);
+            let g = self.cut.take_step_grad(1.0);
+            self.cut.apply_grad(self.lr, &g);
+            self.rec.losses.push(e.loss);
+        } else {
+            for v in &row {
+                self.rec.infer_digest = fnv1a(self.rec.infer_digest, v.to_bits());
+            }
+        }
+        self.send_next()
+    }
+
+    fn on_frame(&mut self, bytes: &[u8]) -> Result<()> {
+        match wire::parse(bytes)? {
+            ServeMsg::Reject(r) => {
+                crate::ensure!(
+                    r.session == self.session,
+                    "session {}: reject routed for session {}",
+                    self.session,
+                    r.session
+                );
+                if r.seq == 0 {
+                    self.rec.rejected = Some(r.reason);
+                    self.state = ClientState::Done;
+                } else {
+                    // one request shed: retransmit the SAME cached bytes —
+                    // the fw encoder already advanced on this frame
+                    self.rec.shed += 1;
+                    let p = self.pending.as_ref().ok_or_else(|| {
+                        crate::err!("session {}: shed reject with nothing in flight", self.session)
+                    })?;
+                    crate::ensure!(
+                        p.seq == r.seq,
+                        "session {}: shed reject for seq {}, in flight is {}",
+                        self.session,
+                        r.seq,
+                        p.seq
+                    );
+                    let frame = p.bytes.clone();
+                    self.tx.send(frame)?;
+                }
+                Ok(())
+            }
+            ServeMsg::Env(e) => {
+                crate::ensure!(
+                    e.session == self.session,
+                    "session {}: frame routed for session {}",
+                    self.session,
+                    e.session
+                );
+                match e.kind {
+                    ENV_ACCEPT => {
+                        crate::ensure!(
+                            self.state == ClientState::AwaitAccept,
+                            "session {}: unexpected ACCEPT in state {:?}",
+                            self.session,
+                            self.state
+                        );
+                        self.state = ClientState::Running;
+                        self.send_next()
+                    }
+                    ENV_REP => self.on_rep(e),
+                    ENV_CLOSED => {
+                        crate::ensure!(
+                            self.state == ClientState::AwaitClosed,
+                            "session {}: unexpected CLOSED in state {:?}",
+                            self.session,
+                            self.state
+                        );
+                        self.rec.server_state = wire::parse_closed_payload(e.payload)?;
+                        self.rec.client_state = (self.fw.state_bytes(), self.bw.state_bytes());
+                        self.rec.digest = self.cut.digest();
+                        self.state = ClientState::Done;
+                        Ok(())
+                    }
+                    k => crate::bail!("session {}: unexpected envelope kind {k}", self.session),
+                }
+            }
+        }
+    }
+
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        loop {
+            match self.state {
+                ClientState::Opening => {
+                    let head = EnvHead {
+                        kind: ENV_OPEN,
+                        session: self.session,
+                        flags: if self.finetune { FLAG_FINETUNE } else { 0 },
+                        ..EnvHead::default()
+                    };
+                    let frame = env_bytes(&head, self.summary.as_bytes());
+                    self.tx.send(frame)?;
+                    self.state = ClientState::AwaitAccept;
+                }
+                ClientState::Done => return Ok(TaskAdvance::Finished),
+                _ => {}
+            }
+            match self.rx.poll() {
+                Poll::Ready => {
+                    if let Some(bytes) = self.rx.try_recv()? {
+                        self.on_frame(&bytes)?;
+                    }
+                }
+                Poll::Empty => return Ok(TaskAdvance::Pending(None)),
+                Poll::InFlight(at) => return Ok(TaskAdvance::Pending(Some(at))),
+                Poll::Closed => {
+                    crate::bail!("session {}: server closed the link mid-session", self.session)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket-mode demultiplexer (client process): one socket carries every
+// local session; route frames to per-session in-memory links.
+
+struct DemuxTask {
+    rx: Box<dyn FrameRx>,
+    out: Vec<FrameLink>,
+    idx_of: HashMap<u32, usize>,
+    /// Terminal frames seen (session CLOSED or refused at open).
+    done: usize,
+    n: usize,
+    finished: bool,
+}
+
+impl DemuxTask {
+    fn route(&mut self, bytes: &[u8]) -> Result<()> {
+        let (session, terminal) = match wire::parse(bytes)? {
+            ServeMsg::Reject(r) => (r.session, r.seq == 0),
+            ServeMsg::Env(e) => (e.session, e.kind == ENV_CLOSED),
+        };
+        let i = *self
+            .idx_of
+            .get(&session)
+            .ok_or_else(|| crate::err!("demux: frame for unknown session {session}"))?;
+        FrameTx::send_from(&mut self.out[i], bytes)?;
+        if terminal {
+            self.done += 1;
+            if self.done == self.n {
+                self.finished = true;
+            }
+        }
+        Ok(())
+    }
+
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        loop {
+            match self.rx.poll() {
+                Poll::Ready => {
+                    if let Some(bytes) = self.rx.try_recv()? {
+                        self.route(&bytes)?;
+                    }
+                }
+                Poll::Empty | Poll::Closed if self.finished => return Ok(TaskAdvance::Finished),
+                Poll::Empty => return Ok(TaskAdvance::Pending(None)),
+                Poll::InFlight(at) => return Ok(TaskAdvance::Pending(Some(at))),
+                Poll::Closed => {
+                    crate::bail!("demux: server closed with {} sessions outstanding", self.n - self.done)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task wrapper + shared sending half
+
+enum ServeTask {
+    Gateway(Box<GatewayTask>),
+    Stage(Box<StageTask>),
+    Client(Box<ClientTask>),
+    Demux(Box<DemuxTask>),
+}
+
+impl PoolTask for ServeTask {
+    fn advance(&mut self) -> Result<TaskAdvance> {
+        match self {
+            ServeTask::Gateway(t) => t.advance(),
+            ServeTask::Stage(t) => t.advance(),
+            ServeTask::Client(t) => t.advance(),
+            ServeTask::Demux(t) => t.advance(),
+        }
+    }
+}
+
+/// Many clients share one uplink to the gateway: a mutex-wrapped sending
+/// half each client clones. FIFO per session is preserved (each session
+/// is closed-loop), which is all the protocol needs.
+struct SharedTx<T: FrameTx>(Arc<Mutex<T>>);
+
+impl<T: FrameTx> SharedTx<T> {
+    fn fan_out(inner: T, n: usize) -> Vec<SharedTx<T>> {
+        let inner = Arc::new(Mutex::new(inner));
+        (0..n).map(|_| SharedTx(Arc::clone(&inner))).collect()
+    }
+}
+
+impl<T: FrameTx> FrameTx for SharedTx<T> {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        lock(&self.0).send(frame)
+    }
+
+    fn send_from(&mut self, frame: &[u8]) -> Result<()> {
+        lock(&self.0).send_from(frame)
+    }
+
+    fn set_doorbell(&mut self, bell: Doorbell) {
+        lock(&self.0).set_doorbell(bell);
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        lock(&self.0).bytes_sent()
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        lock(&self.0).msgs_sent()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+
+/// What a serving run produced: per-session records (client side) and
+/// aggregate gateway counters (server side).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub sessions: Vec<SessionRecord>,
+    pub gateway: GatewayStats,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    /// `p`-th percentile (0.0..=1.0) of per-request round-trip latency
+    /// across every session, nearest-rank. `None` with no replies.
+    pub fn latency_ns_percentile(&self, p: f64) -> Option<u64> {
+        let mut all: Vec<u64> =
+            self.sessions.iter().flat_map(|s| s.latencies_ns.iter().copied()).collect();
+        if all.is_empty() {
+            return None;
+        }
+        all.sort_unstable();
+        let i = ((all.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        Some(all[i])
+    }
+
+    /// Total replied rows across sessions.
+    pub fn replied_rows(&self) -> u64 {
+        self.sessions.iter().map(|s| s.latencies_ns.len() as u64).sum()
+    }
+
+    /// Aggregate serving throughput, replied rows per wall second.
+    pub fn rows_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.replied_rows() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn rejected_sessions(&self) -> usize {
+        self.sessions.iter().filter(|s| s.rejected.is_some()).count()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.sessions.iter().map(|s| s.shed).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders + run entry points
+
+fn build_client(
+    cfg: &ServeConfig,
+    session: u32,
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
+) -> Result<ClientTask> {
+    let finetune = !is_infer(cfg, session);
+    let el = cfg.example_len;
+    let (fw, bw) = client_endpoints(&cfg.spec, el, cfg.rounding, cfg.seed, session)?;
+    let cut = ToyStage::new(el, session_cut_seed(cfg.seed, session));
+    let mut rng = Rng::new(session_data_seed(cfg.seed, session));
+    let data: Vec<Vec<f32>> =
+        (0..cfg.shard).map(|_| (0..el).map(|_| 0.5 * rng.normal()).collect()).collect();
+    let targets: Vec<Vec<f32>> = if finetune {
+        (0..cfg.shard).map(|_| (0..el).map(|_| 0.3 * rng.normal()).collect()).collect()
+    } else {
+        Vec::new()
+    };
+    Ok(ClientTask {
+        session,
+        finetune,
+        summary: serve_summary(cfg),
+        tx,
+        rx,
+        fw,
+        bw,
+        cut,
+        data,
+        targets,
+        lr: cfg.lr,
+        total: cfg.shard * cfg.epochs,
+        next: 0,
+        seq: 0,
+        state: ClientState::Opening,
+        pending: None,
+        rec: SessionRecord {
+            session,
+            finetune,
+            losses: Vec::new(),
+            latencies_ns: Vec::new(),
+            shed: 0,
+            rejected: None,
+            client_state: (0, 0),
+            server_state: (0, 0),
+            digest: 0,
+            infer_digest: FNV_OFFSET,
+        },
+    })
+}
+
+/// Build the server side (gateway + stage tasks) over the given client
+/// transports. `route` prefilled for in-process runs; learned per
+/// connection in socket mode.
+fn build_server(
+    cfg: &ServeConfig,
+    ingress: Vec<Box<dyn FrameRx>>,
+    reply: Vec<Box<dyn FrameTx>>,
+    route: HashMap<u32, usize>,
+    learn_route: bool,
+    expected_opens: usize,
+) -> Vec<ServeTask> {
+    let k = cfg.server_stages;
+    let el = cfg.example_len;
+    // fwd[i]: (gateway if i == 0 else stage i) -> stage i+1
+    // bwd[i]: stage i+1 -> (gateway if i == 0 else stage i)
+    let mut fwd: Vec<Option<(RealLink<BatchMsg>, RealReceiver<BatchMsg>)>> =
+        (0..k).map(|_| Some(unpaced())).collect();
+    let mut bwd: Vec<Option<(RealLink<BatchMsg>, RealReceiver<BatchMsg>)>> =
+        (0..k).map(|_| Some(unpaced())).collect();
+
+    let (gw_fwd_tx, s1_fwd_in) = fwd[0].take().expect("taken once");
+    let (s1_bwd_tx, gw_grad_in) = bwd[0].take().expect("taken once");
+    let n_ingress = ingress.len();
+    let gateway = GatewayTask {
+        el,
+        summary: serve_summary(cfg),
+        ingress,
+        ingress_closed: vec![false; n_ingress],
+        reply,
+        route,
+        learn_route,
+        table: SessionTable::new(cfg.spec.clone(), el, cfg.rounding, cfg.seed),
+        admission: Admission::new(cfg.admission),
+        batcher: Batcher::new(cfg.batch),
+        fwd_out: gw_fwd_tx,
+        grad_in: gw_grad_in,
+        expected_opens,
+        opens_seen: 0,
+        accepted: 0,
+        closed: 0,
+        in_flight: 0,
+        next_batch: 0,
+        shutdown_sent: false,
+        finished: false,
+        stats: GatewayStats::default(),
+    };
+
+    let mut tasks = Vec::with_capacity(1 + k);
+    tasks.push(ServeTask::Gateway(Box::new(gateway)));
+    let mut fwd_in = Some(s1_fwd_in);
+    let mut bwd_out = Some(s1_bwd_tx);
+    for s in 1..=k {
+        let head = s == k;
+        let (fwd_out, next_fwd_in) = if head {
+            (None, None)
+        } else {
+            let (tx, rx) = fwd[s].take().expect("taken once");
+            (Some(tx), Some(rx))
+        };
+        let (next_bwd_out, bwd_in) = if head {
+            (None, None)
+        } else {
+            let (tx, rx) = bwd[s].take().expect("taken once");
+            (Some(tx), Some(rx))
+        };
+        tasks.push(ServeTask::Stage(Box::new(StageTask {
+            stage: ToyStage::new(el, server_stage_seed(cfg.seed, s)),
+            head,
+            el,
+            fwd_in: fwd_in.take().expect("chained"),
+            fwd_out,
+            bwd_in,
+            bwd_out: bwd_out.take().expect("chained"),
+            saved: VecDeque::new(),
+            fwd_done: false,
+            finished: false,
+        })));
+        fwd_in = next_fwd_in;
+        bwd_out = next_bwd_out;
+    }
+    tasks
+}
+
+fn install_doorbells(sched: &Arc<crate::pipeline::exec::EventSched>, tasks: &mut [ServeTask]) {
+    for (t, task) in tasks.iter_mut().enumerate() {
+        let mk = |sc: &Arc<crate::pipeline::exec::EventSched>| -> Doorbell {
+            let sc = Arc::clone(sc);
+            Arc::new(move || sc.wake(t))
+        };
+        match task {
+            ServeTask::Gateway(g) => {
+                for rx in &mut g.ingress {
+                    rx.set_doorbell(mk(sched));
+                }
+                g.grad_in.set_doorbell(mk(sched));
+            }
+            ServeTask::Stage(s) => {
+                s.fwd_in.set_doorbell(mk(sched));
+                if let Some(bwd_in) = &mut s.bwd_in {
+                    bwd_in.set_doorbell(mk(sched));
+                }
+            }
+            ServeTask::Client(c) => c.rx.set_doorbell(mk(sched)),
+            ServeTask::Demux(d) => d.rx.set_doorbell(mk(sched)),
+        }
+    }
+}
+
+fn collect(done: Vec<ServeTask>, wall_s: f64) -> ServeReport {
+    let mut sessions = Vec::new();
+    let mut gateway = GatewayStats::default();
+    for t in done {
+        match t {
+            ServeTask::Gateway(g) => gateway = g.stats,
+            ServeTask::Client(c) => sessions.push(c.rec),
+            ServeTask::Stage(_) | ServeTask::Demux(_) => {}
+        }
+    }
+    ServeReport { sessions, gateway, wall_s }
+}
+
+/// Run the whole fleet in-process: gateway + stages + one event task per
+/// session in `ids`, client links paced at the configured
+/// bandwidth/latency. A session's numerics depend only on (config,
+/// session id) — `run_serve_sessions(cfg, &[a])` and a run that includes
+/// `a` among others produce bit-identical records for `a`.
+pub fn run_serve_sessions(cfg: &ServeConfig, ids: &[u32]) -> Result<ServeReport> {
+    validate(cfg)?;
+    crate::ensure!(!ids.is_empty(), "serve needs at least one session");
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for &s in ids {
+            crate::ensure!(seen.insert(s), "duplicate session id {s}");
+        }
+    }
+    let n = ids.len();
+    let k = cfg.server_stages;
+
+    // shared paced uplink (all clients -> gateway)
+    let (ing_tx, ing_rx) = frame_link(cfg.bandwidth_bps, cfg.latency);
+    let uplinks = SharedTx::fan_out(ing_tx, n);
+    // per-client paced reply links
+    let mut reply: Vec<Box<dyn FrameTx>> = Vec::with_capacity(n);
+    let mut reply_rx = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = frame_link(cfg.bandwidth_bps, cfg.latency);
+        reply.push(Box::new(tx));
+        reply_rx.push(rx);
+    }
+    let route: HashMap<u32, usize> = ids.iter().enumerate().map(|(i, &s)| (s, i)).collect();
+
+    let mut tasks = build_server(cfg, vec![Box::new(ing_rx)], reply, route, false, n);
+    for (up, (&session, rx)) in uplinks.into_iter().zip(ids.iter().zip(reply_rx)) {
+        tasks.push(ServeTask::Client(Box::new(build_client(
+            cfg,
+            session,
+            Box::new(up),
+            Box::new(rx),
+        )?)));
+    }
+    debug_assert_eq!(tasks.len(), 1 + k + n);
+
+    let start = Instant::now();
+    let done = run_event_pool(tasks, cfg.workers, cfg.stall_timeout, install_doorbells)?;
+    Ok(collect(done, start.elapsed().as_secs_f64()))
+}
+
+/// In-process fleet over session ids `0..cfg.sessions`.
+pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    let ids: Vec<u32> = (0..cfg.sessions as u32).collect();
+    run_serve_sessions(cfg, &ids)
+}
+
+fn serve_shape(cfg: &ServeConfig) -> LinkShape {
+    LinkShape {
+        rate_bps: if cfg.bandwidth_bps.is_finite() { Some(cfg.bandwidth_bps) } else { None },
+        latency: cfg.latency,
+        ..LinkShape::default()
+    }
+}
+
+fn socket_stall(cfg: &ServeConfig) -> Duration {
+    cfg.stall_timeout.unwrap_or(Duration::from_secs(30))
+}
+
+/// Socket-mode server: accept `conns` client processes, serve
+/// `cfg.sessions` total sessions across them, return gateway stats.
+pub fn run_serve_listen(cfg: &ServeConfig, addr: &str, conns: usize) -> Result<ServeReport> {
+    validate(cfg)?;
+    crate::ensure!(conns >= 1, "serve listener needs at least one connection");
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| crate::err!("serve: failed to bind {addr}: {e}"))?;
+    let driver = IoDriver::new();
+    let shape = serve_shape(cfg);
+    let mut ingress: Vec<Box<dyn FrameRx>> = Vec::with_capacity(conns);
+    let mut reply: Vec<Box<dyn FrameTx>> = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        let (sock, _) = listener
+            .accept()
+            .map_err(|e| crate::err!("serve: accept on {addr} failed: {e}"))?;
+        let (tx, rx) = driver.register(sock, shape.clone())?;
+        ingress.push(Box::new(rx));
+        reply.push(Box::new(tx));
+    }
+
+    let tasks = build_server(cfg, ingress, reply, HashMap::new(), true, cfg.sessions);
+    let start = Instant::now();
+    let done = run_event_pool(tasks, cfg.workers, Some(socket_stall(cfg)), install_doorbells)?;
+    let report = collect(done, start.elapsed().as_secs_f64());
+    // endpoint drop marked the tx halves closed; joining the driver
+    // flushes their tails to the clients
+    drop(driver);
+    Ok(report)
+}
+
+/// Socket-mode client process: run sessions `base..base + cfg.sessions`
+/// over ONE connection to the server, demultiplexing replies locally.
+pub fn run_serve_connect(cfg: &ServeConfig, addr: &str, base: u32) -> Result<ServeReport> {
+    validate(cfg)?;
+    crate::ensure!(cfg.sessions >= 1, "serve client needs at least one session");
+    let n = cfg.sessions;
+    // bounded retry: the server process may still be binding its listener
+    let deadline = Instant::now() + socket_stall(cfg);
+    let sock = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => crate::bail!("serve: failed to connect {addr}: {e}"),
+        }
+    };
+    let driver = IoDriver::new();
+    let (sock_tx, sock_rx) = driver.register(sock, serve_shape(cfg))?;
+
+    let uplinks = SharedTx::fan_out(sock_tx, n);
+    let mut out = Vec::with_capacity(n);
+    let mut idx_of = HashMap::with_capacity(n);
+    let mut tasks = Vec::with_capacity(1 + n);
+    let mut session_rx = Vec::with_capacity(n);
+    for i in 0..n {
+        let session = base + i as u32;
+        let (tx, rx) = frame_link(f64::INFINITY, Duration::ZERO);
+        out.push(tx);
+        session_rx.push(rx);
+        idx_of.insert(session, i);
+    }
+    tasks.push(ServeTask::Demux(Box::new(DemuxTask {
+        rx: Box::new(sock_rx),
+        out,
+        idx_of,
+        done: 0,
+        n,
+        finished: false,
+    })));
+    for (i, (up, rx)) in uplinks.into_iter().zip(session_rx).enumerate() {
+        let session = base + i as u32;
+        tasks.push(ServeTask::Client(Box::new(build_client(
+            cfg,
+            session,
+            Box::new(up),
+            Box::new(rx),
+        )?)));
+    }
+
+    let start = Instant::now();
+    let done = run_event_pool(tasks, cfg.workers, Some(socket_stall(cfg)), |sched, tasks| {
+        install_doorbells(sched, tasks);
+        // the demux's per-session links also need their doorbells: the
+        // demux task sends, the owning client task (1 + i) wakes
+        if let ServeTask::Demux(d) = &mut tasks[0] {
+            for (i, link) in d.out.iter_mut().enumerate() {
+                let sc = Arc::clone(sched);
+                link.set_doorbell(Arc::new(move || sc.wake(1 + i)));
+            }
+        }
+    })?;
+    let report = collect(done, start.elapsed().as_secs_f64());
+    drop(driver);
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            sessions: 8,
+            server_stages: 2,
+            example_len: 8,
+            shard: 3,
+            epochs: 2,
+            infer_every: 4,
+            batch: BatchCfg { rows: 4, max_wait: Duration::from_micros(200) },
+            workers: 2,
+            latency: Duration::from_micros(20),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn eight_sessions_roundtrip_cleanly() {
+        let cfg = small_cfg();
+        let report = run_serve(&cfg).expect("serve");
+        assert_eq!(report.sessions.len(), 8);
+        assert_eq!(report.rejected_sessions(), 0, "no admission false rejects");
+        assert_eq!(report.gateway.rejected_opens, 0);
+        assert_eq!(report.gateway.peak_sessions, 8, "fleet was concurrent");
+        assert_eq!(report.gateway.rows, 8 * 6, "every request batched exactly once");
+        for s in &report.sessions {
+            assert_eq!(s.latencies_ns.len(), 6, "session {}: all replies arrived", s.session);
+            if s.finetune {
+                assert_eq!(s.losses.len(), 6);
+                assert_ne!(s.digest, 0, "fine-tune session updated its cut layer");
+            } else {
+                assert_ne!(s.infer_digest, FNV_OFFSET, "inference session digested head rows");
+                assert!(s.losses.is_empty());
+            }
+            // AQ replica symmetry: client fw encoder and server fw decoder
+            // hold identical resident buffer state
+            assert_eq!(s.client_state.0, s.server_state.0, "session {} fw replicas", s.session);
+            assert_eq!(s.client_state.1, s.server_state.1, "session {} bw replicas", s.session);
+        }
+        assert!(report.latency_ns_percentile(0.5) <= report.latency_ns_percentile(0.99));
+        assert!(report.rows_per_s() > 0.0);
+    }
+
+    #[test]
+    fn session_cap_rejects_surplus_descriptively() {
+        // workers=1 makes the admission outcome deterministic: every
+        // client's OPEN is sent (in task order) before the gateway's
+        // second run, so it sees all six opens with the table empty.
+        let cfg = ServeConfig {
+            sessions: 6,
+            shard: 1,
+            epochs: 1,
+            infer_every: 0,
+            admission: AdmissionCfg { max_sessions: 2, ..AdmissionCfg::default() },
+            workers: 1,
+            ..small_cfg()
+        };
+        let report = run_serve(&cfg).expect("serve");
+        assert_eq!(report.rejected_sessions(), 4);
+        assert_eq!(report.gateway.rejected_opens, 4);
+        assert_eq!(report.gateway.peak_sessions, 2);
+        let mut served = 0;
+        for s in &report.sessions {
+            match &s.rejected {
+                Some(reason) => assert!(reason.contains("cap 2"), "{reason}"),
+                None => {
+                    assert_eq!(s.latencies_ns.len(), 1);
+                    served += 1;
+                }
+            }
+        }
+        assert_eq!(served, 2);
+    }
+
+    #[test]
+    fn shed_and_resend_do_not_change_session_numerics() {
+        // queue_depth 1 forces sheds + retransmits; the records must be
+        // bit-identical to an unshed run (replica-sync invariant).
+        let base = ServeConfig {
+            sessions: 4,
+            server_stages: 1,
+            shard: 2,
+            epochs: 2,
+            infer_every: 3,
+            batch: BatchCfg { rows: 4, max_wait: Duration::from_micros(500) },
+            workers: 2,
+            ..small_cfg()
+        };
+        let strangled = ServeConfig {
+            admission: AdmissionCfg { queue_depth: 1, ..AdmissionCfg::default() },
+            ..base.clone()
+        };
+        let a = run_serve(&base).expect("unshed run");
+        let b = run_serve(&strangled).expect("strangled run");
+        assert_eq!(a.rejected_sessions(), 0);
+        assert_eq!(b.rejected_sessions(), 0, "sheds retry, they never kill a session");
+        for (x, y) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(x.session, y.session);
+            let xb: Vec<u32> = x.losses.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.losses.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "session {} loss bits", x.session);
+            assert_eq!(x.digest, y.digest, "session {} cut digest", x.session);
+            assert_eq!(x.infer_digest, y.infer_digest, "session {}", x.session);
+            assert_eq!(x.client_state, y.client_state, "session {}", x.session);
+            assert_eq!(x.server_state, y.server_state, "session {}", x.session);
+        }
+    }
+
+    #[test]
+    fn latency_percentiles_use_nearest_rank() {
+        let mk = |lat: Vec<u64>| SessionRecord {
+            session: 0,
+            finetune: true,
+            losses: Vec::new(),
+            latencies_ns: lat,
+            shed: 0,
+            rejected: None,
+            client_state: (0, 0),
+            server_state: (0, 0),
+            digest: 0,
+            infer_digest: FNV_OFFSET,
+        };
+        let report = ServeReport {
+            sessions: vec![mk(vec![30, 10]), mk(vec![20, 40, 50])],
+            gateway: GatewayStats::default(),
+            wall_s: 1.0,
+        };
+        assert_eq!(report.latency_ns_percentile(0.5), Some(30));
+        assert_eq!(report.latency_ns_percentile(0.0), Some(10));
+        assert_eq!(report.latency_ns_percentile(1.0), Some(50));
+        assert_eq!(report.replied_rows(), 5);
+        let empty = ServeReport { sessions: Vec::new(), ..report };
+        assert_eq!(empty.latency_ns_percentile(0.5), None);
+    }
+}

@@ -1,0 +1,240 @@
+//! Per-session codec state for the serving front end.
+//!
+//! The training stack keys codec replicas per *link* — fine when one
+//! trusted pipeline owns the link. A serving front end multiplexes many
+//! mutually-invisible clients over shared stages, and AQ-SGD's
+//! per-example buffers are *state*: if two sessions shared a replica,
+//! one client's activations would become another client's delta
+//! baseline (a correctness bug and a data leak). So the table keys an
+//! independent (encoder, decoder) replica set per (session, boundary),
+//! seeded by a derivation both ends compute from (base seed, session
+//! id) alone — a client's numerics depend only on its own traffic.
+
+use std::collections::BTreeMap;
+
+use crate::codec::quantizer::Rounding;
+use crate::codec::registry::{build_mem_pair, CodecSpec};
+use crate::net::plane::{
+    session_endpoint_rx, session_endpoint_tx, SessionEndpointRx, SessionEndpointTx,
+};
+use crate::util::error::Result;
+
+/// Splitmix-style seed derivation shared by client and server, so the
+/// two halves of each replica pair are built from identical inputs
+/// without any seed exchange on the wire.
+fn mix(base: u64, salt: u64, session: u32) -> u64 {
+    (base ^ salt).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(session as u64)
+}
+
+/// Seed for the forward (client→server activation) boundary of `session`.
+pub fn session_fw_seed(base: u64, session: u32) -> u64 {
+    mix(base, 0xF00D_FACE, session)
+}
+
+/// Seed for the backward (server→client gradient) boundary of `session`.
+pub fn session_bw_seed(base: u64, session: u32) -> u64 {
+    mix(base, 0xBACC_FACE, session)
+}
+
+/// Seed of a session's private data shard (client-side only; listed here
+/// so every per-session seed derivation lives in one place).
+pub fn session_data_seed(base: u64, session: u32) -> u64 {
+    mix(base, 0xDA7A_DA7A, session)
+}
+
+/// Seed of a session's trainable cut-layer parameters (client-side only).
+pub fn session_cut_seed(base: u64, session: u32) -> u64 {
+    mix(base, 0xC117_C117, session)
+}
+
+/// Build the *client* halves for one session: the forward encoder it
+/// sends activations through and the backward decoder it reads
+/// gradients with. Mirrors [`SessionTable::open`] exactly — same
+/// registry builds, same seeds — so the pairs stay bit-lockstep.
+pub fn client_endpoints(
+    spec: &CodecSpec,
+    example_len: usize,
+    rounding: Rounding,
+    base_seed: u64,
+    session: u32,
+) -> Result<(SessionEndpointTx, SessionEndpointRx)> {
+    let fw_enc =
+        build_mem_pair(&spec.fw, example_len, rounding, session_fw_seed(base_seed, session))?.0;
+    let bw_dec =
+        build_mem_pair(&spec.bw, example_len, rounding, session_bw_seed(base_seed, session))?.1;
+    Ok((
+        session_endpoint_tx(session, example_len, fw_enc),
+        session_endpoint_rx(session, example_len, bw_dec),
+    ))
+}
+
+/// Server-side state for one live session.
+pub struct SessionEntry {
+    pub finetune: bool,
+    /// Decodes this session's incoming activations (replica of the
+    /// client's forward encoder).
+    pub fw: SessionEndpointRx,
+    /// Encodes this session's outgoing gradients / head rows (the
+    /// client holds the matching decoder).
+    pub bw: SessionEndpointTx,
+    /// Requests served so far (monotone, for reporting).
+    pub requests: u64,
+}
+
+/// All live sessions' codec replicas, keyed by session id.
+pub struct SessionTable {
+    spec: CodecSpec,
+    example_len: usize,
+    rounding: Rounding,
+    base_seed: u64,
+    entries: BTreeMap<u32, SessionEntry>,
+    /// High-water mark of concurrently open sessions.
+    pub peak: usize,
+}
+
+impl SessionTable {
+    pub fn new(spec: CodecSpec, example_len: usize, rounding: Rounding, base_seed: u64) -> Self {
+        SessionTable {
+            spec,
+            example_len,
+            rounding,
+            base_seed,
+            entries: BTreeMap::new(),
+            peak: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Open a session: build its replica set (server keeps the forward
+    /// decoder + backward encoder). Duplicate ids are a protocol error.
+    pub fn open(&mut self, session: u32, finetune: bool) -> Result<()> {
+        crate::ensure!(
+            !self.entries.contains_key(&session),
+            "session {session} already open"
+        );
+        let fw_dec = build_mem_pair(
+            &self.spec.fw,
+            self.example_len,
+            self.rounding,
+            session_fw_seed(self.base_seed, session),
+        )?
+        .1;
+        let bw_enc = build_mem_pair(
+            &self.spec.bw,
+            self.example_len,
+            self.rounding,
+            session_bw_seed(self.base_seed, session),
+        )?
+        .0;
+        self.entries.insert(
+            session,
+            SessionEntry {
+                finetune,
+                fw: session_endpoint_rx(session, self.example_len, fw_dec),
+                bw: session_endpoint_tx(session, self.example_len, bw_enc),
+                requests: 0,
+            },
+        );
+        self.peak = self.peak.max(self.entries.len());
+        Ok(())
+    }
+
+    pub fn get_mut(&mut self, session: u32) -> Option<&mut SessionEntry> {
+        self.entries.get_mut(&session)
+    }
+
+    /// Drop a session's replicas, returning the entry so the caller can
+    /// report its final codec state to the client.
+    pub fn close(&mut self, session: u32) -> Option<SessionEntry> {
+        self.entries.remove(&session)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CodecSpec {
+        CodecSpec::parse("aqsgd:fw2bw4").expect("spec")
+    }
+
+    #[test]
+    fn open_duplicate_and_close() {
+        let mut t = SessionTable::new(spec(), 8, Rounding::Stochastic, 11);
+        t.open(1, true).expect("open 1");
+        t.open(2, false).expect("open 2");
+        assert!(t.open(1, true).is_err(), "duplicate open must fail");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.peak, 2);
+        assert!(t.close(1).is_some());
+        assert!(t.close(1).is_none());
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.peak, 2, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn client_and_server_halves_are_lockstep_replicas() {
+        let mut t = SessionTable::new(spec(), 4, Rounding::Stochastic, 7);
+        t.open(3, true).expect("open");
+        let (mut ctx, mut crx) =
+            client_endpoints(&spec(), 4, Rounding::Stochastic, 7, 3).expect("client");
+        let e = t.get_mut(3).expect("entry");
+
+        let ids = [42u64];
+        let a = [0.5f32, -1.0, 0.25, 2.0];
+        // forward: client encodes, server decodes; a revisit must ride the
+        // delta path, which only works if the buffer replicas agree.
+        for round in 0..3 {
+            let (_, bytes) = ctx.encode(&ids, &a).expect("enc");
+            let owned = bytes.to_vec();
+            let got = e.fw.decode(&ids, &owned).expect("dec");
+            assert_eq!(got.len(), 4, "round {round}");
+        }
+        assert_eq!(
+            ctx.state_bytes(),
+            e.fw.state_bytes(),
+            "fw replica buffers must hold identical state"
+        );
+        // backward: server encodes, client decodes.
+        let g = [0.1f32, 0.2, -0.3, 0.4];
+        let (_, bytes) = e.bw.encode(&ids, &g).expect("enc");
+        let owned = bytes.to_vec();
+        let got = crx.decode(&ids, &owned).expect("dec");
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn sessions_do_not_share_codec_state() {
+        let mut t = SessionTable::new(spec(), 4, Rounding::Stochastic, 7);
+        t.open(1, true).expect("open 1");
+        t.open(2, true).expect("open 2");
+        let (mut c1, _) = client_endpoints(&spec(), 4, Rounding::Stochastic, 7, 1).expect("c1");
+        let (mut c2, _) = client_endpoints(&spec(), 4, Rounding::Stochastic, 7, 2).expect("c2");
+
+        // Both sessions send the SAME example id: if replicas were shared,
+        // session 2's first visit would wrongly take the delta path after
+        // session 1 populated the buffer.
+        let ids = [7u64];
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let f1 = c1.encode(&ids, &a).expect("enc1").1.to_vec();
+        let f2 = c2.encode(&ids, &a).expect("enc2").1.to_vec();
+        assert_eq!(f1, f2, "identical first visits must encode identically");
+        t.get_mut(1).unwrap().fw.decode(&ids, &f1).expect("dec1");
+        t.get_mut(2).unwrap().fw.decode(&ids, &f2).expect("dec2");
+
+        // Second visit: still identical across sessions (each against its
+        // OWN buffer), and a delta frame differs from the first visit.
+        let a2 = [1.5f32, 2.5, 3.5, 4.5];
+        let d1 = c1.encode(&ids, &a2).expect("enc1b").1.to_vec();
+        let d2 = c2.encode(&ids, &a2).expect("enc2b").1.to_vec();
+        assert_eq!(d1, d2, "isolated sessions with equal traffic stay bit-equal");
+        assert_ne!(d1, f1, "revisit takes the delta path");
+    }
+}

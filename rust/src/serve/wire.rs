@@ -1,0 +1,195 @@
+//! The serving wire envelope: many sessions multiplex one frame
+//! transport, so every client⇄server message is a [`TAG_SESSION`] frame
+//! whose header says which session/request it belongs to and whose
+//! payload wraps the inner codec frame (or handshake text). Rejects ride
+//! the `net::session` session-scoped reject machinery unchanged, so a
+//! shed request and a config-mismatched handshake speak the same frame.
+//!
+//! Header layout (fixed for every kind):
+//! `kind u8 | session u32 | seq u32 | example u64 (2×u32 LE) | flags u8 |
+//! loss f32 | aux u32`.
+
+use crate::codec::frame::{Frame, FrameReader, FrameView, FrameWriter, TAG_HELLO, TAG_SESSION};
+use crate::net::session::{decode_session_reject, SessionReject};
+use crate::util::error::Result;
+
+/// Envelope kinds. `seq` is 0 only during the open handshake, so a
+/// reject with `seq == 0` refuses the session itself while `seq > 0`
+/// sheds one request (the client retransmits the cached frame).
+pub const ENV_OPEN: u8 = 1;
+pub const ENV_ACCEPT: u8 = 2;
+pub const ENV_REQ: u8 = 3;
+pub const ENV_REP: u8 = 4;
+pub const ENV_CLOSE: u8 = 5;
+pub const ENV_CLOSED: u8 = 6;
+
+/// Flag bit: this session fine-tunes its cut layer (requests carry
+/// targets, replies carry the cut gradient + loss). Clear = inference.
+pub const FLAG_FINETUNE: u8 = 1;
+
+/// One parsed envelope header + borrowed payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Envelope<'a> {
+    pub kind: u8,
+    pub session: u32,
+    pub seq: u32,
+    pub example: u64,
+    pub flags: u8,
+    pub loss: f32,
+    /// Kind-specific scalar: `ENV_REQ` = number of target f32s at the
+    /// front of the payload; unused otherwise.
+    pub aux: u32,
+    pub payload: &'a [u8],
+}
+
+/// Everything a serve transport can deliver.
+pub enum ServeMsg<'a> {
+    Env(Envelope<'a>),
+    Reject(SessionReject),
+}
+
+/// Owned header fields for building an envelope.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnvHead {
+    pub kind: u8,
+    pub session: u32,
+    pub seq: u32,
+    pub example: u64,
+    pub flags: u8,
+    pub loss: f32,
+    pub aux: u32,
+}
+
+/// Serialize one envelope frame.
+pub fn env_bytes(h: &EnvHead, payload: &[u8]) -> Vec<u8> {
+    let mut w = FrameWriter::with_capacity(26);
+    w.u8(h.kind)
+        .u32(h.session)
+        .u32(h.seq)
+        .u32(h.example as u32)
+        .u32((h.example >> 32) as u32)
+        .u8(h.flags)
+        .f32(h.loss)
+        .u32(h.aux);
+    Frame::new(TAG_SESSION, w.finish(), payload.to_vec()).to_bytes()
+}
+
+/// Parse one serve-transport frame: a session envelope or a
+/// session-scoped reject. Anything else is a protocol error.
+pub fn parse(bytes: &[u8]) -> Result<ServeMsg<'_>> {
+    let v = FrameView::parse(bytes)?;
+    if v.tag() == TAG_HELLO {
+        if let Some(r) = decode_session_reject(bytes)? {
+            return Ok(ServeMsg::Reject(r));
+        }
+        crate::bail!("serve transport got a non-reject handshake frame");
+    }
+    crate::ensure!(
+        v.tag() == TAG_SESSION,
+        "serve transport expected a session envelope, got tag {}",
+        v.tag()
+    );
+    let mut r = FrameReader::new(v.header());
+    let kind = r.u8()?;
+    let session = r.u32()?;
+    let seq = r.u32()?;
+    let example = r.u32()? as u64 | ((r.u32()? as u64) << 32);
+    let flags = r.u8()?;
+    let loss = r.f32()?;
+    let aux = r.u32()?;
+    r.done()?;
+    crate::ensure!(
+        (ENV_OPEN..=ENV_CLOSED).contains(&kind),
+        "unknown serve envelope kind {kind}"
+    );
+    Ok(ServeMsg::Env(Envelope {
+        kind,
+        session,
+        seq,
+        example,
+        flags,
+        loss,
+        aux,
+        payload: v.payload(),
+    }))
+}
+
+/// `ENV_CLOSED` payload: the server-side codec replica state the session
+/// table held for this session at close, for the client to pin.
+pub fn closed_payload(fw_dec_state: u64, bw_enc_state: u64) -> Vec<u8> {
+    let mut w = FrameWriter::with_capacity(16);
+    w.u32(fw_dec_state as u32)
+        .u32((fw_dec_state >> 32) as u32)
+        .u32(bw_enc_state as u32)
+        .u32((bw_enc_state >> 32) as u32);
+    w.finish()
+}
+
+/// Parse an `ENV_CLOSED` payload back into (fw decoder, bw encoder)
+/// resident state bytes.
+pub fn parse_closed_payload(payload: &[u8]) -> Result<(u64, u64)> {
+    let mut r = FrameReader::new(payload);
+    let fw = r.u32()? as u64 | ((r.u32()? as u64) << 32);
+    let bw = r.u32()? as u64 | ((r.u32()? as u64) << 32);
+    r.done()?;
+    Ok((fw, bw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::session::reject_session_bytes;
+
+    #[test]
+    fn envelope_roundtrips_every_field() {
+        let h = EnvHead {
+            kind: ENV_REQ,
+            session: 77,
+            seq: 3,
+            example: 0xDEAD_BEEF_0000_0042,
+            flags: FLAG_FINETUNE,
+            loss: 1.25,
+            aux: 64,
+        };
+        let b = env_bytes(&h, &[9, 8, 7]);
+        match parse(&b).expect("parse") {
+            ServeMsg::Env(e) => {
+                assert_eq!(e.kind, ENV_REQ);
+                assert_eq!(e.session, 77);
+                assert_eq!(e.seq, 3);
+                assert_eq!(e.example, 0xDEAD_BEEF_0000_0042);
+                assert_eq!(e.flags, FLAG_FINETUNE);
+                assert_eq!(e.loss.to_bits(), 1.25f32.to_bits());
+                assert_eq!(e.aux, 64);
+                assert_eq!(e.payload, &[9, 8, 7]);
+            }
+            ServeMsg::Reject(_) => panic!("expected envelope"),
+        }
+    }
+
+    #[test]
+    fn rejects_parse_through_the_session_machinery() {
+        let b = reject_session_bytes(5, 2, "overloaded");
+        match parse(&b).expect("parse") {
+            ServeMsg::Reject(r) => {
+                assert_eq!(r.session, 5);
+                assert_eq!(r.seq, 2);
+                assert_eq!(r.reason, "overloaded");
+            }
+            ServeMsg::Env(_) => panic!("expected reject"),
+        }
+    }
+
+    #[test]
+    fn closed_payload_roundtrips_u64s() {
+        let p = closed_payload(u64::MAX - 7, 0x0102_0304_0506_0708);
+        assert_eq!(parse_closed_payload(&p).expect("parse"), (u64::MAX - 7, 0x0102_0304_0506_0708));
+    }
+
+    #[test]
+    fn unknown_kind_is_a_descriptive_error() {
+        let b = env_bytes(&EnvHead { kind: 200, ..EnvHead::default() }, &[]);
+        let err = parse(&b).unwrap_err().to_string();
+        assert!(err.contains("kind 200"), "{err}");
+    }
+}

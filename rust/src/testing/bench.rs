@@ -201,6 +201,26 @@ impl BenchSuite {
         self.results.last().expect("just pushed")
     }
 
+    /// Record an externally-measured time metric (ns) under a bench
+    /// name — a latency percentile or a per-item cost derived from one
+    /// macro run, where re-sampling a closure is meaningless. Prints
+    /// the standard human line and lands in the JSON report as a
+    /// time-only result (`bytes_per_iter` null), so `bench-diff` gates
+    /// it exactly like a sampled time bench.
+    pub fn record(&mut self, name: &str, ns: f64) -> &BenchResult {
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_ns: ns,
+            median_ns: ns,
+            stddev_ns: 0.0,
+            iters_per_sample: 1,
+            bytes_per_iter: None,
+        };
+        r.report();
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
     /// Run one throughput bench (`bytes_per_iter` payload bytes per
     /// iteration); prints ns + GB/s and records both for the report.
     pub fn run_throughput(
@@ -291,6 +311,18 @@ mod tests {
         assert_eq!(results[0].get("bytes_per_iter").unwrap().as_f64(), Some(1024.0));
         assert!(results[0].get("gb_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(results[1].get("bytes_per_iter"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn recorded_metrics_render_as_time_only_results() {
+        let mut s = BenchSuite::from_arg_list("unit", &["--quick".to_string()]);
+        s.record("serve/latency_p99", 123456.0);
+        let doc = Json::parse(&s.to_json().render()).unwrap();
+        let results = doc.get("results").unwrap().as_array().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("serve/latency_p99"));
+        assert_eq!(results[0].get("mean_ns").unwrap().as_f64(), Some(123456.0));
+        assert_eq!(results[0].get("median_ns").unwrap().as_f64(), Some(123456.0));
+        assert_eq!(results[0].get("bytes_per_iter"), Some(&Json::Null));
     }
 
     #[test]

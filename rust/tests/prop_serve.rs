@@ -1,0 +1,150 @@
+//! Properties of the serving front end (`aq_sgd::serve`).
+//!
+//! The load-bearing claim is **session isolation**: a session's numerics
+//! depend only on (config, session id) — never on which strangers share
+//! the server, the batches, or the wire. Two interleaved sessions pushed
+//! through the same shared stages with `aqsgd:fw2bw4` must each produce
+//! exactly the loss bits, cut-layer digest, and codec-state words they
+//! produce running alone. That is AQ-SGD's replica-symmetry invariant
+//! lifted to a multi-tenant front end: per-session codec replicas,
+//! frozen server stages, row-wise stage math, per-example frame records.
+
+use std::time::Duration;
+
+use aq_sgd::codec::{CodecSpec, Rounding};
+use aq_sgd::serve::admission::AdmissionCfg;
+use aq_sgd::serve::batch::BatchCfg;
+use aq_sgd::serve::{run_serve, run_serve_sessions, ServeConfig, SessionRecord};
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        sessions: 2,
+        server_stages: 2,
+        example_len: 8,
+        spec: CodecSpec::parse("aqsgd:fw2bw4").expect("spec"),
+        rounding: Rounding::Stochastic,
+        seed: 13,
+        shard: 3,
+        epochs: 3, // revisits: epochs >= 2 exercises the AQ delta path
+        infer_every: 0,
+        batch: BatchCfg { rows: 2, max_wait: Duration::from_micros(100) },
+        workers: 2,
+        latency: Duration::from_micros(20),
+        ..ServeConfig::default()
+    }
+}
+
+/// Every observable a session records, as comparable bit patterns.
+fn bits(r: &SessionRecord) -> (Vec<u32>, u64, u64, (u64, u64), (u64, u64)) {
+    (
+        r.losses.iter().map(|v| v.to_bits()).collect(),
+        r.digest,
+        r.infer_digest,
+        r.client_state,
+        r.server_state,
+    )
+}
+
+fn assert_identical(solo: &SessionRecord, shared: &SessionRecord) {
+    assert_eq!(solo.session, shared.session);
+    assert!(solo.rejected.is_none() && shared.rejected.is_none());
+    assert_eq!(
+        bits(solo),
+        bits(shared),
+        "session {}: numerics changed when strangers shared the server",
+        solo.session
+    );
+}
+
+#[test]
+fn interleaved_fine_tune_sessions_match_their_solo_runs() {
+    let cfg = base_cfg();
+    let solo0 = run_serve_sessions(&cfg, &[0]).expect("solo 0");
+    let solo1 = run_serve_sessions(&cfg, &[1]).expect("solo 1");
+    let both = run_serve_sessions(&cfg, &[0, 1]).expect("interleaved");
+
+    assert_eq!(both.sessions.len(), 2);
+    assert_identical(&solo0.sessions[0], &both.sessions[0]);
+    assert_identical(&solo1.sessions[0], &both.sessions[1]);
+    // sanity: the sessions did real, distinct work
+    assert_eq!(both.sessions[0].losses.len(), 9);
+    assert_ne!(
+        bits(&both.sessions[0]).0,
+        bits(&both.sessions[1]).0,
+        "distinct sessions train distinct cut layers on distinct shards"
+    );
+}
+
+#[test]
+fn inference_and_fine_tune_mix_is_still_isolated() {
+    // infer_every=2: session 0 runs split inference, session 1 fine-tunes,
+    // sharing batches — each must match its solo run bit for bit.
+    let cfg = ServeConfig { infer_every: 2, ..base_cfg() };
+    let solo0 = run_serve_sessions(&cfg, &[0]).expect("solo 0");
+    let solo1 = run_serve_sessions(&cfg, &[1]).expect("solo 1");
+    let both = run_serve_sessions(&cfg, &[0, 1]).expect("mixed");
+
+    assert!(both.sessions[0].losses.is_empty(), "session 0 is inference");
+    assert_eq!(both.sessions[1].losses.len(), 9, "session 1 fine-tunes");
+    assert_identical(&solo0.sessions[0], &both.sessions[0]);
+    assert_identical(&solo1.sessions[0], &both.sessions[1]);
+}
+
+#[test]
+fn isolation_holds_across_batch_geometry() {
+    // Same fleet under different batching knobs: batch shape moves
+    // latency and padding, never a single session-visible bit.
+    let wide = ServeConfig {
+        batch: BatchCfg { rows: 8, max_wait: Duration::from_micros(400) },
+        ..base_cfg()
+    };
+    let narrow = ServeConfig {
+        batch: BatchCfg { rows: 1, max_wait: Duration::from_micros(50) },
+        ..base_cfg()
+    };
+    let a = run_serve_sessions(&wide, &[0, 1]).expect("wide batches");
+    let b = run_serve_sessions(&narrow, &[0, 1]).expect("row-at-a-time");
+    for (x, y) in a.sessions.iter().zip(&b.sessions) {
+        assert_identical(x, y);
+    }
+    assert_eq!(b.gateway.padded_rows, 0, "1-row batches never pad");
+}
+
+#[test]
+fn thousand_concurrent_sessions_with_batching_zero_false_rejects() {
+    // The acceptance bar: >= 1000 concurrent sessions over one gateway
+    // with cross-session batching on, nothing falsely refused. One
+    // worker keeps the schedule canonical: every client's OPEN enters
+    // the FIFO uplink before any reply-driven CLOSE can, so the table's
+    // high-water mark must reach the full fleet.
+    let cfg = ServeConfig {
+        sessions: 1000,
+        server_stages: 1,
+        example_len: 4,
+        shard: 1,
+        epochs: 1,
+        infer_every: 4,
+        batch: BatchCfg { rows: 32, max_wait: Duration::from_micros(200) },
+        admission: AdmissionCfg::default(),
+        workers: 1,
+        latency: Duration::from_micros(5),
+        ..base_cfg()
+    };
+    let report = run_serve(&cfg).expect("serve 1000 sessions");
+    assert_eq!(report.sessions.len(), 1000);
+    assert_eq!(report.rejected_sessions(), 0, "no admission false rejects");
+    assert_eq!(report.gateway.rejected_opens, 0);
+    assert_eq!(report.gateway.shed_requests, 0);
+    assert_eq!(report.gateway.peak_sessions, 1000, "the whole fleet was live at once");
+    assert_eq!(report.replied_rows(), 1000, "every session got its reply");
+    assert_eq!(report.gateway.rows, 1000);
+    assert!(
+        report.gateway.batches < 1000,
+        "cross-session batching coalesced rows ({} batches)",
+        report.gateway.batches
+    );
+    for s in &report.sessions {
+        assert_eq!(s.client_state.0, s.server_state.0, "session {} fw replicas", s.session);
+        assert_eq!(s.client_state.1, s.server_state.1, "session {} bw replicas", s.session);
+    }
+}

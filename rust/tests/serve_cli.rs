@@ -1,0 +1,166 @@
+//! `aq-sgd serve` binary smoke: the serving front end launched the way
+//! an operator launches it. In-process mode must carry a 64-session
+//! fleet with zero admission-gate false rejects (the release CI smoke
+//! runs exactly this), and the TCP split (server process + client
+//! process over loopback) must serve a fleet end to end.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+
+const BIN: &str = env!("CARGO_BIN_EXE_aq-sgd");
+
+fn free_addr() -> String {
+    let sock = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    sock.local_addr().expect("probe addr").to_string()
+}
+
+struct Done {
+    code: Option<i32>,
+    stdout: String,
+    stderr: String,
+}
+
+fn finish(child: Child) -> Done {
+    let out = child.wait_with_output().expect("wait for aq-sgd serve");
+    Done {
+        code: out.status.code(),
+        stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+    }
+}
+
+impl Done {
+    fn assert_ok(&self, what: &str) {
+        assert_eq!(
+            self.code,
+            Some(0),
+            "{what} failed\n--- stdout ---\n{}\n--- stderr ---\n{}",
+            self.stdout,
+            self.stderr
+        );
+    }
+}
+
+fn serve(args: &[&str]) -> Child {
+    Command::new(BIN)
+        .arg("serve")
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn aq-sgd serve")
+}
+
+#[test]
+fn in_process_fleet_of_64_has_zero_false_rejects() {
+    let done = finish(serve(&[
+        "--sessions",
+        "64",
+        "--stages",
+        "2",
+        "--el",
+        "8",
+        "--shard",
+        "2",
+        "--epochs",
+        "2",
+        "--batch-rows",
+        "8",
+        "--workers",
+        "4",
+        "--expect-no-rejects",
+    ]));
+    done.assert_ok("in-process serve");
+    assert!(
+        done.stdout.contains("no-rejects assertion passed"),
+        "missing assertion marker:\n{}",
+        done.stdout
+    );
+    assert!(
+        done.stdout.contains("SERVE-OK sessions=64 served=64"),
+        "missing SERVE-OK marker:\n{}",
+        done.stdout
+    );
+}
+
+#[test]
+fn session_cap_refuses_descriptively_and_fails_the_assertion() {
+    // Over-cap fleet with --expect-no-rejects must exit non-zero and say
+    // why — the admission gate is observable, not a silent drop.
+    let done = finish(serve(&[
+        "--sessions",
+        "6",
+        "--max-sessions",
+        "2",
+        "--shard",
+        "1",
+        "--epochs",
+        "1",
+        "--workers",
+        "1",
+        "--expect-no-rejects",
+    ]));
+    assert_ne!(done.code, Some(0), "over-cap run must fail the no-rejects assertion");
+    assert!(
+        done.stderr.contains("admission gate fired"),
+        "expected the assertion failure on stderr:\n{}",
+        done.stderr
+    );
+}
+
+#[test]
+fn tcp_server_and_client_processes_serve_a_fleet() {
+    let addr = free_addr();
+    let server = serve(&[
+        "--sessions",
+        "16",
+        "--stages",
+        "2",
+        "--el",
+        "8",
+        "--shard",
+        "2",
+        "--epochs",
+        "2",
+        "--listen",
+        &addr,
+        "--conns",
+        "1",
+        "--stall-timeout-ms",
+        "20000",
+        "--expect-no-rejects",
+    ]);
+    let client = serve(&[
+        "--sessions",
+        "16",
+        "--stages",
+        "2",
+        "--el",
+        "8",
+        "--shard",
+        "2",
+        "--epochs",
+        "2",
+        "--connect",
+        &addr,
+        "--session-base",
+        "0",
+        "--stall-timeout-ms",
+        "20000",
+        "--expect-no-rejects",
+    ]);
+    let client = finish(client);
+    let server = finish(server);
+    client.assert_ok("serve client process");
+    server.assert_ok("serve server process");
+    assert!(
+        client.stdout.contains("SERVE-OK sessions=16 served=16"),
+        "client fleet incomplete:\n{}",
+        client.stdout
+    );
+    assert!(
+        server.stdout.contains("gateway_rows=64"),
+        "server should have batched 16 sessions x 4 requests:\n{}",
+        server.stdout
+    );
+}
