@@ -8,6 +8,9 @@
 //!   --seeds N        repeat with N seeds, report mean±std (Figure 6)
 //!   --half           FP16 wire baseline alongside (Figure 8)
 //!   --from-scratch   rescale-init + longer run (Figure 7 flavour)
+//!   --pareto         adaptive-family scheme x bits x bandwidth sweep
+//!                    (machine-readable results/fig3_pareto.csv; add
+//!                    --quick for the scheduled-CI sized run)
 //!   --epochs N
 //!
 //!     cargo run --release --example fig3_convergence
@@ -18,10 +21,78 @@ use aq_sgd::codec::CodecSpec;
 use aq_sgd::config::{Cli, TrainConfig};
 use aq_sgd::exp;
 use aq_sgd::metrics::Table;
+use aq_sgd::pipeline::exec::{run_virtual, ExecConfig};
 use aq_sgd::util::stats;
+
+/// The Pareto sweep behind the scheduled convergence-sweep job: every
+/// compression family (plain DirectQ, AQ-SGD, tile-adaptive, Hadamard-
+/// rotated tiles, low-rank delta) at three bit budgets, trained on the
+/// artifact-free virtual-clock executor (first-party stage model, real
+/// registry codecs — runs on any CI runner with no JAX export). Each
+/// scheme trains once; the loss trajectory is independent of the
+/// simulated bandwidth, so per-bandwidth comm_seconds is derived
+/// (comm_bytes / bandwidth) rather than re-trained.
+fn run_pareto(cli: &Cli) -> Result<()> {
+    let quick = cli.bool("quick");
+    let steps = cli.usize("steps", if quick { 8 } else { 40 })?;
+    let bandwidths_bps: [f64; 3] = [1e9, 1e8, 1e7];
+    let families = ["directq", "aqsgd", "tile:64:directq", "had:tile:64:directq", "lr:4:directq"];
+
+    // (scheme spec, fw bits, bw bits); fp32 anchors the frontier
+    let mut methods: Vec<(String, u8, u8)> = vec![("fp32".into(), 32, 32)];
+    for (fw, bw) in [(2u8, 4u8), (3, 6), (4, 8)] {
+        for fam in families {
+            methods.push((format!("{fam}:fw{fw}bw{bw}"), fw, bw));
+        }
+    }
+
+    let mut csv =
+        String::from("scheme,fw_bits,bw_bits,bandwidth_bps,final_loss,comm_bytes,comm_seconds\n");
+    let mut table =
+        Table::new(&["scheme", "final loss", "comm MB", "s @1Gbps", "s @100Mbps", "s @10Mbps"]);
+    for (spec, fw, bw) in &methods {
+        let mut c = ExecConfig::small(CodecSpec::parse(spec)?);
+        c.n_stages = 4;
+        c.n_micro = 4;
+        c.micro_batch = 2;
+        c.example_len = if quick { 64 } else { 256 };
+        c.steps = steps;
+        c.seed = 7;
+        println!("== pareto {spec} ==");
+        let trace = run_virtual(&c)?;
+        let last = trace.steps.last().expect("no steps recorded");
+        let loss = last.loss;
+        let bytes: u64 = trace
+            .steps
+            .iter()
+            .map(|s| s.fw_wire_bytes.iter().sum::<u64>() + s.bw_wire_bytes.iter().sum::<u64>())
+            .sum();
+        let loss_cell = if loss.is_finite() {
+            format!("{loss:.4}")
+        } else {
+            "diverged".to_string()
+        };
+        let mut row = vec![spec.clone(), loss_cell, format!("{:.3}", bytes as f64 / 1e6)];
+        for bw_bps in bandwidths_bps {
+            let secs = bytes as f64 / bw_bps;
+            csv.push_str(&format!("{spec},{fw},{bw},{bw_bps:.0},{loss:.6},{bytes},{secs:.4}\n"));
+            row.push(format!("{secs:.3}"));
+        }
+        table.row(row);
+    }
+    println!("\nFigure 3 Pareto — adaptive compression family, loss vs comm cost:");
+    print!("{}", table.render());
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig3_pareto.csv", csv)?;
+    println!("pareto table -> results/fig3_pareto.csv");
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let cli = Cli::from_env();
+    if cli.bool("pareto") {
+        return run_pareto(&cli);
+    }
     let epochs = cli.usize("epochs", 8)?;
     let seeds = cli.usize("seeds", 1)?;
     let half = cli.bool("half");

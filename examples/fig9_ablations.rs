@@ -69,6 +69,33 @@ fn main() -> Result<()> {
     println!("\nFigure 9(e,f) — message-buffer precision (paper: m8 ~ f32, m2 degrades slightly):");
     print!("{}", t_m.render());
 
+    // ---- adaptive compression family (tile / had / lr) at fw2 bw4 ----
+    // same bit budget as the DirectQ column above, so the table isolates
+    // what tiling, rotation, and low-rank deltas buy at fixed wire cost
+    let mut t_adapt = Table::new(&["scheme (fw2 bw4)", "final loss", "comm MB"]);
+    for spec in [
+        "directq:fw2bw4",
+        "tile:16:directq:fw2bw4",
+        "tile:64:directq:fw2bw4",
+        "had:directq:fw2bw4",
+        "had:tile:64:directq:fw2bw4",
+        "lr:4:directq:fw2bw4",
+        "lr:8:directq:fw2bw4",
+    ] {
+        let mut cfg = base("tiny", epochs);
+        cfg.compression = CodecSpec::parse(spec)?;
+        println!("== adapt {spec} ==");
+        let run = exp::run_variant(cfg, spec)?;
+        t_adapt.row(vec![
+            spec.to_string(),
+            format!("{:.4}", run.stats.final_train_loss),
+            format!("{:.2}", run.stats.comm_bytes as f64 / 1e6),
+        ]);
+        all.push(run);
+    }
+    println!("\nFigure 9 (ext) — adaptive family at a fixed fw2/bw4 budget:");
+    print!("{}", t_adapt.render());
+
     // ---- (a,b)+(g,h) stages / model size ----
     if with_small {
         let mut t_k = Table::new(&["model (K)", "FP32", "AQ-SGD fw2 bw4", "DirectQ fw2 bw4"]);

@@ -169,6 +169,172 @@ def frame_ef_directq_visits(gs, bits):
     return visits
 
 
+# ---- adaptive family (tile / had / lr), PR 10 ----
+
+
+def fwht_block(x):
+    """Bit-exact mirror of codec::hadamard::fwht_block: radix-2
+    butterflies at strides 1, 2, 4, ... then a 1/sqrt(n) rescale, every
+    op in f32 in the rust loop order."""
+    n = len(x)
+    h = 1
+    while h < n:
+        i = 0
+        while i < n:
+            for j in range(i, i + h):
+                a = F32(x[j])
+                b = F32(x[j + h])
+                x[j] = F32(a + b)
+                x[j + h] = F32(a - b)
+            i += 2 * h
+        h *= 2
+    if n > 1:
+        s = F32(F32(1.0) / np.sqrt(F32(n)))
+        for j in range(n):
+            x[j] = F32(x[j] * s)
+
+
+def rotate_rows(x, el):
+    """codec::hadamard::rotate_rows: greedy maximal power-of-2 blocks
+    per el-element row, each FWHT'd in place."""
+    for r0 in range(0, len(x), el):
+        row = x[r0:r0 + el]
+        off = 0
+        while off < len(row):
+            blk = 1 << ((len(row) - off).bit_length() - 1)
+            fwht_block(row[off:off + blk])
+            off += blk
+
+
+def frame_had_directq(x, el, bits):
+    """had:<q-bits> wire image: the inner DirectQ frame of the rotated
+    values (the wrapper is invisible on the wire)."""
+    rot = np.array(x, dtype=F32, copy=True)
+    rotate_rows(rot, el)
+    return frame_directq(rot, bits)
+
+
+def tile_allocate_bits(msq, budget):
+    """Pure-f64 mirror of codec::tile::allocate_bits (comparisons and
+    exact *4 / /4 steps only, so python floats == rust f64 exactly)."""
+    n = len(msq)
+    if n == 0:
+        return []
+    floor = 1e-24
+    mean = 0.0
+    for m in msq:
+        mean += m
+    mean /= n
+    reference = mean if mean > floor else floor
+    out = []
+    for m in msq:
+        ratio = (m if m > floor else floor) / reference
+        extra = 0
+        while ratio >= 4.0 and extra < 3:
+            ratio /= 4.0
+            extra += 1
+        while ratio < 0.25 and extra > -3:
+            ratio *= 4.0
+            extra -= 1
+        out.append(max(1, min(8, budget + extra)))
+    cap = n * budget
+    total = sum(out)
+    while total > cap:
+        pick = None
+        for i, b in enumerate(out):
+            if b <= 1:
+                continue
+            if pick is None or msq[i] < msq[pick]:
+                pick = i
+        if pick is None:
+            break
+        out[pick] -= 1
+        total -= 1
+    while total < cap:
+        pick = None
+        for i, b in enumerate(out):
+            if b >= 8:
+                continue
+            if pick is None or msq[i] > msq[pick]:
+                pick = i
+        if pick is None:
+            break
+        out[pick] += 1
+        total += 1
+    return out
+
+
+def frame_tile(x, el, t, budget):
+    """codec::tile wire image: header budget:u8 | t:u32 | n:u32, payload
+    per tile = bits:u8 | scale:f32 | packed codes."""
+    tiles = []
+    msq = []
+    for r0 in range(0, len(x), el):
+        row = x[r0:r0 + el]
+        for t0 in range(0, len(row), t):
+            tile = row[t0:t0 + t]
+            tiles.append(tile)
+            acc = 0.0  # rust accumulates (v as f64)^2 sequentially
+            for v in tile:
+                acc += float(v) * float(v)
+            msq.append(acc / len(tile))
+    bits = tile_allocate_bits(msq, budget)
+    payload = b""
+    for tile, b in zip(tiles, bits):
+        scale, codes = rust_encode_emulated(tile, b)
+        payload += bytes([b]) + struct.pack("<f", float(scale)) + pack_lsb_first(codes, b)
+    header = struct.pack("<BII", budget, t, len(x))
+    return frame_bytes(8, header, payload)
+
+
+def lr_comb_basis(rank, el):
+    """codec::lowrank::Sketch comb init: row r is unit-norm over
+    positions j % rank == r (deterministic, seed-free)."""
+    basis = np.zeros((rank, el), dtype=F32)
+    for r in range(rank):
+        count = (el - r + rank - 1) // rank
+        v = F32(F32(1.0) / np.sqrt(F32(count)))
+        for j in range(r, el, rank):
+            basis[r, j] = v
+    return basis
+
+
+def frame_lr_visits(xs, ids, rank, bits):
+    """codec::lowrank wire images for one record: full first visit
+    (kind 0 + raw row), then a delta visit (kind 1 + rank coeffs +
+    embedded DirectQ residual frame). Valid only for full + one delta:
+    the sketch stays at its comb init until a delta has flowed, so no
+    Oja/orthonormalize emulation is needed here."""
+    assert len(xs) == 2, "emulation covers exactly full + one delta visit"
+    el = len(xs[0])
+    basis = lr_comb_basis(rank, el)
+    visits = []
+    m = None
+    for x in xs:
+        header = struct.pack("<BII", rank, el, len(ids))
+        if m is None:
+            payload = bytes([0]) + f32le(x)
+            m = np.array(x, dtype=F32, copy=True)
+        else:
+            delta = np.empty(el, dtype=F32)
+            for j in range(el):
+                delta[j] = F32(F32(x[j]) - F32(m[j]))
+            coeffs = []
+            for r in range(rank):  # sequential f32 fold, rust dot_row order
+                acc = F32(0.0)
+                for j in range(el):
+                    acc = F32(acc + F32(basis[r, j] * delta[j]))
+                coeffs.append(acc)
+            resid = np.array(delta, dtype=F32, copy=True)
+            for r in range(rank):  # r-ascending, rust subtract_projection
+                c = coeffs[r]
+                for j in range(el):
+                    resid[j] = F32(resid[j] - F32(c * basis[r, j]))
+            payload = bytes([1]) + f32le(coeffs) + frame_directq(resid, bits)
+        visits.append((np.array(x, dtype=F32), frame_bytes(9, header, payload)))
+    return visits
+
+
 def frame_cases():
     """(name, scheme spec, ids, [(x, frame_bytes), ...] per visit)."""
     rng = np.random.default_rng(0xF4A3)
@@ -202,6 +368,27 @@ def frame_cases():
 
     g2 = [(rng.standard_normal(6) * 0.05).astype(F32) for _ in range(2)]
     yield "frame_ef_q2_el6", "ef:q2", [0], frame_ef_directq_visits(g2, 2)
+
+    # tile: three 4-element tiles with decade-spread power so the
+    # variance-driven bit map ([1, 3, 8] here, avg == budget 4) is
+    # exercised, not a constant row
+    tl = np.concatenate([
+        rng.standard_normal(4).astype(F32) * F32(0.01),
+        rng.standard_normal(4).astype(F32),
+        rng.standard_normal(4).astype(F32) * F32(10.0),
+    ]).astype(F32)
+    yield "frame_tile4_q4_el12", "tile:4:q4", [0], [(tl, frame_tile(tl, 12, 4, 4))]
+
+    # had: el = 12 pins the greedy 8 + 4 block decomposition and the
+    # butterfly order / 1/sqrt(n) scaling inside each block
+    hd = (rng.standard_normal(12) * 1.5).astype(F32)
+    yield "frame_had_q4_el12", "had:q4", [0], [(hd, frame_had_directq(hd, 12, 4))]
+
+    # lr: lossless full first visit, then a delta visit projected on the
+    # pristine comb basis with the residual through the inner DirectQ
+    l0 = rng.standard_normal(6).astype(F32)
+    l1 = (l0 + (0.02 * rng.standard_normal(6)).astype(F32)).astype(F32)
+    yield "frame_lr2_q4_el6", "lr:2:q4", [7], frame_lr_visits([l0, l1], [7], 2, 4)
 
 
 def write_frames():

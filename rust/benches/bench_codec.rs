@@ -138,6 +138,11 @@ fn main() {
         specs.push(format!("topk0.2@{bits}"));
         specs.push(format!("ef:q{bits}"));
     }
+    // the adaptive family (tile / had / lr), one representative each
+    // plus the composed Hadamard-rotated tile quantizer
+    for spec in ["tile:64:q4", "had:q4", "had:tile:64:q4", "lr:4:q4"] {
+        specs.push(spec.into());
+    }
     for spec in specs {
         let scheme = SchemeSpec::parse(&spec).unwrap();
         let (mut enc, mut dec) = build_mem_pair(&scheme, el, Rounding::Nearest, 9).unwrap();

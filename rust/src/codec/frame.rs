@@ -48,6 +48,14 @@ pub const TAG_HELLO: u8 = 6;
 /// payload wraps an inner codec frame — many sessions multiplex one
 /// transport, and this tag is how the demux tells them apart.
 pub const TAG_SESSION: u8 = 7;
+/// Tile-wise adaptive quantization (`codec::tile`): the header carries
+/// (budget, tile length, n) and the payload is a per-tile sequence of
+/// (bits, scale, packed codes) records — the variance-driven bit map
+/// rides with the data it describes.
+pub const TAG_TILE: u8 = 8;
+/// Low-rank delta codec (`codec::lowrank`): per-record full/coefficient
+/// sections followed by one embedded inner-codec residual frame.
+pub const TAG_LR: u8 = 9;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {

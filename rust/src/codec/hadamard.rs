@@ -1,0 +1,289 @@
+//! Hadamard-rotation wrapper codec: `had:<inner>` (TAH-QUANT style).
+//!
+//! A Fast Walsh–Hadamard transform is applied in place to every example
+//! row before the inner quantizer sees it, and the exact same transform
+//! undoes it after the inner decoder reconstructs. Because the
+//! orthonormal Hadamard matrix `H/√n` is involutory (`(H/√n)² = I`),
+//! rotate and un-rotate are literally the same function — there is no
+//! separate inverse path that could drift out of sync.
+//!
+//! Why rotate at all: uniform quantizers spend their levels on the
+//! per-message max-abs scale, so a single outlier coordinate wastes
+//! almost the whole code book. The rotation smears every coordinate
+//! across all of them (each output is a ±1 combination of all inputs,
+//! scaled by 1/√n), flattening outliers toward a near-Gaussian profile
+//! that low-bit uniform quantization handles far better — the TAH-QUANT
+//! observation (arxiv 2506.01352), also exploited by QuIP/QuaRot-style
+//! weight quantizers.
+//!
+//! Rows whose length is not a power of two are decomposed greedily into
+//! maximal power-of-2 blocks (e.g. 96 → 64 + 32), each rotated
+//! independently; a length-1 block passes through unchanged. The
+//! butterfly order and the `1/√B` scaling are pinned byte-exactly by the
+//! golden fixtures (`gen_golden.py` mirrors `fwht_block` loop for loop),
+//! so the wire image is stable across releases.
+//!
+//! Like `ef:`, the wrapper is invisible on the wire: frames carry the
+//! inner codec's tag and layout, of rotated values.
+
+use super::{encode_to_frame, BoundaryCodec, EncodeStats, Frame, FrameBuf, FrameView};
+use crate::util::error::Result;
+
+/// In-place orthonormal FWHT over one power-of-2 block: radix-2
+/// butterflies at strides 1, 2, 4, …, then a `1/√n` rescale. Exactly
+/// self-inverse in exact arithmetic; in f32 the round trip is a
+/// contraction within a few ulp per element.
+pub fn fwht_block(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two(), "fwht block length {n} is not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    if n > 1 {
+        let s = (n as f32).sqrt().recip();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+fn floor_pow2(n: usize) -> usize {
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// Rotate every `el`-element row of `x` in place, decomposing each row
+/// greedily into maximal power-of-2 blocks. Self-inverse: calling it
+/// twice reconstructs the input (up to f32 roundoff).
+pub fn rotate_rows(x: &mut [f32], el: usize) {
+    debug_assert!(el >= 1 && x.len() % el == 0);
+    for row in x.chunks_mut(el) {
+        let mut off = 0;
+        while off < row.len() {
+            let b = floor_pow2(row.len() - off);
+            fwht_block(&mut row[off..off + b]);
+            off += b;
+        }
+    }
+}
+
+/// The `had:` wrapper. Both halves are the same type: the encoder half
+/// wraps the inner encoder, the decoder half the inner decoder, and the
+/// rotation runs on whichever side of the inner codec the data passes.
+pub struct HadCodec {
+    inner: Box<dyn BoundaryCodec>,
+    /// elements per example record — the rotation's row stride
+    el: usize,
+    /// rotated-message scratch, reused across messages
+    rot: Vec<f32>,
+}
+
+impl HadCodec {
+    pub fn new(inner: Box<dyn BoundaryCodec>, el: usize) -> Self {
+        assert!(el >= 1, "had codec needs el >= 1");
+        HadCodec { inner, el, rot: Vec::new() }
+    }
+}
+
+impl BoundaryCodec for HadCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        crate::ensure!(
+            a.len() == ids.len() * self.el,
+            "had message length {} != {} ids x {} elements",
+            a.len(),
+            ids.len(),
+            self.el
+        );
+        self.rot.clear();
+        self.rot.extend_from_slice(a);
+        rotate_rows(&mut self.rot, self.el);
+        // NaN/Inf inputs rotate to NaN/Inf and are rejected by the inner
+        // quantizer's own checked_scale, like any other activation
+        self.inner.encode_into(ids, &self.rot, out)
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let mut out = self.inner.decode(ids, frame)?;
+        crate::ensure!(
+            out.len() == ids.len() * self.el,
+            "had inner codec decoded {} elements, boundary expects {} ids x {} elements",
+            out.len(),
+            ids.len(),
+            self.el
+        );
+        rotate_rows(&mut out, self.el);
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        crate::ensure!(
+            out.len() == ids.len() * self.el,
+            "had decode buffer has {} elements, boundary expects {} ids x {} elements",
+            out.len(),
+            ids.len(),
+            self.el
+        );
+        self.inner.decode_into(ids, frame, out)?;
+        // the orthonormal transform is its own inverse
+        rotate_rows(out, self.el);
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        format!("had:{}", self.inner.label())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.inner.state_bytes()
+    }
+
+    fn take_stats(&mut self) -> EncodeStats {
+        self.inner.take_stats()
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.inner.set_workers(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::frame::TAG_DIRECTQ;
+    use crate::codec::registry::{build_mem_pair, SchemeSpec};
+    use crate::codec::Rounding;
+    use crate::util::Rng;
+
+    fn pair(spec: &str, el: usize, seed: u64) -> (Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>) {
+        let scheme = SchemeSpec::parse(spec).unwrap();
+        build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap()
+    }
+
+    #[test]
+    fn fwht_butterfly_order_is_pinned() {
+        // n = 2: [(a+b)/√2, (a-b)/√2]
+        let mut x = [3.0f32, 1.0];
+        fwht_block(&mut x);
+        let s = 2f32.sqrt().recip();
+        assert_eq!(x, [4.0 * s, 2.0 * s]);
+        // n = 4 impulse: every output = 1/√4 = 0.5
+        let mut x = [1.0f32, 0.0, 0.0, 0.0];
+        fwht_block(&mut x);
+        assert_eq!(x, [0.5; 4]);
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_and_energy_preserving() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 8, 64, 256] {
+            let orig: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut x = orig.clone();
+            fwht_block(&mut x);
+            let e0: f64 = orig.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let e1: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            assert!((e0 - e1).abs() < 1e-3 * (1.0 + e0), "n={n}: {e0} vs {e1}");
+            fwht_block(&mut x);
+            for (a, b) in orig.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-4, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_pow2_rows_decompose_greedily() {
+        // 12 = 8 + 4: rotating twice round-trips each block
+        let mut rng = Rng::new(9);
+        let orig: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        rotate_rows(&mut x, 12);
+        rotate_rows(&mut x, 12);
+        for (a, b) in orig.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn wire_format_is_the_inner_frame() {
+        let el = 16;
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..el).map(|_| rng.normal()).collect();
+        let (mut enc, mut dec) = pair("had:q4", el, 5);
+        let f = enc.encode(&[0], &a).unwrap();
+        assert_eq!(f.tag(), TAG_DIRECTQ);
+        let out = dec.decode(&[0], &f).unwrap();
+        assert_eq!(out.len(), el);
+        // rotation + 4-bit quantization + inverse: bounded reconstruction
+        let scale: f32 = a.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (x, y) in a.iter().zip(&out) {
+            assert!((x - y).abs() < scale, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn rotation_tames_an_outlier() {
+        // one huge coordinate among zeros: plain q2 zeroes everything
+        // else; with the rotation the energy survives quantization
+        let el = 64;
+        let mut a = vec![0.05f32; el];
+        a[11] = 50.0;
+        let (mut enc, mut dec) = pair("had:q2", el, 1);
+        let f = enc.encode(&[0], &a).unwrap();
+        let out = dec.decode(&[0], &f).unwrap();
+        let err: f64 = a
+            .iter()
+            .zip(&out)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let (mut enc_q, mut dec_q) = pair("q2", el, 1);
+        let fq = enc_q.encode(&[0], &a).unwrap();
+        let out_q = dec_q.decode(&[0], &fq).unwrap();
+        let err_q: f64 = a
+            .iter()
+            .zip(&out_q)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < err_q, "rotated {err} vs plain {err_q}");
+    }
+
+    #[test]
+    fn shape_mismatch_and_non_finite_are_errors() {
+        let (mut enc, _) = pair("had:q4", 8, 1);
+        assert!(enc.encode(&[0, 1], &vec![0.0f32; 8]).is_err());
+        let mut bad = vec![0.5f32; 8];
+        bad[3] = f32::NAN;
+        assert!(enc.encode(&[0], &bad).is_err());
+    }
+
+    #[test]
+    fn scratch_matches_allocating_path() {
+        let el = 24;
+        let mut rng = Rng::new(13);
+        let a: Vec<f32> = (0..el).map(|_| rng.normal()).collect();
+        let (mut enc_a, _) = pair("had:q4", el, 21);
+        let (mut enc_b, mut dec) = pair("had:q4", el, 21);
+        let f = enc_a.encode(&[0], &a).unwrap();
+        let mut buf = FrameBuf::new();
+        enc_b.encode_into(&[0], &a, &mut buf).unwrap();
+        assert_eq!(buf.as_bytes(), f.to_bytes().as_slice());
+        let mut out = vec![0f32; el];
+        dec.decode_into(&[0], &buf.view(), &mut out).unwrap();
+        assert_eq!(out, dec.decode(&[0], &f).unwrap());
+    }
+}

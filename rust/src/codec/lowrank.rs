@@ -1,0 +1,699 @@
+//! Low-rank delta codec: `lr:<rank>:<inner>` (the CompactFusion-style
+//! quantized-cache + low-rank baseline, SNIPPETS.md snippet 1).
+//!
+//! Like AQ-SGD, both halves keep a per-record baseline `m` and ship the
+//! change `Δ = x − m`; unlike AQ-SGD, the change is first projected
+//! onto a rank-`r` orthonormal sketch `Q` of the recent delta stream:
+//!
+//! ```text
+//! c = Q Δ                       r coefficients, sent as f32
+//! resid = Δ − Qᵀ c              the part the sketch misses
+//! frame = coeffs ++ inner.encode(resid)
+//! Δ̂ = Qᵀ c + inner.decode(...)  both sides reconstruct identically
+//! m ← m + Δ̂;  Q ← oja(Q, Δ̂)     replica-symmetric advance
+//! ```
+//!
+//! Activation deltas across adjacent steps are strongly low-rank (the
+//! CompactFusion observation), so the `r` exactly-transmitted
+//! coefficients carry most of the energy and the inner quantizer only
+//! sees the small residual. The sketch is updated by streaming power
+//! iteration — one Oja step per decoded delta, then a Gram–Schmidt
+//! re-orthonormalization per message — driven *only* by wire-derived
+//! values (`Δ̂`, never `Δ`), which is what keeps the sender's and
+//! receiver's sketches bit-identical without ever shipping `Q`. The
+//! sender learns `inner.decode(...)` the same way `ef:` does: through a
+//! replica of the receiver's inner decoder.
+//!
+//! Frame format (tag 9):
+//!
+//! ```text
+//! header : rank: u8 | el: u32 | n_records: u32
+//! payload: per record, in batch order:
+//!            0x00 | el × f32          lossless first visit
+//!            0x01 | rank × f32        projection coefficients
+//!          then, if any delta record: one embedded inner-codec frame
+//!          of all residual rows (records in delta order)
+//! ```
+//!
+//! The basis is initialized to a deterministic orthonormal "comb"
+//! (row r is uniform over positions `j % rank == r`), so both halves —
+//! and the python golden-fixture generator — start identical without
+//! sharing any RNG state.
+
+use super::frame::{FrameBuf, FrameReader, FrameView, TAG_LR};
+use super::quantizer::UniformQuantizer;
+use super::{encode_to_frame, BoundaryCodec, EncodeStats, Frame};
+use crate::store::ActivationStore;
+use crate::util::error::Result;
+
+const REC_FULL: u8 = 0;
+const REC_DELTA: u8 = 1;
+
+/// Oja step size for the streaming power iteration. Any fixed value
+/// keeps the halves in lockstep (both run the same update on the same
+/// wire-derived deltas); 0.5 converges in a few messages on the
+/// near-stationary delta streams this codec sees.
+const ETA: f32 = 0.5;
+
+/// Rank-`r` orthonormal sketch of the delta stream. All arithmetic is
+/// sequential f32 in pinned loop order — the golden fixtures depend on
+/// the exact operation sequence.
+struct Sketch {
+    rank: usize,
+    el: usize,
+    /// row-major `rank × el`
+    basis: Vec<f32>,
+}
+
+impl Sketch {
+    fn new(rank: usize, el: usize) -> Self {
+        assert!(
+            rank >= 1 && rank <= el,
+            "sketch rank {rank} out of range for {el}-element records"
+        );
+        let mut s = Sketch { rank, el, basis: vec![0.0; rank * el] };
+        for r in 0..rank {
+            s.reinit_row(r);
+        }
+        s
+    }
+
+    /// Deterministic orthonormal init (and degenerate-row fallback):
+    /// row `r` is a unit-norm comb over positions `j % rank == r`.
+    fn reinit_row(&mut self, r: usize) {
+        let (rank, el) = (self.rank, self.el);
+        let count = (el - r + rank - 1) / rank;
+        let v = (count as f32).sqrt().recip();
+        let row = &mut self.basis[r * el..(r + 1) * el];
+        row.fill(0.0);
+        let mut j = r;
+        while j < el {
+            row[j] = v;
+            j += rank;
+        }
+    }
+
+    fn dot_row(&self, r: usize, d: &[f32]) -> f32 {
+        let row = &self.basis[r * self.el..(r + 1) * self.el];
+        let mut acc = 0f32;
+        for (b, x) in row.iter().zip(d) {
+            acc += b * x;
+        }
+        acc
+    }
+
+    /// `row -= Σ_r c_r · basis_r`, r ascending.
+    fn subtract_projection(&self, coeffs: &[f32], row: &mut [f32]) {
+        for (r, &c) in coeffs.iter().enumerate() {
+            let b = &self.basis[r * self.el..(r + 1) * self.el];
+            for (rv, bv) in row.iter_mut().zip(b) {
+                *rv -= c * bv;
+            }
+        }
+    }
+
+    /// `row += Σ_r c_r · basis_r`, r ascending.
+    fn add_projection(&self, coeffs: &[f32], row: &mut [f32]) {
+        for (r, &c) in coeffs.iter().enumerate() {
+            let b = &self.basis[r * self.el..(r + 1) * self.el];
+            for (rv, bv) in row.iter_mut().zip(b) {
+                *rv += c * bv;
+            }
+        }
+    }
+
+    /// One streaming power-iteration (Oja) step toward the dominant
+    /// delta directions: `b_r += η (b_r · d) d`.
+    fn update(&mut self, d: &[f32]) {
+        for r in 0..self.rank {
+            let g = ETA * self.dot_row(r, d);
+            let row = &mut self.basis[r * self.el..(r + 1) * self.el];
+            for (bv, dv) in row.iter_mut().zip(d) {
+                *bv += g * dv;
+            }
+        }
+    }
+
+    /// Modified Gram–Schmidt, run once per message after the Oja steps.
+    /// A row that collapses to ~zero norm is re-seeded from the comb
+    /// init — deterministic, so the halves stay in lockstep.
+    fn orthonormalize(&mut self) {
+        let el = self.el;
+        for r in 0..self.rank {
+            let degenerate = {
+                let (head, tail) = self.basis.split_at_mut(r * el);
+                let row = &mut tail[..el];
+                for p in 0..r {
+                    let prev = &head[p * el..(p + 1) * el];
+                    let mut proj = 0f32;
+                    for (bv, pv) in row.iter().zip(prev.iter()) {
+                        proj += bv * pv;
+                    }
+                    for (bv, pv) in row.iter_mut().zip(prev.iter()) {
+                        *bv -= proj * pv;
+                    }
+                }
+                let mut norm2 = 0f32;
+                for &bv in row.iter() {
+                    norm2 += bv * bv;
+                }
+                if norm2 > 1e-30 {
+                    let inv = norm2.sqrt().recip();
+                    for bv in row.iter_mut() {
+                        *bv *= inv;
+                    }
+                    false
+                } else {
+                    true
+                }
+            };
+            if degenerate {
+                self.reinit_row(r);
+            }
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        4 * self.basis.len() as u64
+    }
+}
+
+/// Encoder-only state: the inner-decoder replica plus encode scratch.
+struct EncSide {
+    /// Replica of the receiver's inner decoder — advances through the
+    /// same embedded frames, so the sender reconstructs exactly what
+    /// the receiver will (the `ef:` argument).
+    replica: Box<dyn BoundaryCodec>,
+    /// per-message residual rows (delta order), the inner codec's input
+    resid: Vec<f32>,
+    /// one delta-row scratch
+    delta: Vec<f32>,
+    /// embedded inner-frame scratch
+    sub: FrameBuf,
+    stats: EncodeStats,
+}
+
+/// The `lr:` wrapper codec. Built through the registry
+/// (`lr:4:directq:fw4bw4`, `lr:2:q4`, ...).
+pub struct LrCodec {
+    el: usize,
+    ns: u32,
+    /// inner residual codec: the encoder half holds the inner encoder,
+    /// the decoder half the inner decoder
+    inner: Box<dyn BoundaryCodec>,
+    /// per-record baselines `m` (both halves, advanced in lockstep)
+    store: Box<dyn ActivationStore>,
+    sketch: Sketch,
+    /// per-message scratch shared by both halves, reused across messages
+    ids_delta: Vec<u64>,
+    delta_pos: Vec<u32>,
+    coeffs: Vec<f32>,
+    /// inner-decoded residual rows, overwritten in place with Δ̂
+    deq: Vec<f32>,
+    m: Vec<f32>,
+    enc: Option<EncSide>,
+}
+
+impl LrCodec {
+    /// Effective rank: a configured rank above the record length is
+    /// clamped (a 4-element record cannot have 8 independent
+    /// directions), never an error — the registry builds schemes at
+    /// whatever `example_len` the boundary has.
+    fn eff_rank(rank: u8, el: usize) -> usize {
+        (rank as usize).min(el).max(1)
+    }
+
+    /// The sending half: inner encoder + receiver-decoder replica +
+    /// baseline store.
+    pub fn encoder(
+        rank: u8,
+        inner_enc: Box<dyn BoundaryCodec>,
+        replica_dec: Box<dyn BoundaryCodec>,
+        store: Box<dyn ActivationStore>,
+        el: usize,
+        ns: u32,
+    ) -> Self {
+        LrCodec {
+            el,
+            ns,
+            inner: inner_enc,
+            store,
+            sketch: Sketch::new(Self::eff_rank(rank, el), el),
+            ids_delta: Vec::new(),
+            delta_pos: Vec::new(),
+            coeffs: Vec::new(),
+            deq: Vec::new(),
+            m: Vec::new(),
+            enc: Some(EncSide {
+                replica: replica_dec,
+                resid: Vec::new(),
+                delta: Vec::new(),
+                sub: FrameBuf::new(),
+                stats: EncodeStats::default(),
+            }),
+        }
+    }
+
+    /// The receiving half.
+    pub fn decoder(
+        rank: u8,
+        inner_dec: Box<dyn BoundaryCodec>,
+        store: Box<dyn ActivationStore>,
+        el: usize,
+        ns: u32,
+    ) -> Self {
+        LrCodec {
+            el,
+            ns,
+            inner: inner_dec,
+            store,
+            sketch: Sketch::new(Self::eff_rank(rank, el), el),
+            ids_delta: Vec::new(),
+            delta_pos: Vec::new(),
+            coeffs: Vec::new(),
+            deq: Vec::new(),
+            m: Vec::new(),
+            enc: None,
+        }
+    }
+
+    fn check(&self, ids: &[u64], tag: u8, header: &[u8]) -> Result<()> {
+        crate::ensure!(tag == TAG_LR, "lr codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
+        let (rank, el, n_rec) = (h.u8()?, h.u32()? as usize, h.u32()? as usize);
+        h.done()?;
+        crate::ensure!(
+            rank as usize == self.sketch.rank,
+            "lr frame has rank {rank}, boundary is configured for {}",
+            self.sketch.rank
+        );
+        crate::ensure!(
+            el == self.el,
+            "lr frame has {el}-element records, boundary expects {}",
+            self.el
+        );
+        crate::ensure!(
+            n_rec == ids.len(),
+            "lr frame carries {n_rec} records, boundary expects {}",
+            ids.len()
+        );
+        Ok(())
+    }
+}
+
+/// Shared sender/receiver advance: overwrite each inner-decoded
+/// residual row with the full reconstructed delta (`resid + Qᵀc`),
+/// advance that record's baseline, then feed every reconstructed delta
+/// through one power-iteration step. Both halves run exactly this code
+/// on exactly the wire-derived values — that is the whole replica
+///-symmetry argument, so keep it a single function.
+fn apply_deltas(
+    sketch: &mut Sketch,
+    store: &mut dyn ActivationStore,
+    ns: u32,
+    ids_delta: &[u64],
+    coeffs: &[f32],
+    deq: &mut [f32],
+    m: &mut Vec<f32>,
+    mut emit: impl FnMut(usize, &[f32]),
+) -> Result<()> {
+    let el = sketch.el;
+    let rank = sketch.rank;
+    for (k, id) in ids_delta.iter().enumerate() {
+        let dh = &mut deq[k * el..(k + 1) * el];
+        sketch.add_projection(&coeffs[k * rank..(k + 1) * rank], dh);
+        let key = (ns, *id);
+        crate::ensure!(store.get(key, m), "lr delta for record {id} with no baseline");
+        crate::ensure!(
+            m.len() == el,
+            "lr baseline for record {id} has {} elements, want {el}",
+            m.len()
+        );
+        for (mv, dv) in m.iter_mut().zip(dh.iter()) {
+            *mv += *dv;
+        }
+        store.put(key, m);
+        emit(k, m);
+    }
+    // sketch updates run after all reconstructions: every coefficient
+    // in this message was computed against the pre-message basis
+    for k in 0..ids_delta.len() {
+        sketch.update(&deq[k * el..(k + 1) * el]);
+    }
+    sketch.orthonormalize();
+    Ok(())
+}
+
+impl BoundaryCodec for LrCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        let el = self.el;
+        let rank = self.sketch.rank;
+        let enc = self
+            .enc
+            .as_mut()
+            .ok_or_else(|| crate::err!("lr decoder half cannot encode (build the encoder half)"))?;
+        crate::ensure!(!ids.is_empty(), "lr transfer with no record ids");
+        crate::ensure!(
+            a.len() == ids.len() * el,
+            "lr message length {} != {} ids x {} elements",
+            a.len(),
+            ids.len(),
+            el
+        );
+        // fail fast on NaN/Inf before any store or sketch state advances
+        UniformQuantizer::checked_scale(a)?;
+        out.start(TAG_LR);
+        out.u8(rank as u8).u32(el as u32).u32(ids.len() as u32);
+        out.end_header();
+        self.ids_delta.clear();
+        self.delta_pos.clear();
+        self.coeffs.clear();
+        enc.resid.clear();
+        let mut first_visits = 0usize;
+        let mut abs_sum = 0f64;
+        for (i, id) in ids.iter().enumerate() {
+            let row = &a[i * el..(i + 1) * el];
+            let key = (self.ns, *id);
+            if self.store.get(key, &mut self.m) {
+                crate::ensure!(
+                    self.m.len() == el,
+                    "lr baseline for record {id} has {} elements, want {el}",
+                    self.m.len()
+                );
+                enc.delta.clear();
+                enc.delta.extend(row.iter().zip(&self.m).map(|(x, m)| x - m));
+                // finite x minus finite m can still overflow to ±inf
+                UniformQuantizer::checked_scale(&enc.delta)?;
+                out.u8(REC_DELTA);
+                let c0 = self.coeffs.len();
+                for r in 0..rank {
+                    let c = self.sketch.dot_row(r, &enc.delta);
+                    self.coeffs.push(c);
+                    out.f32(c);
+                }
+                let start = enc.resid.len();
+                enc.resid.extend_from_slice(&enc.delta);
+                self.sketch.subtract_projection(&self.coeffs[c0..], &mut enc.resid[start..]);
+                for &d in enc.delta.iter() {
+                    abs_sum += d.abs() as f64;
+                }
+                self.ids_delta.push(*id);
+                self.delta_pos.push(i as u32);
+            } else {
+                // Algorithm-1-style lossless first visit
+                out.u8(REC_FULL);
+                out.f32_slice(row);
+                self.store.put(key, row);
+                first_visits += 1;
+            }
+        }
+        let n_delta = self.ids_delta.len();
+        if n_delta == 0 {
+            enc.stats = EncodeStats { mean_abs_delta: None, first_visits };
+            return out.finish();
+        }
+        // residual rows ride through the inner codec as one embedded
+        // sub-frame at the end of the payload
+        self.inner.encode_into(&self.ids_delta, &enc.resid, &mut enc.sub)?;
+        out.bytes(enc.sub.as_bytes());
+        out.finish()?;
+        // replica decode: learn the receiver's exact reconstruction,
+        // then advance baselines + sketch exactly like the receiver
+        self.deq.resize(n_delta * el, 0.0);
+        enc.replica.decode_into(&self.ids_delta, &enc.sub.view(), &mut self.deq)?;
+        enc.stats = EncodeStats {
+            mean_abs_delta: Some(abs_sum / (n_delta * el) as f64),
+            first_visits,
+        };
+        apply_deltas(
+            &mut self.sketch,
+            self.store.as_mut(),
+            self.ns,
+            &self.ids_delta,
+            &self.coeffs,
+            &mut self.deq,
+            &mut self.m,
+            |_k, _row| {},
+        )
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; ids.len() * self.el];
+        self.decode_into(ids, &frame.view(), &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        self.check(ids, frame.tag(), frame.header())?;
+        let el = self.el;
+        let rank = self.sketch.rank;
+        crate::ensure!(
+            out.len() == ids.len() * el,
+            "lr frame has {} elements, boundary expects {}",
+            ids.len() * el,
+            out.len()
+        );
+        let mut p = FrameReader::new(frame.payload());
+        self.ids_delta.clear();
+        self.delta_pos.clear();
+        self.coeffs.clear();
+        for (i, id) in ids.iter().enumerate() {
+            let kind = p.u8()?;
+            let row = &mut out[i * el..(i + 1) * el];
+            match kind {
+                REC_FULL => {
+                    p.f32_into(row)?;
+                    self.store.put((self.ns, *id), row);
+                }
+                REC_DELTA => {
+                    crate::ensure!(
+                        self.store.contains((self.ns, *id)),
+                        "lr delta for record {id} with no baseline (no full visit decoded)"
+                    );
+                    for _ in 0..rank {
+                        self.coeffs.push(p.f32()?);
+                    }
+                    self.ids_delta.push(*id);
+                    self.delta_pos.push(i as u32);
+                }
+                other => crate::bail!("lr frame has unknown record kind {other}"),
+            }
+        }
+        if self.ids_delta.is_empty() {
+            return p.done();
+        }
+        let sub = p.bytes(p.remaining())?;
+        let view = FrameView::parse(sub)?;
+        self.deq.resize(self.ids_delta.len() * el, 0.0);
+        self.inner.decode_into(&self.ids_delta, &view, &mut self.deq)?;
+        let pos = &self.delta_pos;
+        apply_deltas(
+            &mut self.sketch,
+            self.store.as_mut(),
+            self.ns,
+            &self.ids_delta,
+            &self.coeffs,
+            &mut self.deq,
+            &mut self.m,
+            |k, row| {
+                let i = pos[k] as usize;
+                out[i * el..(i + 1) * el].copy_from_slice(row);
+            },
+        )
+    }
+
+    fn label(&self) -> String {
+        format!("lr:{}:{}", self.sketch.rank, self.inner.label())
+    }
+
+    /// Baselines + sketch + the inner codec's own state. Both halves
+    /// carry the same three pieces, advanced through the same frames —
+    /// the property tests pin sender/receiver equality.
+    fn state_bytes(&self) -> u64 {
+        self.store.resident_bytes() + self.sketch.bytes() + self.inner.state_bytes()
+    }
+
+    fn take_stats(&mut self) -> EncodeStats {
+        self.enc.as_mut().map(|e| std::mem::take(&mut e.stats)).unwrap_or_default()
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.inner.set_workers(threads);
+        if let Some(enc) = &mut self.enc {
+            enc.replica.set_workers(threads);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::registry::{build_mem_pair, SchemeSpec};
+    use crate::codec::Rounding;
+    use crate::util::Rng;
+
+    fn pair(spec: &str, el: usize, seed: u64) -> (Box<dyn BoundaryCodec>, Box<dyn BoundaryCodec>) {
+        let scheme = SchemeSpec::parse(spec).unwrap();
+        build_mem_pair(&scheme, el, Rounding::Nearest, seed).unwrap()
+    }
+
+    #[test]
+    fn comb_init_is_orthonormal() {
+        for (rank, el) in [(1usize, 5usize), (2, 6), (3, 7), (4, 4)] {
+            let s = Sketch::new(rank, el);
+            for r in 0..rank {
+                for q in 0..rank {
+                    let mut dot = 0f64;
+                    for j in 0..el {
+                        dot += (s.basis[r * el + j] as f64) * (s.basis[q * el + j] as f64);
+                    }
+                    let want = if r == q { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-6, "rank {rank} el {el}: <{r},{q}> = {dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_visit_is_lossless_then_deltas_flow() {
+        let el = 12;
+        let (mut enc, mut dec) = pair("lr:3:q4", el, 5);
+        let mut rng = Rng::new(2);
+        let x0: Vec<f32> = (0..el).map(|_| rng.normal()).collect();
+        let f0 = enc.encode(&[7], &x0).unwrap();
+        assert_eq!(dec.decode(&[7], &f0).unwrap(), x0, "first visit must be exact");
+        // second visit: small drift, reconstruction tracks it closely
+        let x1: Vec<f32> = x0.iter().map(|v| v + 0.01).collect();
+        let f1 = enc.encode(&[7], &x1).unwrap();
+        let out = dec.decode(&[7], &f1).unwrap();
+        for (x, y) in x1.iter().zip(&out) {
+            assert!((x - y).abs() < 0.01, "{x} vs {y}");
+        }
+        // the delta frame is far smaller than the full visit
+        assert!(f1.wire_bytes() < f0.wire_bytes(), "{} vs {}", f1.wire_bytes(), f0.wire_bytes());
+    }
+
+    #[test]
+    fn replica_symmetry_over_serialized_frames() {
+        // sender and receiver advance baselines AND sketches through the
+        // wire alone: state_bytes equal every round, reconstructions
+        // bit-identical between wire and memory paths
+        let el = 10;
+        let (mut enc, mut dec) = pair("lr:2:q4", el, 9);
+        let mut rng = Rng::new(4);
+        let mut x: Vec<f32> = (0..2 * el).map(|_| rng.normal()).collect();
+        for round in 0..5 {
+            let f = enc.encode(&[1, 2], &x).unwrap();
+            let wire = Frame::from_bytes(&f.to_bytes()).unwrap();
+            let out = dec.decode(&[1, 2], &wire).unwrap();
+            assert_eq!(out.len(), x.len());
+            assert_eq!(enc.state_bytes(), dec.state_bytes(), "round {round}");
+            for v in x.iter_mut() {
+                *v += 0.02 * rng.normal();
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_captures_a_dominant_direction() {
+        // drive a rank-1 delta stream; after a few messages the sketch
+        // should absorb it, shrinking the residual the inner codec sees
+        let el = 16;
+        let (mut enc, mut dec) = pair("lr:1:q8", el, 3);
+        let mut rng = Rng::new(8);
+        let dir: Vec<f32> = (0..el).map(|_| rng.normal()).collect();
+        let mut x = vec![0f32; el];
+        let f = enc.encode(&[0], &x).unwrap();
+        dec.decode(&[0], &f).unwrap();
+        let mut last_err = f64::MAX;
+        for step in 1..=6 {
+            for (xv, dv) in x.iter_mut().zip(&dir) {
+                *xv += 0.1 * dv * (1.0 + 0.01 * step as f32);
+            }
+            let f = enc.encode(&[0], &x).unwrap();
+            let out = dec.decode(&[0], &f).unwrap();
+            let err: f64 = x.iter().zip(&out).map(|(a, b)| ((a - b) as f64).abs()).sum();
+            last_err = err;
+        }
+        // reconstruction of a low-rank stream is tight at 8-bit residual
+        assert!(last_err < 0.01 * el as f64, "final err {last_err}");
+    }
+
+    #[test]
+    fn rank_clamps_to_record_length() {
+        // rank 8 on 3-element records: builds, runs, header says 3
+        let el = 3;
+        let (mut enc, mut dec) = pair("lr:8:q4", el, 1);
+        let x = vec![0.5f32, -0.25, 0.125];
+        let f0 = enc.encode(&[0], &x).unwrap();
+        dec.decode(&[0], &f0).unwrap();
+        let f1 = enc.encode(&[0], &x).unwrap();
+        assert_eq!(f1.header()[0], 3, "effective rank in header");
+        assert_eq!(dec.decode(&[0], &f1).unwrap().len(), el);
+    }
+
+    #[test]
+    fn hostile_frames_are_errors_not_panics() {
+        let el = 8;
+        let (mut enc, mut dec) = pair("lr:2:q4", el, 6);
+        let x = vec![0.25f32; el];
+        let f0 = enc.encode(&[0], &x).unwrap();
+        dec.decode(&[0], &f0).unwrap();
+        let f1 = enc.encode(&[0], &x).unwrap();
+        // unknown record kind
+        let mut payload = f1.payload().to_vec();
+        payload[0] = 7;
+        assert!(dec.decode(&[0], &Frame::new(f1.tag(), f1.header().to_vec(), payload)).is_err());
+        // truncated embedded sub-frame
+        let cut = f1.payload().len() - 3;
+        let bad = Frame::new(f1.tag(), f1.header().to_vec(), f1.payload()[..cut].to_vec());
+        assert!(dec.decode(&[0], &bad).is_err());
+        // delta for a record the receiver has never seen in full
+        assert!(dec.decode(&[99], &f1).is_err());
+        // rank/el/count mismatches in the header
+        for (off, val) in [(0usize, 5u8), (1, 99), (5, 9)] {
+            let mut hdr = f1.header().to_vec();
+            hdr[off] = val;
+            assert!(dec.decode(&[0], &Frame::new(f1.tag(), hdr, f1.payload().to_vec())).is_err());
+        }
+        // non-finite input rejected before any state advances
+        let before = enc.state_bytes();
+        let mut nan = x.clone();
+        nan[1] = f32::NAN;
+        assert!(enc.encode(&[0], &nan).is_err());
+        assert_eq!(enc.state_bytes(), before);
+    }
+
+    #[test]
+    fn decoder_half_cannot_encode() {
+        let (_, mut dec) = pair("lr:2:q4", 8, 1);
+        let err = dec.encode(&[0], &vec![0.1f32; 8]).unwrap_err();
+        assert!(err.to_string().contains("decoder half"), "{err}");
+    }
+
+    #[test]
+    fn composes_with_stateful_and_wrapper_inners() {
+        // lr over AQ (nested stores) and ef over lr both advance in
+        // lockstep across serialized frames
+        for spec in ["lr:2:aq4", "ef:lr:2:q4"] {
+            let el = 6;
+            let (mut enc, mut dec) = pair(spec, el, 11);
+            let mut rng = Rng::new(13);
+            let mut x: Vec<f32> = (0..el).map(|_| rng.normal()).collect();
+            for round in 0..4 {
+                let f = enc.encode(&[3], &x).unwrap();
+                let wire = Frame::from_bytes(&f.to_bytes()).unwrap();
+                let out = dec.decode(&[3], &wire).unwrap();
+                assert_eq!(out.len(), el, "{spec} round {round}");
+                assert_eq!(enc.state_bytes(), dec.state_bytes(), "{spec} round {round}");
+                for v in x.iter_mut() {
+                    *v += 0.01 * rng.normal();
+                }
+            }
+        }
+    }
+}

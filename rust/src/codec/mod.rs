@@ -34,18 +34,24 @@ pub mod delta;
 pub mod ef;
 pub mod f16;
 pub mod frame;
+pub mod hadamard;
+pub mod lowrank;
 pub mod pack;
 pub mod par;
 pub mod quantizer;
 pub mod registry;
 pub mod schemes;
 pub mod theory;
+pub mod tile;
 pub mod topk;
 pub mod tp;
 
 pub use delta::{AqCodec, AqState};
 pub use ef::EfCodec;
 pub use frame::{Frame, FrameBuf, FrameView};
+pub use hadamard::HadCodec;
+pub use lowrank::LrCodec;
+pub use tile::TileCodec;
 pub use par::Workers;
 pub use quantizer::{Rounding, UniformQuantizer};
 pub use registry::{CodecSpec, SchemeSpec};

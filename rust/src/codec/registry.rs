@@ -10,9 +10,13 @@
 //!           | "aqsgd:fw<bits>bw<bits>"        AQ fw, DirectQ bw (Alg. 1)
 //!           | "topk:<frac>@<bits>"            top-k both directions
 //!           | "ef:" spec                      error feedback around both
+//!           | "tile:<T>:" spec                tile-adaptive bits (DirectQ inner)
+//!           | "had:" spec                     Hadamard rotation around both
+//!           | "lr:<rank>:" spec               low-rank delta around both
 //!           | "hybrid:<dir>/<dir>"            any fw/bw composition
 //! dir      := "fp32" | "fp16" | "q<bits>" | "aq<bits>"
 //!           | "topk<frac>@<bits>" | "ef:" dir
+//!           | "tile:<T>:" dir | "had:" dir | "lr:<rank>:" dir
 //! ```
 //!
 //! e.g. `"hybrid:aq2/topk0.2@8"` is Appendix H.6's split-learning scheme
@@ -32,8 +36,11 @@ use crate::util::Rng;
 
 use super::delta::AqCodec;
 use super::ef::EfCodec;
+use super::hadamard::HadCodec;
+use super::lowrank::LrCodec;
 use super::quantizer::Rounding;
 use super::schemes::{DirectQCodec, F16Codec, Raw32Codec, TopKCodec};
+use super::tile::TileCodec;
 use super::BoundaryCodec;
 
 /// One direction's compression scheme.
@@ -52,6 +59,25 @@ pub enum SchemeSpec {
     /// Error-feedback wrapper around any inner scheme (§4.3 / Fig. 5's
     /// "QuantizedAdam"-style gradient compressor; see `codec::ef`).
     Ef { inner: Box<SchemeSpec> },
+    /// Tile-wise adaptive quantization: T-element tiles, per-tile scale,
+    /// variance-driven bit allocation around an average `bits` budget
+    /// (TAH-QUANT style; see `codec::tile`).
+    Tile { t: u32, bits: u8 },
+    /// Fast Walsh–Hadamard rotation applied before (and inverted after)
+    /// any inner scheme (see `codec::hadamard`).
+    Had { inner: Box<SchemeSpec> },
+    /// CompactFusion-style low-rank delta baseline wrapping an inner
+    /// residual codec (see `codec::lowrank`).
+    Lr { rank: u8, inner: Box<SchemeSpec> },
+}
+
+/// Every grammar production reachable from [`SchemeSpec::parse`] —
+/// the closed vocabulary the scheme-coverage CI guard checks
+/// [`example_specs`] against. Adding a `SchemeSpec` variant without
+/// extending this list (and the `production` match) fails to compile;
+/// adding it here without an `example_specs` entry fails the guard.
+pub fn grammar_productions() -> &'static [&'static str] {
+    &["fp32", "fp16", "directq", "aq", "topk", "ef", "tile", "had", "lr"]
 }
 
 /// Everything a scheme needs to build its encoder/decoder halves.
@@ -73,13 +99,47 @@ impl SchemeSpec {
     /// Parse one direction spec (the `dir` grammar above).
     pub fn parse(s: &str) -> Result<SchemeSpec> {
         let s = s.trim();
+        Self::parse_at(s, s, 0)
+    }
+
+    /// The recursive worker behind [`parse`]: `s` is the fragment being
+    /// parsed, `whole` the full user-supplied spec, and `off` the byte
+    /// offset of `s` within `whole` — so rejection messages for malformed
+    /// *nested* wrapper specs name the offending token and its position
+    /// rather than re-printing the fragment as an "unknown scheme".
+    ///
+    /// [`parse`]: Self::parse
+    fn parse_at(s: &str, whole: &str, off: usize) -> Result<SchemeSpec> {
         match s {
             "fp32" => return Ok(SchemeSpec::Raw32),
             "fp16" => return Ok(SchemeSpec::F16),
             _ => {}
         }
         if let Some(rest) = s.strip_prefix("ef:") {
-            return Ok(SchemeSpec::Ef { inner: Box::new(SchemeSpec::parse(rest)?) });
+            crate::ensure!(
+                !rest.is_empty(),
+                "ef: missing inner scheme at byte {} in {whole:?}",
+                off + 3
+            );
+            return Ok(SchemeSpec::Ef {
+                inner: Box::new(Self::parse_at(rest, whole, off + 3)?),
+            });
+        }
+        if let Some(rest) = s.strip_prefix("had:") {
+            crate::ensure!(
+                !rest.is_empty(),
+                "had: missing inner scheme at byte {} in {whole:?}",
+                off + 4
+            );
+            return Ok(SchemeSpec::Had {
+                inner: Box::new(Self::parse_at(rest, whole, off + 4)?),
+            });
+        }
+        if let Some(rest) = s.strip_prefix("tile:") {
+            return parse_tile(rest, whole, off + 5);
+        }
+        if let Some(rest) = s.strip_prefix("lr:") {
+            return parse_lr(rest, whole, off + 3);
         }
         if let Some(rest) = s.strip_prefix("topk") {
             return parse_topk(rest, s);
@@ -90,7 +150,40 @@ impl SchemeSpec {
         if let Some(bits) = s.strip_prefix('q') {
             return Ok(SchemeSpec::DirectQ { bits: parse_bits_value(bits, s)? });
         }
-        crate::bail!("unknown scheme {s:?} (fp32|fp16|q<bits>|aq<bits>|topk<frac>@<bits>|ef:<dir>)")
+        crate::bail!(
+            "unknown scheme {s:?} at byte {off} in {whole:?} \
+             (fp32|fp16|q<bits>|aq<bits>|topk<frac>@<bits>|ef:<dir>|tile:<T>:<dir>|had:<dir>|lr:<rank>:<dir>)"
+        )
+    }
+
+    /// The grammar production this scheme's outermost constructor came
+    /// from — exhaustive on purpose, so a new variant cannot be added
+    /// without registering its production (the coverage guard then
+    /// demands an [`example_specs`] entry).
+    pub fn production(&self) -> &'static str {
+        match self {
+            SchemeSpec::Raw32 => "fp32",
+            SchemeSpec::F16 => "fp16",
+            SchemeSpec::DirectQ { .. } => "directq",
+            SchemeSpec::Aq { .. } => "aq",
+            SchemeSpec::TopK { .. } => "topk",
+            SchemeSpec::Ef { .. } => "ef",
+            SchemeSpec::Tile { .. } => "tile",
+            SchemeSpec::Had { .. } => "had",
+            SchemeSpec::Lr { .. } => "lr",
+        }
+    }
+
+    /// Collect the productions of this scheme and every nested inner
+    /// scheme into `out` (`ef:lr:4:q4` covers `ef`, `lr`, and `directq`).
+    pub fn productions(&self, out: &mut std::collections::BTreeSet<&'static str>) {
+        out.insert(self.production());
+        match self {
+            SchemeSpec::Ef { inner } | SchemeSpec::Had { inner } | SchemeSpec::Lr { inner, .. } => {
+                inner.productions(out)
+            }
+            _ => {}
+        }
     }
 
     /// Canonical spec fragment (round-trips through [`SchemeSpec::parse`]).
@@ -102,6 +195,9 @@ impl SchemeSpec {
             SchemeSpec::Aq { bits } => format!("aq{bits}"),
             SchemeSpec::TopK { frac, bits } => format!("topk{frac}@{bits}"),
             SchemeSpec::Ef { inner } => format!("ef:{}", inner.spec_string()),
+            SchemeSpec::Tile { t, bits } => format!("tile:{t}:q{bits}"),
+            SchemeSpec::Had { inner } => format!("had:{}", inner.spec_string()),
+            SchemeSpec::Lr { rank, inner } => format!("lr:{rank}:{}", inner.spec_string()),
         }
     }
 
@@ -111,7 +207,9 @@ impl SchemeSpec {
     pub fn has_first_visit(&self) -> bool {
         match self {
             SchemeSpec::Aq { .. } => true,
-            SchemeSpec::Ef { inner } => inner.has_first_visit(),
+            // lr sends lossless full records on first visit (like AQ)
+            SchemeSpec::Lr { .. } => true,
+            SchemeSpec::Ef { inner } | SchemeSpec::Had { inner } => inner.has_first_visit(),
             _ => false,
         }
     }
@@ -185,6 +283,63 @@ impl SchemeSpec {
                 (
                     Box::new(EfCodec::encoder(inner_enc, replica_dec, example_len)),
                     Box::new(EfCodec::decoder(inner_dec)),
+                )
+            }
+            SchemeSpec::Tile { t, bits } => (
+                Box::new(TileCodec::new(*t, *bits, ctx.rounding, ctx.example_len, ctx.seed)),
+                Box::new(TileCodec::new(*t, *bits, ctx.rounding, ctx.example_len, ctx.seed ^ 1)),
+            ),
+            SchemeSpec::Had { inner } => {
+                let example_len = ctx.example_len;
+                let (inner_enc, inner_dec) = inner.build_pair(ctx)?;
+                (
+                    Box::new(HadCodec::new(inner_enc, example_len)),
+                    Box::new(HadCodec::new(inner_dec, example_len)),
+                )
+            }
+            SchemeSpec::Lr { rank, inner } => {
+                // Like `ef:`, the encoder carries a replica of the
+                // receiver's inner decoder; unlike `ef:`, both halves
+                // also carry baseline stores of their own, and the
+                // inner pair gets namespaced store roles so a stateful
+                // inner (lr:4:aq2) cannot collide with the baselines.
+                let example_len = ctx.example_len;
+                let replica_dec = {
+                    let mut mk = |role: &str| (ctx.mk_store)(&format!("lr_replica_{role}"));
+                    let mut rctx = BuildCtx {
+                        example_len,
+                        rounding: ctx.rounding,
+                        seed: ctx.seed,
+                        ns: ctx.ns,
+                        hlo: ctx.hlo.clone(),
+                        mk_store: &mut mk,
+                    };
+                    inner.build_pair(&mut rctx)?.1
+                };
+                let (inner_enc, inner_dec) = {
+                    let mut mk = |role: &str| (ctx.mk_store)(&format!("lr_inner_{role}"));
+                    let mut ictx = BuildCtx {
+                        example_len,
+                        rounding: ctx.rounding,
+                        seed: ctx.seed,
+                        ns: ctx.ns,
+                        hlo: ctx.hlo.clone(),
+                        mk_store: &mut mk,
+                    };
+                    inner.build_pair(&mut ictx)?
+                };
+                let enc_store = (ctx.mk_store)("enc")?;
+                let dec_store = (ctx.mk_store)("dec")?;
+                (
+                    Box::new(LrCodec::encoder(
+                        *rank,
+                        inner_enc,
+                        replica_dec,
+                        enc_store,
+                        example_len,
+                        ctx.ns,
+                    )),
+                    Box::new(LrCodec::decoder(*rank, inner_dec, dec_store, example_len, ctx.ns)),
                 )
             }
         })
@@ -287,11 +442,65 @@ impl CodecSpec {
         }
         if let Some(spec) = s.strip_prefix("ef:") {
             // full inner spec ("ef:directq:fw4bw4") or a single direction
-            // scheme applied to both ("ef:q4")
+            // scheme applied to both ("ef:q4"); the fallback re-parses the
+            // whole string so errors carry true byte positions
             if let Ok(inner) = CodecSpec::parse(spec) {
                 return Ok(CodecSpec::ef(inner));
             }
-            let scheme = SchemeSpec::Ef { inner: Box::new(SchemeSpec::parse(spec)?) };
+            let scheme = SchemeSpec::parse(s)?;
+            return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
+        }
+        if let Some(spec) = s.strip_prefix("had:") {
+            // same shape as ef: — "had:directq:fw2bw4" wraps per
+            // direction, "had:q4" applies one scheme to both
+            if let Ok(inner) = CodecSpec::parse(spec) {
+                return Ok(CodecSpec {
+                    fw: SchemeSpec::Had { inner: Box::new(inner.fw) },
+                    bw: SchemeSpec::Had { inner: Box::new(inner.bw) },
+                });
+            }
+            let scheme = SchemeSpec::parse(s)?;
+            return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
+        }
+        if let Some(rest) = s.strip_prefix("tile:") {
+            let (t_str, inner) = rest.split_once(':').ok_or_else(|| {
+                crate::err!(
+                    "tile spec {s:?} needs tile:<T>:<inner>, missing inner after {rest:?} at byte 5"
+                )
+            })?;
+            let t = parse_tile_len(t_str, s, 5)?;
+            let inner_off = 5 + t_str.len() + 1;
+            if let Ok(ispec) = CodecSpec::parse(inner) {
+                return match (ispec.fw, ispec.bw) {
+                    (SchemeSpec::DirectQ { bits: f }, SchemeSpec::DirectQ { bits: b }) => {
+                        Ok(CodecSpec {
+                            fw: SchemeSpec::Tile { t, bits: f },
+                            bw: SchemeSpec::Tile { t, bits: b },
+                        })
+                    }
+                    _ => crate::bail!(
+                        "tile: inner must be a direct quantizer (q<bits> or directq:fwXbwY), \
+                         got {inner:?} at byte {inner_off} in {s:?}"
+                    ),
+                };
+            }
+            let scheme = SchemeSpec::parse(s)?;
+            return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
+        }
+        if let Some(rest) = s.strip_prefix("lr:") {
+            let (r_str, _) = rest.split_once(':').ok_or_else(|| {
+                crate::err!(
+                    "lr spec {s:?} needs lr:<rank>:<inner>, missing inner after {rest:?} at byte 3"
+                )
+            })?;
+            let rank = parse_lr_rank(r_str, s, 3)?;
+            if let Ok(ispec) = CodecSpec::parse(&rest[r_str.len() + 1..]) {
+                return Ok(CodecSpec {
+                    fw: SchemeSpec::Lr { rank, inner: Box::new(ispec.fw) },
+                    bw: SchemeSpec::Lr { rank, inner: Box::new(ispec.bw) },
+                });
+            }
+            let scheme = SchemeSpec::parse(s)?;
             return Ok(CodecSpec { fw: scheme.clone(), bw: scheme });
         }
         if let Some(spec) = s.strip_prefix("hybrid:") {
@@ -302,7 +511,8 @@ impl CodecSpec {
         }
         crate::bail!(
             "unknown compression {s:?} (fp32 | fp16 | directq:fwXbwY | aqsgd:fwXbwY | \
-             topk:<frac>@<bits> | ef:<spec> | hybrid:<fw>/<bw>)"
+             topk:<frac>@<bits> | ef:<spec> | tile:<T>:<spec> | had:<spec> | \
+             lr:<rank>:<spec> | hybrid:<fw>/<bw>)"
         )
     }
 
@@ -311,6 +521,25 @@ impl CodecSpec {
         if let (SchemeSpec::Ef { inner: f }, SchemeSpec::Ef { inner: b }) = (&self.fw, &self.bw) {
             let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
             return format!("ef:{}", inner.spec_string());
+        }
+        if let (SchemeSpec::Had { inner: f }, SchemeSpec::Had { inner: b }) = (&self.fw, &self.bw) {
+            let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+            return format!("had:{}", inner.spec_string());
+        }
+        if let (SchemeSpec::Lr { rank: rf, inner: f }, SchemeSpec::Lr { rank: rb, inner: b }) =
+            (&self.fw, &self.bw)
+        {
+            if rf == rb {
+                let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+                return format!("lr:{rf}:{}", inner.spec_string());
+            }
+        }
+        if let (SchemeSpec::Tile { t: tf, bits: f }, SchemeSpec::Tile { t: tb, bits: b }) =
+            (&self.fw, &self.bw)
+        {
+            if tf == tb {
+                return format!("tile:{tf}:directq:fw{f}bw{b}");
+            }
         }
         match (&self.fw, &self.bw) {
             (SchemeSpec::Raw32, SchemeSpec::Raw32) => "fp32".into(),
@@ -333,6 +562,25 @@ impl CodecSpec {
         if let (SchemeSpec::Ef { inner: f }, SchemeSpec::Ef { inner: b }) = (&self.fw, &self.bw) {
             let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
             return format!("EF {}", inner.label());
+        }
+        if let (SchemeSpec::Had { inner: f }, SchemeSpec::Had { inner: b }) = (&self.fw, &self.bw) {
+            let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+            return format!("Had {}", inner.label());
+        }
+        if let (SchemeSpec::Lr { rank: rf, inner: f }, SchemeSpec::Lr { rank: rb, inner: b }) =
+            (&self.fw, &self.bw)
+        {
+            if rf == rb {
+                let inner = CodecSpec { fw: (**f).clone(), bw: (**b).clone() };
+                return format!("LR r{rf} {}", inner.label());
+            }
+        }
+        if let (SchemeSpec::Tile { t: tf, bits: f }, SchemeSpec::Tile { t: tb, bits: b }) =
+            (&self.fw, &self.bw)
+        {
+            if tf == tb {
+                return format!("Tile{tf} fw{f} bw{b}");
+            }
         }
         match (&self.fw, &self.bw) {
             (SchemeSpec::Raw32, SchemeSpec::Raw32) => "FP32".into(),
@@ -399,7 +647,11 @@ fn measured_wire_bytes(scheme: &SchemeSpec, n: usize, first_visit: bool) -> u64 
 }
 
 /// Representative parseable specs covering every registered scheme —
-/// what the frame property tests and the codec bench iterate over.
+/// what the frame property tests and the codec bench iterate over. The
+/// tier-1 scheme-coverage guard (`tests/scheme_coverage.rs`) asserts
+/// this list reaches every [`grammar_productions`] entry, so a scheme
+/// cannot be registered without being fuzzed, mutation-tested, and
+/// alloc-checked.
 pub fn example_specs() -> Vec<&'static str> {
     vec![
         "fp32",
@@ -410,6 +662,9 @@ pub fn example_specs() -> Vec<&'static str> {
         "ef:directq:fw4bw4",
         "hybrid:aq2/topk0.2@8",
         "hybrid:fp16/q4",
+        "tile:64:directq:fw2bw4",
+        "had:tile:64:directq:fw2bw4",
+        "lr:4:directq:fw4bw4",
     ]
 }
 
@@ -442,6 +697,59 @@ fn parse_fwbw(spec: &str) -> Result<(u8, u8)> {
     check_bits(fw, spec)?;
     check_bits(bw, spec)?;
     Ok((fw, bw))
+}
+
+/// "<T>:<dir>" (after the `tile:` keyword; `off` is the byte offset of
+/// `<T>` within `whole`) → Tile scheme. The inner must be a direct
+/// quantizer: tile *is* the quantizer, with per-tile scales and bits.
+fn parse_tile(rest: &str, whole: &str, off: usize) -> Result<SchemeSpec> {
+    let (t_str, inner) = rest.split_once(':').ok_or_else(|| {
+        crate::err!(
+            "tile spec {whole:?} needs tile:<T>:<inner>, missing inner after {rest:?} at byte {off}"
+        )
+    })?;
+    let t = parse_tile_len(t_str, whole, off)?;
+    let inner_off = off + t_str.len() + 1;
+    match SchemeSpec::parse_at(inner, whole, inner_off)? {
+        SchemeSpec::DirectQ { bits } => Ok(SchemeSpec::Tile { t, bits }),
+        other => crate::bail!(
+            "tile: inner must be a direct quantizer (q<bits>), got {:?} at byte {inner_off} in {whole:?}",
+            other.spec_string()
+        ),
+    }
+}
+
+fn parse_tile_len(t_str: &str, whole: &str, off: usize) -> Result<u32> {
+    let t: u32 = t_str.trim().parse().map_err(|_| {
+        crate::err!("bad tile length {t_str:?} at byte {off} in {whole:?} (want an integer >= 1)")
+    })?;
+    crate::ensure!(t >= 1, "tile length {t} out of range at byte {off} in {whole:?} (want >= 1)");
+    Ok(t)
+}
+
+/// "<rank>:<dir>" (after the `lr:` keyword; `off` is the byte offset of
+/// `<rank>` within `whole`) → Lr scheme around any inner residual codec.
+fn parse_lr(rest: &str, whole: &str, off: usize) -> Result<SchemeSpec> {
+    let (r_str, inner) = rest.split_once(':').ok_or_else(|| {
+        crate::err!(
+            "lr spec {whole:?} needs lr:<rank>:<inner>, missing inner after {rest:?} at byte {off}"
+        )
+    })?;
+    let rank = parse_lr_rank(r_str, whole, off)?;
+    let inner_off = off + r_str.len() + 1;
+    let scheme = SchemeSpec::parse_at(inner, whole, inner_off)?;
+    Ok(SchemeSpec::Lr { rank, inner: Box::new(scheme) })
+}
+
+fn parse_lr_rank(r_str: &str, whole: &str, off: usize) -> Result<u8> {
+    let rank: u8 = r_str.trim().parse().map_err(|_| {
+        crate::err!("bad lr rank {r_str:?} at byte {off} in {whole:?} (want an integer in 1..=64)")
+    })?;
+    crate::ensure!(
+        (1..=64).contains(&rank),
+        "lr rank {rank} out of range at byte {off} in {whole:?} (want 1..=64)"
+    );
+    Ok(rank)
 }
 
 /// "<frac>@<bits>" (after the `topk` keyword) → TopK scheme.
@@ -578,6 +886,109 @@ mod tests {
         // topk 20% @8: ~20% indices (4B) + 20% codes (1B)
         let tk = CodecSpec::topk(0.2, 8).bw_wire_bytes(n);
         assert!(tk < 4 * n as u64 / 3, "topk {tk}");
+    }
+
+    #[test]
+    fn parse_adaptive_family() {
+        // tile applies the same tile length with per-direction budgets
+        assert_eq!(
+            CodecSpec::parse("tile:64:directq:fw2bw4").unwrap(),
+            CodecSpec {
+                fw: SchemeSpec::Tile { t: 64, bits: 2 },
+                bw: SchemeSpec::Tile { t: 64, bits: 4 },
+            }
+        );
+        // single-direction shorthand applies one scheme to both
+        assert_eq!(
+            CodecSpec::parse("tile:16:q4").unwrap(),
+            CodecSpec {
+                fw: SchemeSpec::Tile { t: 16, bits: 4 },
+                bw: SchemeSpec::Tile { t: 16, bits: 4 },
+            }
+        );
+        assert_eq!(
+            CodecSpec::parse("had:q4").unwrap().fw,
+            SchemeSpec::Had { inner: Box::new(SchemeSpec::DirectQ { bits: 4 }) }
+        );
+        assert_eq!(
+            CodecSpec::parse("lr:4:q4").unwrap().fw,
+            SchemeSpec::Lr { rank: 4, inner: Box::new(SchemeSpec::DirectQ { bits: 4 }) }
+        );
+        // wrappers nest: rotation over tiles, ef over lr, lr in hybrids
+        let spec = CodecSpec::parse("had:tile:64:directq:fw2bw4").unwrap();
+        assert_eq!(spec.spec_string(), "had:tile:64:directq:fw2bw4");
+        assert!(CodecSpec::parse("ef:lr:2:q4").is_ok());
+        assert!(CodecSpec::parse("hybrid:lr:2:q4/fp16").is_ok());
+        assert!(CodecSpec::parse("hybrid:had:q2/tile:32:q4").is_ok());
+    }
+
+    #[test]
+    fn adaptive_family_labels_and_strings_round_trip() {
+        for s in ["tile:64:directq:fw2bw4", "had:tile:64:directq:fw2bw4", "lr:4:directq:fw4bw4"] {
+            let spec = CodecSpec::parse(s).unwrap();
+            assert_eq!(spec.spec_string(), s, "canonical form is stable");
+            assert!(!spec.label().is_empty());
+        }
+        assert_eq!(CodecSpec::parse("tile:64:directq:fw2bw4").unwrap().label(), "Tile64 fw2 bw4");
+        assert_eq!(
+            CodecSpec::parse("lr:4:directq:fw4bw4").unwrap().label(),
+            "LR r4 DirectQ fw4 bw4"
+        );
+    }
+
+    #[test]
+    fn nested_wrapper_rejections_name_token_and_position() {
+        // tile:0:fp32 — the zero tile length is the offending token
+        let err = CodecSpec::parse("tile:0:fp32").unwrap_err().to_string();
+        assert!(err.contains("tile length 0"), "{err}");
+        assert!(err.contains("byte 5"), "{err}");
+        // tile with a non-quantizer inner names the inner and its offset
+        let err = CodecSpec::parse("tile:64:fp32").unwrap_err().to_string();
+        assert!(err.contains("direct quantizer"), "{err}");
+        assert!(err.contains("byte 8"), "{err}");
+        // ef:lr:4 — lr's missing inner, positioned inside the ef wrapper
+        let err = CodecSpec::parse("ef:lr:4").unwrap_err().to_string();
+        assert!(err.contains("missing inner"), "{err}");
+        assert!(err.contains("\"4\""), "{err}");
+        assert!(err.contains("byte 6"), "{err}");
+        // lr:4 at top level
+        let err = CodecSpec::parse("lr:4").unwrap_err().to_string();
+        assert!(err.contains("missing inner"), "{err}");
+        // bad rank / rank out of range
+        let err = CodecSpec::parse("lr:0:q4").unwrap_err().to_string();
+        assert!(err.contains("lr rank 0 out of range"), "{err}");
+        let err = CodecSpec::parse("lr:x:q4").unwrap_err().to_string();
+        assert!(err.contains("bad lr rank \"x\""), "{err}");
+        // had: with nothing after it
+        let err = CodecSpec::parse("had:").unwrap_err().to_string();
+        assert!(err.contains("missing inner scheme"), "{err}");
+        // a typo nested two wrappers deep still names its true position
+        let err = CodecSpec::parse("ef:had:nope").unwrap_err().to_string();
+        assert!(err.contains("\"nope\""), "{err}");
+        assert!(err.contains("byte 7"), "{err}");
+    }
+
+    #[test]
+    fn adaptive_family_first_visits() {
+        assert!(SchemeSpec::parse("lr:4:q4").unwrap().has_first_visit());
+        assert!(SchemeSpec::parse("ef:lr:4:q4").unwrap().has_first_visit());
+        assert!(!SchemeSpec::parse("tile:64:q4").unwrap().has_first_visit());
+        assert!(!SchemeSpec::parse("had:q4").unwrap().has_first_visit());
+        assert!(SchemeSpec::parse("had:aq2").unwrap().has_first_visit());
+    }
+
+    #[test]
+    fn example_specs_cover_every_grammar_production() {
+        use std::collections::BTreeSet;
+        let mut covered = BTreeSet::new();
+        for s in example_specs() {
+            let spec = CodecSpec::parse(s).unwrap();
+            spec.fw.productions(&mut covered);
+            spec.bw.productions(&mut covered);
+        }
+        for p in grammar_productions() {
+            assert!(covered.contains(p), "production {p:?} missing from example_specs");
+        }
     }
 
     #[test]

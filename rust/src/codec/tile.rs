@@ -1,0 +1,378 @@
+//! Tile-wise adaptive quantization: `tile:<T>:<inner>` (TAH-QUANT
+//! style, arxiv 2506.01352).
+//!
+//! Each example row is split into `T`-element tiles (the last tile of a
+//! row may be shorter). Every tile gets its own max-abs scale — so one
+//! outlier only burns its own tile's code book, not the whole message —
+//! and its own bit width, allocated from the tiles' mean-square power
+//! within a fixed *average* budget (the inner `q<bits>` spec): loud
+//! tiles borrow bits from quiet ones, but the message's total payload
+//! stays at the budget the operator asked for.
+//!
+//! Frame format (tag 8):
+//!
+//! ```text
+//! header : budget: u8 | tile_len: u32 | n: u32
+//! payload: per tile, in row-major order:
+//!          bits: u8 | scale: f32 | packed codes (packed_len(len, bits))
+//! ```
+//!
+//! The per-tile bit map travels in the payload, one byte ahead of the
+//! codes it describes — the header stays fixed-size (9 bytes) and the
+//! decoder needs no second pass. The allocation rule uses only
+//! comparisons and exact-in-binary ×4 / ÷4 steps (no logarithms), so
+//! `gen_golden.py` reproduces it bit-for-bit in python and the fixtures
+//! pin the whole layout.
+
+use crate::util::error::Result;
+use crate::util::Rng;
+
+use super::frame::{FrameBuf, FrameReader, FrameView, TAG_TILE};
+use super::pack;
+use super::par::Workers;
+use super::quantizer::{Rounding, UniformQuantizer};
+use super::{encode_to_frame, BoundaryCodec, Frame};
+
+/// Variance-driven per-tile bit widths within a fixed average budget.
+///
+/// Every factor of 4 in a tile's mean-square power relative to the
+/// message mean buys one bit (±6 dB per bit), clamped to ±3 around the
+/// budget and to the quantizer's 1..=8 range; single bits are then
+/// moved from the quietest tiles to the loudest until the total spends
+/// exactly `msq.len() × budget`. Deterministic: ties break on the first
+/// (lowest-index) tile.
+pub fn allocate_bits(msq: &[f64], budget: u8, out: &mut Vec<u8>) {
+    out.clear();
+    let n = msq.len();
+    if n == 0 {
+        return;
+    }
+    let floor = 1e-24f64;
+    let mean = msq.iter().sum::<f64>() / n as f64;
+    let reference = if mean > floor { mean } else { floor };
+    for &m in msq {
+        let mut ratio = (if m > floor { m } else { floor }) / reference;
+        let mut extra: i32 = 0;
+        while ratio >= 4.0 && extra < 3 {
+            ratio /= 4.0;
+            extra += 1;
+        }
+        while ratio < 0.25 && extra > -3 {
+            ratio *= 4.0;
+            extra -= 1;
+        }
+        out.push((budget as i32 + extra).clamp(1, 8) as u8);
+    }
+    // spend exactly the average budget: move one bit at a time between
+    // the extreme-power tiles until the sum matches the cap
+    let cap = n as u64 * budget as u64;
+    let mut sum: u64 = out.iter().map(|&b| b as u64).sum();
+    while sum > cap {
+        let mut pick: Option<usize> = None;
+        for (i, &b) in out.iter().enumerate() {
+            if b <= 1 {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => msq[i] < msq[p],
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                out[i] -= 1;
+                sum -= 1;
+            }
+            None => break,
+        }
+    }
+    while sum < cap {
+        let mut pick: Option<usize> = None;
+        for (i, &b) in out.iter().enumerate() {
+            if b >= 8 {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => msq[i] > msq[p],
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                out[i] += 1;
+                sum += 1;
+            }
+            None => break,
+        }
+    }
+}
+
+/// The `tile:` codec. Stateless across messages (like DirectQ); both
+/// halves are the same type.
+pub struct TileCodec {
+    t: u32,
+    budget: u8,
+    rounding: Rounding,
+    /// elements per example record — bounds the length a frame may claim
+    el: usize,
+    rng: Rng,
+    workers: Workers,
+    /// per-message scratch (per-tile scale / power / bits), reused
+    scales: Vec<f32>,
+    msq: Vec<f64>,
+    bits: Vec<u8>,
+}
+
+impl TileCodec {
+    pub fn new(t: u32, budget: u8, rounding: Rounding, el: usize, seed: u64) -> Self {
+        assert!(t >= 1, "tile length must be >= 1");
+        assert!((1..=8).contains(&budget), "tile budget {budget} out of range (1..=8)");
+        assert!(el >= 1, "tile codec needs el >= 1");
+        TileCodec {
+            t,
+            budget,
+            rounding,
+            el,
+            rng: Rng::new(seed),
+            workers: Workers::seq(),
+            scales: Vec::new(),
+            msq: Vec::new(),
+            bits: Vec::new(),
+        }
+    }
+
+    /// Validate tag + header against the configured shape; returns the
+    /// dense element count.
+    fn check(&self, ids: &[u64], tag: u8, header: &[u8]) -> Result<usize> {
+        crate::ensure!(tag == TAG_TILE, "tile codec got frame tag {tag}");
+        let mut h = FrameReader::new(header);
+        let (budget, t, n) = (h.u8()?, h.u32()?, h.u32()? as usize);
+        h.done()?;
+        crate::ensure!(
+            budget == self.budget,
+            "tile frame has budget {budget}, boundary is configured for {}",
+            self.budget
+        );
+        crate::ensure!(
+            t == self.t,
+            "tile frame has {t}-element tiles, boundary is configured for {}",
+            self.t
+        );
+        // bound n by the configured batch shape before reading anything
+        crate::ensure!(
+            n == ids.len() * self.el,
+            "tile frame claims {n} elements, boundary expects {} ids x {} elements",
+            ids.len(),
+            self.el
+        );
+        Ok(n)
+    }
+}
+
+impl BoundaryCodec for TileCodec {
+    fn encode(&mut self, ids: &[u64], a: &[f32]) -> Result<Frame> {
+        encode_to_frame(self, ids, a)
+    }
+
+    fn encode_into(&mut self, ids: &[u64], a: &[f32], out: &mut FrameBuf) -> Result<()> {
+        crate::ensure!(
+            a.len() == ids.len() * self.el,
+            "tile message length {} != {} ids x {} elements",
+            a.len(),
+            ids.len(),
+            self.el
+        );
+        let t = self.t as usize;
+        // pass 1: per-tile scale (rejects NaN/Inf before any wire bytes)
+        // and mean-square power for the bit allocation
+        self.scales.clear();
+        self.msq.clear();
+        for row in a.chunks(self.el) {
+            for tile in row.chunks(t) {
+                self.scales.push(UniformQuantizer::checked_scale(tile)?);
+                let mut acc = 0f64;
+                for &v in tile {
+                    acc += (v as f64) * (v as f64);
+                }
+                self.msq.push(acc / tile.len() as f64);
+            }
+        }
+        allocate_bits(&self.msq, self.budget, &mut self.bits);
+        out.start(TAG_TILE);
+        out.u8(self.budget).u32(self.t).u32(a.len() as u32);
+        out.end_header();
+        // pass 2: quantize each tile straight into the packed payload
+        let pool = self.workers;
+        let mut ti = 0usize;
+        for row in a.chunks(self.el) {
+            for tile in row.chunks(t) {
+                let bits = self.bits[ti];
+                let scale = self.scales[ti];
+                ti += 1;
+                out.u8(bits);
+                out.f32(scale);
+                let q = UniformQuantizer::new(bits, self.rounding);
+                let packed = out.reserve_zeroed(pack::packed_len(tile.len(), bits));
+                q.encode_packed_with_scale(tile, scale, packed, &mut self.rng, &pool);
+            }
+        }
+        out.finish()
+    }
+
+    fn decode(&mut self, ids: &[u64], frame: &Frame) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; ids.len() * self.el];
+        self.decode_into(ids, &frame.view(), &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, ids: &[u64], frame: &FrameView<'_>, out: &mut [f32]) -> Result<()> {
+        let n = self.check(ids, frame.tag(), frame.header())?;
+        crate::ensure!(
+            n == out.len(),
+            "tile frame has {n} elements, boundary expects {}",
+            out.len()
+        );
+        let t = self.t as usize;
+        let mut p = FrameReader::new(frame.payload());
+        for row in out.chunks_mut(self.el) {
+            for tile in row.chunks_mut(t) {
+                let bits = p.u8()?;
+                // a hostile bit width must be an error here — the
+                // quantizer constructor asserts 1..=8
+                crate::ensure!(
+                    (1..=8).contains(&bits),
+                    "tile frame has a {bits}-bit tile (quantizers support 1..=8 bits)"
+                );
+                let scale = p.f32()?;
+                let packed = p.bytes(pack::packed_len(tile.len(), bits))?;
+                let q = UniformQuantizer::new(bits, self.rounding);
+                q.decode_packed(packed, scale, tile, &self.workers);
+            }
+        }
+        p.done()
+    }
+
+    fn label(&self) -> String {
+        format!("tile:{}:q{}", self.t, self.budget)
+    }
+
+    fn set_workers(&mut self, threads: usize) {
+        self.workers = Workers::new(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(17);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn allocation_spends_exactly_the_budget() {
+        // one loud tile among quiet ones gains bits; the sum stays fixed
+        let msq = vec![1.0, 1.0, 1e4, 1.0];
+        let mut bits = Vec::new();
+        allocate_bits(&msq, 4, &mut bits);
+        assert_eq!(bits.iter().map(|&b| b as u64).sum::<u64>(), 16);
+        assert!(bits[2] > bits[0], "{bits:?}");
+        assert!(bits.iter().all(|&b| (1..=8).contains(&b)), "{bits:?}");
+        // uniform power: everyone gets exactly the budget
+        allocate_bits(&[2.0, 2.0, 2.0], 3, &mut bits);
+        assert_eq!(bits, vec![3, 3, 3]);
+        // budget 8 pins the ceiling even under extreme spreads
+        allocate_bits(&[1e-12, 1e12], 8, &mut bits);
+        assert_eq!(bits, vec![8, 8]);
+        // all-zero power degrades to uniform, not a division blowup
+        allocate_bits(&[0.0, 0.0], 2, &mut bits);
+        assert_eq!(bits, vec![2, 2]);
+    }
+
+    #[test]
+    fn roundtrip_bounded_error_per_tile() {
+        let el = 96;
+        let a = sample(2 * el);
+        let mut enc = TileCodec::new(32, 8, Rounding::Nearest, el, 1);
+        let mut dec = TileCodec::new(32, 8, Rounding::Nearest, el, 2);
+        let f = enc.encode(&[4, 9], &a).unwrap();
+        let out = dec.decode(&[4, 9], &f).unwrap();
+        assert_eq!(out.len(), a.len());
+        // each tile's error is bounded by its own scale, not the global
+        // max-abs — with most tiles at 8 bits the error is small
+        for (x, y) in a.iter().zip(&out) {
+            assert!((x - y).abs() < 0.5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn outlier_tile_cannot_poison_neighbours() {
+        // a huge value in tile 0 leaves tile 1's scale (and error) tiny —
+        // the failure mode a per-message scale suffers
+        let el = 8;
+        let mut a = vec![0.01f32; el];
+        a[0] = 100.0;
+        let mut enc = TileCodec::new(4, 4, Rounding::Nearest, el, 1);
+        let mut dec = TileCodec::new(4, 4, Rounding::Nearest, el, 2);
+        let f = enc.encode(&[0], &a).unwrap();
+        let out = dec.decode(&[0], &f).unwrap();
+        for (x, y) in a[4..].iter().zip(&out[4..]) {
+            assert!((x - y).abs() < 0.02, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn hostile_frames_are_errors_not_panics() {
+        let el = 16;
+        let a = sample(el);
+        let mut enc = TileCodec::new(8, 4, Rounding::Nearest, el, 1);
+        let mut dec = TileCodec::new(8, 4, Rounding::Nearest, el, 2);
+        let f = enc.encode(&[0], &a).unwrap();
+        // wrong tag
+        let bad = Frame::new(9, f.header().to_vec(), f.payload().to_vec());
+        assert!(dec.decode(&[0], &bad).is_err());
+        // zero / out-of-range per-tile bit width in the payload
+        for hostile_bits in [0u8, 9, 255] {
+            let mut payload = f.payload().to_vec();
+            payload[0] = hostile_bits;
+            let bad = Frame::new(f.tag(), f.header().to_vec(), payload);
+            assert!(dec.decode(&[0], &bad).is_err(), "bits {hostile_bits}");
+        }
+        // truncated payload
+        let bad = Frame::new(f.tag(), f.header().to_vec(), f.payload()[..3].to_vec());
+        assert!(dec.decode(&[0], &bad).is_err());
+        // header claiming a different shape than the boundary's
+        let mut hdr = f.header().to_vec();
+        hdr[5..9].copy_from_slice(&10_000u32.to_le_bytes());
+        let bad = Frame::new(f.tag(), hdr, f.payload().to_vec());
+        assert!(dec.decode(&[0], &bad).is_err());
+        // non-finite input is rejected at encode
+        let mut nan = a.clone();
+        nan[3] = f32::INFINITY;
+        assert!(enc.encode(&[0], &nan).is_err());
+    }
+
+    #[test]
+    fn scratch_matches_allocating_path() {
+        let el = 40;
+        let a = sample(el);
+        let mut enc_a = TileCodec::new(16, 3, Rounding::Nearest, el, 9);
+        let mut enc_b = TileCodec::new(16, 3, Rounding::Nearest, el, 9);
+        let mut dec = TileCodec::new(16, 3, Rounding::Nearest, el, 2);
+        let f = enc_a.encode(&[0], &a).unwrap();
+        let mut buf = FrameBuf::new();
+        enc_b.encode_into(&[0], &a, &mut buf).unwrap();
+        assert_eq!(buf.as_bytes(), f.to_bytes().as_slice());
+        let mut out = vec![0f32; el];
+        dec.decode_into(&[0], &buf.view(), &mut out).unwrap();
+        assert_eq!(out, dec.decode(&[0], &f).unwrap());
+    }
+}

@@ -14,7 +14,8 @@ use aq_sgd::codec::CodecSpec;
 use aq_sgd::pipeline::exec::{run_events, run_threads, run_virtual, ExecConfig, ExecTrace};
 use aq_sgd::pipeline::Schedule;
 
-const SPECS: [&str; 3] = ["fp32", "aqsgd:fw2bw4", "hybrid:aq2/topk0.2@8"];
+const SPECS: [&str; 4] =
+    ["fp32", "aqsgd:fw2bw4", "hybrid:aq2/topk0.2@8", "had:tile:64:directq:fw2bw4"];
 
 fn cfg(spec: &str, schedule: Schedule, seed: u64) -> ExecConfig {
     let mut c = ExecConfig::small(CodecSpec::parse(spec).unwrap());

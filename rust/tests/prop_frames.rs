@@ -7,8 +7,8 @@
 //! is byte- and state-identical to the allocating path.
 
 use aq_sgd::codec::frame::{
-    Frame, FrameBuf, FrameView, FRAME_PRELUDE_BYTES, TAG_AQ, TAG_DIRECTQ, TAG_F16, TAG_RAW32,
-    TAG_TOPK,
+    Frame, FrameBuf, FrameView, FRAME_PRELUDE_BYTES, TAG_AQ, TAG_DIRECTQ, TAG_F16, TAG_LR,
+    TAG_RAW32, TAG_TILE, TAG_TOPK,
 };
 use aq_sgd::codec::registry::{build_mem_pair, example_specs, CodecSpec};
 use aq_sgd::codec::{Rounding, SchemeSpec};
@@ -37,6 +37,13 @@ fn fuzz_coverage_includes_the_ef_gradient_codec() {
         all_schemes().iter().any(|s| matches!(s, SchemeSpec::Ef { .. })),
         "example_specs() lost its ef: entry — DP frames would go unfuzzed"
     );
+    // same pin for the adaptive family (tile / had / lr): these carry
+    // their own frame layouts (or wrap one), so losing their entries
+    // would silently shrink the fuzz surface
+    let schemes = all_schemes();
+    assert!(schemes.iter().any(|s| matches!(s, SchemeSpec::Tile { .. })));
+    assert!(schemes.iter().any(|s| matches!(s, SchemeSpec::Had { .. })));
+    assert!(schemes.iter().any(|s| matches!(s, SchemeSpec::Lr { .. })));
 }
 
 #[test]
@@ -143,7 +150,7 @@ fn prop_mutated_frames_error_never_panic_or_overallocate() {
 
         // (b) tag flipped to every other registered scheme tag: the
         // codec checks its tag before touching header or payload
-        for tag in [TAG_RAW32, TAG_F16, TAG_DIRECTQ, TAG_AQ, TAG_TOPK] {
+        for tag in [TAG_RAW32, TAG_F16, TAG_DIRECTQ, TAG_AQ, TAG_TOPK, TAG_TILE, TAG_LR] {
             if tag == bytes[0] {
                 continue;
             }

@@ -1,0 +1,83 @@
+//! The scheme-coverage CI gate (tier-1): every grammar production
+//! reachable from `SchemeSpec::parse` must appear in the shared
+//! `example_specs` list — the list `prop_frames`, `zero_alloc`, and the
+//! codec bench iterate. Registering a scheme without an example spec
+//! fails here, so new codecs are fuzzed, mutation-tested, and
+//! alloc-checked by construction rather than by author discipline.
+//!
+//! The other direction is enforced too: a production string in
+//! `grammar_productions()` that no longer parses (a renamed or removed
+//! scheme that forgot to update the vocabulary) also fails.
+
+use std::collections::BTreeSet;
+
+use aq_sgd::codec::registry::{example_specs, grammar_productions, CodecSpec};
+use aq_sgd::codec::SchemeSpec;
+
+/// Productions reached (including nested inners) by the example specs.
+fn covered() -> BTreeSet<&'static str> {
+    let mut out = BTreeSet::new();
+    for s in example_specs() {
+        let spec = CodecSpec::parse(s).unwrap_or_else(|e| panic!("example spec {s:?}: {e}"));
+        spec.fw.productions(&mut out);
+        spec.bw.productions(&mut out);
+    }
+    out
+}
+
+#[test]
+fn every_grammar_production_has_an_example_spec() {
+    let covered = covered();
+    let missing: Vec<&str> = grammar_productions()
+        .iter()
+        .filter(|p| !covered.contains(**p))
+        .copied()
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "grammar productions {missing:?} have no example_specs entry — \
+         they would ship unfuzzed, un-mutation-tested, and un-alloc-checked. \
+         Add a representative spec to codec::registry::example_specs()."
+    );
+}
+
+#[test]
+fn no_example_spec_reaches_an_unregistered_production() {
+    // the inverse guard: example specs cannot cover productions the
+    // grammar vocabulary does not declare (grammar_productions() and
+    // SchemeSpec::production() drifting apart)
+    let declared: BTreeSet<&str> = grammar_productions().iter().copied().collect();
+    for p in covered() {
+        assert!(
+            declared.contains(p),
+            "example_specs reaches production {p:?} that grammar_productions() does not declare"
+        );
+    }
+}
+
+#[test]
+fn every_production_has_a_parsing_exemplar() {
+    // one canonical exemplar per production, kept here as executable
+    // documentation of the direction grammar
+    let exemplars = [
+        ("fp32", "fp32"),
+        ("fp16", "fp16"),
+        ("directq", "q4"),
+        ("aq", "aq2"),
+        ("topk", "topk0.2@8"),
+        ("ef", "ef:q4"),
+        ("tile", "tile:64:q4"),
+        ("had", "had:q4"),
+        ("lr", "lr:4:q4"),
+    ];
+    let mut seen = BTreeSet::new();
+    for (prod, spec) in exemplars {
+        let scheme = SchemeSpec::parse(spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_eq!(scheme.production(), prod, "{spec:?} parsed to the wrong production");
+        seen.insert(prod);
+    }
+    // the exemplar table itself covers the whole vocabulary
+    for p in grammar_productions() {
+        assert!(seen.contains(p), "production {p:?} has no exemplar in this table");
+    }
+}

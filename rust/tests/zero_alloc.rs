@@ -3,7 +3,8 @@
 //! in a reused `FrameBuf`, `FrameView::parse` borrowing it, and
 //! `decode_into` reconstructing into a caller buffer — performs ZERO
 //! heap allocations, for the paper's main schemes (fp32 baseline,
-//! AQ-SGD activations fw2/bw4, and the EF DirectQ gradient compressor).
+//! AQ-SGD activations fw2/bw4, the EF DirectQ gradient compressor, and
+//! the Hadamard-rotated tile-adaptive quantizer).
 //! A second phase pins the same property through the executors' *link*
 //! path (`send_from` out of the endpoint frame buffer, pooled wire
 //! buffers, `recv_held` + `decode_into` on the far side).
@@ -34,7 +35,7 @@ fn steady_state_codec_path_is_allocation_free() {
     let el = 96usize;
     let n_ex = 4usize;
     let ids: Vec<u64> = (0..n_ex as u64).collect();
-    for spec in ["fp32", "aqsgd:fw2bw4", "ef:directq:fw4bw4"] {
+    for spec in ["fp32", "aqsgd:fw2bw4", "ef:directq:fw4bw4", "had:tile:64:directq:fw2bw4"] {
         let cs = CodecSpec::parse(spec).unwrap();
         for (dir, scheme) in [("fw", &cs.fw), ("bw", &cs.bw)] {
             let (mut enc, mut dec) = build_mem_pair(scheme, el, Rounding::Nearest, 42).unwrap();
